@@ -1,0 +1,65 @@
+//! Ablation: synchronous vs asynchronous label propagation — the
+//! §6.2.1 trade-off ("scattering the pointer to vertex values instead
+//! of the value itself … a trade-off between cache efficiency and
+//! quick convergence").
+//!
+//! Async dereferences the source label at gather time: fewer iterations
+//! to the fixpoint (fresher values), one fine-grained random read per
+//! message (worse locality). Which side wins is workload-dependent —
+//! exactly why GPOP leaves the choice to the programmer.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::apps::{cc, cc_async};
+use gpop::bench::{bench, preamble, Table};
+use gpop::exec::ThreadPool;
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::util::fmt;
+
+fn main() {
+    let threads = ThreadPool::available_parallelism();
+    preamble(
+        "ablation_async_cc",
+        "ablation — §6.2.1 sync vs async (pointer-scatter) label propagation",
+        &format!("symmetrized bench suite, {threads} threads"),
+    );
+    let cfg = common::bench_config();
+    let mut table = Table::new(&["dataset", "variant", "time", "iters", "messages"]);
+    for d in common::datasets() {
+        let g = common::symmetrized(&d.graph);
+        let mut sync_eng =
+            Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+        let mut iters = 0;
+        let mut msgs = 0;
+        let t = bench("sync", cfg, || {
+            let res = cc::run(&mut sync_eng, 10_000);
+            iters = res.stats.n_iters();
+            msgs = res.stats.total_messages();
+        });
+        table.row(&[
+            d.name.clone(),
+            "sync".into(),
+            fmt::secs(t.median()),
+            iters.to_string(),
+            fmt::si(msgs as f64),
+        ]);
+        let mut async_eng =
+            Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+        let t = bench("async", cfg, || {
+            let res = cc_async::run(&mut async_eng, 10_000);
+            iters = res.stats.n_iters();
+            msgs = res.stats.total_messages();
+        });
+        table.row(&[
+            d.name.clone(),
+            "async".into(),
+            fmt::secs(t.median()),
+            iters.to_string(),
+            fmt::si(msgs as f64),
+        ]);
+    }
+    table.print();
+    println!("\nexpected: async converges in <= sync iterations (fresher labels),");
+    println!("but pays a random read per message — the paper's stated trade-off.");
+}

@@ -1,0 +1,66 @@
+//! Ablation: the Eq.-1 bandwidth ratio `BW_DC / BW_SC` (default 2).
+//!
+//! Sweeps the ratio on a frontier algorithm (BFS) where the hybrid
+//! actually switches modes, plus the measured sequential/random
+//! bandwidth ratio of this host for calibration. ratio → 0 degenerates
+//! to SC-only; ratio → ∞ to DC-only; the calibrated value should be at
+//! least as good as either extreme.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::apps;
+use gpop::bench::{bench, preamble, Table};
+use gpop::exec::ThreadPool;
+use gpop::metrics::measure_bandwidth;
+use gpop::ppm::{Engine, ModePolicy, PpmConfig};
+use gpop::util::fmt;
+
+fn main() {
+    let threads = ThreadPool::available_parallelism();
+    preamble(
+        "ablation_bw_ratio",
+        "ablation — Eq. 1 BW_DC/BW_SC sweep",
+        &format!("BFS + SSSP on largest bench dataset, {threads} threads"),
+    );
+    let host = measure_bandwidth(threads, 128);
+    println!(
+        "# host calibration: copy {:.1} GB/s, random {:.2} GB/s effective -> ratio {:.1}",
+        host.copy_gbps,
+        host.random_gbps,
+        host.copy_gbps / host.random_gbps.max(1e-9)
+    );
+    let d = &common::datasets()[0];
+    let g = common::weighted(&d.graph);
+    let cfg = common::bench_config();
+    let mut table = Table::new(&["policy", "bw-ratio", "time", "dc scatters", "sc scatters"]);
+    let mut run = |name: &str, mode: ModePolicy, ratio: f64| {
+        let mut eng = Engine::new(
+            g.clone(),
+            PpmConfig { threads, mode, bw_ratio: ratio, ..Default::default() },
+        );
+        let mut last = (0usize, 0usize);
+        let t = bench(name, cfg, || {
+            let res = apps::sssp::run(&mut eng, 0);
+            last = (
+                res.stats.iters.iter().map(|i| i.dc_parts).sum(),
+                res.stats.iters.iter().map(|i| i.sc_parts).sum(),
+            );
+        })
+        .median();
+        table.row(&[
+            name.to_string(),
+            format!("{ratio:.1}"),
+            fmt::secs(t),
+            last.0.to_string(),
+            last.1.to_string(),
+        ]);
+    };
+    run("sc-only", ModePolicy::ForceSc, 2.0);
+    run("dc-only", ModePolicy::ForceDc, 2.0);
+    for ratio in [0.5, 1.0, 2.0, 4.0, 8.0] {
+        run("hybrid", ModePolicy::Hybrid, ratio);
+    }
+    table.print();
+    println!("\nexpected: hybrid at the paper's default (2.0) ≈ min(SC, DC) or better.");
+}

@@ -1,0 +1,54 @@
+//! Ablation: partition count k vs performance (DESIGN.md design-choice
+//! ablation for §3.1's two-sided heuristic).
+//!
+//! Too few partitions → vertex data exceeds the cache budget (loses the
+//! gather locality); too many → bin-grid overhead (k² bins, more
+//! message fragmentation). The paper's heuristic (q sized to L2,
+//! k ≥ 4t) should sit near the minimum.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::apps;
+use gpop::bench::{bench, preamble, Table};
+use gpop::exec::ThreadPool;
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::util::fmt;
+
+const ITERS: usize = 5;
+
+fn main() {
+    let threads = ThreadPool::available_parallelism();
+    preamble(
+        "ablation_k_sweep",
+        "ablation — partition count k (paper §3.1 heuristic)",
+        &format!("PageRank x{ITERS}, largest bench dataset, {threads} threads"),
+    );
+    let d = &common::datasets()[0];
+    let g = &d.graph;
+    let auto = Engine::new(g.clone(), PpmConfig { threads, ..Default::default() })
+        .parts()
+        .k();
+    println!("# dataset {} — heuristic picks k = {auto}", d.name);
+    let cfg = common::bench_config();
+    let mut table = Table::new(&["k", "time", "edges/s", "note"]);
+    let mut ks: Vec<usize> = vec![1, threads.max(2), 4 * threads, auto, 4 * auto, 16 * auto];
+    ks.sort_unstable();
+    ks.dedup();
+    for k in ks {
+        let mut eng =
+            Engine::new(g.clone(), PpmConfig { threads, k: Some(k), ..Default::default() });
+        let t = bench("pr", cfg, || {
+            let _ = apps::pagerank::run(&mut eng, 0.85, ITERS);
+        })
+        .median();
+        table.row(&[
+            k.to_string(),
+            fmt::secs(t),
+            fmt::si((g.m() * ITERS) as f64 / t),
+            if k == auto { "<- §3.1 heuristic".into() } else { String::new() },
+        ]);
+    }
+    table.print();
+    println!("\nexpected: U-shape with the heuristic near the minimum.");
+}

@@ -1,0 +1,57 @@
+//! Figure 5: strong scalability of BFS — speedup over the sequential
+//! implementation as threads grow, per RMAT scale.
+//!
+//! Paper: up to 17.9x with 36 threads on a dual-18-core Xeon; larger
+//! datasets scale better. This container exposes few hardware threads
+//! (EXPERIMENTS.md records the count), so the curve saturates early —
+//! the *per-size ordering* (bigger graphs scale better) is the shape
+//! under test.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::apps;
+use gpop::baselines::serial;
+use gpop::bench::{bench, preamble, Table};
+use gpop::graph::gen;
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::util::fmt;
+
+fn main() {
+    let scales = [common::base_scale() - 2, common::base_scale()];
+    preamble(
+        "fig5_bfs_strong",
+        "Fig. 5 — BFS strong scaling vs serial",
+        &format!("rmat scales {scales:?}, thread sweep {:?}", common::thread_sweep()),
+    );
+    let cfg = common::bench_config();
+    let mut table = Table::new(&["graph", "threads", "time", "speedup vs serial"]);
+    for scale in scales {
+        let g = gen::rmat(scale, Default::default(), false);
+        let t_serial = bench("serial", cfg, || {
+            let _ = serial::bfs_parents(&g, 0);
+        })
+        .median();
+        table.row(&[
+            format!("rmat{scale}"),
+            "serial".into(),
+            fmt::secs(t_serial),
+            "1.00x".into(),
+        ]);
+        for threads in common::thread_sweep() {
+            let mut eng = Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+            let t = bench("gpop", cfg, || {
+                let _ = apps::bfs::run(&mut eng, 0);
+            })
+            .median();
+            table.row(&[
+                format!("rmat{scale}"),
+                threads.to_string(),
+                fmt::secs(t),
+                format!("{:.2}x", t_serial / t),
+            ]);
+        }
+    }
+    table.print();
+    println!("\npaper: up to 17.9x @ 36 threads; bigger graphs scale better (Fig. 5).");
+}

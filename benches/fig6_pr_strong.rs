@@ -1,0 +1,60 @@
+//! Figure 6: strong scalability of PageRank.
+//!
+//! Paper: up to 10.5x @ 36 threads, but scaling flattens past ~16
+//! threads because all-DC-mode PageRank saturates DRAM bandwidth —
+//! the earlier-saturation-than-BFS ordering is the shape under test.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::apps;
+use gpop::baselines::serial;
+use gpop::bench::{bench, preamble, Table};
+use gpop::graph::gen;
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::util::fmt;
+
+const ITERS: usize = 10;
+
+fn main() {
+    let scales = [common::base_scale() - 2, common::base_scale()];
+    preamble(
+        "fig6_pr_strong",
+        "Fig. 6 — PageRank strong scaling vs serial",
+        &format!("rmat scales {scales:?}, {ITERS} iterations"),
+    );
+    let cfg = common::bench_config();
+    let mut table =
+        Table::new(&["graph", "threads", "time", "speedup vs serial", "edges/s"]);
+    for scale in scales {
+        let g = gen::rmat(scale, Default::default(), false);
+        let edges = (g.m() * ITERS) as f64;
+        let t_serial = bench("serial", cfg, || {
+            let _ = serial::pagerank(&g, 0.85, ITERS);
+        })
+        .median();
+        table.row(&[
+            format!("rmat{scale}"),
+            "serial".into(),
+            fmt::secs(t_serial),
+            "1.00x".into(),
+            fmt::si(edges / t_serial),
+        ]);
+        for threads in common::thread_sweep() {
+            let mut eng = Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+            let t = bench("gpop", cfg, || {
+                let _ = apps::pagerank::run(&mut eng, 0.85, ITERS);
+            })
+            .median();
+            table.row(&[
+                format!("rmat{scale}"),
+                threads.to_string(),
+                fmt::secs(t),
+                format!("{:.2}x", t_serial / t),
+                fmt::si(edges / t),
+            ]);
+        }
+    }
+    table.print();
+    println!("\npaper: up to 10.5x; flattens past ~16 threads (bandwidth-bound, Fig. 6).");
+}

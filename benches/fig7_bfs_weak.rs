@@ -1,0 +1,49 @@
+//! Figure 7: weak scalability of BFS — problem size and thread count
+//! grow together (rmatS on T threads, S and T doubling in step).
+//!
+//! Paper: runtime grows only ~4x over a 32x problem-size increase
+//! (ideal weak scaling would be flat; the paper's deviation comes from
+//! NUMA and the 36 < 64 thread shortfall at the top size).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::apps;
+use gpop::bench::{bench, preamble, Table};
+use gpop::graph::gen;
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::util::fmt;
+
+fn main() {
+    let base = common::base_scale() - 3;
+    // (scale, threads): problem doubles with threads.
+    let points: Vec<(u32, usize)> =
+        (0..4).map(|i| (base + i, 1usize << i)).collect();
+    preamble(
+        "fig7_bfs_weak",
+        "Fig. 7 — BFS weak scaling",
+        &format!("points {points:?} (scale, threads)"),
+    );
+    let cfg = common::bench_config();
+    let mut table = Table::new(&["graph", "edges(M)", "threads", "time", "vs first"]);
+    let mut first = None;
+    for (scale, threads) in points {
+        let g = gen::rmat(scale, Default::default(), false);
+        let edges_m = g.m() as f64 / 1e6;
+        let mut eng = Engine::new(g, PpmConfig { threads, ..Default::default() });
+        let t = bench("gpop", cfg, || {
+            let _ = apps::bfs::run(&mut eng, 0);
+        })
+        .median();
+        let base_t = *first.get_or_insert(t);
+        table.row(&[
+            format!("rmat{scale}"),
+            format!("{edges_m:.1}"),
+            threads.to_string(),
+            fmt::secs(t),
+            format!("{:.2}x", t / base_t),
+        ]);
+    }
+    table.print();
+    println!("\npaper: ~4x runtime over 32x problem growth (Fig. 7; flat = ideal).");
+}

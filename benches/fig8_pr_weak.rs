@@ -1,0 +1,48 @@
+//! Figure 8: weak scalability of PageRank.
+//!
+//! Paper: 2.5x runtime over a 16x size increase (rmat21→25), with a
+//! sharp 1.73x step at the top size when DC-mode saturates bandwidth.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::apps;
+use gpop::bench::{bench, preamble, Table};
+use gpop::graph::gen;
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::util::fmt;
+
+const ITERS: usize = 10;
+
+fn main() {
+    let base = common::base_scale() - 3;
+    let points: Vec<(u32, usize)> =
+        (0..4).map(|i| (base + i, 1usize << i)).collect();
+    preamble(
+        "fig8_pr_weak",
+        "Fig. 8 — PageRank weak scaling",
+        &format!("points {points:?} (scale, threads), {ITERS} iterations"),
+    );
+    let cfg = common::bench_config();
+    let mut table = Table::new(&["graph", "edges(M)", "threads", "time", "vs first"]);
+    let mut first = None;
+    for (scale, threads) in points {
+        let g = gen::rmat(scale, Default::default(), false);
+        let edges_m = g.m() as f64 / 1e6;
+        let mut eng = Engine::new(g, PpmConfig { threads, ..Default::default() });
+        let t = bench("gpop", cfg, || {
+            let _ = apps::pagerank::run(&mut eng, 0.85, ITERS);
+        })
+        .median();
+        let base_t = *first.get_or_insert(t);
+        table.row(&[
+            format!("rmat{scale}"),
+            format!("{edges_m:.1}"),
+            threads.to_string(),
+            fmt::secs(t),
+            format!("{:.2}x", t / base_t),
+        ]);
+    }
+    table.print();
+    println!("\npaper: 2.5x runtime over 16x size; bandwidth step at the top (Fig. 8).");
+}

@@ -1,0 +1,74 @@
+//! §Perf hot-path microbenchmarks: per-phase breakdown and
+//! allocation/bandwidth accounting for the engine's steady state.
+//!
+//! Used by the performance pass (EXPERIMENTS.md §Perf) to localize
+//! bottlenecks: scatter vs gather vs finalize time, messages/s, and
+//! the fraction of the STREAM roofline the all-DC PageRank sustains.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::apps;
+use gpop::bench::{preamble, Table};
+use gpop::exec::ThreadPool;
+use gpop::metrics::measure_bandwidth;
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::util::fmt;
+
+const ITERS: usize = 10;
+
+fn main() {
+    let threads = ThreadPool::available_parallelism();
+    preamble(
+        "perf_hotpath",
+        "§Perf — engine phase breakdown + roofline fraction",
+        &format!("PageRank x{ITERS} + BFS, largest bench dataset, {threads} threads"),
+    );
+    let d = &common::datasets()[0];
+    let g = &d.graph;
+    let mut eng = Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+
+    // Phase breakdown over a PageRank run (all-DC steady state).
+    let res = apps::pagerank::run(&mut eng, 0.85, ITERS);
+    let (mut ts, mut tg, mut tf, mut msgs) = (0.0, 0.0, 0.0, 0u64);
+    for it in &res.iters {
+        ts += it.t_scatter;
+        tg += it.t_gather;
+        tf += it.t_finalize;
+        msgs += it.messages;
+    }
+    let total = ts + tg + tf;
+    let mut table = Table::new(&["phase", "time", "share"]);
+    table.row(&["scatter".into(), fmt::secs(ts), format!("{:.1}%", 100.0 * ts / total)]);
+    table.row(&["gather".into(), fmt::secs(tg), format!("{:.1}%", 100.0 * tg / total)]);
+    table.row(&["finalize".into(), fmt::secs(tf), format!("{:.1}%", 100.0 * tf / total)]);
+    table.print();
+
+    // Effective data movement: conservative per-message traffic model
+    // (value write+read = 8B, id read = 4B, edge stream = 4B).
+    let bytes_moved = msgs as f64 * 16.0;
+    let eff_gbps = bytes_moved / total / 1e9;
+    let host = measure_bandwidth(threads, 128);
+    println!(
+        "\nmessages: {} — effective {:.2} GB/s vs STREAM copy {:.2} GB/s \
+         ({:.0}% of roofline)",
+        fmt::si(msgs as f64),
+        eff_gbps,
+        host.copy_gbps,
+        100.0 * eff_gbps / host.copy_gbps
+    );
+    println!(
+        "pagerank throughput: {} edges/s",
+        fmt::si((g.m() * ITERS) as f64 / total)
+    );
+
+    // BFS end-to-end (frontier-driven path).
+    let bres = apps::bfs::run(&mut eng, 0);
+    let btime: f64 = bres.stats.iters.iter().map(|i| i.total_time()).sum();
+    println!(
+        "bfs: {} iters, {} in-engine, {} msgs/s",
+        bres.stats.n_iters(),
+        fmt::secs(btime),
+        fmt::si(bres.stats.total_messages() as f64 / btime)
+    );
+}

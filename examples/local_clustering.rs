@@ -1,0 +1,140 @@
+//! Strongly-local clustering with Nibble — the paper's showcase for
+//! selective frontier continuity (§4/§5).
+//!
+//! Demonstrates (a) that per-run work is proportional to the cluster
+//! neighborhood, not the graph (`O(E)` init amortized across runs on
+//! one engine), and (b) a conductance sweep over the Nibble / ACL
+//! PageRank-Nibble embeddings to extract an actual cluster.
+//!
+//! Run: `cargo run --release --example local_clustering`
+
+use gpop::apps::{nibble, pagerank_nibble};
+use gpop::graph::{gen, Graph, GraphBuilder};
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::util::fmt;
+use gpop::VertexId;
+
+/// `n_comms` communities of `csize` vertices joined in a ring by narrow
+/// bridges: the classic local-clustering testbed (planted partition).
+fn planted_communities(n_comms: usize, csize: usize, seed: u64) -> Graph {
+    let mut rng = gpop::util::rng::Rng::new(seed);
+    let n = n_comms * csize;
+    let mut b = GraphBuilder::new().with_n(n).symmetrize().dedup();
+    // Dense-ish inside each community.
+    for comm in 0..n_comms {
+        let base = (comm * csize) as u32;
+        for _ in 0..csize * 8 {
+            let u = base + rng.below(csize as u64) as u32;
+            let v = base + rng.below(csize as u64) as u32;
+            if u != v {
+                b.add(u, v);
+            }
+        }
+    }
+    // A few bridge edges between consecutive communities.
+    for comm in 0..n_comms {
+        let a = (comm * csize) as u32;
+        let c = (((comm + 1) % n_comms) * csize) as u32;
+        for i in 0..4u32 {
+            b.add(a + i, c + i);
+        }
+    }
+    b.build()
+}
+
+/// Sweep cut: order vertices by deg-normalized score, return the prefix
+/// with minimum conductance.
+fn sweep_conductance(g: &Graph, score: &[f32]) -> (Vec<VertexId>, f64) {
+    let mut order: Vec<VertexId> = (0..g.n() as VertexId)
+        .filter(|&v| score[v as usize] > 0.0)
+        .collect();
+    order.sort_by(|&a, &b| {
+        let sa = score[a as usize] / g.out_degree(a).max(1) as f32;
+        let sb = score[b as usize] / g.out_degree(b).max(1) as f32;
+        sb.total_cmp(&sa)
+    });
+    let total_vol: u64 = (0..g.n() as VertexId).map(|v| g.out_degree(v) as u64).sum();
+    let mut in_set = vec![false; g.n()];
+    let mut vol = 0u64;
+    let mut cut = 0i64;
+    let mut best = (1, f64::INFINITY);
+    for (i, &v) in order.iter().enumerate() {
+        in_set[v as usize] = true;
+        vol += g.out_degree(v) as u64;
+        for &u in g.out().neighbors(v) {
+            // Edge v-u: enters the cut if u outside, leaves if inside.
+            cut += if in_set[u as usize] { -1 } else { 1 };
+        }
+        let denom = vol.min(total_vol - vol).max(1) as f64;
+        let phi = cut.max(0) as f64 / denom;
+        if phi < best.1 {
+            best = (i + 1, phi);
+        }
+    }
+    (order[..best.0].to_vec(), best.1)
+}
+
+fn main() {
+    let (n_comms, csize) = (10, 1000);
+    let half = csize; // size of the seed community
+    let graph = planted_communities(n_comms, csize, 1234);
+    println!(
+        "planted graph: {} communities x {} vertices — {} vertices, {} edges, bridge width 4",
+        n_comms,
+        csize,
+        graph.n(),
+        graph.m()
+    );
+
+    // ONE engine: pre-processing cost paid once, amortized over many
+    // local runs (§5: "the initialization cost can be amortized").
+    let t0 = std::time::Instant::now();
+    let mut engine = Engine::new(graph.clone(), PpmConfig { threads: 4, ..Default::default() });
+    println!("engine pre-processing: {}\n", fmt::secs(t0.elapsed().as_secs_f64()));
+
+    // --- Nibble from seeds in community 0; work must stay local.
+    println!("-- Nibble (selective continuity via initFunc) --");
+    let iters = 30;
+    for seed in [0u32, 7, 100] {
+        let t = std::time::Instant::now();
+        let res = nibble::run(&mut engine, &[seed], 2e-5, iters);
+        let in_comm0 = res
+            .pr
+            .iter()
+            .take(half)
+            .filter(|&&x| x > 0.0)
+            .count();
+        println!(
+            "seed {seed:>4}: support {:>5} ({} in seed community) msgs {:>8} in {}",
+            res.support,
+            in_comm0,
+            res.stats.total_messages(),
+            fmt::secs(t.elapsed().as_secs_f64())
+        );
+        // Work-efficiency: an O(E)-per-iteration framework would stream
+        // iters * m edges; Nibble must do a fraction of that.
+        assert!(
+            res.stats.total_messages() < (iters * graph.m()) as u64 / 5,
+            "local run must beat O(E)-per-iteration engines"
+        );
+    }
+
+    // --- PageRank-Nibble + sweep: recover the planted community.
+    // eps keeps the diffusion support within ~1 community so the sweep
+    // cannot drift around the ring (ACL: support ~ 1/(eps * vol)).
+    println!("\n-- PageRank-Nibble + conductance sweep --");
+    let res = pagerank_nibble::run(&mut engine, &[0], 0.2, 1e-5, 300);
+    let (cluster, phi) = sweep_conductance(&graph, &res.p);
+    let in_comm0 = cluster.iter().filter(|&&v| (v as usize) < half).count();
+    println!(
+        "cluster: {} vertices, conductance {:.4}, purity {:.1}%",
+        cluster.len(),
+        phi,
+        100.0 * in_comm0 as f64 / cluster.len() as f64
+    );
+    assert!(
+        in_comm0 as f64 / cluster.len() as f64 > 0.9,
+        "sweep should recover the planted community"
+    );
+    println!("\ncommunity recovery PASSED");
+}

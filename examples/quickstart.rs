@@ -1,0 +1,44 @@
+//! Quickstart: the GPOP public API in ~40 lines.
+//!
+//! Builds a small social-network-like RMAT graph, runs PageRank and BFS
+//! through the PPM engine, and prints the results — the "hello world"
+//! of the framework.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gpop::apps;
+use gpop::graph::gen;
+use gpop::ppm::{Engine, PpmConfig};
+
+fn main() {
+    // 64K-vertex scale-free graph, Graph500 RMAT parameters.
+    let graph = gen::rmat(16, Default::default(), false);
+    println!("graph: {} vertices, {} edges", graph.n(), graph.m());
+
+    // The engine picks k (partition count) so each partition's vertex
+    // data fits the 256 KB L2 budget, per the paper's §3.1 heuristic.
+    let config = PpmConfig { threads: 4, ..Default::default() };
+    let mut engine = Engine::new(graph, config);
+    println!("partitions: k = {} (q = {})", engine.parts().k(), engine.parts().q());
+
+    // --- PageRank: 10 iterations, all vertices active, DC-mode heavy.
+    let pr = apps::pagerank::run(&mut engine, 0.85, 10);
+    let mut top: Vec<(usize, f32)> = pr.rank.iter().copied().enumerate().collect();
+    top.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("\ntop-5 PageRank:");
+    for (v, r) in top.iter().take(5) {
+        println!("  vertex {v:>6}: {r:.6}");
+    }
+    let dc_parts: usize = pr.iters.iter().map(|i| i.dc_parts).sum();
+    let sc_parts: usize = pr.iters.iter().map(|i| i.sc_parts).sum();
+    println!("mode choices: {dc_parts} DC vs {sc_parts} SC partition-scatters");
+
+    // --- BFS from vertex 0: frontier-driven, SC-mode heavy.
+    let bfs = apps::bfs::run(&mut engine, 0);
+    println!(
+        "\nBFS: reached {} vertices in {} iterations ({} messages)",
+        bfs.n_reached(),
+        bfs.stats.n_iters(),
+        bfs.stats.total_messages()
+    );
+}

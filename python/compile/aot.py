@@ -1,0 +1,125 @@
+"""AOT lowering: JAX/Pallas -> HLO text -> artifacts/ for the rust
+runtime.
+
+HLO *text* is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  pagerank_step.hlo.txt — one PPM PageRank iteration (L2 model wrapping
+                          the L1 spmv_block Pallas kernel).
+  pagerank_run.hlo.txt  — ITERS fused iterations (lax.scan).
+  gather.hlo.txt        — one partition's gather (one-hot MXU kernel).
+  manifest.json         — shapes/constants the rust side needs.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--k 8] [--q 256]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT shapes (PJRT executables are shape-specialized; the rust
+# driver generates its demo workload to match the manifest).
+DEFAULT_K = 8
+DEFAULT_Q = 256
+DEFAULT_ITERS = 10
+DEFAULT_BLOCK_M = 256
+DEFAULT_GATHER_M = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pagerank_step(k: int, q: int) -> str:
+    n = k * q
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.pagerank_step).lower(
+        spec((k, k, q, q), jnp.float32),
+        spec((n,), jnp.float32),
+        spec((n,), jnp.float32),
+        spec((), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_pagerank_run(k: int, q: int, iters: int) -> str:
+    n = k * q
+    spec = jax.ShapeDtypeStruct
+
+    def run(blocks, rank0, inv_deg, damping):
+        return model.pagerank_run(blocks, rank0, inv_deg, damping, iters)
+
+    lowered = jax.jit(run).lower(
+        spec((k, k, q, q), jnp.float32),
+        spec((n,), jnp.float32),
+        spec((n,), jnp.float32),
+        spec((), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_gather(m: int, q: int) -> str:
+    spec = jax.ShapeDtypeStruct
+
+    def g(vals, dst):
+        return model.gather_step(vals, dst, q)
+
+    lowered = jax.jit(g).lower(
+        spec((m,), jnp.float32),
+        spec((m,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--k", type=int, default=DEFAULT_K)
+    ap.add_argument("--q", type=int, default=DEFAULT_Q)
+    ap.add_argument("--iters", type=int, default=DEFAULT_ITERS)
+    ap.add_argument("--gather-m", type=int, default=DEFAULT_GATHER_M)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    outputs = {
+        "pagerank_step.hlo.txt": lower_pagerank_step(args.k, args.q),
+        "pagerank_run.hlo.txt": lower_pagerank_run(args.k, args.q, args.iters),
+        "gather.hlo.txt": lower_gather(args.gather_m, args.q),
+    }
+    for name, text in outputs.items():
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    manifest = {
+        "k": args.k,
+        "q": args.q,
+        "n": args.k * args.q,
+        "iters": args.iters,
+        "gather_m": args.gather_m,
+        "block_m": DEFAULT_BLOCK_M,
+        "dtype": "f32",
+        "format": "hlo-text",
+        "jax": jax.__version__,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: partition gather as a one-hot MXU matmul.
+
+GPOP's Gather phase applies a stream of (value, destination) messages to
+a cache-resident partition array. On CPU the win is partition-locality;
+on TPU, fine-grained scatter-adds are hostile to the vector unit the
+same way random DRAM writes are to a cache hierarchy. The adaptation
+(DESIGN.md §Hardware-Adaptation) converts the scatter-add into a dense
+reduction the MXU executes natively:
+
+    out[q] += vals[bm] @ onehot(dst[bm], q)
+
+The destination tile `out` (the "partition", sized to VMEM like the
+paper sizes partitions to L2) stays resident across the message-block
+grid; message blocks stream HBM -> VMEM exactly like DC-mode's
+sequential bin reads.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated through this path (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(vals_ref, dst_ref, out_ref, *, q: int):
+    """One grid step: fold a message block into the resident out tile."""
+    step = pl.program_id(0)
+    vals = vals_ref[...]  # f32[bm]
+    dst = dst_ref[...]  # i32[bm]
+    # One-hot expansion: bm x q matrix, 1 at (m, dst[m]).
+    cols = jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], q), 1)
+    onehot = (cols == dst[:, None]).astype(vals.dtype)
+    # MXU-shaped reduction: [1, bm] @ [bm, q] -> [1, q].
+    contrib = jnp.dot(
+        vals[None, :], onehot, preferred_element_type=jnp.float32
+    )[0]
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(step != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + contrib
+
+
+@functools.partial(jax.jit, static_argnames=("q", "block_m"))
+def gather_accumulate(msg_vals, msg_dst, *, q: int, block_m: int = 256):
+    """Accumulate `msg_vals` into a q-wide partition array by `msg_dst`.
+
+    M must be a multiple of `block_m` (callers pad with dst=q-1, val=0 —
+    see `pad_messages`). q should be a multiple of 128 (TPU lane width).
+    """
+    m = msg_vals.shape[0]
+    assert m % block_m == 0, f"M={m} not a multiple of block_m={block_m}"
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ],
+        # The partition tile: resident across all grid steps (index map
+        # pins block 0), mirroring the paper's cache-resident partition.
+        out_specs=pl.BlockSpec((q,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=True,
+    )(msg_vals, msg_dst)
+
+
+def pad_messages(msg_vals, msg_dst, block_m: int = 256):
+    """Pad a message stream to a block_m multiple with no-op messages
+    (val = 0 accumulates nothing regardless of destination)."""
+    m = msg_vals.shape[0]
+    pad = (-m) % block_m
+    if pad:
+        msg_vals = jnp.concatenate([msg_vals, jnp.zeros((pad,), msg_vals.dtype)])
+        msg_dst = jnp.concatenate([msg_dst, jnp.zeros((pad,), msg_dst.dtype)])
+    return msg_vals, msg_dst
+
+
+def vmem_bytes(q: int, block_m: int = 256) -> int:
+    """Estimated VMEM footprint of one grid step (DESIGN.md §Perf):
+    out tile + message block + one-hot expansion."""
+    return 4 * (q + 2 * block_m + block_m * q)

@@ -1,0 +1,51 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth (pytest asserts kernel ==
+reference under hypothesis-driven shape/value sweeps) and double as the
+"naive roofline" baseline for the L1 §Perf comparison.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_accumulate_ref(msg_vals, msg_dst, q):
+    """GPOP Gather phase for one partition: accumulate message values
+    into a q-slot partition-local vertex array.
+
+    msg_vals: f32[M] message payloads.
+    msg_dst:  i32[M] partition-local destination indices in [0, q).
+    Returns f32[q]: sum of payloads per destination (PageRank's
+    gatherFunc accumulation).
+    """
+    out = jnp.zeros((q,), dtype=msg_vals.dtype)
+    return out.at[msg_dst].add(msg_vals)
+
+
+def spmv_block_ref(blocks, x):
+    """Destination-centric blocked SpMV for one destination partition.
+
+    blocks: f32[k, q, q] — dense (src-partition-major) transition blocks
+            A[s][i, j] = weight of edge (src partition s, local src j) ->
+            (local dst i).
+    x:      f32[k * q] — source values (rank shares), partition-major.
+    Returns f32[q] = sum_s blocks[s] @ x[s*q:(s+1)*q].
+    """
+    k, q, _ = blocks.shape
+    xs = x.reshape(k, q)
+    return jnp.einsum("sij,sj->i", blocks, xs)
+
+
+def pagerank_step_ref(blocks, rank, inv_deg, damping):
+    """One full PPM PageRank iteration over a dense-blocked graph.
+
+    blocks:  f32[kd, ks, q, q] — blocks[d, s][i, j] = 1 if edge
+             (s*q + j) -> (d*q + i) exists.
+    rank:    f32[n], n = kd * q (kd == ks).
+    inv_deg: f32[n] — 1/out_degree (0 for isolated vertices).
+    Returns f32[n]: (1-d)/n + d * A^T-shares, the Alg.-6 update.
+    """
+    kd, ks, q, _ = blocks.shape
+    n = kd * q
+    shares = (rank * inv_deg).reshape(ks, q)
+    acc = jnp.einsum("dsij,sj->di", blocks, shares).reshape(n)
+    return (1.0 - damping) / n + damping * acc

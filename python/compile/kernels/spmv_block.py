@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: destination-centric blocked SpMV.
+
+The DC-mode insight of the paper — stream *all* edges of a partition
+sequentially rather than chase the active subset randomly — maps on TPU
+to streaming dense q x q transition blocks through the MXU while the
+destination tile stays VMEM-resident:
+
+    y[q] = sum_s  blocks[s] @ x[s*q : (s+1)*q]
+
+Grid dimension = source partition s; BlockSpec streams blocks[s] and
+x-tiles HBM -> VMEM (the hardware analogue of DC-mode's sequential
+dc_bin reads), out keeps the destination partition resident (the L2-
+resident partition of §3.1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(block_ref, x_ref, y_ref):
+    # Blocks arrive as (1, q, q) and (1, q) refs (the leading axis is
+    # the grid dimension): squeeze it before the matmul.
+    s = pl.program_id(0)
+    a = block_ref[0]
+    xv = x_ref[0]
+    contrib = jnp.dot(a, xv, preferred_element_type=jnp.float32)
+
+    @pl.when(s == 0)
+    def _init():
+        y_ref[...] = contrib
+
+    @pl.when(s != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + contrib
+
+
+@jax.jit
+def spmv_block(blocks, x):
+    """y = sum_s blocks[s] @ x[s*q:(s+1)*q].
+
+    blocks: f32[k, q, q]; x: f32[k*q]. q should be a multiple of 128.
+    """
+    k, q, q2 = blocks.shape
+    assert q == q2
+    xs = x.reshape(k, q)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, q, q), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, q), lambda s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((q,), lambda s: (0,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=True,
+    )(blocks, xs)
+
+
+def vmem_bytes(q: int) -> int:
+    """VMEM per grid step: one q x q block + x tile + y tile."""
+    return 4 * (q * q + 2 * q)
+
+
+def mxu_utilization_estimate(q: int, nnz_per_block: float) -> float:
+    """Fraction of MXU MACs doing useful work when a q x q dense block
+    holds `nnz_per_block` edges (DESIGN.md §Perf: the density/efficiency
+    trade of densifying DC-mode for the systolic array)."""
+    return min(1.0, nnz_per_block / float(q * q))

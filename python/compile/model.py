@@ -1,0 +1,60 @@
+"""L2: the JAX compute graph for one PPM PageRank iteration.
+
+This is the paper's DC-mode dataflow expressed as XLA-compilable
+compute: rank shares are computed once (scatterFunc + initFunc), every
+destination partition reduces its incoming blocks (gatherFunc), and the
+damping is applied (filterFunc). The inner reduction is the L1 Pallas
+kernel `spmv_block`, so the whole step lowers into a single HLO module
+that the rust runtime executes via PJRT.
+
+Build-time only: lowered once by `aot.py`, never imported at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gather_onehot import gather_accumulate
+from .kernels.spmv_block import spmv_block
+
+
+def pagerank_step(blocks, rank, inv_deg, damping):
+    """One PageRank iteration over a dense-blocked graph.
+
+    blocks:  f32[kd, ks, q, q], blocks[d, s][i, j] = edge (s q + j) ->
+             (d q + i) indicator (column-stochastic handled by inv_deg).
+    rank:    f32[n] with n = kd * q.
+    inv_deg: f32[n], 1/out_degree (0 for sinks).
+    damping: f32 scalar.
+    Returns f32[n].
+    """
+    kd, ks, q, _ = blocks.shape
+    n = kd * q
+    # scatterFunc + initFunc: degree-normalized shares.
+    shares = rank * inv_deg
+    # gatherFunc: per destination partition, the L1 DC-mode kernel.
+    def per_dest(dest_blocks):
+        return spmv_block(dest_blocks, shares)
+
+    acc = jax.vmap(per_dest)(blocks).reshape(n)
+    # filterFunc: damping.
+    return (1.0 - damping) / n + damping * acc
+
+
+def gather_step(msg_vals, msg_dst, q: int):
+    """One partition's Gather phase (message accumulation) as a
+    standalone artifact — the L1 one-hot kernel behind an XLA boundary.
+
+    msg_vals: f32[M]; msg_dst: i32[M] (block_m-padded); returns f32[q].
+    """
+    return gather_accumulate(msg_vals, msg_dst, q=q)
+
+
+def pagerank_run(blocks, rank0, inv_deg, damping, iters: int):
+    """`iters` fused PageRank steps (lax.scan keeps the HLO compact —
+    one loop body, not `iters` unrolled copies)."""
+
+    def body(rank, _):
+        return pagerank_step(blocks, rank, inv_deg, damping), None
+
+    rank, _ = jax.lax.scan(body, rank0, None, length=iters)
+    return rank

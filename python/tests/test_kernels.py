@@ -1,0 +1,180 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+The CORE correctness signal for the compile path: every kernel must be
+bit-compatible (up to float accumulation order) with ref.py under
+hypothesis-driven shape/value sweeps.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gather_onehot import (
+    gather_accumulate,
+    pad_messages,
+    vmem_bytes as gather_vmem,
+)
+from compile.kernels.ref import (
+    gather_accumulate_ref,
+    spmv_block_ref,
+    pagerank_step_ref,
+)
+from compile.kernels.spmv_block import (
+    mxu_utilization_estimate,
+    spmv_block,
+    vmem_bytes as spmv_vmem,
+)
+
+RTOL = 1e-4
+ATOL = 1e-5
+
+
+# ------------------------------------------------------------- gather
+
+
+def _random_messages(rng, m, q):
+    vals = jnp.array(rng.standard_normal(m), dtype=jnp.float32)
+    dst = jnp.array(rng.integers(0, q, m), dtype=jnp.int32)
+    return vals, dst
+
+
+class TestGatherOnehot:
+    def test_simple_exact(self):
+        vals = jnp.array([1.0, 2.0, 4.0, 8.0] * 64, dtype=jnp.float32)
+        dst = jnp.array(([0, 1, 1, 127]) * 64, dtype=jnp.int32)
+        out = gather_accumulate(vals, dst, q=128)
+        ref = gather_accumulate_ref(vals, dst, 128)
+        np.testing.assert_allclose(out, ref, rtol=0, atol=0)
+
+    def test_empty_padding_only(self):
+        vals, dst = pad_messages(
+            jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32)
+        )
+        assert vals.shape[0] == 0
+        # Zero-length stream: pad to one block manually.
+        vals, dst = pad_messages(
+            jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.int32)
+        )
+        out = gather_accumulate(vals, dst, q=128)
+        np.testing.assert_allclose(out, np.zeros(128), atol=0)
+
+    @pytest.mark.parametrize("m", [256, 512, 4096])
+    @pytest.mark.parametrize("q", [128, 256, 512])
+    def test_shapes(self, m, q):
+        rng = np.random.default_rng(m * 1000 + q)
+        vals, dst = _random_messages(rng, m, q)
+        out = gather_accumulate(vals, dst, q=q)
+        ref = gather_accumulate_ref(vals, dst, q)
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 700),
+        q=st.sampled_from([128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_padded_streams(self, m, q, seed):
+        rng = np.random.default_rng(seed)
+        vals, dst = _random_messages(rng, m, q)
+        ref = gather_accumulate_ref(vals, dst, q)
+        pv, pd = pad_messages(vals, dst)
+        assert pv.shape[0] % 256 == 0
+        out = gather_accumulate(pv, pd, q=q)
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(scale=st.sampled_from([1e-6, 1.0, 1e6]), seed=st.integers(0, 999))
+    def test_hypothesis_value_ranges(self, scale, seed):
+        rng = np.random.default_rng(seed)
+        vals, dst = _random_messages(rng, 512, 128)
+        vals = vals * scale
+        out = gather_accumulate(vals, dst, q=128)
+        ref = gather_accumulate_ref(vals, dst, 128)
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=ATOL * scale)
+
+    def test_duplicate_destinations_accumulate(self):
+        vals = jnp.ones((256,), jnp.float32)
+        dst = jnp.zeros((256,), jnp.int32)
+        out = gather_accumulate(vals, dst, q=128)
+        assert float(out[0]) == 256.0
+        assert float(jnp.sum(out[1:])) == 0.0
+
+    def test_vmem_budget(self):
+        # The default tile must fit the 16 MB VMEM budget (DESIGN §Perf).
+        assert gather_vmem(q=256, block_m=256) < 16 * 2**20
+
+
+# ---------------------------------------------------------------- spmv
+
+
+class TestSpmvBlock:
+    @pytest.mark.parametrize("k", [1, 2, 8])
+    @pytest.mark.parametrize("q", [128, 256])
+    def test_shapes(self, k, q):
+        rng = np.random.default_rng(k * 31 + q)
+        blocks = jnp.array(rng.standard_normal((k, q, q)), dtype=jnp.float32)
+        x = jnp.array(rng.standard_normal(k * q), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            spmv_block(blocks, x), spmv_block_ref(blocks, x), rtol=RTOL, atol=1e-3
+        )
+
+    def test_identity_blocks(self):
+        k, q = 3, 128
+        eye = jnp.stack([jnp.eye(q, dtype=jnp.float32)] * k)
+        x = jnp.arange(k * q, dtype=jnp.float32)
+        out = spmv_block(eye, x)
+        ref = x.reshape(k, q).sum(axis=0)
+        np.testing.assert_allclose(out, ref, rtol=RTOL)
+
+    def test_zero_blocks(self):
+        blocks = jnp.zeros((2, 128, 128), jnp.float32)
+        x = jnp.ones((256,), jnp.float32)
+        np.testing.assert_allclose(spmv_block(blocks, x), np.zeros(128), atol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(k=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_random(self, k, seed):
+        q = 128
+        rng = np.random.default_rng(seed)
+        # Sparse-ish blocks, like real adjacency densification.
+        blocks = (rng.random((k, q, q)) < 0.05).astype(np.float32)
+        x = rng.standard_normal(k * q).astype(np.float32)
+        np.testing.assert_allclose(
+            spmv_block(jnp.array(blocks), jnp.array(x)),
+            spmv_block_ref(jnp.array(blocks), jnp.array(x)),
+            rtol=RTOL,
+            atol=1e-3,
+        )
+
+    def test_vmem_and_utilization_helpers(self):
+        assert spmv_vmem(256) < 16 * 2**20
+        assert mxu_utilization_estimate(128, 128 * 128) == 1.0
+        assert 0.0 < mxu_utilization_estimate(128, 100.0) < 0.01
+
+
+# ------------------------------------------------------ pagerank (ref)
+
+
+class TestPageRankRef:
+    def test_matches_dense_numpy(self):
+        kd = ks = 2
+        q = 128
+        n = kd * q
+        rng = np.random.default_rng(7)
+        adj = (rng.random((n, n)) < 0.02).astype(np.float32)
+        deg = adj.sum(axis=0)  # out-degree of column j... see below
+        # blocks[d, s][i, j] = adj[(d q + i), (s q + j)] where adj[i, j]
+        # is edge j -> i (column = source).
+        blocks = (
+            adj.reshape(kd, q, ks, q).transpose(0, 2, 1, 3).astype(np.float32)
+        )
+        rank = np.full(n, 1.0 / n, np.float32)
+        inv_deg = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0).astype(
+            np.float32
+        )
+        got = pagerank_step_ref(
+            jnp.array(blocks), jnp.array(rank), jnp.array(inv_deg), 0.85
+        )
+        want = (1 - 0.85) / n + 0.85 * (adj @ (rank * inv_deg))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,13 @@
+//! The GPOP programming interface (paper §4.1).
+//!
+//! A graph algorithm is expressed as a [`Program`] with four (optionally
+//! five) small functions; the PPM engine drives them through
+//! barrier-separated Scatter/Gather phases and guarantees that every
+//! vertex is updated by exactly one thread — no locks or atomics are
+//! required in user code.
+
+pub mod program;
+pub mod vertex_data;
+
+pub use program::{MsgValue, Program};
+pub use vertex_data::VertexData;

@@ -1,0 +1,114 @@
+//! The `Program` trait — GPOP's four user-defined functions (paper §4.1)
+//! plus `applyWeight` for weighted graphs.
+
+use crate::{VertexId, Weight};
+
+/// Message payload: a 4-byte value (`d_v = 4` in the paper), bit-cast
+/// into the bins' `u32` storage.
+pub trait MsgValue: Copy + Send + Sync + 'static {
+    fn to_bits(self) -> u32;
+    fn from_bits(bits: u32) -> Self;
+}
+
+impl MsgValue for u32 {
+    #[inline]
+    fn to_bits(self) -> u32 {
+        self
+    }
+    #[inline]
+    fn from_bits(bits: u32) -> Self {
+        bits
+    }
+}
+
+impl MsgValue for i32 {
+    #[inline]
+    fn to_bits(self) -> u32 {
+        self as u32
+    }
+    #[inline]
+    fn from_bits(bits: u32) -> Self {
+        bits as i32
+    }
+}
+
+impl MsgValue for f32 {
+    #[inline]
+    fn to_bits(self) -> u32 {
+        self.to_bits()
+    }
+    #[inline]
+    fn from_bits(bits: u32) -> Self {
+        f32::from_bits(bits)
+    }
+}
+
+/// A GPOP application (paper §4.1). The engine calls:
+///
+/// - [`scatter`](Self::scatter) (`scatterFunc`) for active vertices
+///   during Scatter, returning the value propagated to out-neighbors.
+///   **DC-mode caveat** (paper §3.3/§5): when a partition scatters
+///   destination-centric, `scatter` is invoked for *every* vertex of
+///   the partition with outgoing edges — including inactive ones — and
+///   may be invoked multiple times per vertex. Programs must return a
+///   value that `gather` treats as a no-op for inactive vertices (e.g.
+///   BFS sends `-1` while unvisited, SSSP sends `+inf`).
+/// - [`init`](Self::init) (`initFunc`) once per active vertex in the
+///   `initFrontier` step: return `true` to keep the vertex active next
+///   iteration regardless of Gather (selective frontier continuity —
+///   the capability §4.1 highlights for Nibble/Heat-Kernel PR). May
+///   also update vertex data before Gather begins.
+/// - [`gather`](Self::gather) (`gatherFunc`) once per incoming message:
+///   update the destination's data (lock-free: the engine guarantees
+///   exclusive ownership) and return `true` to activate it.
+/// - [`filter`](Self::filter) (`filterFunc`) once per vertex of the
+///   preliminary next frontier: return `false` to drop it. Also the
+///   hook for post-accumulation updates (e.g. PageRank damping).
+/// - [`apply_weight`](Self::apply_weight) (`applyWeight`) combines a
+///   scattered value with an edge weight (weighted graphs only).
+pub trait Program: Sync {
+    type Msg: MsgValue;
+
+    /// `scatterFunc(node)` — value sent to out-neighbors.
+    fn scatter(&self, v: VertexId) -> Self::Msg;
+
+    /// `initFunc(node)` — keep `v` active for the next iteration?
+    fn init(&self, v: VertexId) -> bool;
+
+    /// `gatherFunc(val, node)` — apply a message; activate `node`?
+    fn gather(&self, val: Self::Msg, v: VertexId) -> bool;
+
+    /// `filterFunc(node)` — retain `node` in the next frontier?
+    fn filter(&self, v: VertexId) -> bool;
+
+    /// `applyWeight(val, wt)` — combine value with edge weight.
+    #[inline]
+    fn apply_weight(&self, val: Self::Msg, _w: Weight) -> Self::Msg {
+        val
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u32_roundtrip() {
+        assert_eq!(u32::from_bits(42u32.to_bits()), 42);
+    }
+
+    #[test]
+    fn i32_roundtrip_negative() {
+        assert_eq!(i32::from_bits((-1i32).to_bits()), -1);
+        assert_eq!(i32::from_bits(i32::MIN.to_bits()), i32::MIN);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        for x in [0.0f32, -0.0, 1.5, f32::INFINITY, f32::MIN_POSITIVE] {
+            assert_eq!(f32::from_bits(MsgValue::to_bits(x)), x);
+        }
+        let nan = f32::from_bits(MsgValue::to_bits(f32::NAN));
+        assert!(nan.is_nan());
+    }
+}

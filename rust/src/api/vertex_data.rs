@@ -1,0 +1,181 @@
+//! Shared vertex-attribute arrays for GPOP programs.
+//!
+//! The engine guarantees that, within a phase, vertex `v` is read/written
+//! only by the thread owning `partition(v)` — the property that lets PPM
+//! run without locks (paper §3). [`VertexData`] makes that *sound* in
+//! Rust by storing each slot as a relaxed atomic of the same width: on
+//! x86 a relaxed load/store compiles to a plain `mov`, so this costs
+//! nothing, while eliminating UB if a program ever breaks the ownership
+//! discipline.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::VertexId;
+
+/// Types storable in a [`VertexData`] array (4- or 8-byte plain data).
+pub trait Slot: Copy + Send + Sync + 'static {
+    type Atomic: Send + Sync;
+    fn new_atomic(v: Self) -> Self::Atomic;
+    fn load(a: &Self::Atomic) -> Self;
+    fn store(a: &Self::Atomic, v: Self);
+}
+
+macro_rules! impl_slot_32 {
+    ($t:ty, $to:expr, $from:expr) => {
+        impl Slot for $t {
+            type Atomic = AtomicU32;
+            #[inline]
+            fn new_atomic(v: Self) -> AtomicU32 {
+                AtomicU32::new($to(v))
+            }
+            #[inline]
+            fn load(a: &AtomicU32) -> Self {
+                $from(a.load(Ordering::Relaxed))
+            }
+            #[inline]
+            fn store(a: &AtomicU32, v: Self) {
+                a.store($to(v), Ordering::Relaxed)
+            }
+        }
+    };
+}
+
+impl_slot_32!(u32, |v| v, |b| b);
+impl_slot_32!(i32, |v| v as u32, |b| b as i32);
+impl_slot_32!(f32, f32::to_bits, f32::from_bits);
+
+macro_rules! impl_slot_64 {
+    ($t:ty, $to:expr, $from:expr) => {
+        impl Slot for $t {
+            type Atomic = AtomicU64;
+            #[inline]
+            fn new_atomic(v: Self) -> AtomicU64 {
+                AtomicU64::new($to(v))
+            }
+            #[inline]
+            fn load(a: &AtomicU64) -> Self {
+                $from(a.load(Ordering::Relaxed))
+            }
+            #[inline]
+            fn store(a: &AtomicU64, v: Self) {
+                a.store($to(v), Ordering::Relaxed)
+            }
+        }
+    };
+}
+
+impl_slot_64!(u64, |v| v, |b| b);
+impl_slot_64!(i64, |v| v as u64, |b| b as i64);
+impl_slot_64!(f64, f64::to_bits, f64::from_bits);
+
+/// A vertex-indexed attribute array shared across the engine's worker
+/// threads. All access is relaxed-atomic (free on x86); the engine's
+/// partition-ownership schedule provides the ordering.
+pub struct VertexData<T: Slot> {
+    slots: Vec<T::Atomic>,
+}
+
+impl<T: Slot> VertexData<T> {
+    pub fn new(n: usize, init: T) -> Self {
+        let mut slots = Vec::with_capacity(n);
+        slots.resize_with(n, || T::new_atomic(init));
+        Self { slots }
+    }
+
+    pub fn from_fn(n: usize, f: impl Fn(usize) -> T) -> Self {
+        Self { slots: (0..n).map(|i| T::new_atomic(f(i))).collect() }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, v: VertexId) -> T {
+        T::load(&self.slots[v as usize])
+    }
+
+    #[inline]
+    pub fn set(&self, v: VertexId, x: T) {
+        T::store(&self.slots[v as usize], x)
+    }
+
+    /// Snapshot the whole array (post-run reporting).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.slots.iter().map(|a| T::load(a)).collect()
+    }
+
+    /// Reset every slot (e.g. between Nibble runs; amortized O(V) once).
+    pub fn fill(&self, x: T) {
+        for a in &self.slots {
+            T::store(a, x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let d = VertexData::<f32>::new(10, 0.5);
+        assert_eq!(d.get(3), 0.5);
+        d.set(3, 1.25);
+        assert_eq!(d.get(3), 1.25);
+        assert_eq!(d.get(4), 0.5);
+    }
+
+    #[test]
+    fn from_fn_and_to_vec() {
+        let d = VertexData::<u32>::from_fn(5, |i| i as u32 * 2);
+        assert_eq!(d.to_vec(), vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn i32_negative_values() {
+        let d = VertexData::<i32>::new(4, -1);
+        assert_eq!(d.get(0), -1);
+        d.set(0, i32::MIN);
+        assert_eq!(d.get(0), i32::MIN);
+    }
+
+    #[test]
+    fn f64_slots() {
+        let d = VertexData::<f64>::new(3, 1.0 / 3.0);
+        assert_eq!(d.get(2), 1.0 / 3.0);
+        d.set(2, f64::INFINITY);
+        assert!(d.get(2).is_infinite());
+    }
+
+    #[test]
+    fn fill_resets() {
+        let d = VertexData::<u32>::new(4, 7);
+        d.set(1, 9);
+        d.fill(0);
+        assert_eq!(d.to_vec(), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn concurrent_disjoint_writes() {
+        let d = VertexData::<u64>::new(1000, 0);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let d = &d;
+                s.spawn(move || {
+                    for i in (t as usize..1000).step_by(4) {
+                        d.set(i as VertexId, i as u64 + t);
+                    }
+                });
+            }
+        });
+        for i in 0..1000u64 {
+            assert_eq!(d.get(i as VertexId), i + i % 4);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Breadth-First Search (paper §5, Alg. 5) — Graph500 kernel 2.
+//!
+//! Computes the BFS parent tree from a root. The GPOP program is four
+//! one-liners: scatter the own id (or `-1` while unvisited, the DC-mode
+//! inactive sentinel — §3.2 "a vertex can send its visited status or its
+//! index"), never keep the frontier (`init = false`), adopt the first
+//! parent seen, keep everything the gather activated.
+
+use crate::api::{Program, VertexData};
+use crate::ppm::{Engine, RunStats};
+use crate::VertexId;
+
+/// The BFS GPOP program. `parent[v] = -1` until visited.
+pub struct Bfs {
+    pub parent: VertexData<i32>,
+}
+
+impl Bfs {
+    pub fn new(n: usize) -> Self {
+        Self { parent: VertexData::new(n, -1) }
+    }
+}
+
+impl Program for Bfs {
+    type Msg = i32;
+
+    #[inline]
+    fn scatter(&self, v: VertexId) -> i32 {
+        // Visited vertices propose themselves as parent; unvisited ones
+        // (reachable only under DC-mode full-partition scatter) send the
+        // ignorable sentinel -1.
+        let p = self.parent.get(v);
+        if p >= 0 {
+            v as i32
+        } else {
+            -1
+        }
+    }
+
+    #[inline]
+    fn init(&self, _v: VertexId) -> bool {
+        false // frontier rebuilt from scratch every iteration
+    }
+
+    #[inline]
+    fn gather(&self, val: i32, v: VertexId) -> bool {
+        if val >= 0 && self.parent.get(v) < 0 {
+            self.parent.set(v, val);
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    fn filter(&self, _v: VertexId) -> bool {
+        true
+    }
+}
+
+/// Result of a BFS run.
+pub struct BfsResult {
+    /// Parent tree; `parent[root] = root`, `-1` if unreachable.
+    pub parent: Vec<i32>,
+    pub stats: RunStats,
+}
+
+impl BfsResult {
+    pub fn n_reached(&self) -> usize {
+        self.parent.iter().filter(|&&p| p >= 0).count()
+    }
+
+    /// Derive levels from the parent tree (root = 0).
+    pub fn levels(&self, root: VertexId) -> Vec<i32> {
+        let n = self.parent.len();
+        let mut level = vec![-1i32; n];
+        level[root as usize] = 0;
+        // Parent pointers form a DAG towards the root; resolve iteratively.
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for v in 0..n {
+                if level[v] >= 0 {
+                    continue;
+                }
+                let p = self.parent[v];
+                if p >= 0 && level[p as usize] >= 0 {
+                    level[v] = level[p as usize] + 1;
+                    changed = true;
+                }
+            }
+        }
+        level
+    }
+}
+
+/// Run BFS from `root` on a prepared engine.
+pub fn run(engine: &mut Engine, root: VertexId) -> BfsResult {
+    let prog = Bfs::new(engine.graph().n());
+    prog.parent.set(root, root as i32);
+    engine.load_frontier(&[root]);
+    let stats = engine.run(&prog, usize::MAX);
+    BfsResult { parent: prog.parent.to_vec(), stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial;
+    use crate::graph::gen;
+    use crate::ppm::{ModePolicy, PpmConfig};
+
+    fn check_against_serial(g: &crate::graph::Graph, root: VertexId, config: PpmConfig) {
+        let serial_lv = serial::bfs_levels(g, root);
+        let mut eng = Engine::new(g.clone(), config);
+        let res = run(&mut eng, root);
+        let lv = res.levels(root);
+        // Parent trees may differ, but levels (shortest hop counts) and
+        // reachability must match exactly.
+        assert_eq!(lv, serial_lv);
+        // Tree edges must be real edges.
+        for v in 0..g.n() {
+            let p = res.parent[v];
+            if p >= 0 && p as usize != v {
+                assert!(g.out().neighbors(p as u32).contains(&(v as u32)));
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_rmat_all_modes_match_serial() {
+        let g = gen::rmat(10, Default::default(), false);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            check_against_serial(
+                &g,
+                0,
+                PpmConfig { threads: 4, mode, k: Some(16), ..Default::default() },
+            );
+        }
+    }
+
+    #[test]
+    fn bfs_er_various_roots() {
+        let g = gen::erdos_renyi(500, 3000, 17);
+        for root in [0u32, 7, 123, 499] {
+            check_against_serial(
+                &g,
+                root,
+                PpmConfig { threads: 3, k: Some(11), ..Default::default() },
+            );
+        }
+    }
+
+    #[test]
+    fn bfs_grid_diameter() {
+        // Grid has a long diameter — exercises many sparse iterations.
+        let g = gen::grid(30, 30);
+        check_against_serial(&g, 0, PpmConfig { threads: 2, k: Some(8), ..Default::default() });
+    }
+
+    #[test]
+    fn bfs_counts_reached() {
+        let g = gen::chain(10);
+        let mut eng = Engine::new(g, PpmConfig::default());
+        let res = run(&mut eng, 3);
+        assert_eq!(res.n_reached(), 7); // 3..9
+        assert!(res.stats.converged);
+    }
+}

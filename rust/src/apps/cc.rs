@@ -1,0 +1,150 @@
+//! Label Propagation / Connected Components (paper §5, Alg. 7).
+//!
+//! Every vertex starts with its own id as label; labels flow along
+//! out-edges and each vertex adopts the minimum label seen (`compLabel`).
+//! Only vertices whose label changed stay active, so iterations shrink —
+//! the workload of Fig. 9's middle panel. On a symmetrized graph the
+//! fixpoint labels are connected components.
+
+use crate::api::{Program, VertexData};
+use crate::ppm::{Engine, RunStats};
+use crate::VertexId;
+
+pub struct LabelProp {
+    pub label: VertexData<u32>,
+}
+
+impl LabelProp {
+    pub fn new(n: usize) -> Self {
+        Self { label: VertexData::from_fn(n, |i| i as u32) }
+    }
+}
+
+impl Program for LabelProp {
+    type Msg = u32;
+
+    #[inline]
+    fn scatter(&self, v: VertexId) -> u32 {
+        // Min-propagation is monotone, so DC-mode scatter of inactive
+        // vertices is harmless (their label was already delivered).
+        self.label.get(v)
+    }
+
+    #[inline]
+    fn init(&self, _v: VertexId) -> bool {
+        false // only changed vertices become active (Alg. 7)
+    }
+
+    #[inline]
+    fn gather(&self, val: u32, v: VertexId) -> bool {
+        // compLabel: adopt the minimum, activate on change.
+        if val < self.label.get(v) {
+            self.label.set(v, val);
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    fn filter(&self, _v: VertexId) -> bool {
+        true
+    }
+}
+
+pub struct CcResult {
+    pub label: Vec<u32>,
+    pub stats: RunStats,
+}
+
+impl CcResult {
+    pub fn n_components(&self) -> usize {
+        let mut roots: Vec<u32> = self.label.clone();
+        roots.sort_unstable();
+        roots.dedup();
+        roots.len()
+    }
+}
+
+/// Run label propagation to convergence.
+pub fn run(engine: &mut Engine, max_iters: usize) -> CcResult {
+    let prog = LabelProp::new(engine.graph().n());
+    engine.load_all_active();
+    let stats = engine.run(&prog, max_iters);
+    CcResult { label: prog.label.to_vec(), stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial;
+    use crate::graph::gen;
+    use crate::graph::GraphBuilder;
+    use crate::ppm::{ModePolicy, PpmConfig};
+
+    #[test]
+    fn cc_two_components() {
+        let mut b = GraphBuilder::new().with_n(6).symmetrize();
+        b.add(0, 1).add(1, 2).add(3, 4).add(4, 5);
+        let g = b.build();
+        let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(3), ..Default::default() });
+        let res = run(&mut eng, 100);
+        assert!(res.stats.converged);
+        assert_eq!(res.label, vec![0, 0, 0, 3, 3, 3]);
+        assert_eq!(res.n_components(), 2);
+    }
+
+    #[test]
+    fn cc_matches_serial_all_modes() {
+        let g = {
+            let mut b = GraphBuilder::new().symmetrize().with_n(1 << 9);
+            let r = gen::rmat(9, Default::default(), false);
+            for v in 0..r.n() as u32 {
+                for &u in r.out().neighbors(v) {
+                    b.add(v, u);
+                }
+            }
+            b.build()
+        };
+        let reference = serial::label_propagation(&g);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            let mut eng = Engine::new(
+                g.clone(),
+                PpmConfig { threads: 4, mode, k: Some(8), ..Default::default() },
+            );
+            let res = run(&mut eng, 1000);
+            assert!(res.stats.converged, "mode {mode:?}");
+            assert_eq!(res.label, reference, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn cc_directed_fixpoint_matches_serial() {
+        // Directed label-prop fixpoint (not components, but the Alg. 7
+        // semantics) must still agree with the serial engine.
+        let g = gen::erdos_renyi(400, 2400, 8);
+        let reference = serial::label_propagation(&g);
+        let mut eng =
+            Engine::new(g, PpmConfig { threads: 3, k: Some(10), ..Default::default() });
+        let res = run(&mut eng, 1000);
+        assert_eq!(res.label, reference);
+    }
+
+    #[test]
+    fn cc_frontier_shrinks() {
+        let g = {
+            let mut b = GraphBuilder::new().symmetrize().with_n(1 << 10);
+            let r = gen::rmat(10, Default::default(), false);
+            for v in 0..r.n() as u32 {
+                for &u in r.out().neighbors(v) {
+                    b.add(v, u);
+                }
+            }
+            b.build()
+        };
+        let mut eng = Engine::new(g, PpmConfig { threads: 2, ..Default::default() });
+        let res = run(&mut eng, 1000);
+        let sizes: Vec<usize> = res.stats.iters.iter().map(|i| i.frontier).collect();
+        assert!(sizes[0] > *sizes.last().unwrap(), "frontier should shrink: {sizes:?}");
+    }
+}

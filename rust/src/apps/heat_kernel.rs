@@ -1,0 +1,201 @@
+//! Heat-Kernel PageRank (extension; §4.1 cites it as needing selective
+//! frontier continuity): approximates `ρ = e^{-t} Σ_k (t^k / k!) P^k s`
+//! by staged diffusion — at stage `k`, each active vertex settles its
+//! mass into `heat` with weight `ψ_k = e^{-t} t^k / k!`-normalized
+//! Taylor remainder, and forwards the rest through the transition
+//! matrix.
+//!
+//! The per-stage coefficient makes the program *stateful across
+//! iterations*: [`HeatKernel::advance_stage`] is bumped between engine
+//! iterations — exactly the driver pattern GPOP's `ppm()` loop supports.
+
+use crate::api::{Program, VertexData};
+use crate::ppm::Engine;
+use crate::VertexId;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub struct HeatKernel {
+    /// Accumulated heat-kernel scores.
+    pub heat: VertexData<f32>,
+    /// Mass still diffusing.
+    pub residual: VertexData<f32>,
+    deg: Vec<u32>,
+    /// Diffusion time t.
+    pub t: f32,
+    /// Taylor truncation order N.
+    pub order: u32,
+    /// Current stage k (0-based), bumped by the driver.
+    stage: AtomicU32,
+    pub eps: f32,
+}
+
+impl HeatKernel {
+    pub fn new(g: &crate::graph::Graph, t: f32, order: u32, eps: f32) -> Self {
+        Self {
+            heat: VertexData::new(g.n(), 0.0),
+            residual: VertexData::new(g.n(), 0.0),
+            deg: (0..g.n() as VertexId).map(|v| g.out_degree(v).max(1) as u32).collect(),
+            t,
+            order,
+            stage: AtomicU32::new(0),
+            eps,
+        }
+    }
+
+    pub fn seed(&self, seeds: &[VertexId]) -> Vec<VertexId> {
+        let share = 1.0 / seeds.len() as f32;
+        for &s in seeds {
+            self.residual.set(s, share);
+        }
+        seeds.to_vec()
+    }
+
+    pub fn advance_stage(&self) {
+        self.stage.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fraction of the residual settled at stage `k`:
+    /// `settle_k = ψ_k` with `ψ_k = (Σ_{j>=k} t^j/j!)^{-1} * t^k/k!`
+    /// telescoped so that after N stages everything is settled.
+    fn settle_fraction(&self) -> f32 {
+        let k = self.stage.load(Ordering::Relaxed);
+        if k >= self.order {
+            return 1.0;
+        }
+        // tail(k) = sum_{j>=k} t^j/j!; settle = (t^k/k!) / tail(k).
+        let mut term = 1.0f64; // t^k/k! relative scale
+        let mut tail = 1.0f64;
+        let t = self.t as f64;
+        for j in 1..=(self.order * 4) {
+            term *= t / (k as f64 + j as f64);
+            tail += term;
+            if term < 1e-12 * tail {
+                break;
+            }
+        }
+        (1.0 / tail) as f32
+    }
+
+    #[inline]
+    fn above(&self, v: VertexId) -> bool {
+        self.residual.get(v) >= self.eps * self.deg[v as usize] as f32
+    }
+}
+
+impl Program for HeatKernel {
+    type Msg = f32;
+
+    #[inline]
+    fn scatter(&self, v: VertexId) -> f32 {
+        if self.above(v) {
+            let keep = self.settle_fraction();
+            (1.0 - keep) * self.residual.get(v) / self.deg[v as usize] as f32
+        } else {
+            0.0
+        }
+    }
+
+    #[inline]
+    fn init(&self, v: VertexId) -> bool {
+        let keep = self.settle_fraction();
+        let r = self.residual.get(v);
+        self.heat.set(v, self.heat.get(v) + keep * r);
+        self.residual.set(v, 0.0);
+        false // everything was pushed; activity comes from gather
+    }
+
+    #[inline]
+    fn gather(&self, val: f32, v: VertexId) -> bool {
+        if val > 0.0 {
+            self.residual.set(v, self.residual.get(v) + val);
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    fn filter(&self, v: VertexId) -> bool {
+        self.above(v)
+    }
+}
+
+pub struct HeatKernelResult {
+    pub heat: Vec<f32>,
+    pub iters: usize,
+}
+
+/// Run N staged diffusion rounds (the `ppm()` driver loop of Alg. 4,
+/// with per-stage state advanced between iterations).
+pub fn run(
+    engine: &mut Engine,
+    seeds: &[VertexId],
+    t: f32,
+    order: u32,
+    eps: f32,
+) -> HeatKernelResult {
+    let prog = HeatKernel::new(engine.graph(), t, order, eps);
+    let frontier = prog.seed(seeds);
+    engine.load_frontier(&frontier);
+    let mut iters = 0;
+    for _ in 0..order {
+        if engine.frontier_size() == 0 {
+            break;
+        }
+        engine.iterate(&prog);
+        prog.advance_stage();
+        iters += 1;
+    }
+    // Settle whatever residual remains (stage >= order settles 100%).
+    let heat: Vec<f32> = (0..engine.graph().n())
+        .map(|v| prog.heat.get(v as u32) + prog.residual.get(v as u32))
+        .collect();
+    HeatKernelResult { heat, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::ppm::PpmConfig;
+
+    #[test]
+    fn heat_mass_conserved() {
+        let g = gen::grid(8, 8);
+        let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(4), ..Default::default() });
+        let res = run(&mut eng, &[0], 2.0, 8, 1e-7);
+        let sum: f64 = res.heat.iter().map(|&x| x as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-3, "heat mass = {sum}");
+    }
+
+    #[test]
+    fn small_t_stays_at_seed() {
+        // t → 0 makes e^{tP} ≈ I: nearly all mass stays at the seed.
+        let g = gen::grid(8, 8);
+        let mut eng = Engine::new(g, PpmConfig::default());
+        let res = run(&mut eng, &[27], 0.05, 6, 1e-9);
+        assert!(res.heat[27] > 0.9, "seed heat = {}", res.heat[27]);
+    }
+
+    #[test]
+    fn larger_t_diffuses_further() {
+        let g = gen::grid(8, 8);
+        let spread = |t: f32| {
+            let mut eng = Engine::new(g.clone(), PpmConfig::default());
+            let res = run(&mut eng, &[27], t, 10, 1e-9);
+            res.heat.iter().filter(|&&x| x > 1e-4).count()
+        };
+        assert!(spread(4.0) > spread(0.2));
+    }
+
+    #[test]
+    fn settle_fraction_telescopes_to_one() {
+        let g = gen::chain(4);
+        let hk = HeatKernel::new(&g, 1.5, 3, 1e-6);
+        // After `order` stages everything settles.
+        for _ in 0..3 {
+            hk.advance_stage();
+        }
+        assert_eq!(hk.settle_fraction(), 1.0);
+    }
+}

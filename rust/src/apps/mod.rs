@@ -1,0 +1,28 @@
+//! The paper's five evaluated applications (§5) plus extensions, all
+//! expressed through the GPOP [`Program`](crate::api::Program) API in a
+//! handful of lines each — the programmability claim of §4.
+//!
+//! | app | paper | msg | frontier |
+//! |---|---|---|---|
+//! | [`bfs`] | Alg. 5, Graph500 kernel 2 | `i32` parent id | rebuilt |
+//! | [`pagerank`] | Alg. 6, SpMV benchmark | `f32` rank share | all active |
+//! | [`cc`] (label propagation) | Alg. 7 | `u32` label | changed only |
+//! | [`sssp`] (Bellman-Ford) | Alg. 8, Graph500 kernel 3 | `f32` distance | rebuilt |
+//! | [`nibble`] | Alg. 4, local clustering | `f32` probability | **selective continuity** |
+//! | [`pagerank_nibble`] | §4.1 (extension) | `f32` residual | selective continuity |
+//! | [`heat_kernel`] | §4.1 (extension) | `f32` heat mass | selective continuity |
+
+pub mod bfs;
+pub mod cc;
+pub mod cc_async;
+pub mod heat_kernel;
+pub mod nibble;
+pub mod pagerank;
+pub mod pagerank_nibble;
+pub mod sssp;
+
+pub use bfs::Bfs;
+pub use cc::LabelProp;
+pub use nibble::Nibble;
+pub use pagerank::PageRank;
+pub use sssp::Sssp;

@@ -1,0 +1,145 @@
+//! PageRank (paper §5, Alg. 6) — the SpMV-shaped benchmark where GPOP's
+//! DC mode shines (all vertices active every iteration, so Eq. 1 picks
+//! destination-centric scatter throughout: Fig. 6/8).
+//!
+//! Phase order per iteration (the reason Alg. 6 needs no second rank
+//! array): `scatter` reads the *current* rank, `init` zeroes it, `gather`
+//! accumulates shares, `filter` applies the damping.
+
+use crate::api::{Program, VertexData};
+use crate::ppm::{Engine, IterStats};
+use crate::VertexId;
+
+/// Damping factor used throughout the paper's evaluation.
+pub const DEFAULT_DAMPING: f32 = 0.85;
+
+pub struct PageRank {
+    pub rank: VertexData<f32>,
+    /// Out-degrees (read-only after construction).
+    deg: Vec<u32>,
+    n: usize,
+    d: f32,
+}
+
+impl PageRank {
+    pub fn new(g: &crate::graph::Graph, d: f32) -> Self {
+        let n = g.n();
+        Self {
+            rank: VertexData::new(n, 1.0 / n as f32),
+            deg: (0..n as VertexId).map(|v| g.out_degree(v) as u32).collect(),
+            n,
+            d,
+        }
+    }
+}
+
+impl Program for PageRank {
+    type Msg = f32;
+
+    #[inline]
+    fn scatter(&self, v: VertexId) -> f32 {
+        // deg > 0 guaranteed: scatter is only invoked for vertices with
+        // out-edges (SC skips empty adjacency, DC's PNG contains only
+        // edge-bearing sources).
+        self.rank.get(v) / self.deg[v as usize] as f32
+    }
+
+    #[inline]
+    fn init(&self, v: VertexId) -> bool {
+        self.rank.set(v, 0.0);
+        true // all vertices stay active (Alg. 6)
+    }
+
+    #[inline]
+    fn gather(&self, val: f32, v: VertexId) -> bool {
+        self.rank.set(v, self.rank.get(v) + val);
+        true
+    }
+
+    #[inline]
+    fn filter(&self, v: VertexId) -> bool {
+        self.rank.set(v, (1.0 - self.d) / self.n as f32 + self.d * self.rank.get(v));
+        true
+    }
+}
+
+/// Result of a PageRank run.
+pub struct PageRankResult {
+    pub rank: Vec<f32>,
+    pub iters: Vec<IterStats>,
+}
+
+/// Run `iters` synchronous PageRank iterations (paper: 10).
+pub fn run(engine: &mut Engine, d: f32, iters: usize) -> PageRankResult {
+    let prog = PageRank::new(engine.graph(), d);
+    engine.load_all_active();
+    let mut stats = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        stats.push(engine.iterate(&prog));
+    }
+    PageRankResult { rank: prog.rank.to_vec(), iters: stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial;
+    use crate::graph::gen;
+    use crate::ppm::{ModePolicy, PpmConfig};
+
+    fn check(g: &crate::graph::Graph, config: PpmConfig, iters: usize, tol: f64) {
+        let reference = serial::pagerank(g, DEFAULT_DAMPING as f64, iters);
+        let mut eng = Engine::new(g.clone(), config);
+        let res = run(&mut eng, DEFAULT_DAMPING, iters);
+        for v in 0..g.n() {
+            assert!(
+                (res.rank[v] as f64 - reference[v]).abs() < tol,
+                "v={v}: {} vs {}",
+                res.rank[v],
+                reference[v]
+            );
+        }
+    }
+
+    #[test]
+    fn pagerank_rmat_matches_serial_all_modes() {
+        let g = gen::rmat(9, Default::default(), false);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            check(
+                &g,
+                PpmConfig { threads: 4, mode, k: Some(8), ..Default::default() },
+                10,
+                1e-5,
+            );
+        }
+    }
+
+    #[test]
+    fn pagerank_er_matches_serial() {
+        let g = gen::erdos_renyi(1000, 8000, 5);
+        check(&g, PpmConfig { threads: 2, k: Some(16), ..Default::default() }, 10, 1e-5);
+    }
+
+    #[test]
+    fn pagerank_hybrid_uses_dc_when_all_active() {
+        // All-active frontier on a dense-enough graph: Eq. 1 should pick
+        // DC for (nearly) all partitions — the Fig. 6 premise.
+        let g = gen::rmat(10, Default::default(), false);
+        let mut eng =
+            Engine::new(g, PpmConfig { threads: 2, k: Some(8), ..Default::default() });
+        let res = run(&mut eng, DEFAULT_DAMPING, 2);
+        let it = &res.iters[0];
+        assert!(it.dc_parts > 0, "expected DC-mode partitions, got {it:?}");
+        assert!(it.dc_parts >= it.sc_parts);
+    }
+
+    #[test]
+    fn pagerank_mass_bounded() {
+        let g = gen::rmat(8, Default::default(), false);
+        let mut eng = Engine::new(g, PpmConfig::with_threads(2));
+        let res = run(&mut eng, DEFAULT_DAMPING, 10);
+        let sum: f64 = res.rank.iter().map(|&x| x as f64).sum();
+        assert!(sum <= 1.0 + 1e-4, "rank mass {sum} exceeds 1");
+        assert!(sum > 0.2, "rank mass {sum} collapsed");
+    }
+}

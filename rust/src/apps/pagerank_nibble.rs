@@ -1,0 +1,145 @@
+//! PageRank-Nibble (extension; §4.1 names it as a selective-continuity
+//! client): approximate personalized PageRank via synchronous
+//! residual pushes [Andersen-Chung-Lang], producing the (p, r) pair used
+//! for local clustering sweeps.
+//!
+//! BSP formulation per iteration, for every active v (r[v] ≥ eps·deg):
+//!   p[v] += α·r[v];   push (1-α)·r[v]/(2·deg) to each out-neighbor;
+//!   r[v] ← (1-α)·r[v]/2.
+//! Invariant: p-mass + r-mass = 1 (up to float error).
+
+use crate::api::{Program, VertexData};
+use crate::ppm::{Engine, RunStats};
+use crate::VertexId;
+
+pub struct PageRankNibble {
+    /// Settled probability mass.
+    pub p: VertexData<f32>,
+    /// Residual mass.
+    pub r: VertexData<f32>,
+    deg: Vec<u32>,
+    pub alpha: f32,
+    pub eps: f32,
+}
+
+impl PageRankNibble {
+    pub fn new(g: &crate::graph::Graph, alpha: f32, eps: f32) -> Self {
+        Self {
+            p: VertexData::new(g.n(), 0.0),
+            r: VertexData::new(g.n(), 0.0),
+            deg: (0..g.n() as VertexId).map(|v| g.out_degree(v).max(1) as u32).collect(),
+            alpha,
+            eps,
+        }
+    }
+
+    #[inline]
+    fn above(&self, v: VertexId) -> bool {
+        self.r.get(v) >= self.eps * self.deg[v as usize] as f32
+    }
+
+    pub fn seed(&self, seeds: &[VertexId]) -> Vec<VertexId> {
+        let share = 1.0 / seeds.len() as f32;
+        for &s in seeds {
+            self.r.set(s, share);
+        }
+        seeds.iter().copied().filter(|&s| self.above(s)).collect()
+    }
+}
+
+impl Program for PageRankNibble {
+    type Msg = f32;
+
+    #[inline]
+    fn scatter(&self, v: VertexId) -> f32 {
+        if self.above(v) {
+            (1.0 - self.alpha) * self.r.get(v) / (2.0 * self.deg[v as usize] as f32)
+        } else {
+            0.0 // DC-mode inactive sentinel
+        }
+    }
+
+    #[inline]
+    fn init(&self, v: VertexId) -> bool {
+        // Settle α of the residual, keep half of the pushed remainder.
+        let r = self.r.get(v);
+        self.p.set(v, self.p.get(v) + self.alpha * r);
+        self.r.set(v, (1.0 - self.alpha) * r / 2.0);
+        self.above(v)
+    }
+
+    #[inline]
+    fn gather(&self, val: f32, v: VertexId) -> bool {
+        if val > 0.0 {
+            self.r.set(v, self.r.get(v) + val);
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    fn filter(&self, v: VertexId) -> bool {
+        self.above(v)
+    }
+}
+
+pub struct PrNibbleResult {
+    pub p: Vec<f32>,
+    pub r: Vec<f32>,
+    pub stats: RunStats,
+}
+
+pub fn run(
+    engine: &mut Engine,
+    seeds: &[VertexId],
+    alpha: f32,
+    eps: f32,
+    max_iters: usize,
+) -> PrNibbleResult {
+    let prog = PageRankNibble::new(engine.graph(), alpha, eps);
+    let frontier = prog.seed(seeds);
+    engine.load_frontier(&frontier);
+    let stats = engine.run(&prog, max_iters);
+    PrNibbleResult { p: prog.p.to_vec(), r: prog.r.to_vec(), stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::ppm::PpmConfig;
+
+    #[test]
+    fn mass_invariant_p_plus_r_equals_one() {
+        let g = gen::grid(10, 10);
+        let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(5), ..Default::default() });
+        let res = run(&mut eng, &[0], 0.15, 1e-6, 100);
+        let mass: f64 = res.p.iter().chain(res.r.iter()).map(|&x| x as f64).sum();
+        assert!((mass - 1.0).abs() < 1e-4, "p+r mass = {mass}");
+    }
+
+    #[test]
+    fn settles_mass_near_seed() {
+        let g = gen::grid(20, 20);
+        let mut eng = Engine::new(g, PpmConfig { threads: 2, ..Default::default() });
+        let res = run(&mut eng, &[0], 0.15, 1e-5, 200);
+        // Seed should hold the largest settled mass.
+        let max_v = (0..res.p.len()).max_by(|&a, &b| res.p[a].total_cmp(&res.p[b])).unwrap();
+        assert_eq!(max_v, 0);
+        assert!(res.p[0] > 0.1);
+    }
+
+    #[test]
+    fn converges_with_threshold() {
+        let g = gen::rmat(8, Default::default(), true);
+        let mut eng = Engine::new(g, PpmConfig { threads: 2, ..Default::default() });
+        let res = run(&mut eng, &[3], 0.2, 1e-3, 500);
+        assert!(res.stats.converged);
+        // All residuals below threshold at convergence.
+        for v in 0..res.r.len() {
+            let deg = eng.graph().out_degree(v as u32).max(1) as f32;
+            assert!(res.r[v] < 1e-3 * deg + 1e-6, "residual too big at {v}");
+        }
+    }
+}

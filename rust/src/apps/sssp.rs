@@ -1,0 +1,140 @@
+//! Single-Source Shortest Paths via Bellman-Ford (paper §5, Alg. 8) —
+//! Graph500 kernel 3.
+//!
+//! The only weighted application: `applyWeight(val, wt) = val + wt` is
+//! applied per edge at scatter time. Updates are synchronous (visible
+//! next iteration), which the paper notes costs some convergence speed
+//! versus Ligra's asynchronous pushes (§6.2.1).
+
+use crate::api::{Program, VertexData};
+use crate::ppm::{Engine, RunStats};
+use crate::{VertexId, Weight};
+
+pub struct Sssp {
+    pub distance: VertexData<f32>,
+}
+
+impl Sssp {
+    pub fn new(n: usize) -> Self {
+        Self { distance: VertexData::new(n, f32::INFINITY) }
+    }
+}
+
+impl Program for Sssp {
+    type Msg = f32;
+
+    #[inline]
+    fn scatter(&self, v: VertexId) -> f32 {
+        // Unreached vertices propagate +inf, which can never win the
+        // min in `gather` — the DC-mode inactive sentinel for free.
+        self.distance.get(v)
+    }
+
+    #[inline]
+    fn init(&self, _v: VertexId) -> bool {
+        false
+    }
+
+    #[inline]
+    fn gather(&self, val: f32, v: VertexId) -> bool {
+        if val < self.distance.get(v) {
+            self.distance.set(v, val);
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    fn filter(&self, _v: VertexId) -> bool {
+        true
+    }
+
+    #[inline]
+    fn apply_weight(&self, val: f32, w: Weight) -> f32 {
+        val + w
+    }
+}
+
+pub struct SsspResult {
+    pub distance: Vec<f32>,
+    pub stats: RunStats,
+}
+
+/// Run Bellman-Ford from `source` until no distance changes.
+pub fn run(engine: &mut Engine, source: VertexId) -> SsspResult {
+    let prog = Sssp::new(engine.graph().n());
+    prog.distance.set(source, 0.0);
+    engine.load_frontier(&[source]);
+    let stats = engine.run(&prog, usize::MAX);
+    SsspResult { distance: prog.distance.to_vec(), stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial;
+    use crate::graph::gen;
+    use crate::ppm::{ModePolicy, PpmConfig};
+
+    fn check(g: &crate::graph::Graph, source: VertexId, config: PpmConfig) {
+        let reference = serial::sssp_dijkstra(g, source);
+        let mut eng = Engine::new(g.clone(), config);
+        let res = run(&mut eng, source);
+        assert!(res.stats.converged);
+        for v in 0..g.n() {
+            if reference[v].is_finite() {
+                assert!(
+                    (res.distance[v] - reference[v]).abs() < 1e-3,
+                    "v={v}: {} vs {}",
+                    res.distance[v],
+                    reference[v]
+                );
+            } else {
+                assert!(res.distance[v].is_infinite());
+            }
+        }
+    }
+
+    #[test]
+    fn sssp_weighted_er_all_modes() {
+        let g = gen::with_uniform_weights(&gen::erdos_renyi(400, 3200, 21), 1.0, 10.0, 2);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            check(&g, 0, PpmConfig { threads: 4, mode, k: Some(8), ..Default::default() });
+        }
+    }
+
+    #[test]
+    fn sssp_weighted_rmat() {
+        let g = gen::with_uniform_weights(&gen::rmat(9, Default::default(), true), 0.5, 4.0, 7);
+        check(&g, 1, PpmConfig { threads: 3, k: Some(12), ..Default::default() });
+    }
+
+    #[test]
+    fn sssp_unit_weights_equals_bfs() {
+        // SSSP requires a weighted CSR (apply_weight runs per edge);
+        // unit weights make distances equal BFS levels.
+        let base = gen::erdos_renyi(300, 1800, 3);
+        let lv = serial::bfs_levels(&base, 0);
+        let g = gen::with_uniform_weights(&base, 1.0, 1.0 + f32::EPSILON, 1);
+        let mut eng = Engine::new(g.clone(), PpmConfig::with_threads(2));
+        let res = run(&mut eng, 0);
+        for v in 0..g.n() {
+            if lv[v] >= 0 {
+                assert_eq!(res.distance[v].round() as i32, lv[v]);
+            } else {
+                assert!(res.distance[v].is_infinite());
+            }
+        }
+    }
+
+    #[test]
+    fn sssp_negative_free_chain() {
+        let g = gen::with_uniform_weights(&gen::chain(50), 2.0, 2.0 + 1e-6, 1);
+        let mut eng = Engine::new(g, PpmConfig::default());
+        let res = run(&mut eng, 0);
+        for v in 0..50 {
+            assert!((res.distance[v] - 2.0 * v as f32).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Baseline engines the paper evaluates against (§6.2.1), rebuilt from
+//! their published descriptions since the original binaries are not
+//! available in this environment (see DESIGN.md §Substitutions):
+//!
+//! - [`serial`] — single-threaded textbook implementations; the ground
+//!   truth for correctness tests and the denominator for the paper's
+//!   strong-scaling speedups (Fig. 5/6).
+//! - [`vc`] — Ligra-like vertex-centric engine: push (atomics), pull
+//!   (O(E) probing), and Beamer direction-optimizing hybrid.
+//! - [`spmv`] — GraphMat-like engine mapping algorithms to masked
+//!   sparse-matrix–vector products over CSC with `O(V)`-per-iteration
+//!   frontier handling.
+//! - [`ec`] — X-Stream-like edge-centric scatter/gather streaming
+//!   engine.
+
+pub mod ec;
+pub mod serial;
+pub mod spmv;
+pub mod vc;

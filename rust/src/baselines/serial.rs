@@ -1,0 +1,312 @@
+//! Single-threaded reference implementations.
+//!
+//! These serve two roles: (a) ground truth for every parallel engine's
+//! correctness tests, and (b) the sequential baseline for the paper's
+//! strong-scaling results (GPOP's "17.9× speedup over a sequential
+//! implementation", Fig. 5).
+//!
+//! The PageRank and Nibble references intentionally replicate GPOP's
+//! *synchronous* update order (scatter values snapshot, then halve/zero,
+//! then accumulate) so parallel results can be compared bit-for-bit
+//! modulo floating-point association.
+
+use crate::graph::Graph;
+use crate::VertexId;
+use std::collections::VecDeque;
+
+/// BFS parents; `parent[v] = -1` if unreachable, `parent[root] = root`.
+pub fn bfs_parents(g: &Graph, root: VertexId) -> Vec<i32> {
+    let mut parent = vec![-1i32; g.n()];
+    parent[root as usize] = root as i32;
+    let mut q = VecDeque::from([root]);
+    while let Some(v) = q.pop_front() {
+        for &u in g.out().neighbors(v) {
+            if parent[u as usize] < 0 {
+                parent[u as usize] = v as i32;
+                q.push_back(u);
+            }
+        }
+    }
+    parent
+}
+
+/// BFS levels; `-1` if unreachable.
+pub fn bfs_levels(g: &Graph, root: VertexId) -> Vec<i32> {
+    let mut level = vec![-1i32; g.n()];
+    level[root as usize] = 0;
+    let mut q = VecDeque::from([root]);
+    while let Some(v) = q.pop_front() {
+        for &u in g.out().neighbors(v) {
+            if level[u as usize] < 0 {
+                level[u as usize] = level[v as usize] + 1;
+                q.push_back(u);
+            }
+        }
+    }
+    level
+}
+
+/// Synchronous (Jacobi) PageRank, GPOP's exact update order:
+/// `PR_{t+1}(v) = (1-d)/|V| + d * Σ_{u->v} PR_t(u)/deg(u)`.
+/// Dangling mass is dropped, as in the paper's Alg. 6.
+pub fn pagerank(g: &Graph, d: f64, iters: usize) -> Vec<f64> {
+    let n = g.n();
+    let mut pr = vec![1.0 / n as f64; n];
+    for _ in 0..iters {
+        let mut next = vec![0.0f64; n];
+        for v in 0..n as VertexId {
+            let deg = g.out_degree(v);
+            if deg == 0 {
+                continue;
+            }
+            let share = pr[v as usize] / deg as f64;
+            for &u in g.out().neighbors(v) {
+                next[u as usize] += share;
+            }
+        }
+        for v in 0..n {
+            next[v] = (1.0 - d) / n as f64 + d * next[v];
+        }
+        pr = next;
+    }
+    pr
+}
+
+/// Connected components via synchronous min-label propagation (works on
+/// symmetrized graphs; on directed input it computes the label-prop
+/// fixpoint, as GPOP's Alg. 7 does).
+pub fn label_propagation(g: &Graph) -> Vec<u32> {
+    let n = g.n();
+    let mut label: Vec<u32> = (0..n as u32).collect();
+    let mut active: Vec<bool> = vec![true; n];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        let mut next_label = label.clone();
+        let mut next_active = vec![false; n];
+        for v in 0..n as VertexId {
+            if !active[v as usize] {
+                continue;
+            }
+            for &u in g.out().neighbors(v) {
+                if label[v as usize] < next_label[u as usize] {
+                    next_label[u as usize] = label[v as usize];
+                    next_active[u as usize] = true;
+                    changed = true;
+                }
+            }
+        }
+        label = next_label;
+        active = next_active;
+    }
+    label
+}
+
+/// Bellman-Ford with synchronous rounds (GPOP's 2-phase semantics:
+/// distance updates become visible in the next iteration).
+pub fn sssp_bellman_ford(g: &Graph, source: VertexId) -> Vec<f32> {
+    let n = g.n();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut active = vec![source];
+    while !active.is_empty() {
+        let mut updated = std::collections::HashSet::new();
+        let mut next = dist.clone();
+        for &v in &active {
+            let ws = g.out().edge_weights(v);
+            for (k, &u) in g.out().neighbors(v).iter().enumerate() {
+                let w = ws.map_or(1.0, |ws| ws[k]);
+                let cand = dist[v as usize] + w;
+                if cand < next[u as usize] {
+                    next[u as usize] = cand;
+                    updated.insert(u);
+                }
+            }
+        }
+        dist = next;
+        active = updated.into_iter().collect();
+    }
+    dist
+}
+
+/// Dijkstra (ground truth for SSSP — Bellman-Ford must agree).
+pub fn sssp_dijkstra(g: &Graph, source: VertexId) -> Vec<f32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let n = g.n();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    // f32 isn't Ord; store bits of non-negative distances (order-preserving).
+    let mut heap = BinaryHeap::new();
+    heap.push(Reverse((0u32, source)));
+    while let Some(Reverse((dbits, v))) = heap.pop() {
+        let dv = f32::from_bits(dbits);
+        if dv > dist[v as usize] {
+            continue;
+        }
+        let ws = g.out().edge_weights(v);
+        for (k, &u) in g.out().neighbors(v).iter().enumerate() {
+            let w = ws.map_or(1.0, |ws| ws[k]);
+            let cand = dv + w;
+            if cand < dist[u as usize] {
+                dist[u as usize] = cand;
+                heap.push(Reverse((cand.to_bits(), u)));
+            }
+        }
+    }
+    dist
+}
+
+/// Serial Nibble (paper §5, Alg. 3/4 semantics): seeded random-walk
+/// probability diffusion with threshold `eps`, replicating GPOP's exact
+/// phase order: snapshot scatter values → halve → accumulate → filter.
+/// Active invariant: `pr[v] >= eps * deg(v)` (deg counted as ≥ 1).
+pub fn nibble(g: &Graph, seeds: &[VertexId], eps: f64, max_iters: usize) -> Vec<f64> {
+    let n = g.n();
+    let mut pr = vec![0.0f64; n];
+    for &s in seeds {
+        pr[s as usize] = 1.0 / seeds.len() as f64;
+    }
+    let thresh = |v: usize, pr: &[f64]| pr[v] >= eps * g.out_degree(v as VertexId).max(1) as f64;
+    let mut active: Vec<VertexId> =
+        seeds.iter().copied().filter(|&s| thresh(s as usize, &pr)).collect();
+    active.sort_unstable();
+    active.dedup();
+    for _ in 0..max_iters {
+        if active.is_empty() {
+            break;
+        }
+        // Scatter snapshot.
+        let vals: Vec<f64> = active
+            .iter()
+            .map(|&v| pr[v as usize] / (2.0 * g.out_degree(v).max(1) as f64))
+            .collect();
+        // initFrontier: halve, keep if still above threshold.
+        let mut next: Vec<VertexId> = Vec::new();
+        for &v in &active {
+            pr[v as usize] /= 2.0;
+        }
+        for &v in &active {
+            if thresh(v as usize, &pr) {
+                next.push(v);
+            }
+        }
+        // Gather: accumulate messages.
+        let mut touched: Vec<VertexId> = Vec::new();
+        for (i, &v) in active.iter().enumerate() {
+            for &u in g.out().neighbors(v) {
+                pr[u as usize] += vals[i];
+                touched.push(u);
+            }
+        }
+        // filterFrontier over (kept ∪ activated).
+        next.extend(touched);
+        next.sort_unstable();
+        next.dedup();
+        next.retain(|&v| thresh(v as usize, &pr));
+        active = next;
+    }
+    pr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::graph_from_edges;
+    use crate::graph::gen;
+
+    #[test]
+    fn bfs_chain() {
+        let g = gen::chain(5);
+        assert_eq!(bfs_levels(&g, 0), vec![0, 1, 2, 3, 4]);
+        assert_eq!(bfs_parents(&g, 0), vec![0, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bfs_unreachable() {
+        let g = graph_from_edges(4, &[(0, 1)]);
+        let lv = bfs_levels(&g, 0);
+        assert_eq!(lv, vec![0, 1, -1, -1]);
+    }
+
+    #[test]
+    fn pagerank_sums_below_one_and_ranks_hubs() {
+        // Star: 1..=4 -> 0. Vertex 0 must dominate.
+        let g = graph_from_edges(5, &[(1, 0), (2, 0), (3, 0), (4, 0)]);
+        let pr = pagerank(&g, 0.85, 20);
+        assert!(pr[0] > pr[1]);
+        let sum: f64 = pr.iter().sum();
+        assert!(sum <= 1.0 + 1e-9); // dangling mass dropped
+    }
+
+    #[test]
+    fn pagerank_uniform_on_cycle() {
+        let g = graph_from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let pr = pagerank(&g, 0.85, 50);
+        for v in 0..4 {
+            assert!((pr[v] - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn label_prop_components() {
+        // Two components (symmetrized): {0,1,2} and {3,4}.
+        let mut b = crate::graph::GraphBuilder::new().with_n(5).symmetrize();
+        b.add(0, 1).add(1, 2).add(3, 4);
+        let g = b.build();
+        let l = label_propagation(&g);
+        assert_eq!(l[0], 0);
+        assert_eq!(l[1], 0);
+        assert_eq!(l[2], 0);
+        assert_eq!(l[3], 3);
+        assert_eq!(l[4], 3);
+    }
+
+    #[test]
+    fn sssp_bf_matches_dijkstra() {
+        let g = gen::with_uniform_weights(&gen::erdos_renyi(300, 3000, 9), 1.0, 10.0, 4);
+        let bf = sssp_bellman_ford(&g, 0);
+        let dj = sssp_dijkstra(&g, 0);
+        for v in 0..g.n() {
+            if dj[v].is_finite() {
+                assert!((bf[v] - dj[v]).abs() < 1e-3, "v={v}: {} vs {}", bf[v], dj[v]);
+            } else {
+                assert!(bf[v].is_infinite());
+            }
+        }
+    }
+
+    #[test]
+    fn sssp_unweighted_equals_bfs_levels() {
+        let g = gen::erdos_renyi(200, 1500, 2);
+        let bf = sssp_bellman_ford(&g, 0);
+        let lv = bfs_levels(&g, 0);
+        for v in 0..g.n() {
+            if lv[v] >= 0 {
+                assert_eq!(bf[v] as i32, lv[v]);
+            } else {
+                assert!(bf[v].is_infinite());
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_conserves_mass() {
+        let g = gen::grid(10, 10);
+        let pr = nibble(&g, &[0], 1e-6, 50);
+        let sum: f64 = pr.iter().sum();
+        assert!(sum <= 1.0 + 1e-9);
+        assert!(sum > 0.5, "most mass should remain, got {sum}");
+        assert!(pr[0] > 0.0);
+    }
+
+    #[test]
+    fn nibble_stays_local() {
+        // With a strict threshold on a long chain, mass cannot reach the end.
+        let g = gen::chain(1000);
+        let pr = nibble(&g, &[0], 1e-3, 100);
+        assert_eq!(pr[999], 0.0);
+        let support = pr.iter().filter(|&&x| x > 0.0).count();
+        assert!(support < 100, "support should stay local, got {support}");
+    }
+}

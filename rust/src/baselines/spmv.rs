@@ -1,0 +1,365 @@
+//! GraphMat-like baseline: graph algorithms as generalized masked
+//! Sparse-Matrix–Vector products (paper §6.2.1, §7).
+//!
+//! GraphMat's profile, reproduced here: a 2-phase scatter/gather engine
+//! without atomics, but with **O(V) work per iteration** traversing the
+//! dense frontier mask ("GraphMat iterations are not theoretically
+//! efficient and do O(V) work in traversing the frontier") and
+//! thread-count-sized destination buckets that can exceed cache (the
+//! Azad/Buluç contrast in §7).
+
+use crate::api::MsgValue;
+use crate::exec::ThreadPool;
+use crate::graph::Graph;
+use crate::util::bitset::Bitset;
+use crate::VertexId;
+
+/// A generalized SpMV program: `send` produces the per-vertex value,
+/// `combine` folds an edge message into the destination's accumulator,
+/// `apply` commits the accumulator and reports whether the vertex
+/// becomes active.
+pub trait SpmvProgram: Sync {
+    type Msg: MsgValue;
+    fn send(&self, v: VertexId) -> Self::Msg;
+    fn edge_value(&self, val: Self::Msg, weight: f32) -> Self::Msg {
+        let _ = weight;
+        val
+    }
+    /// Fold a message into vertex `v`'s state; return true if changed.
+    fn process(&self, msg: Self::Msg, v: VertexId) -> bool;
+    /// Post-iteration hook over *all* vertices (dense, like GraphMat's
+    /// apply): return true to activate regardless of messages.
+    fn apply(&self, _v: VertexId) -> bool {
+        false
+    }
+}
+
+/// The engine: dense frontier mask, per-thread destination-range
+/// buckets, barrier-synchronized scatter/gather.
+pub struct SpmvEngine {
+    graph: Graph,
+    pool: ThreadPool,
+    /// Dense activity mask (O(V) scanned every iteration — the point).
+    active: Bitset,
+    n_active: usize,
+}
+
+impl SpmvEngine {
+    pub fn new(graph: Graph, threads: usize) -> Self {
+        let n = graph.n();
+        Self { graph, pool: ThreadPool::new(threads), active: Bitset::new(n), n_active: 0 }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.n_active
+    }
+
+    pub fn load_frontier(&mut self, verts: &[VertexId]) {
+        self.active.clear_all();
+        self.n_active = 0;
+        for &v in verts {
+            if self.active.set_checked(v as usize) {
+                self.n_active += 1;
+            }
+        }
+    }
+
+    pub fn load_all(&mut self) {
+        let n = self.graph.n();
+        self.load_frontier(&(0..n as VertexId).collect::<Vec<_>>());
+    }
+
+    /// One SpMV iteration. Returns messages processed.
+    pub fn iterate<P: SpmvProgram>(&mut self, prog: &P) -> u64 {
+        let n = self.graph.n();
+        let t = self.pool.n_threads();
+        // Destination ranges: one bucket per thread (not cache-sized —
+        // GraphMat's structural difference from GPOP).
+        let per = (n + t - 1) / t;
+        let buckets: Vec<std::sync::Mutex<Vec<(u32, u32)>>> =
+            (0..t * t).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+        // ---- Scatter: O(V) dense scan + push messages of active verts.
+        let graph = &self.graph;
+        let active = &self.active;
+        self.pool.for_each_static(n, |range, tid| {
+            let mut local: Vec<Vec<(u32, u32)>> = vec![Vec::new(); t];
+            for v in range {
+                if !active.get(v) {
+                    continue;
+                }
+                let v = v as VertexId;
+                let val = prog.send(v);
+                let ws = graph.out().edge_weights(v);
+                for (k, &u) in graph.out().neighbors(v).iter().enumerate() {
+                    let mv = match ws {
+                        Some(ws) => prog.edge_value(val, ws[k]),
+                        None => val,
+                    };
+                    local[u as usize / per].push((u, mv.to_bits()));
+                }
+            }
+            for (dst_t, msgs) in local.into_iter().enumerate() {
+                if !msgs.is_empty() {
+                    buckets[tid * t + dst_t].lock().unwrap().extend(msgs);
+                }
+            }
+        });
+        // ---- Gather: each thread reduces its destination range.
+        let next_bits: Vec<std::sync::Mutex<Vec<VertexId>>> =
+            (0..t).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+        let total = std::sync::atomic::AtomicU64::new(0);
+        self.pool.run(|tid| {
+            let mut activated = Vec::new();
+            let mut count = 0u64;
+            for src_t in 0..t {
+                let msgs = buckets[src_t * t + tid].lock().unwrap();
+                for &(dst, bits) in msgs.iter() {
+                    count += 1;
+                    if prog.process(P::Msg::from_bits(bits), dst) {
+                        activated.push(dst);
+                    }
+                }
+            }
+            total.fetch_add(count, std::sync::atomic::Ordering::Relaxed);
+            *next_bits[tid].lock().unwrap() = activated;
+        });
+        // ---- Apply + rebuild dense mask (O(V), GraphMat-style).
+        self.active.clear_all();
+        self.n_active = 0;
+        for shard in next_bits {
+            for v in shard.into_inner().unwrap() {
+                if self.active.set_checked(v as usize) {
+                    self.n_active += 1;
+                }
+            }
+        }
+        for v in 0..n as VertexId {
+            if prog.apply(v) && self.active.set_checked(v as usize) {
+                self.n_active += 1;
+            }
+        }
+        total.into_inner()
+    }
+
+    /// Iterate until the frontier drains or `max_iters`.
+    pub fn run<P: SpmvProgram>(&mut self, prog: &P, max_iters: usize) -> usize {
+        let mut iters = 0;
+        while self.n_active > 0 && iters < max_iters {
+            self.iterate(prog);
+            iters += 1;
+        }
+        iters
+    }
+}
+
+// ---------------------------------------------------------------- apps
+
+use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+
+/// BFS as masked SpMV.
+pub struct SpmvBfs {
+    pub parent: Vec<AtomicI32>,
+}
+
+impl SpmvBfs {
+    pub fn new(n: usize, root: VertexId) -> Self {
+        let parent: Vec<AtomicI32> = (0..n).map(|_| AtomicI32::new(-1)).collect();
+        parent[root as usize].store(root as i32, Ordering::Relaxed);
+        Self { parent }
+    }
+}
+
+impl SpmvProgram for SpmvBfs {
+    type Msg = i32;
+    fn send(&self, v: VertexId) -> i32 {
+        v as i32
+    }
+    fn process(&self, msg: i32, v: VertexId) -> bool {
+        // Engine partitions destinations per thread: plain read-check is
+        // race-free within a bucket owner.
+        if self.parent[v as usize].load(Ordering::Relaxed) < 0 {
+            self.parent[v as usize].store(msg, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// PageRank as (dense) SpMV.
+pub struct SpmvPageRank {
+    pub rank: Vec<AtomicU32>,
+    pub acc: Vec<AtomicU32>,
+    deg: Vec<u32>,
+    n: usize,
+    d: f32,
+}
+
+impl SpmvPageRank {
+    pub fn new(g: &Graph, d: f32) -> Self {
+        let n = g.n();
+        Self {
+            rank: (0..n).map(|_| AtomicU32::new((1.0f32 / n as f32).to_bits())).collect(),
+            acc: (0..n).map(|_| AtomicU32::new(0f32.to_bits())).collect(),
+            deg: (0..n as VertexId).map(|v| g.out_degree(v) as u32).collect(),
+            n,
+            d,
+        }
+    }
+
+    /// Commit accumulated shares into ranks (between iterations).
+    pub fn commit(&self) {
+        for v in 0..self.n {
+            let acc = f32::from_bits(self.acc[v].load(Ordering::Relaxed));
+            let newr = (1.0 - self.d) / self.n as f32 + self.d * acc;
+            self.rank[v].store(newr.to_bits(), Ordering::Relaxed);
+            self.acc[v].store(0f32.to_bits(), Ordering::Relaxed);
+        }
+    }
+}
+
+impl SpmvProgram for SpmvPageRank {
+    type Msg = f32;
+    fn send(&self, v: VertexId) -> f32 {
+        f32::from_bits(self.rank[v as usize].load(Ordering::Relaxed))
+            / self.deg[v as usize].max(1) as f32
+    }
+    fn process(&self, msg: f32, v: VertexId) -> bool {
+        let cur = f32::from_bits(self.acc[v as usize].load(Ordering::Relaxed));
+        self.acc[v as usize].store((cur + msg).to_bits(), Ordering::Relaxed);
+        true
+    }
+    fn apply(&self, _v: VertexId) -> bool {
+        true // all vertices stay active
+    }
+}
+
+/// Label propagation as masked SpMV (min-combine).
+pub struct SpmvCc {
+    pub label: Vec<AtomicU32>,
+}
+
+impl SpmvCc {
+    pub fn new(n: usize) -> Self {
+        Self { label: (0..n).map(|v| AtomicU32::new(v as u32)).collect() }
+    }
+}
+
+impl SpmvProgram for SpmvCc {
+    type Msg = u32;
+    fn send(&self, v: VertexId) -> u32 {
+        self.label[v as usize].load(Ordering::Relaxed)
+    }
+    fn process(&self, msg: u32, v: VertexId) -> bool {
+        if msg < self.label[v as usize].load(Ordering::Relaxed) {
+            self.label[v as usize].store(msg, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Bellman-Ford as masked SpMV (min-plus semiring).
+pub struct SpmvSssp {
+    pub dist: Vec<AtomicU32>,
+}
+
+impl SpmvSssp {
+    pub fn new(n: usize, source: VertexId) -> Self {
+        let dist: Vec<AtomicU32> =
+            (0..n).map(|_| AtomicU32::new(f32::INFINITY.to_bits())).collect();
+        dist[source as usize].store(0f32.to_bits(), Ordering::Relaxed);
+        Self { dist }
+    }
+}
+
+impl SpmvProgram for SpmvSssp {
+    type Msg = f32;
+    fn send(&self, v: VertexId) -> f32 {
+        f32::from_bits(self.dist[v as usize].load(Ordering::Relaxed))
+    }
+    fn edge_value(&self, val: f32, weight: f32) -> f32 {
+        val + weight
+    }
+    fn process(&self, msg: f32, v: VertexId) -> bool {
+        if msg < f32::from_bits(self.dist[v as usize].load(Ordering::Relaxed)) {
+            self.dist[v as usize].store(msg.to_bits(), Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial;
+    use crate::graph::gen;
+
+    #[test]
+    fn spmv_bfs_matches_serial_reachability() {
+        let g = gen::rmat(9, Default::default(), false);
+        let serial_lv = serial::bfs_levels(&g, 0);
+        let mut eng = SpmvEngine::new(g, 4);
+        let prog = SpmvBfs::new(eng.graph().n(), 0);
+        eng.load_frontier(&[0]);
+        eng.run(&prog, usize::MAX);
+        for v in 0..serial_lv.len() {
+            let reached = prog.parent[v].load(Ordering::Relaxed) >= 0;
+            assert_eq!(reached, serial_lv[v] >= 0, "v={v}");
+        }
+    }
+
+    #[test]
+    fn spmv_pagerank_matches_serial() {
+        let g = gen::erdos_renyi(400, 3000, 5);
+        let reference = serial::pagerank(&g, 0.85, 10);
+        let mut eng = SpmvEngine::new(g, 3);
+        let prog = SpmvPageRank::new(eng.graph(), 0.85);
+        for _ in 0..10 {
+            eng.load_all();
+            eng.iterate(&prog);
+            prog.commit();
+        }
+        for v in 0..reference.len() {
+            let r = f32::from_bits(prog.rank[v].load(Ordering::Relaxed));
+            assert!((r as f64 - reference[v]).abs() < 1e-5, "v={v}");
+        }
+    }
+
+    #[test]
+    fn spmv_cc_matches_serial() {
+        let g = gen::erdos_renyi(300, 1800, 7);
+        let reference = serial::label_propagation(&g);
+        let mut eng = SpmvEngine::new(g, 4);
+        let prog = SpmvCc::new(eng.graph().n());
+        eng.load_all();
+        eng.run(&prog, usize::MAX);
+        let got: Vec<u32> = prog.label.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        assert_eq!(got, reference);
+    }
+
+    #[test]
+    fn spmv_sssp_matches_dijkstra() {
+        let g = gen::with_uniform_weights(&gen::erdos_renyi(250, 2000, 9), 1.0, 8.0, 5);
+        let reference = serial::sssp_dijkstra(&g, 0);
+        let mut eng = SpmvEngine::new(g, 4);
+        let prog = SpmvSssp::new(eng.graph().n(), 0);
+        eng.load_frontier(&[0]);
+        eng.run(&prog, usize::MAX);
+        for v in 0..reference.len() {
+            let dv = f32::from_bits(prog.dist[v].load(Ordering::Relaxed));
+            if reference[v].is_finite() {
+                assert!((dv - reference[v]).abs() < 1e-3, "v={v}");
+            } else {
+                assert!(dv.is_infinite());
+            }
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Micro-benchmark harness (criterion is unavailable in this offline
+//! environment; see DESIGN.md §Substitutions).
+//!
+//! Measures wall-clock samples with warmup, reports median/MAD/p95, and
+//! prints aligned tables for the per-figure bench binaries under
+//! `benches/`.
+
+use crate::util::fmt;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Stop sampling after this much wall time, even if fewer samples.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 1, sample_iters: 5, max_seconds: 30.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast profile for CI-style runs.
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, sample_iters: 3, max_seconds: 10.0 }
+    }
+}
+
+/// One benchmark's samples + summary.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        self.summary.median
+    }
+
+    /// items/sec at the median sample.
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.summary.median
+    }
+}
+
+/// Time `f` (which runs one full workload iteration) per `config`.
+pub fn bench<F: FnMut()>(name: &str, config: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..config.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(config.sample_iters);
+    let start = Instant::now();
+    for _ in 0..config.sample_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > config.max_seconds && !samples.is_empty() {
+            break;
+        }
+    }
+    let summary = Summary::of(&samples);
+    BenchResult { name: name.to_string(), samples, summary }
+}
+
+/// Aligned table printer for bench outputs (markdown-ish).
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, &w)| fmt::cell(h, w))
+            .collect();
+        println!("| {} |", line.join(" | "));
+        let dashes: Vec<String> = self.widths.iter().map(|&w| "-".repeat(w)).collect();
+        println!("|-{}-|", dashes.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> =
+                row.iter().zip(&self.widths).map(|(c, &w)| fmt::cell(c, w)).collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+}
+
+/// Standard bench header so outputs are self-describing.
+pub fn preamble(bench_id: &str, paper_ref: &str, workload: &str) {
+    println!("# bench {bench_id}");
+    println!("# reproduces: {paper_ref}");
+    println!("# workload:   {workload}");
+    println!(
+        "# host: {} hw-threads",
+        crate::exec::ThreadPool::available_parallelism()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut count = 0;
+        let r = bench(
+            "noop",
+            BenchConfig { warmup_iters: 2, sample_iters: 4, max_seconds: 10.0 },
+            || count += 1,
+        );
+        assert_eq!(count, 6); // 2 warmup + 4 samples
+        assert_eq!(r.samples.len(), 4);
+        assert!(r.median() >= 0.0);
+    }
+
+    #[test]
+    fn bench_respects_time_budget() {
+        let r = bench(
+            "sleepy",
+            BenchConfig { warmup_iters: 0, sample_iters: 1000, max_seconds: 0.05 },
+            || std::thread::sleep(std::time::Duration::from_millis(20)),
+        );
+        assert!(r.samples.len() < 1000);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![2.0],
+            summary: Summary::of(&[2.0]),
+        };
+        assert_eq!(r.throughput(100), 50.0);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "framework"]);
+        t.row(&["1".into(), "GPOP".into()]);
+        t.row(&["2222222".into(), "Ligra-like".into()]);
+        t.print();
+    }
+}

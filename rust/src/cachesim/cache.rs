@@ -1,0 +1,229 @@
+//! A set-associative, write-allocate, LRU cache simulator.
+
+/// Cache geometry. Default mirrors the paper's Xeon L2: 256 KB, 8-way,
+/// 64-byte lines.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub line_bytes: usize,
+    pub ways: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self { size_bytes: 256 * 1024, line_bytes: 64, ways: 8 }
+    }
+}
+
+impl CacheConfig {
+    pub fn n_sets(&self) -> usize {
+        self.size_bytes / (self.line_bytes * self.ways)
+    }
+}
+
+/// Running hit/miss counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.accesses - self.misses
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// The simulator. One instance models one private L2 (the paper's
+/// counters sum across cores; ratios are preserved by replaying the
+/// logical access stream through a single cache — see DESIGN.md).
+pub struct Cache {
+    config: CacheConfig,
+    /// Per set: `ways` slots of (tag, last_use); tag == u64::MAX is empty.
+    tags: Vec<u64>,
+    stamps: Vec<u64>,
+    clock: u64,
+    stats: CacheStats,
+    set_shift: u32,
+    set_mask: u64,
+}
+
+impl Cache {
+    pub fn new(config: CacheConfig) -> Self {
+        let n_sets = config.n_sets();
+        assert!(n_sets.is_power_of_two(), "set count must be a power of two");
+        assert!(config.line_bytes.is_power_of_two());
+        Self {
+            config,
+            tags: vec![u64::MAX; n_sets * config.ways],
+            stamps: vec![0; n_sets * config.ways],
+            clock: 0,
+            stats: CacheStats::default(),
+            set_shift: config.line_bytes.trailing_zeros(),
+            set_mask: (n_sets - 1) as u64,
+        }
+    }
+
+    pub fn config(&self) -> CacheConfig {
+        self.config
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Simulate one byte-granularity access; returns `true` on hit.
+    /// Reads and writes behave identically (write-allocate).
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        self.clock += 1;
+        self.stats.accesses += 1;
+        let line = addr >> self.set_shift;
+        let set = (line & self.set_mask) as usize;
+        let ways = self.config.ways;
+        let base = set * ways;
+        let slots = &mut self.tags[base..base + ways];
+        // Hit?
+        for (w, &tag) in slots.iter().enumerate() {
+            if tag == line {
+                self.stamps[base + w] = self.clock;
+                return true;
+            }
+        }
+        // Miss: fill LRU victim.
+        self.stats.misses += 1;
+        let mut victim = 0;
+        let mut oldest = u64::MAX;
+        for w in 0..ways {
+            if self.tags[base + w] == u64::MAX {
+                victim = w;
+                break;
+            }
+            if self.stamps[base + w] < oldest {
+                oldest = self.stamps[base + w];
+                victim = w;
+            }
+        }
+        self.tags[base + victim] = line;
+        self.stamps[base + victim] = self.clock;
+        false
+    }
+
+    /// Access a `bytes`-wide object at `addr` (touches each line once).
+    #[inline]
+    pub fn access_range(&mut self, addr: u64, bytes: u64) {
+        let lb = self.config.line_bytes as u64;
+        let first = addr / lb;
+        let last = (addr + bytes.max(1) - 1) / lb;
+        for line in first..=last {
+            self.access(line * lb);
+        }
+    }
+
+    /// Flush all contents (between framework trace replays).
+    pub fn flush(&mut self) {
+        self.tags.fill(u64::MAX);
+        self.stamps.fill(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cache {
+        // 4 sets x 2 ways x 64B lines = 512 B.
+        Cache::new(CacheConfig { size_bytes: 512, line_bytes: 64, ways: 2 })
+    }
+
+    #[test]
+    fn geometry() {
+        let c = CacheConfig::default();
+        assert_eq!(c.n_sets(), 512);
+        assert_eq!(Cache::new(c).tags.len(), 512 * 8);
+    }
+
+    #[test]
+    fn first_access_misses_second_hits() {
+        let mut c = tiny();
+        assert!(!c.access(0));
+        assert!(c.access(0));
+        assert!(c.access(63)); // same line
+        assert!(!c.access(64)); // next line
+        assert_eq!(c.stats().misses, 2);
+        assert_eq!(c.stats().accesses, 4);
+    }
+
+    #[test]
+    fn lru_eviction_within_set() {
+        let mut c = tiny();
+        // Lines mapping to set 0: addresses 0, 256, 512, ... (4 sets * 64B).
+        c.access(0); // miss
+        c.access(256); // miss, set full
+        assert!(c.access(0)); // hit, refreshes 0
+        c.access(512); // miss, evicts 256 (LRU)
+        assert!(c.access(0), "0 must survive (recently used)");
+        assert!(!c.access(256), "256 was evicted");
+    }
+
+    #[test]
+    fn sequential_streaming_miss_rate_is_per_line() {
+        let mut c = Cache::new(CacheConfig::default());
+        // Stream 1 MB of 4-byte accesses: miss every 16th access (64/4).
+        for i in 0..(1 << 20) / 4u64 {
+            c.access(i * 4);
+        }
+        let s = c.stats();
+        assert_eq!(s.misses, (1 << 20) / 64);
+        assert!((s.miss_rate() - 1.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_accesses_beyond_capacity_mostly_miss() {
+        let mut c = Cache::new(CacheConfig::default());
+        let mut rng = crate::util::rng::Rng::new(1);
+        // 64 MB working set >> 256 KB cache.
+        for _ in 0..200_000 {
+            c.access(rng.below(64 << 20));
+        }
+        assert!(c.stats().miss_rate() > 0.95, "rate {}", c.stats().miss_rate());
+    }
+
+    #[test]
+    fn working_set_within_capacity_hits_after_warmup() {
+        let mut c = Cache::new(CacheConfig::default());
+        let mut rng = crate::util::rng::Rng::new(2);
+        // 128 KB working set fits in 256 KB cache.
+        for _ in 0..50_000 {
+            c.access(rng.below(128 << 10));
+        }
+        c.reset_stats();
+        for _ in 0..50_000 {
+            c.access(rng.below(128 << 10));
+        }
+        assert!(c.stats().miss_rate() < 0.05, "rate {}", c.stats().miss_rate());
+    }
+
+    #[test]
+    fn access_range_touches_every_line() {
+        let mut c = tiny();
+        c.access_range(60, 8); // crosses a line boundary
+        assert_eq!(c.stats().accesses, 2);
+        c.flush();
+        c.reset_stats();
+        c.access_range(0, 1);
+        assert_eq!(c.stats().accesses, 1);
+    }
+}

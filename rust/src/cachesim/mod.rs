@@ -1,0 +1,18 @@
+//! L2 cache simulation substrate for the paper's Tables 4–6.
+//!
+//! The paper measures hardware L2 misses with Intel PCM on a Xeon with
+//! 256 KB 8-way private L2s. Neither the hardware counters nor the
+//! original Ligra/GraphMat binaries are available here, so we reproduce
+//! the *measurement* instead: a set-associative write-allocate LRU
+//! simulator ([`cache`]) driven by per-framework memory access traces
+//! ([`model`]) derived from the real graph and the real per-iteration
+//! frontiers. What the tables compare is driven by access *structure*
+//! (partition-local vs fine-grained random vs O(V) scans), which the
+//! traces preserve exactly (DESIGN.md §Substitutions).
+
+pub mod cache;
+pub mod model;
+pub mod trace;
+
+pub use cache::{Cache, CacheConfig, CacheStats};
+pub use trace::{Region, Tracer};

@@ -1,0 +1,441 @@
+//! Per-framework memory-access trace models (Tables 4–6).
+//!
+//! Each function replays the logical memory accesses one framework makes
+//! for one algorithm on a real graph — real adjacency, real per-iteration
+//! frontiers — through the L2 simulator. The structural differences the
+//! paper attributes the miss ratios to are modeled faithfully:
+//!
+//! - **GPOP**: partition-local vertex data (cache-resident by
+//!   construction), sequential bin streams, k cached insertion points;
+//!   DC mode reads the pre-built PNG instead of CSR.
+//! - **Ligra-like VC**: CSR/CSC streams plus one *fine-grained random*
+//!   vertex-data access per edge (push: write to `val[dst]`; pull: read
+//!   of `val[src]`).
+//! - **GraphMat-like SpMV**: O(V) dense mask scan per iteration,
+//!   per-thread destination buckets (V/t range ≫ cache), message
+//!   append streams.
+//!
+//! Traces are replayed single-threaded through one private-L2-sized
+//! cache; the paper's tables compare totals across cores, but the
+//! *ratios* between frameworks — which is what Tables 4–6 demonstrate —
+//! are preserved (DESIGN.md §Substitutions).
+
+use super::cache::{Cache, CacheConfig};
+use super::trace::Tracer;
+use crate::graph::Graph;
+use crate::partition::Partitioner;
+use crate::ppm::cost::PartCost;
+use crate::VertexId;
+
+/// Framework whose access pattern is replayed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Framework {
+    /// PPM with Eq.-1 dual-mode selection.
+    Gpop,
+    /// PPM restricted to source-centric mode (GPOP_SC ablation).
+    GpopSc,
+    /// Ligra-like vertex-centric (push for frontier algorithms, pull for
+    /// PageRank — matching how each is actually run).
+    Ligra,
+    /// GraphMat-like SpMV.
+    GraphMat,
+}
+
+impl Framework {
+    pub const ALL: [Framework; 4] =
+        [Framework::Gpop, Framework::GpopSc, Framework::Ligra, Framework::GraphMat];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Framework::Gpop => "GPOP",
+            Framework::GpopSc => "GPOP_SC",
+            Framework::Ligra => "Ligra",
+            Framework::GraphMat => "GraphMat",
+        }
+    }
+}
+
+/// Per-iteration frontiers of label propagation (from the serial
+/// reference; identical frontiers are fed to every framework's trace).
+pub fn labelprop_history(g: &Graph) -> Vec<Vec<VertexId>> {
+    let n = g.n();
+    let mut label: Vec<u32> = (0..n as u32).collect();
+    let mut active: Vec<VertexId> = (0..n as VertexId).collect();
+    let mut history = Vec::new();
+    while !active.is_empty() {
+        history.push(active.clone());
+        let mut next_label = label.clone();
+        let mut changed = Vec::new();
+        for &v in &active {
+            for &u in g.out().neighbors(v) {
+                if label[v as usize] < next_label[u as usize] {
+                    next_label[u as usize] = label[v as usize];
+                    changed.push(u);
+                }
+            }
+        }
+        changed.sort_unstable();
+        changed.dedup();
+        label = next_label;
+        active = changed;
+    }
+    history
+}
+
+/// Per-iteration frontiers of synchronous Bellman-Ford.
+pub fn sssp_history(g: &Graph, source: VertexId) -> Vec<Vec<VertexId>> {
+    let n = g.n();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut active = vec![source];
+    let mut history = Vec::new();
+    while !active.is_empty() {
+        history.push(active.clone());
+        let mut next = dist.clone();
+        let mut changed = Vec::new();
+        for &v in &active {
+            let ws = g.out().edge_weights(v);
+            for (k, &u) in g.out().neighbors(v).iter().enumerate() {
+                let w = ws.map_or(1.0, |ws| ws[k]);
+                if dist[v as usize] + w < next[u as usize] {
+                    next[u as usize] = dist[v as usize] + w;
+                    changed.push(u);
+                }
+            }
+        }
+        changed.sort_unstable();
+        changed.dedup();
+        dist = next;
+        active = changed;
+    }
+    history
+}
+
+/// All-active frontiers for `iters` PageRank iterations.
+pub fn pagerank_history(g: &Graph, iters: usize) -> Vec<Vec<VertexId>> {
+    let all: Vec<VertexId> = (0..g.n() as VertexId).collect();
+    vec![all; iters]
+}
+
+/// Shared address-space plan for one replay.
+struct Layout {
+    vdata: super::trace::Region,
+    offsets: super::trace::Region,
+    edges: super::trace::Region,
+    /// Edge weights (weighted graphs only; same indexing as `edges`).
+    weights: Option<super::trace::Region>,
+    aux: super::trace::Region,
+    aux2: super::trace::Region,
+}
+
+fn layout(t: &mut Tracer, g: &Graph) -> Layout {
+    let n = g.n() as u64;
+    let m = g.m() as u64;
+    Layout {
+        vdata: t.region(n, 4),
+        offsets: t.region(n + 1, 8),
+        edges: t.region(m, 4),
+        weights: if g.is_weighted() { Some(t.region(m, 4)) } else { None },
+        aux: t.region(2 * m + n, 4),
+        aux2: t.region(2 * m + n, 4),
+    }
+}
+
+/// Simulated L2 misses for `framework` running `history` on `g`.
+/// This is the single entry point behind Tables 4, 5 and 6.
+pub fn simulate(
+    g: &Graph,
+    framework: Framework,
+    history: &[Vec<VertexId>],
+    config: CacheConfig,
+    threads: usize,
+) -> u64 {
+    let mut t = Tracer::new(Cache::new(config));
+    match framework {
+        Framework::Gpop | Framework::GpopSc => {
+            gpop_trace(&mut t, g, history, config, framework == Framework::GpopSc)
+        }
+        Framework::Ligra => ligra_trace(&mut t, g, history),
+        Framework::GraphMat => graphmat_trace(&mut t, g, history, threads),
+    }
+    t.stats().misses
+}
+
+/// GPOP/PPM trace: per-partition scatter (SC streams CSR of active
+/// vertices; DC streams the PNG) + gather (sequential bin reads,
+/// partition-local vertex writes).
+fn gpop_trace(t: &mut Tracer, g: &Graph, history: &[Vec<VertexId>], config: CacheConfig, force_sc: bool) {
+    let lay = layout(t, g);
+    let parts = Partitioner::auto(g.n(), 1, config.size_bytes, 4);
+    let k = parts.k();
+    // Message streams (bins): data + ids regions, written sequentially.
+    let bin_data = lay.aux;
+    let bin_ids = lay.aux2;
+    // Static per-partition cost inputs (as Engine::new computes).
+    let mut edges_of = vec![0u64; k];
+    let mut msgs_of = vec![0u64; k];
+    for p in 0..k {
+        for v in parts.range(p as u32) {
+            let adj = g.out().neighbors(v);
+            edges_of[p] += adj.len() as u64;
+            let mut last = u32::MAX;
+            for &u in adj {
+                let pj = parts.part_of(u);
+                if pj != last {
+                    msgs_of[p] += 1;
+                    last = pj;
+                }
+            }
+        }
+    }
+    for frontier in history {
+        // Group frontier by partition.
+        let mut by_part: Vec<Vec<VertexId>> = vec![Vec::new(); k];
+        for &v in frontier {
+            by_part[parts.part_of(v) as usize].push(v);
+        }
+        let mut data_cursor = 0u64;
+        let mut id_cursor = 0u64;
+        // ---- Scatter ----
+        for p in 0..k {
+            if by_part[p].is_empty() {
+                continue;
+            }
+            let ea: u64 = by_part[p].iter().map(|&v| g.out_degree(v) as u64).sum();
+            let cost = PartCost { edges: edges_of[p], msgs: msgs_of[p], k };
+            let dc = !force_sc && cost.choose_dc(ea, 2.0);
+            if dc {
+                // Stream PNG sources + write one value per message.
+                for v in parts.range(p as u32) {
+                    if g.out_degree(v) == 0 {
+                        continue;
+                    }
+                    t.touch(lay.offsets, v as u64); // PNG source entry
+                    t.touch(lay.vdata, v as u64); // partition-local read
+                    t.touch(bin_data, data_cursor);
+                    data_cursor += 1;
+                }
+            } else {
+                for &v in &by_part[p] {
+                    t.touch(lay.offsets, v as u64);
+                    t.touch(lay.vdata, v as u64);
+                    let lo = g.out().offsets()[v as usize];
+                    let deg = g.out_degree(v) as u64;
+                    // Stream adjacency; write ids into bins (sequential
+                    // per bin; k insertion points stay cached).
+                    for e in 0..deg {
+                        t.touch(lay.edges, lo + e);
+                        if let Some(w) = lay.weights {
+                            t.touch(w, lo + e);
+                        }
+                        t.touch(bin_ids, id_cursor);
+                        id_cursor += 1;
+                    }
+                    t.touch(bin_data, data_cursor);
+                    data_cursor += 1;
+                }
+            }
+        }
+        // ---- Gather: stream messages, write partition-local vdata ----
+        let mut dcur = 0u64;
+        let mut icur = 0u64;
+        for p in 0..k {
+            // Destinations of this partition's incoming messages: the
+            // real destination ids, partition-local.
+            let _ = p;
+        }
+        // Replay gather as: for each message (by construction grouped by
+        // destination partition), read stream + local write. We
+        // approximate grouping by replaying destinations partition-major
+        // using the real edges of the frontier.
+        let mut dsts: Vec<Vec<VertexId>> = vec![Vec::new(); k];
+        for &v in frontier.iter() {
+            for &u in g.out().neighbors(v) {
+                dsts[parts.part_of(u) as usize].push(u);
+            }
+        }
+        for p in 0..k {
+            for &u in &dsts[p] {
+                t.touch(bin_ids, icur);
+                icur += 1;
+                if icur % 4 == 0 {
+                    t.touch(bin_data, dcur);
+                    dcur += 1;
+                }
+                t.touch(lay.vdata, u as u64); // partition-local: cacheable
+            }
+        }
+    }
+}
+
+/// Ligra-like trace. Frontier algorithms run push (random write per
+/// edge); all-active histories (PageRank) run pull over CSC (random read
+/// per edge) — matching how Ligra actually executes each.
+fn ligra_trace(t: &mut Tracer, g: &Graph, history: &[Vec<VertexId>]) {
+    let lay = layout(t, g);
+    let n = g.n();
+    let all_active = history.iter().all(|f| f.len() == n);
+    for frontier in history {
+        if all_active {
+            // Pull over in-edges: stream CSC, random-read source data.
+            for v in 0..n as VertexId {
+                t.touch(lay.offsets, v as u64);
+                let lo = g.out().offsets()[v as usize];
+                for (e, &u) in g.out().neighbors(v).iter().enumerate() {
+                    t.touch(lay.edges, lo + e as u64);
+                    t.touch(lay.vdata, u as u64); // fine-grained random read
+                }
+                t.touch(lay.aux, v as u64); // write own next value
+            }
+        } else {
+            // Push: stream own adjacency, random write destination data.
+            for &v in frontier {
+                t.touch(lay.offsets, v as u64);
+                t.touch(lay.vdata, v as u64);
+                let lo = g.out().offsets()[v as usize];
+                for (e, &u) in g.out().neighbors(v).iter().enumerate() {
+                    t.touch(lay.edges, lo + e as u64);
+                    if let Some(w) = lay.weights {
+                        t.touch(w, lo + e as u64);
+                    }
+                    t.touch(lay.vdata, u as u64); // atomic RMW on dst
+                }
+            }
+        }
+    }
+}
+
+/// GraphMat-like trace: O(V) dense mask scan, bucket append (t*t
+/// buckets, sequential), gather reduces each bucket with writes spread
+/// over a V/t range.
+fn graphmat_trace(t: &mut Tracer, g: &Graph, history: &[Vec<VertexId>], threads: usize) {
+    let lay = layout(t, g);
+    let n = g.n();
+    let mask = lay.aux2;
+    let per = (n + threads - 1) / threads;
+    for frontier in history {
+        // O(V) scan of the dense frontier mask (bit per vertex -> /8).
+        for v in 0..n as u64 {
+            t.touch(super::trace::Region { base: mask.base, stride: 1 }, v / 8);
+        }
+        // Scatter: active vertices append (dst, val) = 8 B per edge into
+        // per-destination-thread buckets.
+        let mut bucket_cursor = vec![0u64; threads];
+        let mut bucket_dsts: Vec<Vec<VertexId>> = vec![Vec::new(); threads];
+        for &v in frontier {
+            t.touch(lay.vdata, v as u64);
+            t.touch(lay.offsets, v as u64);
+            let lo = g.out().offsets()[v as usize];
+            for (e, &u) in g.out().neighbors(v).iter().enumerate() {
+                t.touch(lay.edges, lo + e as u64);
+                if let Some(w) = lay.weights {
+                    t.touch(w, lo + e as u64);
+                }
+                let b = u as usize / per;
+                // Bucket regions carved out of aux: bucket b owns
+                // [b * 2m/t, ...) message slots of 8 B.
+                let slot = (b as u64 * 2 * g.m() as u64 / threads as u64) + bucket_cursor[b];
+                t.touch(super::trace::Region { base: lay.aux.base, stride: 8 }, slot);
+                bucket_cursor[b] += 1;
+                bucket_dsts[b].push(u);
+            }
+        }
+        // Gather: each bucket is reduced in turn — message stream read
+        // sequentially, vertex writes confined to the bucket's V/t
+        // destination range (which exceeds cache only for large V).
+        for (b, dsts) in bucket_dsts.iter().enumerate() {
+            let base_slot = b as u64 * 2 * g.m() as u64 / threads as u64;
+            for (i, &u) in dsts.iter().enumerate() {
+                t.touch(super::trace::Region { base: lay.aux.base, stride: 8 }, base_slot + i as u64);
+                t.touch(lay.vdata, u as u64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    /// Tests use a geometry-scaled cache (16 KB) so that test-sized
+    /// graphs reproduce the paper's "vertex data ≫ cache" regime; the
+    /// benches run the real 256 KB geometry on larger graphs.
+    fn small_cache() -> CacheConfig {
+        CacheConfig { size_bytes: 16 * 1024, line_bytes: 64, ways: 8 }
+    }
+
+    fn misses(g: &Graph, fw: Framework, hist: &[Vec<VertexId>]) -> u64 {
+        simulate(g, fw, hist, small_cache(), 8)
+    }
+
+    #[test]
+    fn histories_shrink_and_terminate() {
+        let g = gen::rmat(9, Default::default(), false);
+        let h = labelprop_history(&g);
+        assert!(!h.is_empty());
+        assert_eq!(h[0].len(), g.n());
+        assert!(h.last().unwrap().len() < h[0].len());
+        let hs = sssp_history(&g, 0);
+        assert!(!hs.is_empty());
+        assert_eq!(hs[0], vec![0]);
+    }
+
+    #[test]
+    fn gpop_beats_ligra_on_pagerank() {
+        // The Table-4 headline: GPOP ≪ Ligra on PR (paper: avg 8.6x).
+        // rmat14 vertex data (64 KB) is 4x the 16 KB test cache.
+        let g = gen::rmat(14, Default::default(), false);
+        let h = pagerank_history(&g, 2);
+        let gpop = misses(&g, Framework::Gpop, &h);
+        let ligra = misses(&g, Framework::Ligra, &h);
+        assert!(
+            (ligra as f64) > 2.0 * gpop as f64,
+            "expected Ligra >> GPOP: {ligra} vs {gpop}"
+        );
+    }
+
+    #[test]
+    fn graphmat_between_gpop_and_ligra_on_pagerank() {
+        // Table 4: GraphMat better than Ligra, worse than GPOP.
+        let g = gen::rmat(14, Default::default(), false);
+        let h = pagerank_history(&g, 2);
+        let gpop = misses(&g, Framework::Gpop, &h);
+        let gm = misses(&g, Framework::GraphMat, &h);
+        let ligra = misses(&g, Framework::Ligra, &h);
+        assert!(gm > gpop, "GraphMat {gm} should exceed GPOP {gpop}");
+        assert!(gm < ligra, "GraphMat {gm} should be below Ligra {ligra}");
+    }
+
+    #[test]
+    fn labelprop_gpop_fewer_misses() {
+        let g = gen::rmat(13, Default::default(), false);
+        let h = labelprop_history(&g);
+        let gpop = misses(&g, Framework::Gpop, &h);
+        let ligra = misses(&g, Framework::Ligra, &h);
+        assert!(ligra > gpop, "{ligra} vs {gpop}");
+    }
+
+    #[test]
+    fn sssp_traces_run() {
+        let g = gen::with_uniform_weights(&gen::rmat(10, Default::default(), false), 1.0, 4.0, 3);
+        let h = sssp_history(&g, 0);
+        for fw in Framework::ALL {
+            let m = misses(&g, fw, &h);
+            assert!(m > 0, "{fw:?} produced no misses");
+        }
+    }
+
+    #[test]
+    fn small_graph_fits_cache_few_misses() {
+        // Vertex data of a tiny graph fits in L2: every framework gets
+        // low miss counts; GPOP shouldn't be (much) worse despite its
+        // 2-phase overhead (the paper's soclj caveat).
+        let g = gen::rmat(9, Default::default(), false);
+        let h = pagerank_history(&g, 2);
+        // 512 vertices * 4B = 2 KB << 16 KB: both frameworks cache well.
+        let gpop = misses(&g, Framework::Gpop, &h) as f64;
+        let ligra = misses(&g, Framework::Ligra, &h) as f64;
+        assert!(gpop < 2.5 * ligra.max(1.0));
+    }
+}

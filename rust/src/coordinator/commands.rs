@@ -1,0 +1,331 @@
+//! `gpop` subcommand implementations.
+
+use super::spec::GraphSpec;
+use crate::apps;
+use crate::cachesim::model::{self, Framework};
+use crate::cachesim::CacheConfig;
+use crate::exec::ThreadPool;
+use crate::graph::io;
+use crate::metrics;
+use crate::ppm::{Engine, ModePolicy, PpmConfig, RunStats};
+use crate::util::cli::{Args, CliError};
+use crate::util::fmt;
+use std::path::Path;
+
+fn engine_config(args: &Args) -> Result<PpmConfig, CliError> {
+    let threads = args
+        .get_parsed_or::<usize>("threads", ThreadPool::available_parallelism())?;
+    Ok(PpmConfig {
+        threads,
+        mode: args
+            .get_or("mode", "hybrid")
+            .parse::<ModePolicy>()
+            .map_err(CliError)?,
+        bw_ratio: args.get_parsed_or("bw-ratio", 2.0)?,
+        k: args.get_parsed("k")?,
+        cache_bytes: args.get_parsed_or("cache-kb", 256usize)? * 1024,
+        ..Default::default()
+    })
+}
+
+fn build_graph(args: &Args) -> Result<crate::graph::Graph, CliError> {
+    let spec_str = args
+        .get("graph")
+        .ok_or_else(|| CliError("--graph SPEC is required".into()))?;
+    let spec = GraphSpec::parse(spec_str).map_err(CliError)?;
+    let g = spec.build().map_err(CliError)?;
+    println!(
+        "graph: {} — {} vertices, {} edges{}",
+        spec.describe(),
+        fmt::si(g.n() as f64),
+        fmt::si(g.m() as f64),
+        if g.is_weighted() { ", weighted" } else { "" }
+    );
+    Ok(g)
+}
+
+fn print_run_stats(stats: &RunStats, verbose: bool) {
+    println!(
+        "iterations: {}  total: {}  messages: {}  converged: {}",
+        stats.n_iters(),
+        fmt::secs(stats.total_time),
+        fmt::si(stats.total_messages() as f64),
+        stats.converged
+    );
+    if verbose {
+        for it in &stats.iters {
+            println!(
+                "  iter {:>3}: frontier {:>9} edges {:>10} msgs {:>10} sc {:>4} dc {:>4} \
+                 scatter {} gather {} finalize {}",
+                it.iter,
+                it.frontier,
+                it.active_edges,
+                it.messages,
+                it.sc_parts,
+                it.dc_parts,
+                fmt::secs(it.t_scatter),
+                fmt::secs(it.t_gather),
+                fmt::secs(it.t_finalize)
+            );
+        }
+    }
+}
+
+pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
+    let app = args.get_or("app", "pr").to_string();
+    let g = build_graph(args)?;
+    let config = engine_config(args)?;
+    println!(
+        "engine: {} threads, mode {:?}, k = {}",
+        config.threads,
+        config.mode,
+        config.k.map(|k| k.to_string()).unwrap_or_else(|| "auto".into())
+    );
+    let verbose = args.flag("verbose");
+    let t0 = std::time::Instant::now();
+    let mut engine = Engine::new(g, config);
+    println!(
+        "preprocessing: {} (k = {})",
+        fmt::secs(t0.elapsed().as_secs_f64()),
+        engine.parts().k()
+    );
+    let root = args.get_parsed_or::<u32>("root", 0)?;
+    let iters = args.get_parsed_or::<usize>("iters", 10)?;
+    let seeds = args.get_list::<u32>("seeds")?.unwrap_or_else(|| vec![root]);
+    let eps = args.get_parsed_or::<f32>("eps", 1e-6)?;
+    match app.as_str() {
+        "bfs" => {
+            let res = apps::bfs::run(&mut engine, root);
+            print_run_stats(&res.stats, verbose);
+            println!("reached: {} vertices from root {root}", fmt::si(res.n_reached() as f64));
+        }
+        "pr" | "pagerank" => {
+            let res = apps::pagerank::run(&mut engine, apps::pagerank::DEFAULT_DAMPING, iters);
+            let time: f64 = res.iters.iter().map(|i| i.total_time()).sum();
+            let edges = engine.graph().m() as u64 * iters as u64;
+            println!(
+                "{iters} iterations in {} — {} edges/s",
+                fmt::secs(time),
+                fmt::si(edges as f64 / time)
+            );
+            if verbose {
+                let mut top: Vec<(usize, f32)> = res.rank.iter().copied().enumerate().collect();
+                top.sort_by(|a, b| b.1.total_cmp(&a.1));
+                for (v, r) in top.iter().take(5) {
+                    println!("  rank[{v}] = {r:.6}");
+                }
+            }
+        }
+        "cc" => {
+            let res = apps::cc::run(&mut engine, 10_000);
+            print_run_stats(&res.stats, verbose);
+            println!("components (label fixpoint classes): {}", res.n_components());
+        }
+        "sssp" => {
+            if !engine.graph().is_weighted() {
+                return Err(CliError(
+                    "sssp needs a weighted graph; add '+w:1:4' to the spec".into(),
+                ));
+            }
+            let res = apps::sssp::run(&mut engine, root);
+            print_run_stats(&res.stats, verbose);
+            let reached = res.distance.iter().filter(|d| d.is_finite()).count();
+            println!("reached: {} vertices", fmt::si(reached as f64));
+        }
+        "nibble" => {
+            let res = apps::nibble::run(&mut engine, &seeds, eps, iters.max(100));
+            print_run_stats(&res.stats, verbose);
+            println!("support: {} vertices with non-zero probability", res.support);
+        }
+        "prnibble" => {
+            let alpha = args.get_parsed_or::<f32>("alpha", 0.15)?;
+            let res = apps::pagerank_nibble::run(&mut engine, &seeds, alpha, eps, iters.max(100));
+            print_run_stats(&res.stats, verbose);
+            let settled: f64 = res.p.iter().map(|&x| x as f64).sum();
+            println!("settled mass: {settled:.4}");
+        }
+        "heatkernel" => {
+            let t = args.get_parsed_or::<f32>("t", 2.0)?;
+            let order = args.get_parsed_or::<u32>("order", 10)?;
+            let res = apps::heat_kernel::run(&mut engine, &seeds, t, order, eps);
+            println!("heat-kernel: {} stages", res.iters);
+            let mass: f64 = res.heat.iter().map(|&x| x as f64).sum();
+            println!("heat mass: {mass:.4}");
+        }
+        other => return Err(CliError(format!("unknown app {other:?}"))),
+    }
+    Ok(0)
+}
+
+pub fn cmd_gen(args: &Args) -> Result<i32, CliError> {
+    let g = build_graph(args)?;
+    let out = args.get("out").ok_or_else(|| CliError("--out PATH required".into()))?;
+    let format = args.get_or("format", if out.ends_with(".bin") { "bin" } else { "el" });
+    let res = match format {
+        "bin" => io::write_binary(&g, Path::new(out)),
+        "el" => io::write_edge_list(&g, Path::new(out)),
+        other => return Err(CliError(format!("unknown format {other:?}"))),
+    };
+    res.map_err(|e| CliError(format!("write {out}: {e}")))?;
+    println!("wrote {out}");
+    Ok(0)
+}
+
+pub fn cmd_cachesim(args: &Args) -> Result<i32, CliError> {
+    let app = args.get_or("app", "pr").to_string();
+    let g = build_graph(args)?;
+    let iters = args.get_parsed_or::<usize>("iters", 10)?;
+    let threads = args.get_parsed_or::<usize>("threads", 8)?;
+    let history = match app.as_str() {
+        "pr" | "pagerank" => model::pagerank_history(&g, iters),
+        "cc" | "labelprop" => model::labelprop_history(&g),
+        "sssp" => model::sssp_history(&g, args.get_parsed_or::<u32>("root", 0)?),
+        other => return Err(CliError(format!("cachesim app {other:?} (pr|cc|sssp)"))),
+    };
+    println!("history: {} iterations", history.len());
+    let config = CacheConfig {
+        size_bytes: args.get_parsed_or::<usize>("cache-kb", 256)? * 1024,
+        ..Default::default()
+    };
+    let mut table = crate::bench::Table::new(&["framework", "L2 misses", "vs GPOP"]);
+    let gpop = model::simulate(&g, Framework::Gpop, &history, config, threads);
+    for fw in Framework::ALL {
+        let misses = if fw == Framework::Gpop {
+            gpop
+        } else {
+            model::simulate(&g, fw, &history, config, threads)
+        };
+        table.row(&[
+            fw.name().to_string(),
+            fmt::si(misses as f64),
+            format!("{:.2}x", misses as f64 / gpop.max(1) as f64),
+        ]);
+    }
+    table.print();
+    Ok(0)
+}
+
+pub fn cmd_membench(args: &Args) -> Result<i32, CliError> {
+    let threads = args.get_parsed_or::<usize>("threads", ThreadPool::available_parallelism())?;
+    let mb = args.get_parsed_or::<usize>("mb", 256)?;
+    println!("membench: {threads} threads, {mb} MiB working set");
+    let r = metrics::measure_bandwidth(threads, mb);
+    println!("copy:   {:.2} GB/s", r.copy_gbps);
+    println!("add:    {:.2} GB/s", r.add_gbps);
+    println!("random: {:.3} GB/s effective", r.random_gbps);
+    println!(
+        "sequential/random ratio: {:.1}x  (Eq. 1 BW_DC/BW_SC default is 2)",
+        r.copy_gbps / r.random_gbps.max(1e-9)
+    );
+    Ok(0)
+}
+
+pub fn cmd_pjrt(args: &Args) -> Result<i32, CliError> {
+    let dir = match args.get("artifacts") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => crate::runtime::pjrt::default_artifacts_dir(),
+    };
+    let rt = crate::runtime::PjrtRuntime::new(&dir)
+        .map_err(|e| CliError(format!("{e:#}")))?;
+    let m = rt.manifest.clone();
+    println!("pjrt: platform {} — artifacts k={} q={} n={}", rt.platform(), m.k, m.q, m.n);
+    let g = crate::graph::gen::erdos_renyi(m.n, m.n * 8, 42);
+    let (blocks, inv_deg) = crate::runtime::pjrt::graph_to_blocks(&g, m.k, m.q);
+    let rank0 = vec![1.0f32 / m.n as f32; m.n];
+    let exe = rt.pagerank().map_err(|e| CliError(format!("{e:#}")))?;
+    let t0 = std::time::Instant::now();
+    let rank = exe.run(&blocks, &rank0, &inv_deg, 0.85).map_err(|e| CliError(format!("{e:#}")))?;
+    println!(
+        "{} fused iterations on PJRT: {}",
+        m.iters,
+        fmt::secs(t0.elapsed().as_secs_f64())
+    );
+    if args.flag("check") {
+        let mut eng = Engine::new(g, PpmConfig::with_threads(2));
+        let native = apps::pagerank::run(&mut eng, 0.85, m.iters);
+        let max_err = rank
+            .iter()
+            .zip(&native.rank)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!("max |pjrt - native| = {max_err:.2e}");
+        if max_err > 1e-4 {
+            return Err(CliError(format!("PJRT/native mismatch: {max_err}")));
+        }
+        println!("numerics check PASSED");
+    }
+    Ok(0)
+}
+
+pub fn cmd_info(_args: &Args) -> Result<i32, CliError> {
+    println!("gpop {} — GPOP (PPoPP'19) reproduction", env!("CARGO_PKG_VERSION"));
+    println!("hardware threads: {}", ThreadPool::available_parallelism());
+    println!("default partition budget: 256 KB (L2-sized, paper §3.1)");
+    println!("artifacts present: {}", Path::new("artifacts/manifest.json").exists());
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose", "check"]).unwrap()
+    }
+
+    #[test]
+    fn run_bfs_small() {
+        let a = args(&["--app", "bfs", "--graph", "er:200:1000", "--threads", "2"]);
+        assert_eq!(cmd_run(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn run_all_apps_smoke() {
+        for app in ["pr", "cc", "nibble", "prnibble", "heatkernel"] {
+            let a = args(&["--app", app, "--graph", "grid:8:8", "--threads", "2", "--iters", "3"]);
+            assert_eq!(cmd_run(&a).unwrap(), 0, "app {app}");
+        }
+        let a = args(&["--app", "sssp", "--graph", "grid:8:8+w:1:2", "--threads", "2"]);
+        assert_eq!(cmd_run(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn run_sssp_unweighted_rejected() {
+        let a = args(&["--app", "sssp", "--graph", "chain:10"]);
+        assert!(cmd_run(&a).is_err());
+    }
+
+    #[test]
+    fn run_requires_graph() {
+        let a = args(&["--app", "bfs"]);
+        assert!(cmd_run(&a).is_err());
+    }
+
+    #[test]
+    fn gen_and_reload() {
+        let out = std::env::temp_dir().join(format!("gpop_gen_{}.bin", std::process::id()));
+        let a = args(&["--graph", "er:100:400", "--out", out.to_str().unwrap()]);
+        assert_eq!(cmd_gen(&a).unwrap(), 0);
+        let spec = format!("file:{}", out.display());
+        let a2 = args(&["--app", "pr", "--graph", &spec, "--iters", "2"]);
+        assert_eq!(cmd_run(&a2).unwrap(), 0);
+        std::fs::remove_file(out).unwrap();
+    }
+
+    #[test]
+    fn cachesim_smoke() {
+        let a = args(&["--app", "pr", "--graph", "rmat:10", "--iters", "2", "--cache-kb", "16"]);
+        assert_eq!(cmd_cachesim(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn info_smoke() {
+        assert_eq!(cmd_info(&args(&[])).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_app_rejected() {
+        let a = args(&["--app", "wat", "--graph", "chain:4"]);
+        assert!(cmd_run(&a).is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! The launcher: CLI parsing, workload specs, and the command
+//! implementations behind the `gpop` binary.
+
+pub mod commands;
+pub mod spec;
+
+pub use spec::GraphSpec;
+
+use crate::util::cli::{Args, CliError};
+
+pub const USAGE: &str = r#"gpop — Graph Processing Over Partitions (PPoPP'19 reproduction)
+
+USAGE: gpop <command> [options]
+
+COMMANDS:
+  run        Run an application on a graph through the PPM engine
+             --app bfs|pr|cc|sssp|nibble|prnibble|heatkernel
+             --graph SPEC [--threads N] [--mode hybrid|sc|dc]
+             [--iters N] [--root V] [--seeds a,b,c] [--eps X]
+             [--bw-ratio X] [--k N] [--verbose]
+  gen        Generate a graph and write it to disk
+             --graph SPEC --out PATH [--format bin|el]
+  cachesim   Simulated L2 misses per framework (Tables 4-6)
+             --app pr|cc|sssp --graph SPEC [--iters N] [--threads N]
+  membench   STREAM-style bandwidth probe (Table 2 calibration)
+             [--threads N] [--mb N]
+  pjrt       Run the AOT-compiled JAX/Pallas PageRank via PJRT
+             [--artifacts DIR] [--check]
+  info       Host + build information
+
+Any command accepts --config FILE: `key = value` defaults (bare keys
+are flags); explicit CLI options take precedence.
+
+GRAPH SPECS:
+  rmat:SCALE[:EDGEFACTOR]   RMAT (Graph500 params, degree 16 default)
+  er:N:M                    Erdos-Renyi with N vertices, M edges
+  grid:R:C                  R x C grid, symmetrized
+  chain:N                   directed chain
+  file:PATH                 edge list (.el/.txt) or binary (.bin)
+  Suffix any spec with '+w[:LO:HI]' for uniform random weights,
+  '+sym' to symmetrize (e.g. rmat:18+sym for CC).
+"#;
+
+/// Entry point used by `main.rs` (and integration tests).
+pub fn dispatch(argv: Vec<String>) -> Result<i32, CliError> {
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(2);
+    }
+    let cmd = argv[0].clone();
+    let mut args = Args::parse(argv.into_iter().skip(1), &["verbose", "check", "dedup"])?;
+    // `--config FILE`: key = value defaults; explicit CLI options win.
+    if let Some(path) = args.get("config").map(str::to_string) {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| CliError(format!("read config {path}: {e}")))?;
+        args.merge_config_text(&text)?;
+    }
+    match cmd.as_str() {
+        "run" => commands::cmd_run(&args),
+        "gen" => commands::cmd_gen(&args),
+        "cachesim" => commands::cmd_cachesim(&args),
+        "membench" => commands::cmd_membench(&args),
+        "pjrt" => commands::cmd_pjrt(&args),
+        "info" => commands::cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => Err(CliError(format!("unknown command {other:?}; try `gpop help`"))),
+    }
+}

@@ -1,0 +1,203 @@
+//! Graph workload specifications: `rmat:20`, `er:1000:8000`,
+//! `file:path.bin`, with `+w`/`+sym` modifiers.
+
+use crate::graph::{gen, io, Graph, GraphBuilder};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphSpec {
+    pub kind: Kind,
+    pub weights: Option<(f32, f32)>,
+    pub symmetrize: bool,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Kind {
+    Rmat { scale: u32, edge_factor: usize },
+    Er { n: usize, m: usize },
+    Grid { rows: usize, cols: usize },
+    Chain { n: usize },
+    File { path: String },
+}
+
+impl GraphSpec {
+    pub fn parse(s: &str) -> Result<GraphSpec, String> {
+        let mut spec = GraphSpec {
+            kind: Kind::Chain { n: 0 },
+            weights: None,
+            symmetrize: false,
+            seed: 0x9a0e_1234,
+        };
+        let mut parts = s.split('+');
+        let base = parts.next().ok_or("empty spec")?;
+        for modifier in parts {
+            if modifier == "sym" {
+                spec.symmetrize = true;
+            } else if let Some(rest) = modifier.strip_prefix('w') {
+                let (lo, hi) = if rest.is_empty() {
+                    (1.0, 2.0)
+                } else {
+                    let body = rest.strip_prefix(':').ok_or(format!("bad weight spec {modifier:?}"))?;
+                    let (lo, hi) = body.split_once(':').ok_or("weights need LO:HI")?;
+                    (
+                        lo.parse().map_err(|e| format!("weight lo: {e}"))?,
+                        hi.parse().map_err(|e| format!("weight hi: {e}"))?,
+                    )
+                };
+                spec.weights = Some((lo, hi));
+            } else {
+                return Err(format!("unknown modifier {modifier:?}"));
+            }
+        }
+        let mut it = base.split(':');
+        let kind = it.next().ok_or("empty spec")?;
+        let nums: Vec<&str> = it.collect();
+        let parse_usize = |s: &str| s.parse::<usize>().map_err(|e| format!("{s:?}: {e}"));
+        spec.kind = match kind {
+            "rmat" => {
+                if nums.is_empty() {
+                    return Err("rmat needs a scale: rmat:20".into());
+                }
+                Kind::Rmat {
+                    scale: nums[0].parse().map_err(|e| format!("scale: {e}"))?,
+                    edge_factor: if nums.len() > 1 { parse_usize(nums[1])? } else { 16 },
+                }
+            }
+            "er" => {
+                if nums.len() != 2 {
+                    return Err("er needs er:N:M".into());
+                }
+                Kind::Er { n: parse_usize(nums[0])?, m: parse_usize(nums[1])? }
+            }
+            "grid" => {
+                if nums.len() != 2 {
+                    return Err("grid needs grid:R:C".into());
+                }
+                Kind::Grid { rows: parse_usize(nums[0])?, cols: parse_usize(nums[1])? }
+            }
+            "chain" => {
+                if nums.len() != 1 {
+                    return Err("chain needs chain:N".into());
+                }
+                Kind::Chain { n: parse_usize(nums[0])? }
+            }
+            "file" => {
+                if nums.is_empty() {
+                    return Err("file needs file:PATH".into());
+                }
+                Kind::File { path: nums.join(":") }
+            }
+            other => return Err(format!("unknown graph kind {other:?}")),
+        };
+        Ok(spec)
+    }
+
+    /// Materialize the graph.
+    pub fn build(&self) -> Result<Graph, String> {
+        let base = match &self.kind {
+            Kind::Rmat { scale, edge_factor } => gen::rmat(
+                *scale,
+                gen::RmatParams { edge_factor: *edge_factor, seed: self.seed, ..Default::default() },
+                false,
+            ),
+            Kind::Er { n, m } => gen::erdos_renyi(*n, *m, self.seed),
+            Kind::Grid { rows, cols } => gen::grid(*rows, *cols),
+            Kind::Chain { n } => gen::chain(*n),
+            Kind::File { path } => {
+                let p = Path::new(path);
+                if path.ends_with(".bin") {
+                    io::read_binary(p).map_err(|e| format!("read {path}: {e}"))?
+                } else {
+                    io::read_edge_list(p).map_err(|e| format!("read {path}: {e}"))?
+                }
+            }
+        };
+        let base = if self.symmetrize {
+            let mut b = GraphBuilder::new().with_n(base.n()).symmetrize();
+            for v in 0..base.n() as u32 {
+                let ws = base.out().edge_weights(v);
+                for (k, &u) in base.out().neighbors(v).iter().enumerate() {
+                    match ws {
+                        Some(ws) => {
+                            b.add_weighted(v, u, ws[k]);
+                        }
+                        None => {
+                            b.add(v, u);
+                        }
+                    }
+                }
+            }
+            b.build()
+        } else {
+            base
+        };
+        Ok(match self.weights {
+            Some((lo, hi)) => gen::with_uniform_weights(&base, lo, hi, self.seed ^ 0x5eed),
+            None => base,
+        })
+    }
+
+    /// Short human description.
+    pub fn describe(&self) -> String {
+        let base = match &self.kind {
+            Kind::Rmat { scale, edge_factor } => format!("rmat{scale} (deg {edge_factor})"),
+            Kind::Er { n, m } => format!("er({n},{m})"),
+            Kind::Grid { rows, cols } => format!("grid({rows}x{cols})"),
+            Kind::Chain { n } => format!("chain({n})"),
+            Kind::File { path } => path.clone(),
+        };
+        format!(
+            "{base}{}{}",
+            if self.symmetrize { "+sym" } else { "" },
+            if self.weights.is_some() { "+w" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rmat() {
+        let s = GraphSpec::parse("rmat:12").unwrap();
+        assert_eq!(s.kind, Kind::Rmat { scale: 12, edge_factor: 16 });
+        let s = GraphSpec::parse("rmat:12:8").unwrap();
+        assert_eq!(s.kind, Kind::Rmat { scale: 12, edge_factor: 8 });
+    }
+
+    #[test]
+    fn parse_modifiers() {
+        let s = GraphSpec::parse("er:100:500+w:1:5+sym").unwrap();
+        assert_eq!(s.kind, Kind::Er { n: 100, m: 500 });
+        assert_eq!(s.weights, Some((1.0, 5.0)));
+        assert!(s.symmetrize);
+        let s = GraphSpec::parse("grid:3:4+w").unwrap();
+        assert_eq!(s.weights, Some((1.0, 2.0)));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(GraphSpec::parse("rmat").is_err());
+        assert!(GraphSpec::parse("er:10").is_err());
+        assert!(GraphSpec::parse("wat:1").is_err());
+        assert!(GraphSpec::parse("rmat:8+x").is_err());
+    }
+
+    #[test]
+    fn build_small_specs() {
+        let g = GraphSpec::parse("grid:3:3").unwrap().build().unwrap();
+        assert_eq!(g.n(), 9);
+        let g = GraphSpec::parse("chain:5+w:2:3").unwrap().build().unwrap();
+        assert!(g.is_weighted());
+        let g = GraphSpec::parse("er:50:200+sym").unwrap().build().unwrap();
+        assert!(g.m() <= 400 && g.m() % 2 == 0, "m={}", g.m()); // self-loops dropped
+    }
+
+    #[test]
+    fn describe_roundtrip() {
+        let s = GraphSpec::parse("rmat:10+sym").unwrap();
+        assert_eq!(s.describe(), "rmat10 (deg 16)+sym");
+    }
+}

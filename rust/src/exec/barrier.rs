@@ -1,0 +1,133 @@
+//! A sense-reversing spin barrier.
+//!
+//! PPM synchronizes all threads at the end of each Scatter and Gather
+//! phase (paper §3). `std::sync::Barrier` parks threads through a mutex;
+//! for the short, frequent phase boundaries inside a parallel region a
+//! spinning sense-reversing barrier is considerably cheaper and is what
+//! OpenMP runtimes use by default.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+pub struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    sense: AtomicBool,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self { n, count: AtomicUsize::new(0), sense: AtomicBool::new(false) }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.n
+    }
+
+    /// Block (spin) until all `n` parties have arrived. Each thread must
+    /// track its own `local_sense`, flipping it on every use; see
+    /// [`BarrierToken`] for a safe per-thread wrapper.
+    pub fn wait(&self, local_sense: &mut bool) {
+        *local_sense = !*local_sense;
+        if self.count.fetch_add(1, Ordering::AcqRel) == self.n - 1 {
+            // Last arrival: reset and release everyone.
+            self.count.store(0, Ordering::Relaxed);
+            self.sense.store(*local_sense, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.sense.load(Ordering::Acquire) != *local_sense {
+                spins += 1;
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    // Be polite under oversubscription.
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// Per-thread barrier handle carrying the local sense flag.
+pub struct BarrierToken<'a> {
+    barrier: &'a SpinBarrier,
+    local_sense: bool,
+}
+
+impl<'a> BarrierToken<'a> {
+    pub fn new(barrier: &'a SpinBarrier) -> Self {
+        Self { barrier, local_sense: false }
+    }
+
+    #[inline]
+    pub fn wait(&mut self) {
+        self.barrier.wait(&mut self.local_sense);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_party_never_blocks() {
+        let b = SpinBarrier::new(1);
+        let mut tok = BarrierToken::new(&b);
+        for _ in 0..10 {
+            tok.wait();
+        }
+    }
+
+    #[test]
+    fn phases_are_ordered() {
+        // Counter must be exactly t*phase at each barrier crossing.
+        const T: usize = 4;
+        const PHASES: usize = 50;
+        let b = Arc::new(SpinBarrier::new(T));
+        let counter = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..T)
+            .map(|_| {
+                let b = b.clone();
+                let counter = counter.clone();
+                std::thread::spawn(move || {
+                    let mut tok = BarrierToken::new(&b);
+                    for phase in 0..PHASES {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                        tok.wait();
+                        // After the barrier every thread must observe all
+                        // increments of this phase.
+                        let c = counter.load(Ordering::Relaxed) as usize;
+                        assert!(c >= (phase + 1) * T, "phase {phase}: saw {c}");
+                        tok.wait();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed) as usize, T * PHASES);
+    }
+
+    #[test]
+    fn reusable_many_times() {
+        const T: usize = 8;
+        let b = Arc::new(SpinBarrier::new(T));
+        let handles: Vec<_> = (0..T)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    let mut tok = BarrierToken::new(&b);
+                    for _ in 0..1000 {
+                        tok.wait();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

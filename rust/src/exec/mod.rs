@@ -1,0 +1,16 @@
+//! Execution substrate: a persistent OpenMP-style thread pool with
+//! dynamic (chunked) scheduling and phase barriers.
+//!
+//! The paper parallelizes GPOP with OpenMP 4.5 (`#pragma omp parallel for
+//! schedule(dynamic)` over partitions). OpenMP/rayon are unavailable in
+//! this offline build, so we implement the same execution model: a fixed
+//! team of workers, parallel regions with an implicit barrier at region
+//! end, and a shared atomic cursor for dynamic load balancing — the
+//! property §3.1 relies on ("more partitions than threads assists dynamic
+//! load balancing").
+
+pub mod barrier;
+pub mod pool;
+
+pub use barrier::SpinBarrier;
+pub use pool::ThreadPool;

@@ -1,0 +1,262 @@
+//! A persistent worker-team thread pool with OpenMP-like semantics.
+//!
+//! [`ThreadPool::run`] opens a *parallel region*: the closure runs on
+//! every worker (with its thread id), and `run` returns only after all
+//! workers finish — the implicit barrier PPM relies on between Scatter
+//! and Gather. [`ThreadPool::for_each_dynamic`] layers dynamic chunked
+//! scheduling on top, which is how both phases iterate over partitions.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased job pointer. The referenced closure outlives the region
+/// because `run` does not return until `remaining == 0`.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is Sync and lives for the duration of the region.
+unsafe impl Send for JobPtr {}
+
+struct Shared {
+    job: Mutex<Option<(JobPtr, u64)>>, // (job, epoch)
+    start: Condvar,
+    remaining: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+    shutdown: std::sync::atomic::AtomicBool,
+}
+
+/// A fixed team of `n` workers (ids `1..n`); the caller participates as
+/// id `0`, so `ThreadPool::new(1)` runs everything on the calling thread.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    n_threads: usize,
+    epoch: u64,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        assert!(n_threads >= 1, "pool needs at least one thread");
+        let shared = Arc::new(Shared {
+            job: Mutex::new(None),
+            start: Condvar::new(),
+            remaining: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+            shutdown: std::sync::atomic::AtomicBool::new(false),
+        });
+        let handles = (1..n_threads)
+            .map(|tid| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("gpop-worker-{tid}"))
+                    .spawn(move || worker_loop(tid, shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, handles, n_threads, epoch: 0 }
+    }
+
+    /// Number of threads in the team (including the caller).
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Detected hardware parallelism.
+    pub fn available_parallelism() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Open a parallel region: `f(tid)` runs on every thread of the team;
+    /// returns when all have finished (implicit barrier).
+    pub fn run<F: Fn(usize) + Sync>(&mut self, f: F) {
+        if self.n_threads == 1 {
+            f(0);
+            return;
+        }
+        self.epoch += 1;
+        let n_workers = self.n_threads - 1;
+        self.shared.remaining.store(n_workers, Ordering::Release);
+        // Erase the closure's lifetime; sound because we wait below.
+        let ptr: *const (dyn Fn(usize) + Sync) = &f;
+        let job = JobPtr(unsafe { std::mem::transmute::<_, *const (dyn Fn(usize) + Sync)>(ptr) });
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            *slot = Some((job, self.epoch));
+            self.shared.start.notify_all();
+        }
+        // The caller is team member 0.
+        f(0);
+        // Wait for the workers.
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.remaining.load(Ordering::Acquire) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    /// Dynamic parallel-for over `n_items`, pulling chunks of
+    /// `chunk` items from a shared cursor (OpenMP `schedule(dynamic,chunk)`).
+    pub fn for_each_dynamic<F: Fn(usize, usize) + Sync>(&mut self, n_items: usize, chunk: usize, f: F) {
+        assert!(chunk > 0);
+        let cursor = AtomicUsize::new(0);
+        self.run(|tid| loop {
+            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n_items {
+                break;
+            }
+            let end = (start + chunk).min(n_items);
+            for i in start..end {
+                f(i, tid);
+            }
+        });
+    }
+
+    /// Static blocked parallel-for (for regular workloads like init).
+    pub fn for_each_static<F: Fn(std::ops::Range<usize>, usize) + Sync>(&mut self, n_items: usize, f: F) {
+        let t = self.n_threads;
+        let per = (n_items + t - 1) / t.max(1);
+        self.run(|tid| {
+            let lo = (tid * per).min(n_items);
+            let hi = ((tid + 1) * per).min(n_items);
+            if lo < hi {
+                f(lo..hi, tid);
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _slot = self.shared.job.lock().unwrap();
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(tid: usize, shared: Arc<Shared>) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.job.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                match *slot {
+                    Some((job, epoch)) if epoch != last_epoch => {
+                        last_epoch = epoch;
+                        break job;
+                    }
+                    _ => slot = shared.start.wait(slot).unwrap(),
+                }
+            }
+        };
+        // SAFETY: `run` keeps the closure alive until remaining == 0.
+        let f = unsafe { &*job.0 };
+        f(tid);
+        if shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = shared.done_lock.lock().unwrap();
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_visits_every_tid() {
+        let mut pool = ThreadPool::new(4);
+        let seen = [(); 4].map(|_| AtomicU64::new(0));
+        pool.run(|tid| {
+            seen[tid].fetch_add(1, Ordering::Relaxed);
+        });
+        for s in &seen {
+            assert_eq!(s.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let mut pool = ThreadPool::new(1);
+        let hits = AtomicU64::new(0);
+        pool.run(|tid| {
+            assert_eq!(tid, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dynamic_for_covers_all_items_once() {
+        let mut pool = ThreadPool::new(4);
+        let n = 10_000;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.for_each_dynamic(n, 16, |i, _tid| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn static_for_covers_all_items_once() {
+        let mut pool = ThreadPool::new(3);
+        let n = 1001;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.for_each_static(n, |range, _tid| {
+            for i in range {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn regions_are_sequential() {
+        // A region must fully finish before the next starts.
+        let mut pool = ThreadPool::new(4);
+        let counter = AtomicU64::new(0);
+        for round in 0..100u64 {
+            pool.run(|_tid| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 4);
+        }
+    }
+
+    #[test]
+    fn dynamic_balances_unequal_work() {
+        // Just a smoke test: heavily skewed work must still complete.
+        let mut pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        pool.for_each_dynamic(64, 1, |i, _tid| {
+            let mut acc = 0u64;
+            let iters = if i == 0 { 2_000_000 } else { 100 };
+            for k in 0..iters {
+                acc = acc.wrapping_add(k);
+            }
+            total.fetch_add(acc.max(1), Ordering::Relaxed);
+        });
+        assert!(total.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn pool_survives_many_regions() {
+        let mut pool = ThreadPool::new(2);
+        let c = AtomicU64::new(0);
+        for _ in 0..2000 {
+            pool.run(|_| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(c.load(Ordering::Relaxed), 4000);
+    }
+}

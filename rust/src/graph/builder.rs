@@ -1,0 +1,221 @@
+//! Edge-list → CSR construction (counting sort by source).
+
+use super::csr::{Csr, Graph};
+use super::Edge;
+use crate::util::sort::exclusive_prefix_sum;
+use crate::VertexId;
+
+/// Accumulates edges and finalizes into CSR with optional symmetrization,
+/// deduplication and self-loop removal.
+#[derive(Default)]
+pub struct GraphBuilder {
+    edges: Vec<Edge>,
+    n: usize,
+    weighted: bool,
+    symmetrize: bool,
+    dedup: bool,
+    drop_self_loops: bool,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Force at least `n` vertices (ids beyond the max edge endpoint).
+    pub fn with_n(mut self, n: usize) -> Self {
+        self.n = n;
+        self
+    }
+
+    /// Add the reverse of every edge (undirected semantics, used for CC).
+    pub fn symmetrize(mut self) -> Self {
+        self.symmetrize = true;
+        self
+    }
+
+    /// Remove parallel edges (keeping the first occurrence's weight).
+    pub fn dedup(mut self) -> Self {
+        self.dedup = true;
+        self
+    }
+
+    pub fn drop_self_loops(mut self) -> Self {
+        self.drop_self_loops = true;
+        self
+    }
+
+    /// Record weights (otherwise the CSR is unweighted).
+    pub fn weighted(mut self) -> Self {
+        self.weighted = true;
+        self
+    }
+
+    pub fn add(&mut self, src: VertexId, dst: VertexId) -> &mut Self {
+        self.edges.push(Edge::new(src, dst));
+        self
+    }
+
+    pub fn add_weighted(&mut self, src: VertexId, dst: VertexId, w: f32) -> &mut Self {
+        self.weighted = true;
+        self.edges.push(Edge::weighted(src, dst, w));
+        self
+    }
+
+    pub fn extend(&mut self, edges: impl IntoIterator<Item = Edge>) -> &mut Self {
+        self.edges.extend(edges);
+        self
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn build(mut self) -> Graph {
+        if self.drop_self_loops {
+            self.edges.retain(|e| e.src != e.dst);
+        }
+        if self.symmetrize {
+            let rev: Vec<Edge> = self.edges.iter().map(|e| Edge::weighted(e.dst, e.src, e.weight)).collect();
+            self.edges.extend(rev);
+        }
+        let n = self
+            .edges
+            .iter()
+            .map(|e| e.src.max(e.dst) as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.n);
+        // Counting sort by src.
+        let mut offsets = vec![0u64; n + 1];
+        for e in &self.edges {
+            offsets[e.src as usize] += 1;
+        }
+        let total = exclusive_prefix_sum(&mut offsets[..n]);
+        offsets[n] = total;
+        let mut cursor = offsets[..n].to_vec();
+        let mut targets = vec![0 as VertexId; self.edges.len()];
+        let mut weights = if self.weighted { Some(vec![0f32; self.edges.len()]) } else { None };
+        for e in &self.edges {
+            let slot = cursor[e.src as usize] as usize;
+            targets[slot] = e.dst;
+            if let Some(w) = &mut weights {
+                w[slot] = e.weight;
+            }
+            cursor[e.src as usize] += 1;
+        }
+        // Sort each adjacency list (and optionally dedup).
+        let mut final_offsets = vec![0u64; n + 1];
+        if self.dedup {
+            let mut new_targets = Vec::with_capacity(targets.len());
+            let mut new_weights = weights.as_ref().map(|_| Vec::with_capacity(targets.len()));
+            for v in 0..n {
+                let lo = offsets[v] as usize;
+                let hi = offsets[v + 1] as usize;
+                let mut adj: Vec<(VertexId, f32)> = (lo..hi)
+                    .map(|i| (targets[i], weights.as_ref().map_or(1.0, |w| w[i])))
+                    .collect();
+                adj.sort_by_key(|&(t, _)| t);
+                adj.dedup_by_key(|&mut (t, _)| t);
+                final_offsets[v + 1] = final_offsets[v] + adj.len() as u64;
+                for (t, w) in adj {
+                    new_targets.push(t);
+                    if let Some(nw) = &mut new_weights {
+                        nw.push(w);
+                    }
+                }
+            }
+            return Graph::from_csr(Csr::new(n, final_offsets, new_targets, new_weights));
+        }
+        for v in 0..n {
+            let lo = offsets[v] as usize;
+            let hi = offsets[v + 1] as usize;
+            if let Some(w) = &mut weights {
+                let mut adj: Vec<(VertexId, f32)> = (lo..hi).map(|i| (targets[i], w[i])).collect();
+                adj.sort_by_key(|&(t, _)| t);
+                for (k, (t, wt)) in adj.into_iter().enumerate() {
+                    targets[lo + k] = t;
+                    w[lo + k] = wt;
+                }
+            } else {
+                targets[lo..hi].sort_unstable();
+            }
+        }
+        Graph::from_csr(Csr::new(n, offsets, targets, weights))
+    }
+}
+
+/// Convenience: build an unweighted graph from (src, dst) pairs.
+pub fn graph_from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Graph {
+    let mut b = GraphBuilder::new().with_n(n);
+    for &(s, d) in edges {
+        b.add(s, d);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_build_sorted_adjacency() {
+        let g = graph_from_edges(4, &[(0, 3), (0, 1), (2, 0), (0, 2)]);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.out().neighbors(0), &[1, 2, 3]);
+        assert_eq!(g.out().neighbors(2), &[0]);
+        assert_eq!(g.out().neighbors(3), &[] as &[u32]);
+    }
+
+    #[test]
+    fn with_n_pads_isolated_vertices() {
+        let g = graph_from_edges(10, &[(0, 1)]);
+        assert_eq!(g.n(), 10);
+        assert_eq!(g.out_degree(9), 0);
+    }
+
+    #[test]
+    fn symmetrize_doubles_edges() {
+        let mut b = GraphBuilder::new().symmetrize();
+        b.add(0, 1).add(1, 2);
+        let g = b.build();
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.out().neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn dedup_removes_parallel_edges() {
+        let mut b = GraphBuilder::new().dedup();
+        b.add(0, 1).add(0, 1).add(0, 2);
+        let g = b.build();
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.out().neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn drop_self_loops() {
+        let mut b = GraphBuilder::new().drop_self_loops();
+        b.add(0, 0).add(0, 1).add(1, 1);
+        let g = b.build();
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn weighted_build_keeps_weights_aligned() {
+        let mut b = GraphBuilder::new();
+        b.add_weighted(0, 2, 2.5).add_weighted(0, 1, 1.5).add_weighted(1, 0, 0.5);
+        let g = b.build();
+        assert!(g.is_weighted());
+        assert_eq!(g.out().neighbors(0), &[1, 2]);
+        assert_eq!(g.out().edge_weights(0).unwrap(), &[1.5, 2.5]);
+        assert_eq!(g.out().edge_weights(1).unwrap(), &[0.5]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new().with_n(5).build();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 0);
+    }
+}

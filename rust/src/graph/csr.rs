@@ -1,0 +1,256 @@
+//! Compressed Sparse Row / Column storage (paper §2).
+//!
+//! `Csr` packs out-edges sorted by source with a metadata offsets array;
+//! the same structure indexed by destination serves as CSC. [`Graph`]
+//! couples the two views: GPOP's scatter and the push baselines walk the
+//! CSR; the pull/SpMV baselines and the PNG construction walk the CSC.
+
+use crate::{VertexId, Weight};
+
+/// Adjacency in compressed sparse row form.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    n: usize,
+    offsets: Vec<u64>, // n + 1 entries
+    targets: Vec<VertexId>,
+    weights: Option<Vec<Weight>>,
+}
+
+impl Csr {
+    pub fn new(n: usize, offsets: Vec<u64>, targets: Vec<VertexId>, weights: Option<Vec<Weight>>) -> Self {
+        assert_eq!(offsets.len(), n + 1, "offsets must have n+1 entries");
+        assert_eq!(offsets[0], 0);
+        assert_eq!(*offsets.last().unwrap() as usize, targets.len());
+        if let Some(w) = &weights {
+            assert_eq!(w.len(), targets.len());
+        }
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "offsets must be monotone");
+        debug_assert!(targets.iter().all(|&t| (t as usize) < n), "target out of range");
+        Self { n, offsets, targets, weights }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Neighbors of `v` (out-neighbors for CSR, in-neighbors for CSC).
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.targets[lo..hi]
+    }
+
+    /// Edge weights parallel to [`Self::neighbors`]; `None` if unweighted.
+    #[inline]
+    pub fn edge_weights(&self, v: VertexId) -> Option<&[Weight]> {
+        self.weights.as_ref().map(|w| {
+            let lo = self.offsets[v as usize] as usize;
+            let hi = self.offsets[v as usize + 1] as usize;
+            &w[lo..hi]
+        })
+    }
+
+    #[inline]
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    #[inline]
+    pub fn targets(&self) -> &[VertexId] {
+        &self.targets
+    }
+
+    #[inline]
+    pub fn weights(&self) -> Option<&[Weight]> {
+        self.weights.as_deref()
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// Build the transposed view (CSC from CSR or vice versa).
+    pub fn transpose(&self) -> Csr {
+        let n = self.n;
+        let mut counts = vec![0u64; n + 1];
+        for &t in &self.targets {
+            counts[t as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        let mut acc = 0u64;
+        for v in 0..n {
+            offsets[v] = acc;
+            acc += counts[v];
+        }
+        offsets[n] = acc;
+        let mut cursor = offsets.clone();
+        let mut targets = vec![0 as VertexId; self.m()];
+        let mut weights = self.weights.as_ref().map(|_| vec![0.0 as Weight; self.m()]);
+        for u in 0..n as VertexId {
+            let lo = self.offsets[u as usize] as usize;
+            for (k, &v) in self.neighbors(u).iter().enumerate() {
+                let slot = cursor[v as usize] as usize;
+                targets[slot] = u;
+                if let (Some(wout), Some(win)) = (&mut weights, &self.weights) {
+                    wout[slot] = win[lo + k];
+                }
+                cursor[v as usize] += 1;
+            }
+        }
+        Csr::new(n, offsets, targets, weights)
+    }
+}
+
+/// A graph with its out-edge (CSR) view and a lazily-computed in-edge
+/// (CSC) view.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    csr: Csr,
+    csc: Option<Csr>,
+}
+
+impl Graph {
+    pub fn from_csr(csr: Csr) -> Self {
+        Self { csr, csc: None }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.csr.n()
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.csr.m()
+    }
+
+    #[inline]
+    pub fn out(&self) -> &Csr {
+        &self.csr
+    }
+
+    /// In-edge view; computed on first use.
+    pub fn ensure_csc(&mut self) -> &Csr {
+        if self.csc.is_none() {
+            self.csc = Some(self.csr.transpose());
+        }
+        self.csc.as_ref().unwrap()
+    }
+
+    /// In-edge view if already materialized.
+    pub fn csc(&self) -> Option<&Csr> {
+        self.csc.as_ref()
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        self.csr.degree(v)
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        self.csr.is_weighted()
+    }
+
+    /// Total bytes of the CSR arrays (offsets + targets + weights); used
+    /// by the DRAM-traffic model and reports.
+    pub fn csr_bytes(&self) -> usize {
+        self.csr.offsets.len() * 8
+            + self.csr.targets.len() * 4
+            + self.csr.weights.as_ref().map_or(0, |w| w.len() * 4)
+    }
+
+    /// Degree distribution summary: (max, mean, count of zero-degree).
+    pub fn degree_stats(&self) -> (usize, f64, usize) {
+        let n = self.n().max(1);
+        let mut max = 0usize;
+        let mut zeros = 0usize;
+        for v in 0..self.n() as VertexId {
+            let d = self.out_degree(v);
+            max = max.max(d);
+            if d == 0 {
+                zeros += 1;
+            }
+        }
+        (max, self.m() as f64 / n as f64, zeros)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0 -> 1, 0 -> 2, 1 -> 2, 2 -> 0
+    fn diamond() -> Csr {
+        Csr::new(3, vec![0, 2, 3, 4], vec![1, 2, 2, 0], None)
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = diamond();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(2), &[0]);
+        assert!(!g.is_weighted());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let g = diamond();
+        let t = g.transpose();
+        assert_eq!(t.m(), 4);
+        assert_eq!(t.neighbors(2), &[0, 1]); // in-neighbors of 2
+        assert_eq!(t.neighbors(0), &[2]);
+        let back = t.transpose();
+        assert_eq!(back.offsets(), g.offsets());
+        assert_eq!(back.targets(), g.targets());
+    }
+
+    #[test]
+    fn transpose_preserves_weights() {
+        let g = Csr::new(3, vec![0, 2, 3, 4], vec![1, 2, 2, 0], Some(vec![0.5, 1.5, 2.5, 3.5]));
+        let t = g.transpose();
+        // in-edges of 2 are (0->2, w=1.5) and (1->2, w=2.5)
+        assert_eq!(t.neighbors(2), &[0, 1]);
+        assert_eq!(t.edge_weights(2).unwrap(), &[1.5, 2.5]);
+    }
+
+    #[test]
+    fn graph_csc_lazy() {
+        let mut g = Graph::from_csr(diamond());
+        assert!(g.csc().is_none());
+        let csc = g.ensure_csc();
+        assert_eq!(csc.neighbors(2), &[0, 1]);
+        assert!(g.csc().is_some());
+    }
+
+    #[test]
+    fn degree_stats() {
+        let g = Graph::from_csr(Csr::new(4, vec![0, 2, 3, 4, 4], vec![1, 2, 2, 0], None));
+        let (max, mean, zeros) = g.degree_stats();
+        assert_eq!(max, 2);
+        assert!((mean - 1.0).abs() < 1e-12);
+        assert_eq!(zeros, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_offsets_rejected() {
+        let _ = Csr::new(2, vec![0, 1], vec![0], None); // needs 3 offsets
+    }
+}

@@ -1,0 +1,190 @@
+//! Synthetic graph generators.
+//!
+//! The paper's scaling studies (Figs 5–8) use RMAT graphs "with default
+//! settings (scale-free graphs) and degree 16" — i.e. the Graph500
+//! parameters a=0.57, b=0.19, c=0.19, d=0.05, edge factor 16. We also
+//! provide Erdős–Rényi (uniform) graphs, chains/grids for tests, and a
+//! power-law "web-like" generator for the example workloads.
+
+use super::builder::GraphBuilder;
+use super::csr::Graph;
+use super::Edge;
+use crate::util::rng::Rng;
+use crate::VertexId;
+
+/// Graph500 RMAT parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Edges per vertex (paper: 16).
+    pub edge_factor: usize,
+    pub seed: u64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        Self { a: 0.57, b: 0.19, c: 0.19, edge_factor: 16, seed: 0x9a0e_1234 }
+    }
+}
+
+/// Generate an RMAT graph of `2^scale` vertices. Self-loops are dropped
+/// and adjacency lists are sorted; parallel edges are kept (as Graph500
+/// does) unless `dedup`.
+pub fn rmat(scale: u32, params: RmatParams, dedup: bool) -> Graph {
+    let n = 1usize << scale;
+    let m = n * params.edge_factor;
+    let mut rng = Rng::new(params.seed);
+    let mut b = GraphBuilder::new().with_n(n).drop_self_loops();
+    if dedup {
+        b = b.dedup();
+    }
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        edges.push(rmat_edge(scale, &params, &mut rng));
+    }
+    b.extend(edges);
+    b.build()
+}
+
+fn rmat_edge(scale: u32, p: &RmatParams, rng: &mut Rng) -> Edge {
+    let mut src = 0u64;
+    let mut dst = 0u64;
+    for _ in 0..scale {
+        src <<= 1;
+        dst <<= 1;
+        let r = rng.next_f64();
+        if r < p.a {
+            // top-left: no bits set
+        } else if r < p.a + p.b {
+            dst |= 1;
+        } else if r < p.a + p.b + p.c {
+            src |= 1;
+        } else {
+            src |= 1;
+            dst |= 1;
+        }
+    }
+    Edge::new(src as VertexId, dst as VertexId)
+}
+
+/// Erdős–Rényi G(n, m): m uniform random directed edges.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new().with_n(n).drop_self_loops();
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let s = rng.below(n as u64) as VertexId;
+        let d = rng.below(n as u64) as VertexId;
+        edges.push(Edge::new(s, d));
+    }
+    b.extend(edges);
+    b.build()
+}
+
+/// A directed chain 0 -> 1 -> ... -> n-1 (worst-case diameter; exercises
+/// many tiny frontiers).
+pub fn chain(n: usize) -> Graph {
+    let mut b = GraphBuilder::new().with_n(n);
+    for v in 0..n.saturating_sub(1) {
+        b.add(v as VertexId, v as VertexId + 1);
+    }
+    b.build()
+}
+
+/// A 2-D grid with 4-neighborhood, symmetrized (rows × cols vertices).
+pub fn grid(rows: usize, cols: usize) -> Graph {
+    let mut b = GraphBuilder::new().with_n(rows * cols).symmetrize();
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                b.add(id(r, c), id(r, c + 1));
+            }
+            if r + 1 < rows {
+                b.add(id(r, c), id(r + 1, c));
+            }
+        }
+    }
+    b.build()
+}
+
+/// Assign uniform random weights in `[lo, hi)` to an unweighted graph
+/// (for SSSP workloads), deterministically from `seed`.
+pub fn with_uniform_weights(g: &Graph, lo: f32, hi: f32, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let csr = g.out();
+    let mut b = GraphBuilder::new().with_n(g.n()).weighted();
+    for v in 0..g.n() as VertexId {
+        for &u in csr.neighbors(v) {
+            b.add_weighted(v, u, lo + rng.next_f32() * (hi - lo));
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_shape() {
+        let g = rmat(10, RmatParams::default(), false);
+        assert_eq!(g.n(), 1024);
+        // Self-loops dropped, so m <= n * 16.
+        assert!(g.m() <= 1024 * 16);
+        assert!(g.m() > 1024 * 12, "most RMAT edges should survive");
+    }
+
+    #[test]
+    fn rmat_deterministic() {
+        let a = rmat(8, RmatParams::default(), false);
+        let b = rmat(8, RmatParams::default(), false);
+        assert_eq!(a.out().targets(), b.out().targets());
+        let c = rmat(8, RmatParams { seed: 7, ..Default::default() }, false);
+        assert_ne!(a.out().targets(), c.out().targets());
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        // Scale-free: max degree far above mean.
+        let g = rmat(12, RmatParams::default(), false);
+        let (max, mean, _) = g.degree_stats();
+        assert!(max as f64 > 8.0 * mean, "max {max} vs mean {mean}");
+    }
+
+    #[test]
+    fn er_shape() {
+        let g = erdos_renyi(1000, 5000, 1);
+        assert_eq!(g.n(), 1000);
+        assert!(g.m() <= 5000 && g.m() > 4900); // few self-loops dropped
+    }
+
+    #[test]
+    fn chain_shape() {
+        let g = chain(5);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.out().neighbors(0), &[1]);
+        assert_eq!(g.out().neighbors(4), &[] as &[u32]);
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = grid(3, 3);
+        assert_eq!(g.n(), 9);
+        assert_eq!(g.m(), 24); // 12 undirected edges
+        assert_eq!(g.out_degree(4), 4); // center has 4 neighbors
+    }
+
+    #[test]
+    fn uniform_weights_in_range() {
+        let g = with_uniform_weights(&chain(100), 1.0, 5.0, 3);
+        assert!(g.is_weighted());
+        for v in 0..99u32 {
+            for &w in g.out().edge_weights(v).unwrap() {
+                assert!((1.0..5.0).contains(&w));
+            }
+        }
+    }
+}

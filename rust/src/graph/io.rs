@@ -1,0 +1,213 @@
+//! Graph IO: whitespace edge-list text (optionally weighted) and a
+//! compact binary CSR format for fast reloads.
+
+use super::builder::GraphBuilder;
+use super::csr::{Csr, Graph};
+use crate::VertexId;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"GPOPCSR1";
+
+/// Parse an edge-list text file: one `src dst [weight]` per line;
+/// `#`/`%`-prefixed lines are comments.
+pub fn read_edge_list(path: &Path) -> std::io::Result<Graph> {
+    let f = File::open(path)?;
+    let mut b = GraphBuilder::new();
+    let mut weighted_any = false;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        fn missing(lineno: usize, what: &str) -> std::io::Error {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {}: missing {what}", lineno + 1),
+            )
+        }
+        let src: VertexId = it
+            .next()
+            .ok_or_else(|| missing(lineno, "src"))?
+            .parse()
+            .map_err(bad_data(lineno))?;
+        let dst: VertexId = it
+            .next()
+            .ok_or_else(|| missing(lineno, "dst"))?
+            .parse()
+            .map_err(bad_data(lineno))?;
+        match it.next() {
+            Some(w) => {
+                weighted_any = true;
+                b.add_weighted(src, dst, w.parse().map_err(bad_data(lineno))?);
+            }
+            None => {
+                b.add(src, dst);
+            }
+        }
+    }
+    let _ = weighted_any;
+    Ok(b.build())
+}
+
+fn bad_data<E: std::fmt::Display>(lineno: usize) -> impl Fn(E) -> std::io::Error {
+    move |e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}: {e}", lineno + 1))
+    }
+}
+
+/// Write an edge-list text file (weights included if present).
+pub fn write_edge_list(g: &Graph, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    let csr = g.out();
+    for v in 0..g.n() as VertexId {
+        let ws = csr.edge_weights(v);
+        for (k, &u) in csr.neighbors(v).iter().enumerate() {
+            match ws {
+                Some(ws) => writeln!(w, "{v} {u} {}", ws[k])?,
+                None => writeln!(w, "{v} {u}")?,
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Binary CSR: magic, n, m, has_weights, offsets[u64], targets[u32],
+/// weights[f32] (little-endian).
+pub fn write_binary(g: &Graph, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    let csr = g.out();
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&(g.m() as u64).to_le_bytes())?;
+    w.write_all(&[u8::from(csr.is_weighted())])?;
+    for &o in csr.offsets() {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &t in csr.targets() {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    if let Some(ws) = csr.weights() {
+        for &x in ws {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn read_binary(path: &Path) -> std::io::Result<Graph> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+    let mut offsets = vec![0u64; n + 1];
+    for o in offsets.iter_mut() {
+        *o = read_u64(&mut r)?;
+    }
+    let mut targets = vec![0 as VertexId; m];
+    for t in targets.iter_mut() {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *t = u32::from_le_bytes(b);
+    }
+    let weights = if flag[0] == 1 {
+        let mut ws = vec![0f32; m];
+        for x in ws.iter_mut() {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            *x = f32::from_le_bytes(b);
+        }
+        Some(ws)
+    } else {
+        None
+    };
+    Ok(Graph::from_csr(Csr::new(n, offsets, targets, weights)))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gpop_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = gen::erdos_renyi(100, 400, 11);
+        let p = tmp("el.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        assert_eq!(g2.m(), g.m());
+        assert_eq!(g2.out().targets(), g.out().targets());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn edge_list_weighted_and_comments() {
+        let p = tmp("wel.txt");
+        std::fs::write(&p, "# comment\n0 1 2.5\n% other\n1 2 3.5\n\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.m(), 2);
+        assert!(g.is_weighted());
+        assert_eq!(g.out().edge_weights(0).unwrap(), &[2.5]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn edge_list_bad_line_errors() {
+        let p = tmp("bad.txt");
+        std::fs::write(&p, "0 notanumber\n").unwrap();
+        assert!(read_edge_list(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn binary_roundtrip_unweighted() {
+        let g = gen::rmat(8, Default::default(), false);
+        let p = tmp("g.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g2.n(), g.n());
+        assert_eq!(g2.out().offsets(), g.out().offsets());
+        assert_eq!(g2.out().targets(), g.out().targets());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn binary_roundtrip_weighted() {
+        let g = gen::with_uniform_weights(&gen::chain(50), 1.0, 2.0, 5);
+        let p = tmp("gw.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert!(g2.is_weighted());
+        assert_eq!(g2.out().weights().unwrap(), g.out().weights().unwrap());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn binary_bad_magic() {
+        let p = tmp("badmagic.bin");
+        std::fs::write(&p, b"NOTMAGIC........").unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

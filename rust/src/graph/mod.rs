@@ -1,0 +1,31 @@
+//! Graph storage substrate: CSR/CSC (paper §2 "Graph Storage"),
+//! construction, generators and IO.
+
+pub mod builder;
+pub mod csr;
+pub mod gen;
+pub mod io;
+
+pub use builder::GraphBuilder;
+pub use csr::{Csr, Graph};
+
+use crate::VertexId;
+
+/// A directed edge with optional unit weight semantics; generators and IO
+/// traffic in plain `(src, dst, weight)` triples.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub src: VertexId,
+    pub dst: VertexId,
+    pub weight: f32,
+}
+
+impl Edge {
+    pub fn new(src: VertexId, dst: VertexId) -> Self {
+        Self { src, dst, weight: 1.0 }
+    }
+
+    pub fn weighted(src: VertexId, dst: VertexId, weight: f32) -> Self {
+        Self { src, dst, weight }
+    }
+}

@@ -1,0 +1,53 @@
+//! # GPOP — Graph Processing Over Partitions
+//!
+//! A reproduction of the GPOP framework (Lakhotia et al., PPoPP 2019):
+//! a cache- and work-efficient Partition-Centric Programming Model (PPM)
+//! for shared-memory graph analytics, plus the baselines and measurement
+//! substrate the paper evaluates against.
+//!
+//! The crate is organised bottom-up:
+//!
+//! - [`util`] — PRNG, bitsets, sorting, statistics (no external deps).
+//! - [`exec`] — OpenMP-style thread pool with dynamic scheduling and
+//!   phase barriers.
+//! - [`graph`] — CSR/CSC storage, generators (RMAT, Erdős–Rényi), IO.
+//! - [`partition`] — index-based partitioner and the PNG
+//!   (Partition-Node bipartite Graph) layout used by DC-mode scatter.
+//! - [`ppm`] — the Partition-Centric engine: bin grid, 2-level active
+//!   lists, the Eq.-1 communication cost model, scatter/gather phases.
+//! - [`api`] — the user-facing programming interface
+//!   (`scatterFunc`/`initFunc`/`gatherFunc`/`filterFunc`/`applyWeight`).
+//! - [`apps`] — BFS, PageRank, Connected Components (label propagation),
+//!   SSSP (Bellman-Ford), Nibble, and extensions.
+//! - [`baselines`] — serial references plus Ligra-like (vertex-centric
+//!   push/pull/direction-optimizing), GraphMat-like (SpMV) and
+//!   X-Stream-like (edge-centric) engines.
+//! - [`cachesim`] — a set-associative L2 cache simulator driven by each
+//!   engine's memory access trace, reproducing the paper's Tables 4–6.
+//! - [`metrics`] — timers, DRAM-traffic estimation, iteration logs.
+//! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`).
+//! - [`bench`] — a micro-benchmark harness (criterion is unavailable in
+//!   this offline environment).
+//! - [`coordinator`] — the CLI launcher and config system.
+
+pub mod api;
+pub mod apps;
+pub mod baselines;
+pub mod bench;
+pub mod cachesim;
+pub mod coordinator;
+pub mod exec;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod ppm;
+pub mod runtime;
+pub mod util;
+
+/// Vertex identifier. The paper uses 4-byte indices (`d_i = 4`).
+pub type VertexId = u32;
+/// Partition identifier.
+pub type PartId = u32;
+/// Edge weight type for weighted algorithms (SSSP).
+pub type Weight = f32;

@@ -1,0 +1,15 @@
+//! `gpop` — the Layer-3 coordinator binary.
+//!
+//! Self-contained after `make artifacts`: python never runs on the
+//! request path. See `gpop help` for commands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match gpop::coordinator::dispatch(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! STREAM-style memory bandwidth probe (paper Table 2 measures Copy/Add
+//! bandwidth with STREAM [22]; we reproduce the measurement to calibrate
+//! the Eq.-1 `BW_DC / BW_SC` ratio and the §Perf roofline).
+
+use crate::exec::ThreadPool;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BandwidthReport {
+    /// a[i] = b[i] over the working set, GB/s.
+    pub copy_gbps: f64,
+    /// a[i] = b[i] + c[i], GB/s.
+    pub add_gbps: f64,
+    /// Random 8-byte reads over the working set, GB/s *effective*
+    /// (useful bytes; the SC-mode analogue).
+    pub random_gbps: f64,
+}
+
+/// Measure with `threads` workers over a `working_mb` MiB working set.
+pub fn measure_bandwidth(threads: usize, working_mb: usize) -> BandwidthReport {
+    let n = working_mb * (1 << 20) / 8;
+    let mut pool = ThreadPool::new(threads);
+    let b: Vec<u64> = (0..n as u64).collect();
+    let c: Vec<u64> = (0..n as u64).map(|x| x * 3).collect();
+    let mut a = vec![0u64; n];
+
+    // Copy: 2 * 8 bytes moved per element.
+    let t0 = Instant::now();
+    {
+        let (a_ptr, b_ref) = (SharedPtr(a.as_mut_ptr()), &b);
+        pool.for_each_static(n, |range, _tid| {
+            let a = a_ptr;
+            for i in range {
+                // SAFETY: static ranges are disjoint per thread.
+                unsafe { *a.0.add(i) = b_ref[i] };
+            }
+        });
+    }
+    let copy_t = t0.elapsed().as_secs_f64();
+
+    // Add: 3 * 8 bytes per element.
+    let t1 = Instant::now();
+    {
+        let (a_ptr, b_ref, c_ref) = (SharedPtr(a.as_mut_ptr()), &b, &c);
+        pool.for_each_static(n, |range, _tid| {
+            let a = a_ptr;
+            for i in range {
+                unsafe { *a.0.add(i) = b_ref[i] + c_ref[i] };
+            }
+        });
+    }
+    let add_t = t1.elapsed().as_secs_f64();
+
+    // Random reads: pointer-chase-free random indexing.
+    let t2 = Instant::now();
+    let accesses = n / 4;
+    {
+        let b_ref = &b;
+        let sink = std::sync::atomic::AtomicU64::new(0);
+        let sink_ref = &sink;
+        pool.for_each_static(accesses, |range, tid| {
+            let mut rng = crate::util::rng::Rng::stream(0xbeef, tid as u64);
+            let mut acc = 0u64;
+            for _ in range {
+                acc ^= b_ref[rng.below(n as u64) as usize];
+            }
+            sink_ref.fetch_xor(acc, std::sync::atomic::Ordering::Relaxed);
+        });
+        std::hint::black_box(sink.into_inner());
+    }
+    let rand_t = t2.elapsed().as_secs_f64();
+
+    std::hint::black_box(&a);
+    BandwidthReport {
+        copy_gbps: (2 * 8 * n) as f64 / copy_t / 1e9,
+        add_gbps: (3 * 8 * n) as f64 / add_t / 1e9,
+        random_gbps: (8 * accesses) as f64 / rand_t / 1e9,
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SharedPtr(*mut u64);
+unsafe impl Send for SharedPtr {}
+unsafe impl Sync for SharedPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_sane() {
+        let r = measure_bandwidth(2, 64);
+        assert!(r.copy_gbps > 0.1, "copy {}", r.copy_gbps);
+        assert!(r.add_gbps > 0.1);
+        assert!(r.random_gbps > 0.001);
+        // Sequential streaming must beat random effective bandwidth —
+        // the premise of the paper's DC mode.
+        assert!(
+            r.copy_gbps > r.random_gbps,
+            "copy {} vs random {}",
+            r.copy_gbps,
+            r.random_gbps
+        );
+    }
+}

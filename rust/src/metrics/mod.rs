@@ -1,0 +1,8 @@
+//! Measurement utilities: DRAM-traffic models (Fig. 1) and memory
+//! bandwidth probing (the paper's STREAM numbers, Table 2).
+
+pub mod dram;
+pub mod membench;
+
+pub use dram::pagerank_traffic;
+pub use membench::{measure_bandwidth, BandwidthReport};

@@ -1,0 +1,175 @@
+//! Index-based graph partitioning (paper §3.1).
+//!
+//! Vertices are split into `k` equal index ranges: partition `p` holds
+//! vertices `[p*q, (p+1)*q)`. The partition count is chosen so that
+//! (a) the vertex data of one partition fits in the largest private cache
+//! (256 KB L2 on the paper's Xeons), and (b) `k >= 4t` so dynamic
+//! scheduling can load-balance (paper: "having more partitions than the
+//! number of threads assists in dynamic load balancing").
+
+use crate::{PartId, VertexId};
+
+/// Default per-partition cache budget: the paper sets partition size to
+/// 256 KB, matching the Xeon L2.
+pub const DEFAULT_CACHE_BYTES: usize = 256 * 1024;
+
+/// Bytes of vertex state per vertex assumed by the partition sizing
+/// heuristic (`d_v = 4` in the paper's algorithms).
+pub const DEFAULT_BYTES_PER_VERTEX: usize = 4;
+
+/// An index-range partitioning of `n` vertices into `k` parts of size `q`
+/// (the last part may be smaller).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partitioner {
+    n: usize,
+    k: usize,
+    q: usize,
+}
+
+impl Partitioner {
+    /// Partition `n` vertices into exactly `k` parts.
+    pub fn with_k(n: usize, k: usize) -> Self {
+        assert!(k >= 1);
+        let q = if n == 0 { 1 } else { (n + k - 1) / k };
+        // Recompute k: trailing empty partitions are dropped.
+        let k = if n == 0 { 1 } else { (n + q - 1) / q };
+        Self { n, k, q }
+    }
+
+    /// Paper §3.1 heuristic: `q` vertices fit the cache budget and
+    /// `k >= 4t`.
+    pub fn auto(n: usize, threads: usize, cache_bytes: usize, bytes_per_vertex: usize) -> Self {
+        assert!(threads >= 1 && cache_bytes > 0 && bytes_per_vertex > 0);
+        let q_cache = (cache_bytes / bytes_per_vertex).max(1);
+        let k_cache = (n + q_cache - 1) / q_cache;
+        let k = k_cache.max(4 * threads).max(1);
+        Self::with_k(n, k)
+    }
+
+    /// Paper defaults (256 KB / 4 B per vertex).
+    pub fn auto_default(n: usize, threads: usize) -> Self {
+        Self::auto(n, threads, DEFAULT_CACHE_BYTES, DEFAULT_BYTES_PER_VERTEX)
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of partitions `k`.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Target partition size `q = ceil(n/k)`.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Partition owning vertex `v`.
+    #[inline]
+    pub fn part_of(&self, v: VertexId) -> PartId {
+        debug_assert!((v as usize) < self.n);
+        (v as usize / self.q) as PartId
+    }
+
+    /// Vertex range `[start, end)` of partition `p`.
+    #[inline]
+    pub fn range(&self, p: PartId) -> std::ops::Range<VertexId> {
+        let lo = (p as usize * self.q).min(self.n);
+        let hi = ((p as usize + 1) * self.q).min(self.n);
+        (lo as VertexId)..(hi as VertexId)
+    }
+
+    /// Size of partition `p`.
+    #[inline]
+    pub fn size(&self, p: PartId) -> usize {
+        let r = self.range(p);
+        (r.end - r.start) as usize
+    }
+
+    /// Index of `v` within its partition (for partition-local bitsets).
+    #[inline]
+    pub fn local_index(&self, v: VertexId) -> usize {
+        v as usize % self.q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_k_exact_division() {
+        let p = Partitioner::with_k(100, 4);
+        assert_eq!(p.k(), 4);
+        assert_eq!(p.q(), 25);
+        assert_eq!(p.range(0), 0..25);
+        assert_eq!(p.range(3), 75..100);
+    }
+
+    #[test]
+    fn with_k_ragged_tail() {
+        let p = Partitioner::with_k(10, 3);
+        assert_eq!(p.q(), 4);
+        assert_eq!(p.k(), 3);
+        assert_eq!(p.range(2), 8..10);
+        assert_eq!(p.size(2), 2);
+    }
+
+    #[test]
+    fn with_k_more_parts_than_vertices() {
+        let p = Partitioner::with_k(3, 10);
+        // q = 1, so only 3 non-empty partitions survive.
+        assert_eq!(p.q(), 1);
+        assert_eq!(p.k(), 3);
+    }
+
+    #[test]
+    fn disjoint_and_covering() {
+        let p = Partitioner::with_k(1000, 7);
+        let mut seen = vec![false; 1000];
+        for part in 0..p.k() as PartId {
+            for v in p.range(part) {
+                assert!(!seen[v as usize], "vertex {v} in two partitions");
+                seen[v as usize] = true;
+                assert_eq!(p.part_of(v), part);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn auto_respects_cache_budget() {
+        // 1M vertices, 4B each, 256KB cache -> q <= 65536.
+        let p = Partitioner::auto(1 << 20, 1, 256 * 1024, 4);
+        assert!(p.q() <= 65536);
+        assert!(p.k() >= 16);
+    }
+
+    #[test]
+    fn auto_respects_4t_rule() {
+        // Small graph, many threads: k must still be >= 4t (bounded by n).
+        let p = Partitioner::auto(10_000, 8, 256 * 1024, 4);
+        assert!(p.k() >= 32, "k={} should be >= 4*8", p.k());
+    }
+
+    #[test]
+    fn local_index_within_q() {
+        let p = Partitioner::with_k(100, 4);
+        for v in 0..100u32 {
+            assert!(p.local_index(v) < p.q());
+            let base = p.range(p.part_of(v)).start;
+            assert_eq!(p.local_index(v), (v - base) as usize);
+        }
+    }
+
+    #[test]
+    fn empty_graph() {
+        let p = Partitioner::with_k(0, 4);
+        assert_eq!(p.k(), 1);
+        assert_eq!(p.range(0), 0..0);
+    }
+}

@@ -1,0 +1,290 @@
+//! 2-level active list structures and the double-buffered frontier
+//! (paper §3.2 "2-level Active List").
+//!
+//! - `sPartList` — partitions with ≥1 active vertex (drives Scatter).
+//! - `gPartList` — partitions that received ≥1 message (drives Gather).
+//! - `binPartList[j]` — source partitions that wrote into column `j`,
+//!   so Gather probes only non-empty bins instead of doing `Θ(k²)` work.
+//!
+//! Per-partition frontiers are explicit vertex lists guarded by a
+//! partition-local dedup bitset (cache-sized, per the partitioning
+//! invariant), keeping per-iteration work `O(|V_a| + |E_a|)`.
+
+use super::shared::{ConcurrentList, SharedCells};
+use crate::partition::Partitioner;
+use crate::util::bitset::{AtomicBitset, Bitset};
+use crate::{PartId, VertexId};
+
+/// Frontier state of one partition. Owned by exactly one thread per
+/// phase (scatter: the partition's scatter task; gather/finalize: the
+/// partition's gather task).
+pub struct PartFrontier {
+    /// Active vertices for the *current* iteration.
+    pub cur: Vec<VertexId>,
+    /// Sum of out-degrees of `cur` (`E_a^p`, for the cost model).
+    pub cur_edges: u64,
+    /// Vertices pushed for the *next* iteration (pre-filter).
+    pub pushed: Vec<VertexId>,
+    /// Partition-local dedup guard over `pushed` (size `q`).
+    pub dedup: Bitset,
+    /// DC-mode scratch: per-local-vertex scattered value bits, computed
+    /// once per partition scatter instead of once per neighbor bin
+    /// (EXPERIMENTS.md §Perf #2). Owner-exclusive like everything else.
+    pub scratch: Vec<u32>,
+}
+
+impl PartFrontier {
+    fn new(q: usize) -> Self {
+        Self {
+            cur: Vec::new(),
+            cur_edges: 0,
+            pushed: Vec::new(),
+            dedup: Bitset::new(q),
+            scratch: vec![0; q],
+        }
+    }
+
+    /// Push `v` for the next iteration if not already pushed.
+    #[inline]
+    pub fn push_next(&mut self, v: VertexId, local: usize) {
+        if self.dedup.set_checked(local) {
+            self.pushed.push(v);
+        }
+    }
+}
+
+/// All frontier + active-list state of the engine.
+pub struct ActiveState {
+    parts: SharedCells<PartFrontier>,
+    /// Partitions whose `pushed` list may be non-empty (set during
+    /// scatter-init and gather; drained by finalize).
+    touched: AtomicBitset,
+    /// Partitions that received ≥1 message (top-level gather list).
+    gbits: AtomicBitset,
+    /// binPartList: per destination partition, the source partitions
+    /// that wrote into its column this iteration.
+    col_srcs: Vec<ConcurrentList>,
+    /// sPartList for the current iteration.
+    spart: Vec<PartId>,
+    total_active: usize,
+    total_active_edges: u64,
+}
+
+impl ActiveState {
+    pub fn new(parts: &Partitioner) -> Self {
+        let k = parts.k();
+        let q = parts.q();
+        Self {
+            parts: SharedCells::new_with(k, |_| PartFrontier::new(q)),
+            touched: AtomicBitset::new(k),
+            gbits: AtomicBitset::new(k),
+            col_srcs: (0..k).map(|_| ConcurrentList::with_capacity(k)).collect(),
+            spart: Vec::new(),
+            total_active: 0,
+            total_active_edges: 0,
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Partitions to scatter this iteration.
+    #[inline]
+    pub fn spart(&self) -> &[PartId] {
+        &self.spart
+    }
+
+    #[inline]
+    pub fn total_active(&self) -> usize {
+        self.total_active
+    }
+
+    #[inline]
+    pub fn total_active_edges(&self) -> u64 {
+        self.total_active_edges
+    }
+
+    /// Exclusive access to a partition's frontier.
+    ///
+    /// # Safety
+    /// Caller must hold phase ownership of partition `p`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn part_mut(&self, p: PartId) -> &mut PartFrontier {
+        self.parts.get_mut(p as usize)
+    }
+
+    /// Shared read (no concurrent mutation of `p`).
+    ///
+    /// # Safety
+    /// See [`Self::part_mut`].
+    #[inline]
+    pub unsafe fn part(&self, p: PartId) -> &PartFrontier {
+        self.parts.get(p as usize)
+    }
+
+    pub fn part_ref(&mut self, p: PartId) -> &mut PartFrontier {
+        self.parts.get_mut_safe(p as usize)
+    }
+
+    /// Mark partition `p` as having next-iteration candidates.
+    #[inline]
+    pub fn mark_touched(&self, p: PartId) {
+        self.touched.set_checked(p as usize);
+    }
+
+    /// Register that source partition `i` wrote ≥1 message to column `j`
+    /// (called once per non-empty bin per iteration, guarded by
+    /// `Bin::registered`).
+    #[inline]
+    pub fn register_bin(&self, i: PartId, j: PartId) {
+        self.gbits.set_checked(j as usize);
+        self.col_srcs[j as usize].push(i);
+    }
+
+    /// Source partitions that wrote into column `j` this iteration.
+    ///
+    /// # Safety
+    /// Must only be called between phases (no concurrent `register_bin`).
+    #[inline]
+    pub unsafe fn col_srcs(&self, j: PartId) -> &[u32] {
+        self.col_srcs[j as usize].entries_unsynced()
+    }
+
+    /// Leader step between Scatter and Gather: snapshot gPartList.
+    pub fn collect_gpart(&self) -> Vec<PartId> {
+        self.gbits.snapshot().iter_ones().map(|p| p as PartId).collect()
+    }
+
+    /// Leader step after Gather: snapshot partitions needing finalize.
+    pub fn collect_touched(&self) -> Vec<PartId> {
+        self.touched.snapshot().iter_ones().map(|p| p as PartId).collect()
+    }
+
+    /// Leader step at iteration start: reset per-iteration lists.
+    pub fn begin_iteration(&mut self) {
+        self.gbits.clear_all();
+        self.touched.clear_all();
+        for c in &self.col_srcs {
+            c.reset();
+        }
+    }
+
+    /// Leader step after finalize: rebuild sPartList and the totals from
+    /// the per-partition results. `O(k)`.
+    pub fn publish(&mut self) {
+        self.spart.clear();
+        self.total_active = 0;
+        self.total_active_edges = 0;
+        for p in 0..self.parts.len() {
+            let pf = self.parts.get_mut_safe(p);
+            if !pf.cur.is_empty() {
+                self.spart.push(p as PartId);
+                self.total_active += pf.cur.len();
+                self.total_active_edges += pf.cur_edges;
+            }
+        }
+    }
+
+    /// Load an explicit frontier (engine start / `loadFrontier` API).
+    pub fn load(&mut self, parts: &Partitioner, verts: &[VertexId], degree_of: impl Fn(VertexId) -> u64) {
+        for p in 0..self.parts.len() {
+            let pf = self.parts.get_mut_safe(p);
+            pf.cur.clear();
+            pf.cur_edges = 0;
+            pf.pushed.clear();
+            pf.dedup.clear_all();
+        }
+        for &v in verts {
+            let p = parts.part_of(v);
+            let pf = self.parts.get_mut_safe(p as usize);
+            // Dedup duplicate loads.
+            if pf.dedup.set_checked(parts.local_index(v)) {
+                pf.cur.push(v);
+                pf.cur_edges += degree_of(v);
+            }
+        }
+        for p in 0..self.parts.len() {
+            let pf = self.parts.get_mut_safe(p);
+            for i in 0..pf.cur.len() {
+                let v = pf.cur[i];
+                pf.dedup.clear(parts.local_index(v));
+            }
+        }
+        self.publish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parts4() -> Partitioner {
+        Partitioner::with_k(40, 4)
+    }
+
+    #[test]
+    fn load_and_publish() {
+        let parts = parts4();
+        let mut st = ActiveState::new(&parts);
+        st.load(&parts, &[0, 5, 12, 39, 5], |v| v as u64); // note dup 5
+        assert_eq!(st.total_active(), 4);
+        assert_eq!(st.spart(), &[0, 1, 3]);
+        assert_eq!(st.total_active_edges(), 0 + 5 + 12 + 39);
+        assert_eq!(st.part_ref(0).cur, vec![0, 5]);
+    }
+
+    #[test]
+    fn push_next_dedups() {
+        let parts = parts4();
+        let mut st = ActiveState::new(&parts);
+        let pf = st.part_ref(1);
+        pf.push_next(12, 2);
+        pf.push_next(12, 2);
+        pf.push_next(13, 3);
+        assert_eq!(pf.pushed, vec![12, 13]);
+    }
+
+    #[test]
+    fn register_bin_collects_columns() {
+        let parts = parts4();
+        let mut st = ActiveState::new(&parts);
+        st.begin_iteration();
+        st.register_bin(0, 2);
+        st.register_bin(1, 2);
+        st.register_bin(3, 0);
+        let mut g = st.collect_gpart();
+        g.sort_unstable();
+        assert_eq!(g, vec![0, 2]);
+        let mut srcs = unsafe { st.col_srcs(2) }.to_vec();
+        srcs.sort_unstable();
+        assert_eq!(srcs, vec![0, 1]);
+        assert_eq!(unsafe { st.col_srcs(0) }, &[3]);
+        assert_eq!(unsafe { st.col_srcs(1) }, &[] as &[u32]);
+    }
+
+    #[test]
+    fn begin_iteration_resets() {
+        let parts = parts4();
+        let mut st = ActiveState::new(&parts);
+        st.register_bin(0, 1);
+        st.mark_touched(2);
+        st.begin_iteration();
+        assert!(st.collect_gpart().is_empty());
+        assert!(st.collect_touched().is_empty());
+        assert!(unsafe { st.col_srcs(1) }.is_empty());
+    }
+
+    #[test]
+    fn touched_collects() {
+        let parts = parts4();
+        let mut st = ActiveState::new(&parts);
+        st.begin_iteration();
+        st.mark_touched(3);
+        st.mark_touched(1);
+        st.mark_touched(3);
+        assert_eq!(st.collect_touched(), vec![1, 3]);
+    }
+}

@@ -1,0 +1,405 @@
+//! The 2-D grid of message bins (paper §3.2) and the PNG
+//! (Partition-Node bipartite Graph) layout for DC-mode scatter (§3.3).
+//!
+//! `bin[i][j]` stores all messages from partition `i` to partition `j`:
+//!
+//! - `data` — message values (bit-cast to `u32`; the paper's `d_v = 4`).
+//! - `ids` — SC-mode destination ids. Messages are delimited by setting
+//!   the MSB on the *first* destination id of each message, so a message
+//!   costs `d_v + |dsts| * d_i` bytes, exactly the paper's accounting.
+//! - `dc_ids` — the same destination stream *pre-written* during
+//!   pre-processing, so DC-mode scatter writes only values (§3.3:
+//!   "messages from a partition in DC mode contain only vertex data and
+//!   neighbor identifiers are pre-written in dc_bin").
+//! - `dc_srcs` (+ `dc_cnts`, `dc_wts` for weighted graphs) — the PNG
+//!   segment: source vertices of `i` with ≥1 edge into `j`, in vertex
+//!   order, which is the DC traversal order.
+//!
+//! For *weighted* graphs every edge carries its own value
+//! (`applyWeight(val, w)`), so messages degenerate to one value per edge
+//! and `data` aligns 1:1 with the id stream in both modes.
+
+use super::shared::SharedCells;
+use crate::graph::Graph;
+use crate::partition::Partitioner;
+use crate::{PartId, VertexId};
+
+/// MSB flag marking the first destination id of a message.
+pub const MSG_START: u32 = 1 << 31;
+/// Mask recovering the vertex id.
+pub const ID_MASK: u32 = !MSG_START;
+
+/// Communication mode a bin row was scattered with (paper §3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Source-centric: work ∝ active edges, coarse-grained random writes.
+    Sc,
+    /// Destination-centric: all partition edges, fully sequential writes.
+    Dc,
+}
+
+/// One bin of the grid. All fields except `data`/`ids`/`mode` are
+/// immutable after pre-processing.
+pub struct Bin {
+    /// Message values written this iteration (bit-cast user values).
+    pub data: Vec<u32>,
+    /// SC-mode destination id stream (MSB-delimited).
+    pub ids: Vec<u32>,
+    /// Mode `data` was written with in the current iteration.
+    pub mode: Mode,
+    /// Set once this bin has been registered in the active lists for the
+    /// current iteration; reset when the owner clears its row.
+    pub registered: bool,
+
+    // ---- pre-processed, read-only during iterations ----
+    /// Pre-written DC-mode destination id stream (MSB-delimited for
+    /// unweighted graphs, flat per-edge for weighted).
+    pub dc_ids: Vec<u32>,
+    /// PNG segment: sources in `i` with ≥1 edge into `j` (vertex order).
+    pub dc_srcs: Vec<VertexId>,
+    /// Per-source edge counts into `j` (weighted graphs only).
+    pub dc_cnts: Vec<u32>,
+    /// Per-edge weights in DC order (weighted graphs only).
+    pub dc_wts: Vec<f32>,
+    /// Total edges i -> j.
+    pub n_edges: u32,
+    /// Total messages i -> j when fully active (= |dc_srcs| unweighted,
+    /// = n_edges weighted).
+    pub n_msgs: u32,
+}
+
+impl Bin {
+    fn empty() -> Self {
+        Self {
+            data: Vec::new(),
+            ids: Vec::new(),
+            mode: Mode::Sc,
+            registered: false,
+            dc_ids: Vec::new(),
+            dc_srcs: Vec::new(),
+            dc_cnts: Vec::new(),
+            dc_wts: Vec::new(),
+            n_edges: 0,
+            n_msgs: 0,
+        }
+    }
+
+    /// Reset the per-iteration state (owner-only).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.ids.clear();
+        self.registered = false;
+    }
+
+    /// Iterate `(value_bits, dst)` message pairs for the mode this bin
+    /// was last scattered with. `weighted` selects the flat layout.
+    pub fn messages<'a>(&'a self, weighted: bool) -> MessageIter<'a> {
+        let ids: &[u32] = match self.mode {
+            Mode::Sc => &self.ids,
+            Mode::Dc => &self.dc_ids,
+        };
+        MessageIter { data: &self.data, ids, weighted, cursor: 0, data_cursor: usize::MAX }
+    }
+}
+
+/// Iterator over `(value_bits, dst)` pairs of one bin.
+pub struct MessageIter<'a> {
+    data: &'a [u32],
+    ids: &'a [u32],
+    weighted: bool,
+    cursor: usize,
+    data_cursor: usize, // usize::MAX until first MSG_START seen
+}
+
+impl<'a> Iterator for MessageIter<'a> {
+    type Item = (u32, VertexId);
+
+    #[inline]
+    fn next(&mut self) -> Option<(u32, VertexId)> {
+        if self.cursor >= self.ids.len() {
+            return None;
+        }
+        let raw = self.ids[self.cursor];
+        let val = if self.weighted {
+            // Flat layout: one value per id.
+            self.data[self.cursor]
+        } else {
+            if raw & MSG_START != 0 {
+                self.data_cursor = self.data_cursor.wrapping_add(1);
+            }
+            self.data[self.data_cursor]
+        };
+        self.cursor += 1;
+        Some((val, raw & ID_MASK))
+    }
+}
+
+/// Static (pre-processed) per-partition totals used by the §3.3 cost
+/// model and the engine.
+#[derive(Clone, Debug, Default)]
+pub struct PartMeta {
+    /// Total out-edges of the partition (`E^p`).
+    pub edges: u64,
+    /// Total messages when fully active (`r * E^p`).
+    pub msgs: u64,
+    /// Destination partitions with ≥1 edge from this partition.
+    pub neighbor_parts: Vec<PartId>,
+}
+
+/// The k×k bin grid plus per-partition metadata.
+///
+/// Interior mutability discipline: during scatter, the thread owning
+/// partition `i` exclusively accesses row `i` (`bin(i, *)`); during
+/// gather, the thread owning partition `j` exclusively accesses column
+/// `j` (`bin(*, j)`). Phases are barrier-separated.
+pub struct BinGrid {
+    k: usize,
+    bins: SharedCells<Bin>,
+    meta: Vec<PartMeta>,
+    weighted: bool,
+}
+
+impl BinGrid {
+    /// Pre-processing (paper §4): one scan of the CSR computes bin
+    /// sizes, the PNG layout and `dc_bin` contents. `O(E)` work, done
+    /// once; amortized across iterations/runs.
+    pub fn build(graph: &Graph, parts: &Partitioner) -> Self {
+        let k = parts.k();
+        let weighted = graph.is_weighted();
+        let csr = graph.out();
+        let mut bins: Vec<Bin> = Vec::with_capacity(k * k);
+        bins.resize_with(k * k, Bin::empty);
+        let mut meta = vec![PartMeta::default(); k];
+
+        for p in 0..k {
+            let m = &mut meta[p];
+            for v in parts.range(p as PartId) {
+                let adj = csr.neighbors(v);
+                let wts = csr.edge_weights(v);
+                let mut e = 0usize;
+                while e < adj.len() {
+                    // Adjacency is sorted, so destinations in the same
+                    // partition form a contiguous run.
+                    let pj = parts.part_of(adj[e]) as usize;
+                    let mut run_end = e + 1;
+                    while run_end < adj.len() && parts.part_of(adj[run_end]) as usize == pj {
+                        run_end += 1;
+                    }
+                    let bin = &mut bins[p * k + pj];
+                    if bin.n_edges == 0 {
+                        m.neighbor_parts.push(pj as PartId);
+                    }
+                    let run = (run_end - e) as u32;
+                    bin.n_edges += run;
+                    if weighted {
+                        bin.n_msgs += run;
+                        bin.dc_srcs.push(v);
+                        bin.dc_cnts.push(run);
+                        for t in e..run_end {
+                            bin.dc_ids.push(adj[t]);
+                            bin.dc_wts.push(wts.unwrap()[t]);
+                        }
+                    } else {
+                        bin.n_msgs += 1;
+                        bin.dc_srcs.push(v);
+                        bin.dc_ids.push(adj[e] | MSG_START);
+                        for t in e + 1..run_end {
+                            bin.dc_ids.push(adj[t]);
+                        }
+                    }
+                    e = run_end;
+                }
+                m.edges += adj.len() as u64;
+            }
+            m.msgs = (0..k).map(|j| bins[p * k + j].n_msgs as u64).sum();
+            // Reserve SC capacity so scatter never reallocates.
+            for j in 0..k {
+                let bin = &mut bins[p * k + j];
+                let data_cap = if weighted { bin.n_edges } else { bin.n_msgs } as usize;
+                bin.data.reserve_exact(data_cap);
+                bin.ids.reserve_exact(bin.n_edges as usize);
+            }
+        }
+        Self { k, bins: SharedCells::from_vec(bins), meta, weighted }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn weighted(&self) -> bool {
+        self.weighted
+    }
+
+    #[inline]
+    pub fn meta(&self, p: PartId) -> &PartMeta {
+        &self.meta[p as usize]
+    }
+
+    /// Exclusive access to `bin(i, j)`.
+    ///
+    /// # Safety
+    /// Caller must hold phase ownership of row `i` (scatter) or column
+    /// `j` (gather) — see type docs.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn bin_mut(&self, i: PartId, j: PartId) -> &mut Bin {
+        self.bins.get_mut(i as usize * self.k + j as usize)
+    }
+
+    /// Shared read of `bin(i, j)`.
+    ///
+    /// # Safety
+    /// No concurrent mutable access to the same bin.
+    #[inline]
+    pub unsafe fn bin(&self, i: PartId, j: PartId) -> &Bin {
+        self.bins.get(i as usize * self.k + j as usize)
+    }
+
+    /// Safe access for tests / single-threaded inspection.
+    pub fn bin_ref(&mut self, i: PartId, j: PartId) -> &Bin {
+        self.bins.get_mut_safe(i as usize * self.k + j as usize)
+    }
+
+    /// Total bytes held in pre-processed DC structures (reporting).
+    pub fn dc_bytes(&mut self) -> usize {
+        let k = self.k;
+        let mut total = 0;
+        for i in 0..k * k {
+            let b = self.bins.get_mut_safe(i);
+            total += b.dc_ids.len() * 4
+                + b.dc_srcs.len() * 4
+                + b.dc_cnts.len() * 4
+                + b.dc_wts.len() * 4;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::graph_from_edges;
+    use crate::graph::gen;
+
+    /// 6 vertices, k=3 (q=2). Edges span partitions.
+    fn small() -> (Graph, Partitioner) {
+        let g = graph_from_edges(
+            6,
+            &[(0, 1), (0, 2), (0, 5), (1, 2), (1, 3), (4, 0), (5, 4), (5, 5)],
+        );
+        let parts = Partitioner::with_k(6, 3);
+        (g, parts)
+    }
+
+    #[test]
+    fn bin_sizes_match_edge_counts() {
+        let (g, parts) = small();
+        let mut grid = BinGrid::build(&g, &parts);
+        // Edges 0->1 stay in partition 0; 0->2, 1->2, 1->3 go 0->1; 0->5 goes 0->2.
+        assert_eq!(grid.bin_ref(0, 0).n_edges, 1);
+        assert_eq!(grid.bin_ref(0, 1).n_edges, 3);
+        assert_eq!(grid.bin_ref(0, 2).n_edges, 1);
+        assert_eq!(grid.bin_ref(2, 0).n_edges, 1); // 4->0
+        assert_eq!(grid.bin_ref(2, 2).n_edges, 2); // 5->4, 5->5
+        // Messages: one per (source, dst-partition) pair.
+        assert_eq!(grid.bin_ref(0, 1).n_msgs, 2); // from 0 and from 1
+        assert_eq!(grid.bin_ref(2, 2).n_msgs, 1); // from 5
+    }
+
+    #[test]
+    fn meta_totals() {
+        let (g, parts) = small();
+        let grid = BinGrid::build(&g, &parts);
+        assert_eq!(grid.meta(0).edges, 5); // v0 has 3, v1 has 2
+        assert_eq!(grid.meta(1).edges, 0);
+        assert_eq!(grid.meta(2).edges, 3);
+        let total_msgs: u64 = (0..3).map(|p| grid.meta(p).msgs).sum();
+        // (0: {p0:1 via 0->1? no — 0->1 is dst partition 0}): recompute:
+        // src part 0: v0 -> {1(p0), 2(p1), 5(p2)} = 3 msgs; v1 -> {2,3}(p1) = 1 msg.
+        // src part 2: v4 -> {0}(p0) = 1 msg; v5 -> {4,5}(p2) = 1 msg.
+        assert_eq!(total_msgs, 6);
+        assert_eq!(grid.meta(0).neighbor_parts, vec![0, 1, 2]);
+        assert_eq!(grid.meta(2).neighbor_parts, vec![0, 2]);
+    }
+
+    #[test]
+    fn dc_ids_are_msb_delimited_and_complete() {
+        let (g, parts) = small();
+        let mut grid = BinGrid::build(&g, &parts);
+        let bin = grid.bin_ref(0, 1);
+        // Sources 0 and 1 both send to partition 1: ids {2} and {2, 3}.
+        assert_eq!(bin.dc_srcs, vec![0, 1]);
+        assert_eq!(bin.dc_ids, vec![2 | MSG_START, 2 | MSG_START, 3]);
+        let starts = bin.dc_ids.iter().filter(|&&x| x & MSG_START != 0).count();
+        assert_eq!(starts as u32, bin.n_msgs);
+    }
+
+    #[test]
+    fn message_iter_sc_unweighted() {
+        let mut bin = Bin::empty();
+        bin.mode = Mode::Sc;
+        bin.data = vec![100, 200];
+        bin.ids = vec![5 | MSG_START, 6, 7 | MSG_START];
+        let msgs: Vec<(u32, u32)> = bin.messages(false).collect();
+        assert_eq!(msgs, vec![(100, 5), (100, 6), (200, 7)]);
+    }
+
+    #[test]
+    fn message_iter_weighted_flat() {
+        let mut bin = Bin::empty();
+        bin.mode = Mode::Sc;
+        bin.data = vec![10, 20, 30];
+        bin.ids = vec![1, 2, 3];
+        let msgs: Vec<(u32, u32)> = bin.messages(true).collect();
+        assert_eq!(msgs, vec![(10, 1), (20, 2), (30, 3)]);
+    }
+
+    #[test]
+    fn message_iter_dc_reads_prewritten_ids() {
+        let (g, parts) = small();
+        let mut grid = BinGrid::build(&g, &parts);
+        let bin = grid.bin_ref(0, 1);
+        let mut b = Bin::empty();
+        b.dc_ids = bin.dc_ids.clone();
+        b.data = vec![11, 22]; // one value per source (0 and 1)
+        b.mode = Mode::Dc;
+        let msgs: Vec<(u32, u32)> = b.messages(false).collect();
+        assert_eq!(msgs, vec![(11, 2), (22, 2), (22, 3)]);
+    }
+
+    #[test]
+    fn weighted_build_aligns_weights() {
+        let g = {
+            let mut b = crate::graph::GraphBuilder::new().with_n(4);
+            b.add_weighted(0, 2, 0.5).add_weighted(0, 3, 1.5).add_weighted(1, 2, 2.5);
+            b.build()
+        };
+        let parts = Partitioner::with_k(4, 2);
+        let mut grid = BinGrid::build(&g, &parts);
+        let bin = grid.bin_ref(0, 1);
+        assert_eq!(bin.dc_srcs, vec![0, 1]); // one entry per (src, part) run
+        assert_eq!(bin.dc_cnts, vec![2, 1]);
+        assert_eq!(bin.dc_ids, vec![2, 3, 2]);
+        assert_eq!(bin.dc_wts, vec![0.5, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn dc_stream_total_equals_edges() {
+        let g = gen::rmat(8, Default::default(), false);
+        let parts = Partitioner::with_k(g.n(), 8);
+        let mut grid = BinGrid::build(&g, &parts);
+        let mut dc_total = 0u64;
+        for i in 0..8 {
+            for j in 0..8 {
+                dc_total += grid.bin_ref(i, j).dc_ids.len() as u64;
+            }
+        }
+        assert_eq!(dc_total, g.m() as u64);
+        let meta_total: u64 = (0..8).map(|p| grid.meta(p).edges).sum();
+        assert_eq!(meta_total, g.m() as u64);
+    }
+}

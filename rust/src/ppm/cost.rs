@@ -1,0 +1,151 @@
+//! The §3.3 analytical communication-mode cost model (paper Eq. 1).
+//!
+//! For each partition `p`, at the start of Scatter, predict the DRAM
+//! communication volume under each mode and pick the cheaper one in
+//! *time*, where DC enjoys `BW_DC / BW_SC` higher sustained bandwidth
+//! (user-configurable, default 2):
+//!
+//! SC volume ≈ `2 r E_a^p d_v + 3 E_a^p d_i`
+//! DC volume = `E^p ((r+1) d_i + 2 r d_v) + k d_i`
+//!
+//! with `r` = messages per out-edge of `p` (pre-computed), `E_a^p` the
+//! active edges and `d_i = d_v = 4` bytes.
+
+/// Index size in bytes (paper: 4).
+pub const D_I: f64 = 4.0;
+/// Vertex-data size in bytes (paper: 4 for all evaluated algorithms).
+pub const D_V: f64 = 4.0;
+
+/// Mode-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModePolicy {
+    /// Paper Eq. 1: per-partition analytical choice (the default).
+    Hybrid,
+    /// Force source-centric everywhere (the paper's GPOP_SC ablation).
+    ForceSc,
+    /// Force destination-centric everywhere (GPOP_DC ablation).
+    ForceDc,
+}
+
+impl std::str::FromStr for ModePolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "hybrid" => Ok(Self::Hybrid),
+            "sc" => Ok(Self::ForceSc),
+            "dc" => Ok(Self::ForceDc),
+            other => Err(format!("unknown mode policy {other:?} (hybrid|sc|dc)")),
+        }
+    }
+}
+
+/// Static per-partition inputs to the model.
+#[derive(Clone, Copy, Debug)]
+pub struct PartCost {
+    /// Total out-edges `E^p`.
+    pub edges: u64,
+    /// Total messages when fully active (`r = msgs / edges`).
+    pub msgs: u64,
+    /// Number of partitions `k`.
+    pub k: usize,
+}
+
+impl PartCost {
+    /// Messages per out-edge, `r`.
+    pub fn r(&self) -> f64 {
+        if self.edges == 0 {
+            0.0
+        } else {
+            self.msgs as f64 / self.edges as f64
+        }
+    }
+
+    /// Predicted SC communication volume (bytes) for `active_edges`.
+    pub fn sc_volume(&self, active_edges: u64) -> f64 {
+        let ea = active_edges as f64;
+        2.0 * self.r() * ea * D_V + 3.0 * ea * D_I
+    }
+
+    /// Predicted DC communication volume (bytes).
+    pub fn dc_volume(&self) -> f64 {
+        let e = self.edges as f64;
+        let r = self.r();
+        e * ((r + 1.0) * D_I + 2.0 * r * D_V) + self.k as f64 * D_I
+    }
+
+    /// Eq. 1: scatter in DC mode iff `dc_volume / BW_DC <= sc_volume /
+    /// BW_SC`, i.e. `dc_volume <= bw_ratio * sc_volume`.
+    pub fn choose_dc(&self, active_edges: u64, bw_ratio: f64) -> bool {
+        self.dc_volume() <= bw_ratio * self.sc_volume(active_edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part() -> PartCost {
+        // 10_000 edges condensing to 4_000 messages (r = 0.4), k = 64.
+        PartCost { edges: 10_000, msgs: 4_000, k: 64 }
+    }
+
+    #[test]
+    fn r_ratio() {
+        assert!((part().r() - 0.4).abs() < 1e-12);
+        let empty = PartCost { edges: 0, msgs: 0, k: 4 };
+        assert_eq!(empty.r(), 0.0);
+    }
+
+    #[test]
+    fn volumes_match_formulas() {
+        let p = part();
+        // SC with 100 active edges: 2*0.4*100*4 + 3*100*4 = 320 + 1200.
+        assert!((p.sc_volume(100) - 1520.0).abs() < 1e-9);
+        // DC: 10000*((1.4)*4 + 2*0.4*4) + 64*4 = 10000*8.8 + 256.
+        assert!((p.dc_volume() - 88256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_frontier_prefers_sc() {
+        let p = part();
+        assert!(!p.choose_dc(10, 2.0));
+    }
+
+    #[test]
+    fn dense_frontier_prefers_dc() {
+        let p = part();
+        // Fully active: SC volume = 2*0.4*10000*4 + 3*10000*4 = 152_000;
+        // DC = 88_256 <= 2 * 152_000.
+        assert!(p.choose_dc(10_000, 2.0));
+    }
+
+    #[test]
+    fn threshold_monotone_in_active_edges() {
+        let p = part();
+        let mut prev = false;
+        for ea in (0..=10_000).step_by(100) {
+            let dc = p.choose_dc(ea, 2.0);
+            // Once DC becomes preferable it stays preferable as E_a grows.
+            assert!(!prev || dc, "DC choice regressed at E_a = {ea}");
+            prev = dc;
+        }
+    }
+
+    #[test]
+    fn bw_ratio_one_shifts_crossover_up() {
+        let p = part();
+        // Find crossover for ratio 2 and ratio 1.
+        let cross = |ratio: f64| {
+            (0..=10_000u64).find(|&ea| p.choose_dc(ea, ratio)).unwrap_or(u64::MAX)
+        };
+        assert!(cross(1.0) > cross(2.0), "higher DC bandwidth should favor DC earlier");
+    }
+
+    #[test]
+    fn mode_policy_parses() {
+        assert_eq!("hybrid".parse::<ModePolicy>().unwrap(), ModePolicy::Hybrid);
+        assert_eq!("sc".parse::<ModePolicy>().unwrap(), ModePolicy::ForceSc);
+        assert_eq!("dc".parse::<ModePolicy>().unwrap(), ModePolicy::ForceDc);
+        assert!("x".parse::<ModePolicy>().is_err());
+    }
+}

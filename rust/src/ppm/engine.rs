@@ -1,0 +1,715 @@
+//! The PPM engine: pre-processing, the Scatter/Gather/Finalize loop and
+//! per-iteration statistics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::active::ActiveState;
+use super::bins::{BinGrid, Mode};
+use super::cost::{ModePolicy, PartCost};
+use crate::api::{MsgValue, Program};
+use crate::exec::ThreadPool;
+use crate::graph::Graph;
+use crate::partition::{Partitioner, DEFAULT_BYTES_PER_VERTEX, DEFAULT_CACHE_BYTES};
+use crate::{PartId, VertexId};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct PpmConfig {
+    /// Worker threads (including the caller).
+    pub threads: usize,
+    /// Communication-mode policy (paper Eq. 1 by default).
+    pub mode: ModePolicy,
+    /// `BW_DC / BW_SC` in Eq. 1 ("user configurable … set to 2 by
+    /// default").
+    pub bw_ratio: f64,
+    /// Private-cache budget used to size partitions (default 256 KB).
+    pub cache_bytes: usize,
+    /// Bytes of vertex state per vertex for partition sizing.
+    pub bytes_per_vertex: usize,
+    /// Override the partition count (otherwise §3.1's heuristic).
+    pub k: Option<usize>,
+    /// Dynamic-scheduling chunk (partitions per grab).
+    pub chunk: usize,
+}
+
+impl Default for PpmConfig {
+    fn default() -> Self {
+        Self {
+            threads: 1,
+            mode: ModePolicy::Hybrid,
+            bw_ratio: 2.0,
+            cache_bytes: DEFAULT_CACHE_BYTES,
+            bytes_per_vertex: DEFAULT_BYTES_PER_VERTEX,
+            k: None,
+            chunk: 1,
+        }
+    }
+}
+
+impl PpmConfig {
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads, ..Default::default() }
+    }
+}
+
+/// Statistics of one engine iteration.
+#[derive(Clone, Debug, Default)]
+pub struct IterStats {
+    pub iter: usize,
+    /// Active vertices at iteration start.
+    pub frontier: usize,
+    /// Active edges at iteration start (`|E_a|`).
+    pub active_edges: u64,
+    /// Partitions scattered in SC / DC mode.
+    pub sc_parts: usize,
+    pub dc_parts: usize,
+    /// Messages delivered (gather-side message count).
+    pub messages: u64,
+    /// Active vertices after finalize.
+    pub next_frontier: usize,
+    pub t_scatter: f64,
+    pub t_gather: f64,
+    pub t_finalize: f64,
+}
+
+impl IterStats {
+    pub fn total_time(&self) -> f64 {
+        self.t_scatter + self.t_gather + self.t_finalize
+    }
+}
+
+/// Statistics of a full run.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub iters: Vec<IterStats>,
+    pub total_time: f64,
+    /// True if the frontier drained before `max_iters`.
+    pub converged: bool,
+}
+
+impl RunStats {
+    pub fn n_iters(&self) -> usize {
+        self.iters.len()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.iters.iter().map(|i| i.messages).sum()
+    }
+}
+
+/// The PPM engine. Owns the graph, the partitioning, the bin grid, the
+/// frontier state and the worker pool. Pre-processing happens once in
+/// [`Engine::new`]; iterations are allocation-free on the hot path.
+pub struct Engine {
+    graph: Graph,
+    parts: Partitioner,
+    grid: BinGrid,
+    active: ActiveState,
+    pool: ThreadPool,
+    config: PpmConfig,
+    costs: Vec<PartCost>,
+    iter: usize,
+}
+
+impl Engine {
+    pub fn new(graph: Graph, config: PpmConfig) -> Self {
+        assert!(config.threads >= 1);
+        assert!(config.bw_ratio > 0.0);
+        let parts = match config.k {
+            Some(k) => Partitioner::with_k(graph.n(), k),
+            None => Partitioner::auto(
+                graph.n(),
+                config.threads,
+                config.cache_bytes,
+                config.bytes_per_vertex,
+            ),
+        };
+        let grid = BinGrid::build(&graph, &parts);
+        let k = parts.k();
+        let costs = (0..k)
+            .map(|p| {
+                let m = grid.meta(p as PartId);
+                PartCost { edges: m.edges, msgs: m.msgs, k }
+            })
+            .collect();
+        let active = ActiveState::new(&parts);
+        let pool = ThreadPool::new(config.threads);
+        Self { graph, parts, grid, active, pool, config, costs, iter: 0 }
+    }
+
+    #[inline]
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    #[inline]
+    pub fn parts(&self) -> &Partitioner {
+        &self.parts
+    }
+
+    #[inline]
+    pub fn config(&self) -> &PpmConfig {
+        &self.config
+    }
+
+    pub fn set_mode_policy(&mut self, mode: ModePolicy) {
+        self.config.mode = mode;
+    }
+
+    /// Active vertex count (`G->FrontierSize` in the paper's examples).
+    pub fn frontier_size(&self) -> usize {
+        self.active.total_active()
+    }
+
+    /// Snapshot of the current frontier (sorted by partition).
+    pub fn frontier(&mut self) -> Vec<VertexId> {
+        let mut out = Vec::with_capacity(self.active.total_active());
+        for p in 0..self.parts.k() {
+            out.extend_from_slice(&self.active.part_ref(p as PartId).cur);
+        }
+        out
+    }
+
+    /// `loadFrontier` — seed the active set.
+    pub fn load_frontier(&mut self, verts: &[VertexId]) {
+        self.iter = 0;
+        let graph = &self.graph;
+        self.active.load(&self.parts, verts, |v| graph.out_degree(v) as u64);
+    }
+
+    /// Activate every vertex (PageRank / Label Propagation start).
+    pub fn load_all_active(&mut self) {
+        let all: Vec<VertexId> = (0..self.graph.n() as VertexId).collect();
+        self.load_frontier(&all);
+    }
+
+    /// Run one Scatter → Gather → Finalize iteration.
+    pub fn iterate<P: Program>(&mut self, prog: &P) -> IterStats {
+        self.iter += 1;
+        let mut stats = IterStats {
+            iter: self.iter,
+            frontier: self.active.total_active(),
+            active_edges: self.active.total_active_edges(),
+            ..Default::default()
+        };
+        self.active.begin_iteration();
+
+        // ---------------- Scatter + initFrontier ----------------
+        let t0 = Instant::now();
+        let sc_count = AtomicU64::new(0);
+        let dc_count = AtomicU64::new(0);
+        {
+            let Engine { graph, parts, grid, active, pool, config, costs, .. } = self;
+            let spart: &[PartId] = active.spart();
+            pool.for_each_dynamic(spart.len(), config.chunk, |idx, _tid| {
+                let p = spart[idx];
+                // SAFETY: each partition appears once in spart; this task
+                // exclusively owns partition p (bins row p, frontier p).
+                // Borrows of the frontier are scoped so that the scatter
+                // helpers (which re-borrow it) never alias.
+                let cur_edges = unsafe { active.part(p) }.cur_edges;
+                let meta = grid.meta(p);
+                for &j in &meta.neighbor_parts {
+                    unsafe { grid.bin_mut(p, j) }.clear();
+                }
+                if cur_edges > 0 {
+                    let use_dc = match config.mode {
+                        ModePolicy::ForceSc => false,
+                        ModePolicy::ForceDc => true,
+                        ModePolicy::Hybrid => {
+                            costs[p as usize].choose_dc(cur_edges, config.bw_ratio)
+                        }
+                    };
+                    if use_dc {
+                        dc_count.fetch_add(1, Ordering::Relaxed);
+                        scatter_dc(prog, graph, parts, grid, active, p);
+                    } else {
+                        sc_count.fetch_add(1, Ordering::Relaxed);
+                        scatter_sc(prog, graph, parts, grid, active, p);
+                    }
+                }
+                // initFrontier step (paper §4: called once per active
+                // vertex; may keep it active and update vertex data).
+                let pf = unsafe { active.part_mut(p) };
+                let base = parts.range(p).start;
+                for i in 0..pf.cur.len() {
+                    let v = pf.cur[i];
+                    if prog.init(v) {
+                        pf.push_next(v, (v - base) as usize);
+                    }
+                }
+                // Every scattered partition must be finalized (its `cur`
+                // list is consumed this iteration).
+                active.mark_touched(p);
+            });
+        }
+        stats.t_scatter = t0.elapsed().as_secs_f64();
+        stats.sc_parts = sc_count.load(Ordering::Relaxed) as usize;
+        stats.dc_parts = dc_count.load(Ordering::Relaxed) as usize;
+
+        // ---------------- Gather ----------------
+        let t1 = Instant::now();
+        let msg_count = AtomicU64::new(0);
+        let gpart = self.active.collect_gpart();
+        {
+            let Engine { parts, grid, active, pool, config, .. } = self;
+            let weighted = grid.weighted();
+            pool.for_each_dynamic(gpart.len(), config.chunk, |idx, _tid| {
+                let j = gpart[idx];
+                // SAFETY: this task exclusively owns column j and
+                // partition j's frontier.
+                let pf = unsafe { active.part_mut(j) };
+                let base = parts.range(j).start;
+                let mut local_msgs = 0u64;
+                let srcs = unsafe { active.col_srcs(j) };
+                for &i in srcs {
+                    let bin = unsafe { grid.bin(i as PartId, j) };
+                    local_msgs += gather_bin(prog, bin, weighted, pf, base);
+                }
+                msg_count.fetch_add(local_msgs, Ordering::Relaxed);
+                if !pf.pushed.is_empty() {
+                    active.mark_touched(j);
+                }
+            });
+        }
+        stats.t_gather = t1.elapsed().as_secs_f64();
+        stats.messages = msg_count.load(Ordering::Relaxed);
+
+        // ---------------- Finalize (filterFrontier) ----------------
+        let t2 = Instant::now();
+        let touched = self.active.collect_touched();
+        {
+            let Engine { graph, parts, active, pool, config, .. } = self;
+            pool.for_each_dynamic(touched.len(), config.chunk, |idx, _tid| {
+                let p = touched[idx];
+                // SAFETY: unique partition per task.
+                let pf = unsafe { active.part_mut(p) };
+                let base = parts.range(p).start;
+                pf.cur.clear();
+                pf.cur_edges = 0;
+                for i in 0..pf.pushed.len() {
+                    let v = pf.pushed[i];
+                    pf.dedup.clear((v - base) as usize);
+                    if prog.filter(v) {
+                        pf.cur.push(v);
+                        pf.cur_edges += graph.out_degree(v) as u64;
+                    }
+                }
+                pf.pushed.clear();
+            });
+        }
+        self.active.publish();
+        stats.t_finalize = t2.elapsed().as_secs_f64();
+        stats.next_frontier = self.active.total_active();
+        stats
+    }
+
+    /// Iterate until the frontier drains or `max_iters` is reached
+    /// (paper Alg. 4's `while FrontierSize > 0` driver).
+    pub fn run<P: Program>(&mut self, prog: &P, max_iters: usize) -> RunStats {
+        let t0 = Instant::now();
+        let mut run = RunStats::default();
+        for _ in 0..max_iters {
+            if self.frontier_size() == 0 {
+                run.converged = true;
+                break;
+            }
+            run.iters.push(self.iterate(prog));
+        }
+        if self.frontier_size() == 0 {
+            run.converged = true;
+        }
+        run.total_time = t0.elapsed().as_secs_f64();
+        run
+    }
+}
+
+/// Apply all messages of one bin (the gather hot loop, >80% of
+/// PageRank time). Specialized per layout with unchecked indexing and a
+/// branchless message-cursor advance — see EXPERIMENTS.md §Perf #1.
+#[inline]
+fn gather_bin<P: Program>(
+    prog: &P,
+    bin: &super::bins::Bin,
+    weighted: bool,
+    pf: &mut super::active::PartFrontier,
+    base: VertexId,
+) -> u64 {
+    use super::bins::ID_MASK;
+    let ids: &[u32] = match bin.mode {
+        Mode::Sc => &bin.ids,
+        Mode::Dc => &bin.dc_ids,
+    };
+    let data = &bin.data;
+    if weighted {
+        // Flat layout: one value per id.
+        debug_assert_eq!(data.len(), ids.len());
+        for (e, &dst) in ids.iter().enumerate() {
+            // SAFETY: data.len() == ids.len() by the scatter layout.
+            let bits = unsafe { *data.get_unchecked(e) };
+            if prog.gather(P::Msg::from_bits(bits), dst) {
+                pf.push_next(dst, (dst - base) as usize);
+            }
+        }
+    } else {
+        // MSB-delimited layout: the high bit starts a new message, so
+        // the data cursor advances branchlessly by (raw >> 31).
+        debug_assert_eq!(
+            ids.iter().filter(|&&x| x & super::bins::MSG_START != 0).count(),
+            data.len(),
+            "message starts must match data entries"
+        );
+        let mut di = usize::MAX;
+        for &raw in ids {
+            di = di.wrapping_add((raw >> 31) as usize);
+            // SAFETY: every stream begins with an MSG_START id (scatter
+            // writes the flag on the first id of each message), so di
+            // lands in 0..data.len() before the first read.
+            let bits = unsafe { *data.get_unchecked(di) };
+            let dst = raw & ID_MASK;
+            if prog.gather(P::Msg::from_bits(bits), dst) {
+                pf.push_next(dst, (dst - base) as usize);
+            }
+        }
+    }
+    ids.len() as u64
+}
+
+/// Source-centric scatter of partition `p` (paper §3.3 "SC mode"):
+/// stream active vertices' CSR adjacency; runs of same-partition
+/// destinations become one message (value + MSB-delimited id list).
+fn scatter_sc<P: Program>(
+    prog: &P,
+    graph: &Graph,
+    parts: &Partitioner,
+    grid: &BinGrid,
+    active: &ActiveState,
+    p: PartId,
+) {
+    use super::bins::MSG_START;
+    let csr = graph.out();
+    let weighted = grid.weighted();
+    // SAFETY: caller owns partition p in this phase.
+    let pf = unsafe { active.part_mut(p) };
+    for &v in &pf.cur {
+        let adj = csr.neighbors(v);
+        if adj.is_empty() {
+            continue;
+        }
+        let val = prog.scatter(v);
+        let wts = csr.edge_weights(v);
+        let mut e = 0usize;
+        while e < adj.len() {
+            let pj = parts.part_of(adj[e]);
+            let mut end = e + 1;
+            while end < adj.len() && parts.part_of(adj[end]) == pj {
+                end += 1;
+            }
+            // SAFETY: row p is owned by this task.
+            let bin = unsafe { grid.bin_mut(p, pj) };
+            if !bin.registered {
+                bin.registered = true;
+                bin.mode = Mode::Sc;
+                active.register_bin(p, pj);
+            }
+            if weighted {
+                let w = wts.expect("weighted grid implies weighted CSR");
+                for t in e..end {
+                    bin.data.push(prog.apply_weight(val, w[t]).to_bits());
+                    bin.ids.push(adj[t]);
+                }
+            } else {
+                bin.data.push(val.to_bits());
+                bin.ids.push(adj[e] | MSG_START);
+                bin.ids.extend_from_slice(&adj[e + 1..end]);
+            }
+            e = end;
+        }
+    }
+}
+
+/// Destination-centric scatter of partition `p` (paper §3.3 "DC mode",
+/// Alg. 2): stream the PNG layout; only values are written — the
+/// destination ids were pre-written into `dc_ids` during pre-processing.
+/// Note this visits *all* sources of `p` with out-edges, not just active
+/// ones (hence the inactive-value contract on [`Program::scatter`]).
+///
+/// Values are computed once per partition into the owner's scratch
+/// buffer, then streamed into each neighbor bin — a source appears in up
+/// to `k` bins, and recomputing `scatter(u)` per bin costs e.g. one f32
+/// division each time in PageRank (EXPERIMENTS.md §Perf #2).
+fn scatter_dc<P: Program>(
+    prog: &P,
+    graph: &Graph,
+    parts: &Partitioner,
+    grid: &BinGrid,
+    active: &ActiveState,
+    p: PartId,
+) {
+    let weighted = grid.weighted();
+    let meta = grid.meta(p);
+    // SAFETY: this task owns partition p in the scatter phase.
+    let pf = unsafe { active.part_mut(p) };
+    let range = parts.range(p);
+    let base = range.start;
+    for v in range {
+        if graph.out_degree(v) > 0 {
+            pf.scratch[(v - base) as usize] = prog.scatter(v).to_bits();
+        }
+    }
+    let scratch = &pf.scratch;
+    for &j in &meta.neighbor_parts {
+        // SAFETY: row p owned by this task.
+        let bin = unsafe { grid.bin_mut(p, j) };
+        bin.mode = Mode::Dc;
+        if !bin.registered {
+            bin.registered = true;
+            active.register_bin(p, j);
+        }
+        let super::bins::Bin { data, dc_srcs, dc_cnts, dc_wts, .. } = bin;
+        if weighted {
+            let mut e = 0usize;
+            for (si, &u) in dc_srcs.iter().enumerate() {
+                let val = P::Msg::from_bits(scratch[(u - base) as usize]);
+                let c = dc_cnts[si] as usize;
+                for t in e..e + c {
+                    data.push(prog.apply_weight(val, dc_wts[t]).to_bits());
+                }
+                e += c;
+            }
+        } else {
+            for &u in dc_srcs.iter() {
+                data.push(scratch[(u - base) as usize]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::VertexData;
+    use crate::graph::builder::graph_from_edges;
+    use crate::graph::gen;
+
+    /// Minimal BFS for engine testing (full app lives in `apps::bfs`).
+    struct Bfs {
+        parent: VertexData<i32>,
+    }
+
+    impl Program for Bfs {
+        type Msg = i32;
+        fn scatter(&self, v: VertexId) -> i32 {
+            // DC-safe: unvisited vertices propagate -1 (ignored below).
+            if self.parent.get(v) >= 0 {
+                v as i32
+            } else {
+                -1
+            }
+        }
+        fn init(&self, _v: VertexId) -> bool {
+            false // frontier rebuilt from scratch each iteration
+        }
+        fn gather(&self, val: i32, v: VertexId) -> bool {
+            if val >= 0 && self.parent.get(v) < 0 {
+                self.parent.set(v, val);
+                true
+            } else {
+                false
+            }
+        }
+        fn filter(&self, _v: VertexId) -> bool {
+            true
+        }
+    }
+
+    fn bfs_levels(g: &Graph, root: VertexId, config: PpmConfig) -> (Vec<i32>, RunStats) {
+        let mut eng = Engine::new(g.clone(), config);
+        let prog = Bfs { parent: VertexData::new(g.n(), -1) };
+        prog.parent.set(root, root as i32);
+        eng.load_frontier(&[root]);
+        let stats = eng.run(&prog, 10_000);
+        (prog.parent.to_vec(), stats)
+    }
+
+    fn serial_bfs_parents(g: &Graph, root: VertexId) -> Vec<i32> {
+        let mut parent = vec![-1i32; g.n()];
+        parent[root as usize] = root as i32;
+        let mut q = std::collections::VecDeque::from([root]);
+        while let Some(v) = q.pop_front() {
+            for &u in g.out().neighbors(v) {
+                if parent[u as usize] < 0 {
+                    parent[u as usize] = v as i32;
+                    q.push_back(u);
+                }
+            }
+        }
+        parent
+    }
+
+    fn reached(parents: &[i32]) -> Vec<bool> {
+        parents.iter().map(|&p| p >= 0).collect()
+    }
+
+    #[test]
+    fn bfs_chain_all_modes() {
+        let g = gen::chain(100);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            let config = PpmConfig { threads: 2, mode, k: Some(8), ..Default::default() };
+            let (parents, stats) = bfs_levels(&g, 0, config);
+            assert!(stats.converged);
+            // Chain: parent of v is v-1.
+            for v in 1..100 {
+                assert_eq!(parents[v], v as i32 - 1, "mode {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_matches_serial_reachability_rmat() {
+        let g = gen::rmat(10, Default::default(), false);
+        let serial = serial_bfs_parents(&g, 0);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            let config = PpmConfig { threads: 4, mode, k: Some(16), ..Default::default() };
+            let (parents, _) = bfs_levels(&g, 0, config);
+            assert_eq!(reached(&parents), reached(&serial), "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn bfs_parent_edges_are_real_edges() {
+        let g = gen::rmat(9, Default::default(), false);
+        let (parents, _) =
+            bfs_levels(&g, 0, PpmConfig { threads: 3, k: Some(12), ..Default::default() });
+        for v in 0..g.n() {
+            let p = parents[v];
+            if p >= 0 && p as usize != v {
+                assert!(
+                    g.out().neighbors(p as u32).contains(&(v as u32)),
+                    "parent edge {p}->{v} missing"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_frontier_converges_immediately() {
+        let g = gen::chain(10);
+        let mut eng = Engine::new(g.clone(), PpmConfig::default());
+        let prog = Bfs { parent: VertexData::new(g.n(), -1) };
+        let stats = eng.run(&prog, 100);
+        assert!(stats.converged);
+        assert_eq!(stats.n_iters(), 0);
+    }
+
+    #[test]
+    fn message_count_matches_active_edges_sc() {
+        // In SC mode (unweighted), messages delivered == active edges.
+        let g = gen::erdos_renyi(200, 2000, 3);
+        let mut eng = Engine::new(
+            g.clone(),
+            PpmConfig { threads: 2, mode: ModePolicy::ForceSc, k: Some(8), ..Default::default() },
+        );
+        let prog = Bfs { parent: VertexData::new(g.n(), -1) };
+        prog.parent.set(0, 0);
+        eng.load_frontier(&[0]);
+        let s = eng.iterate(&prog);
+        assert_eq!(s.messages, g.out_degree(0) as u64);
+    }
+
+    #[test]
+    fn dc_mode_delivers_all_partition_edges() {
+        let g = gen::erdos_renyi(200, 2000, 4);
+        let mut eng = Engine::new(
+            g.clone(),
+            PpmConfig { threads: 2, mode: ModePolicy::ForceDc, k: Some(8), ..Default::default() },
+        );
+        let prog = Bfs { parent: VertexData::new(g.n(), -1) };
+        prog.parent.set(0, 0);
+        eng.load_frontier(&[0]);
+        let s = eng.iterate(&prog);
+        // DC scatters every edge of partition(0).
+        let p0 = eng.parts().part_of(0);
+        let expect: u64 = eng.parts().range(p0).map(|v| g.out_degree(v) as u64).sum();
+        assert_eq!(s.messages, expect);
+        assert_eq!(s.dc_parts, 1);
+    }
+
+    #[test]
+    fn frontier_continuity_via_init() {
+        // A program whose init keeps vertices active forever on a graph
+        // with no edges: frontier must persist across iterations.
+        struct Keep;
+        impl Program for Keep {
+            type Msg = u32;
+            fn scatter(&self, _v: VertexId) -> u32 {
+                0
+            }
+            fn init(&self, _v: VertexId) -> bool {
+                true
+            }
+            fn gather(&self, _val: u32, _v: VertexId) -> bool {
+                false
+            }
+            fn filter(&self, _v: VertexId) -> bool {
+                true
+            }
+        }
+        let g = graph_from_edges(8, &[]);
+        let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(4), ..Default::default() });
+        eng.load_frontier(&[1, 5]);
+        for _ in 0..3 {
+            let s = eng.iterate(&Keep);
+            assert_eq!(s.next_frontier, 2);
+        }
+        let mut f = eng.frontier();
+        f.sort_unstable();
+        assert_eq!(f, vec![1, 5]);
+    }
+
+    #[test]
+    fn filter_prunes_frontier() {
+        // Keep all active via init, but filter drops odd vertices.
+        struct FilterOdd;
+        impl Program for FilterOdd {
+            type Msg = u32;
+            fn scatter(&self, _v: VertexId) -> u32 {
+                0
+            }
+            fn init(&self, _v: VertexId) -> bool {
+                true
+            }
+            fn gather(&self, _val: u32, _v: VertexId) -> bool {
+                false
+            }
+            fn filter(&self, v: VertexId) -> bool {
+                v % 2 == 0
+            }
+        }
+        let g = graph_from_edges(8, &[]);
+        let mut eng = Engine::new(g, PpmConfig { threads: 1, k: Some(2), ..Default::default() });
+        eng.load_frontier(&[0, 1, 2, 3]);
+        let s = eng.iterate(&FilterOdd);
+        assert_eq!(s.next_frontier, 2);
+        let mut f = eng.frontier();
+        f.sort_unstable();
+        assert_eq!(f, vec![0, 2]);
+    }
+
+    #[test]
+    fn stats_mode_counts() {
+        let g = gen::rmat(8, Default::default(), false);
+        let mut eng = Engine::new(
+            g.clone(),
+            PpmConfig { threads: 2, mode: ModePolicy::ForceDc, k: Some(8), ..Default::default() },
+        );
+        let prog = Bfs { parent: VertexData::new(g.n(), -1) };
+        prog.parent.set(0, 0);
+        eng.load_frontier(&[0]);
+        let s = eng.iterate(&prog);
+        assert_eq!(s.sc_parts, 0);
+        assert!(s.dc_parts >= 1);
+        assert_eq!(s.frontier, 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! The Partition-Centric Programming Model engine (paper §3).
+//!
+//! An iteration runs three barrier-separated parallel phases over
+//! partitions:
+//!
+//! 1. **Scatter** — each active partition streams the out-edges of its
+//!    active vertices (SC mode) or its pre-built PNG layout (DC mode)
+//!    and writes messages into its bin row; then runs the
+//!    `initFrontier` step.
+//! 2. **Gather** — each partition that received messages streams its
+//!    bin column and applies `gatherFunc`, building the preliminary
+//!    next frontier.
+//! 3. **Finalize** — `filterFunc` prunes the preliminary frontier and
+//!    the per-partition active-edge counts are recomputed.
+//!
+//! All bin and vertex accesses are exclusive per phase (one thread owns
+//! a partition), so the engine uses no locks or atomics on the data
+//! path — the paper's central scalability claim.
+
+pub mod active;
+pub mod bins;
+pub mod cost;
+pub mod engine;
+pub mod shared;
+
+pub use bins::{Bin, BinGrid, Mode, MSG_START};
+pub use cost::ModePolicy;
+pub use engine::{Engine, IterStats, PpmConfig, RunStats};

@@ -1,0 +1,205 @@
+//! Exclusive-ownership shared storage.
+//!
+//! PPM's central property (paper §3): within a phase, every partition —
+//! and hence every bin row (scatter) or bin column (gather), and every
+//! vertex-data slot — is accessed by exactly one thread, so no locks or
+//! atomics are needed. [`SharedCells`] encodes that discipline: it hands
+//! out `&mut` access through a shared reference, with the *engine's
+//! partition-ownership schedule* as the safety argument.
+
+use std::cell::UnsafeCell;
+
+/// A fixed-size array of cells that may be mutated concurrently at
+/// *disjoint indices*.
+///
+/// # Safety contract
+/// `get_mut(i)` may be called concurrently with other `get_mut(j)` only
+/// for `i != j`, and never concurrently with `get_mut(i)` or `get(i)`.
+/// The PPM engine upholds this by assigning disjoint partitions (bin
+/// rows/columns) to threads within each phase, with a barrier between
+/// phases.
+pub struct SharedCells<T> {
+    cells: Box<[UnsafeCell<T>]>,
+}
+
+// SAFETY: access discipline documented above; T must be Send to migrate
+// between worker threads.
+unsafe impl<T: Send> Sync for SharedCells<T> {}
+unsafe impl<T: Send> Send for SharedCells<T> {}
+
+impl<T> SharedCells<T> {
+    pub fn from_vec(v: Vec<T>) -> Self {
+        Self {
+            cells: v.into_iter().map(UnsafeCell::new).collect::<Vec<_>>().into_boxed_slice(),
+        }
+    }
+
+    pub fn new_with(n: usize, mut f: impl FnMut(usize) -> T) -> Self {
+        Self::from_vec((0..n).map(&mut f).collect())
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Exclusive access to cell `i`.
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent access to index `i` (see type
+    /// docs).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        &mut *self.cells[i].get()
+    }
+
+    /// Shared read of cell `i`.
+    ///
+    /// # Safety
+    /// No concurrent `get_mut(i)` may be in flight.
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> &T {
+        &*self.cells[i].get()
+    }
+
+    /// Safe exclusive iteration (requires `&mut self`).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.cells.iter_mut().map(|c| c.get_mut())
+    }
+
+    /// Safe exclusive access (requires `&mut self`).
+    pub fn get_mut_safe(&mut self, i: usize) -> &mut T {
+        self.cells[i].get_mut()
+    }
+}
+
+/// A preallocated list supporting concurrent lock-free `push` via an
+/// atomic cursor. Used for `binPartList` columns: each source partition
+/// pushes itself at most once per iteration, so capacity `k` suffices.
+pub struct ConcurrentList {
+    slots: SharedCells<u32>,
+    len: std::sync::atomic::AtomicUsize,
+}
+
+impl ConcurrentList {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            slots: SharedCells::from_vec(vec![0u32; cap]),
+            len: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    /// Concurrent push. Panics (debug) on overflow — callers size the
+    /// list to the maximum possible distinct pushes.
+    #[inline]
+    pub fn push(&self, x: u32) {
+        let i = self.len.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        debug_assert!(i < self.slots.len(), "ConcurrentList overflow");
+        // SAFETY: fetch_add hands out unique indices.
+        unsafe {
+            *self.slots.get_mut(i) = x;
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len.load(std::sync::atomic::Ordering::Acquire).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read the current entries. Only valid between phases (no concurrent
+    /// pushes) — enforced by taking `&mut self`.
+    pub fn entries(&mut self) -> &[u32] {
+        let n = self.len();
+        // SAFETY: &mut self excludes concurrent pushes; 0..n initialized.
+        unsafe { std::slice::from_raw_parts(self.slots.get(0) as *const u32, n) }
+    }
+
+    /// Entries under the engine's phase discipline (no concurrent pushes).
+    ///
+    /// # Safety
+    /// Caller must guarantee no `push` is concurrently in flight.
+    pub unsafe fn entries_unsynced(&self) -> &[u32] {
+        let n = self.len();
+        std::slice::from_raw_parts(self.slots.get(0) as *const u32, n)
+    }
+
+    pub fn reset(&self) {
+        self.len.store(0, std::sync::atomic::Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_cells_disjoint_parallel_writes() {
+        let cells = SharedCells::from_vec(vec![0u64; 64]);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let cells = &cells;
+                s.spawn(move || {
+                    for i in (t..64).step_by(4) {
+                        // SAFETY: indices are disjoint across threads.
+                        unsafe {
+                            *cells.get_mut(i) = i as u64 + 1;
+                        }
+                    }
+                });
+            }
+        });
+        for i in 0..64 {
+            assert_eq!(unsafe { *cells.get(i) }, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn shared_cells_safe_mut_iteration() {
+        let mut cells = SharedCells::new_with(5, |i| i);
+        for c in cells.iter_mut() {
+            *c *= 2;
+        }
+        assert_eq!(unsafe { *cells.get(3) }, 6);
+        assert_eq!(*cells.get_mut_safe(4), 8);
+    }
+
+    #[test]
+    fn concurrent_list_collects_all_pushes() {
+        let list = ConcurrentList::with_capacity(1000);
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let list = &list;
+                s.spawn(move || {
+                    for i in 0..250 {
+                        list.push(t * 250 + i);
+                    }
+                });
+            }
+        });
+        let mut list = list;
+        let mut got = list.entries().to_vec();
+        got.sort_unstable();
+        assert_eq!(got, (0..1000).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn concurrent_list_reset() {
+        let mut list = ConcurrentList::with_capacity(4);
+        list.push(7);
+        assert_eq!(list.len(), 1);
+        list.reset();
+        assert_eq!(list.len(), 0);
+        list.push(9);
+        assert_eq!(list.entries(), &[9]);
+    }
+}

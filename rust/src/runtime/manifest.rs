@@ -1,0 +1,141 @@
+//! The artifacts manifest written by `python/compile/aot.py`.
+//!
+//! A tiny flat-JSON parser (serde is unavailable offline); the manifest
+//! is machine-generated with known shape, so this only handles the
+//! `{"key": value}` subset aot.py emits.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shapes/constants of the AOT artifacts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub k: usize,
+    pub q: usize,
+    pub n: usize,
+    pub iters: usize,
+    pub gather_m: usize,
+    pub block_m: usize,
+    pub dtype: String,
+    pub format: String,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> std::io::Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let map = parse_flat_json(text)?;
+        let get_usize = |key: &str| -> Result<usize, String> {
+            map.get(key)
+                .ok_or_else(|| format!("manifest missing key {key:?}"))?
+                .parse::<usize>()
+                .map_err(|e| format!("manifest key {key}: {e}"))
+        };
+        let get_str = |key: &str| -> Result<String, String> {
+            Ok(map.get(key).ok_or_else(|| format!("manifest missing key {key:?}"))?.clone())
+        };
+        Ok(Manifest {
+            k: get_usize("k")?,
+            q: get_usize("q")?,
+            n: get_usize("n")?,
+            iters: get_usize("iters")?,
+            gather_m: get_usize("gather_m")?,
+            block_m: get_usize("block_m")?,
+            dtype: get_str("dtype")?,
+            format: get_str("format")?,
+        })
+    }
+}
+
+/// Parse a flat JSON object of string/number values.
+fn parse_flat_json(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let inner = text
+        .trim()
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .ok_or("not a JSON object")?;
+    let mut out = BTreeMap::new();
+    for part in split_top_level(inner) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part.split_once(':').ok_or_else(|| format!("bad entry {part:?}"))?;
+        let key = k.trim().trim_matches('"').to_string();
+        let val = v.trim().trim_matches('"').to_string();
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+/// Split on commas that are not inside strings.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "k": 8,
+  "q": 256,
+  "n": 2048,
+  "iters": 10,
+  "gather_m": 4096,
+  "block_m": 256,
+  "dtype": "f32",
+  "format": "hlo-text",
+  "jax": "0.8.2"
+}"#;
+
+    #[test]
+    fn parses_aot_output() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.k, 8);
+        assert_eq!(m.q, 256);
+        assert_eq!(m.n, 2048);
+        assert_eq!(m.iters, 10);
+        assert_eq!(m.gather_m, 4096);
+        assert_eq!(m.dtype, "f32");
+        assert_eq!(m.format, "hlo-text");
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse(r#"{"k": 8}"#).is_err());
+    }
+
+    #[test]
+    fn not_object_errors() {
+        assert!(Manifest::parse("[1,2]").is_err());
+    }
+
+    #[test]
+    fn commas_inside_strings() {
+        let parts = split_top_level(r#""a": "x,y", "b": 2"#);
+        assert_eq!(parts.len(), 2);
+    }
+}

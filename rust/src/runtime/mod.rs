@@ -1,0 +1,15 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) from rust.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! request-path boundary: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.
+//! The interchange format is HLO *text* — see aot.py and
+//! /opt/xla-example/README.md for why serialized protos don't work with
+//! xla_extension 0.5.1.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::Manifest;
+pub use pjrt::{PjrtRuntime, PageRankExecutable};

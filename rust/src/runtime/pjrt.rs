@@ -1,0 +1,242 @@
+//! PJRT loader/executor wrapping the `xla` crate.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use crate::graph::Graph;
+use crate::VertexId;
+
+/// Locate the artifacts directory: `./artifacts` if present, else
+/// `<crate root>/artifacts` (so examples/tests work from any cwd).
+pub fn default_artifacts_dir() -> PathBuf {
+    let local = PathBuf::from("artifacts");
+    if local.join("manifest.json").exists() {
+        return local;
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A PJRT CPU client plus the artifact directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Connect to the CPU PJRT plugin and read the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+            .context("load artifacts/manifest.json (run `make artifacts`)")?;
+        Ok(Self { client, artifacts_dir: artifacts_dir.to_path_buf(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts_dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compile {name}"))
+    }
+
+    /// Compile the PageRank step/run executables.
+    pub fn pagerank(&self) -> Result<PageRankExecutable> {
+        Ok(PageRankExecutable {
+            step: self.compile("pagerank_step.hlo.txt")?,
+            run: self.compile("pagerank_run.hlo.txt")?,
+            manifest: self.manifest.clone(),
+        })
+    }
+
+    /// Compile the standalone gather executable and run it once.
+    pub fn gather(&self, vals: &[f32], dst: &[i32]) -> Result<Vec<f32>> {
+        let m = self.manifest.gather_m;
+        anyhow::ensure!(vals.len() == m && dst.len() == m, "gather expects length {m}");
+        let exe = self.compile("gather.hlo.txt")?;
+        let v = xla::Literal::vec1(vals);
+        let d = xla::Literal::vec1(dst);
+        let out = exe.execute::<xla::Literal>(&[v, d])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The compiled PageRank artifacts plus shape metadata.
+pub struct PageRankExecutable {
+    step: xla::PjRtLoadedExecutable,
+    run: xla::PjRtLoadedExecutable,
+    manifest: Manifest,
+}
+
+impl PageRankExecutable {
+    fn literals(
+        &self,
+        blocks: &[f32],
+        rank: &[f32],
+        inv_deg: &[f32],
+        damping: f32,
+    ) -> Result<[xla::Literal; 4]> {
+        let (k, q, n) = (self.manifest.k, self.manifest.q, self.manifest.n);
+        anyhow::ensure!(blocks.len() == k * k * q * q, "blocks must be k*k*q*q");
+        anyhow::ensure!(rank.len() == n && inv_deg.len() == n, "vectors must be n={n}");
+        let b = xla::Literal::vec1(blocks).reshape(&[
+            k as i64,
+            k as i64,
+            q as i64,
+            q as i64,
+        ])?;
+        let r = xla::Literal::vec1(rank);
+        let d = xla::Literal::vec1(inv_deg);
+        let damp = xla::Literal::scalar(damping);
+        Ok([b, r, d, damp])
+    }
+
+    /// One PageRank iteration on the PJRT device.
+    pub fn step(
+        &self,
+        blocks: &[f32],
+        rank: &[f32],
+        inv_deg: &[f32],
+        damping: f32,
+    ) -> Result<Vec<f32>> {
+        let args = self.literals(blocks, rank, inv_deg, damping)?;
+        let out = self.step.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// The fused `manifest.iters`-iteration executable (lax.scan body).
+    pub fn run(
+        &self,
+        blocks: &[f32],
+        rank0: &[f32],
+        inv_deg: &[f32],
+        damping: f32,
+    ) -> Result<Vec<f32>> {
+        let args = self.literals(blocks, rank0, inv_deg, damping)?;
+        let out = self.run.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Densify a graph into the blocked layout the artifacts expect:
+/// `blocks[d][s][i][j]` = multiplicity of edge `(s*q + j) -> (d*q + i)`
+/// (parallel edges accumulate, matching one-message-per-edge PPM
+/// semantics). Returns `(blocks, inv_deg)`; panics if `g.n() != k*q`.
+pub fn graph_to_blocks(g: &Graph, k: usize, q: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = k * q;
+    assert_eq!(g.n(), n, "graph must have exactly k*q = {n} vertices");
+    let mut blocks = vec![0f32; k * k * q * q];
+    for v in 0..n as VertexId {
+        let (s, j) = (v as usize / q, v as usize % q);
+        for &u in g.out().neighbors(v) {
+            let (d, i) = (u as usize / q, u as usize % q);
+            blocks[((d * k + s) * q + i) * q + j] += 1.0;
+        }
+    }
+    let inv_deg: Vec<f32> = (0..n as VertexId)
+        .map(|v| {
+            let deg = g.out_degree(v);
+            if deg > 0 {
+                1.0 / deg as f32
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    (blocks, inv_deg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::graph_from_edges;
+
+    #[test]
+    fn graph_to_blocks_layout() {
+        // 4 vertices, k=2, q=2; edge 0 -> 3 means s=0,j=0,d=1,i=1.
+        let g = graph_from_edges(4, &[(0, 3), (2, 1)]);
+        let (blocks, inv_deg) = graph_to_blocks(&g, 2, 2);
+        let idx = |d: usize, s: usize, i: usize, j: usize| ((d * 2 + s) * 2 + i) * 2 + j;
+        assert_eq!(blocks[idx(1, 0, 1, 0)], 1.0);
+        assert_eq!(blocks[idx(0, 1, 1, 0)], 1.0); // 2 -> 1: s=1,j=0,d=0,i=1
+        assert_eq!(blocks.iter().filter(|&&x| x != 0.0).count(), 2);
+        assert_eq!(inv_deg, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn graph_to_blocks_size_mismatch_panics() {
+        let g = graph_from_edges(5, &[(0, 1)]);
+        let _ = graph_to_blocks(&g, 2, 2);
+    }
+
+    /// End-to-end PJRT test: requires `make artifacts` to have run.
+    /// Silently skipped when artifacts are absent so `cargo test` works
+    /// standalone; the Makefile's `test` target always builds artifacts
+    /// first.
+    #[test]
+    fn pjrt_pagerank_matches_native_engine() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let rt = PjrtRuntime::new(&dir).unwrap();
+        let m = rt.manifest.clone();
+        // Deterministic workload sized to the manifest.
+        let g = crate::graph::gen::erdos_renyi(m.n, m.n * 8, 42);
+        let (blocks, inv_deg) = graph_to_blocks(&g, m.k, m.q);
+        let rank0 = vec![1.0f32 / m.n as f32; m.n];
+        let exe = rt.pagerank().unwrap();
+        let pjrt_rank = exe.step(&blocks, &rank0, &inv_deg, 0.85).unwrap();
+        // Native engine, one iteration.
+        let mut eng = crate::ppm::Engine::new(
+            g.clone(),
+            crate::ppm::PpmConfig { threads: 2, ..Default::default() },
+        );
+        let native = crate::apps::pagerank::run(&mut eng, 0.85, 1);
+        for v in 0..m.n {
+            assert!(
+                (pjrt_rank[v] - native.rank[v]).abs() < 1e-5,
+                "v={v}: pjrt {} vs native {}",
+                pjrt_rank[v],
+                native.rank[v]
+            );
+        }
+    }
+
+    #[test]
+    fn pjrt_gather_matches_scalar_accumulation() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let rt = PjrtRuntime::new(&dir).unwrap();
+        let m = rt.manifest.clone();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let vals: Vec<f32> = (0..m.gather_m).map(|_| rng.next_f32()).collect();
+        let dst: Vec<i32> = (0..m.gather_m).map(|_| rng.below(m.q as u64) as i32).collect();
+        let out = rt.gather(&vals, &dst).unwrap();
+        let mut want = vec![0f32; m.q];
+        for (v, d) in vals.iter().zip(&dst) {
+            want[*d as usize] += v;
+        }
+        for i in 0..m.q {
+            assert!((out[i] - want[i]).abs() < 1e-3, "slot {i}: {} vs {}", out[i], want[i]);
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Plain and atomic bitsets over `u64` words.
+//!
+//! [`Bitset`] backs GPOP's per-partition dense frontiers (single-owner,
+//! no atomics needed — the whole point of PPM). [`AtomicBitset`] backs the
+//! vertex-centric baselines, which *do* need concurrent set operations,
+//! exactly the synchronization cost the paper argues against.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A fixed-capacity dense bitset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitset {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitset {
+    pub fn new(len: usize) -> Self {
+        Self { words: vec![0; (len + 63) / 64], len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1 << (i & 63);
+    }
+
+    /// Set bit `i`; returns `true` if it was previously clear.
+    #[inline]
+    pub fn set_checked(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i >> 6];
+        let mask = 1u64 << (i & 63);
+        let was_clear = *w & mask == 0;
+        *w |= mask;
+        was_clear
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1 << (i & 63));
+    }
+
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over set bit indices in increasing order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &Bitset) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+}
+
+/// A fixed-capacity bitset with atomic set operations, for the
+/// vertex-centric baselines (concurrent frontier insertion).
+pub struct AtomicBitset {
+    words: Vec<AtomicU64>,
+    len: usize,
+}
+
+impl AtomicBitset {
+    pub fn new(len: usize) -> Self {
+        let mut words = Vec::with_capacity((len + 63) / 64);
+        words.resize_with((len + 63) / 64, || AtomicU64::new(0));
+        Self { words, len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6].load(Ordering::Relaxed) >> (i & 63)) & 1 == 1
+    }
+
+    /// Atomically set bit `i`; returns `true` if this call set it
+    /// (i.e. it was previously clear) — the CAS-win test BFS-style
+    /// baselines rely on.
+    #[inline]
+    pub fn set_checked(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let mask = 1u64 << (i & 63);
+        let prev = self.words[i >> 6].fetch_or(mask, Ordering::Relaxed);
+        prev & mask == 0
+    }
+
+    pub fn clear_all(&mut self) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.load(Ordering::Relaxed).count_ones() as usize).sum()
+    }
+
+    /// Snapshot into a plain bitset.
+    pub fn snapshot(&self) -> Bitset {
+        Bitset {
+            words: self.words.iter().map(|w| w.load(Ordering::Relaxed)).collect(),
+            len: self.len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitset::new(130);
+        assert!(!b.get(0));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert_eq!(b.count_ones(), 3);
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn set_checked_reports_transition() {
+        let mut b = Bitset::new(10);
+        assert!(b.set_checked(3));
+        assert!(!b.set_checked(3));
+    }
+
+    #[test]
+    fn iter_ones_in_order() {
+        let mut b = Bitset::new(200);
+        for i in [0usize, 5, 63, 64, 65, 128, 199] {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, vec![0, 5, 63, 64, 65, 128, 199]);
+    }
+
+    #[test]
+    fn union() {
+        let mut a = Bitset::new(100);
+        let mut b = Bitset::new(100);
+        a.set(1);
+        b.set(99);
+        a.union_with(&b);
+        assert!(a.get(1) && a.get(99));
+    }
+
+    #[test]
+    fn atomic_set_checked_once() {
+        let b = AtomicBitset::new(100);
+        assert!(b.set_checked(42));
+        assert!(!b.set_checked(42));
+        assert!(b.get(42));
+        assert_eq!(b.count_ones(), 1);
+    }
+
+    #[test]
+    fn atomic_concurrent_single_winner() {
+        use std::sync::Arc;
+        let b = Arc::new(AtomicBitset::new(64));
+        let mut handles = vec![];
+        let wins = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let b = b.clone();
+            let wins = wins.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..64 {
+                    if b.set_checked(i) {
+                        wins.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(wins.load(Ordering::Relaxed), 64, "each bit set exactly once");
+    }
+
+    #[test]
+    fn snapshot_matches() {
+        let b = AtomicBitset::new(70);
+        b.set_checked(69);
+        let s = b.snapshot();
+        assert!(s.get(69));
+        assert_eq!(s.count_ones(), 1);
+    }
+}

@@ -1,0 +1,210 @@
+//! A small command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positionals. Typed getters parse on access and report helpful errors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed arguments: options (`--key ...`) and positionals, in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminator: rest are positionals.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{body} expects a value")))?;
+                    args.opts.insert(body.to_string(), v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| CliError(format!("--{name}={s}: {e}"))),
+        }
+    }
+
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    /// Merge defaults from a config file (`key = value` lines, `#`
+    /// comments; bare keys become boolean flags). CLI values win.
+    pub fn merge_config_text(&mut self, text: &str) -> Result<(), CliError> {
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            match t.split_once('=') {
+                Some((k, v)) => {
+                    let key = k.trim().to_string();
+                    if key.is_empty() {
+                        return Err(CliError(format!("config line {}: empty key", lineno + 1)));
+                    }
+                    self.opts.entry(key).or_insert_with(|| v.trim().to_string());
+                }
+                None => {
+                    let key = t.to_string();
+                    if !self.flags.contains(&key) {
+                        self.flags.push(key);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Comma-separated list, e.g. `--threads 1,2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    part.trim()
+                        .parse::<T>()
+                        .map_err(|e| CliError(format!("--{name} item {part:?}: {e}")))
+                })
+                .collect::<Result<Vec<T>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--app", "bfs", "--iters=10", "graph.el"], &[]);
+        assert_eq!(a.get("app"), Some("bfs"));
+        assert_eq!(a.get_parsed_or::<u32>("iters", 0).unwrap(), 10);
+        assert_eq!(a.positional, vec!["graph.el"]);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(&["--verbose", "--app", "pr"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("app"), Some("pr"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(["--app".to_string()].into_iter(), &[]);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = parse(&["--iters", "ten"], &[]);
+        assert!(a.get_parsed::<u32>("iters").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--threads", "1, 2,4"], &[]);
+        assert_eq!(a.get_list::<usize>("threads").unwrap().unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--x", "1", "--", "--not-an-opt"], &[]);
+        assert_eq!(a.positional, vec!["--not-an-opt"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_or("mode", "hybrid"), "hybrid");
+        assert_eq!(a.get_parsed_or::<f64>("bw-ratio", 2.0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn config_merge_cli_wins() {
+        let mut a = parse(&["--threads", "8"], &[]);
+        a.merge_config_text("# defaults\nthreads = 2\nmode = dc\nverbose\n").unwrap();
+        assert_eq!(a.get("threads"), Some("8")); // CLI wins
+        assert_eq!(a.get("mode"), Some("dc")); // config fills gap
+        assert!(a.flag("verbose")); // bare key = flag
+    }
+
+    #[test]
+    fn config_bad_line_errors() {
+        let mut a = parse(&[], &[]);
+        assert!(a.merge_config_text("= nope\n").is_err());
+        assert!(a.merge_config_text("ok = fine\n# comment\n\n").is_ok());
+    }
+}

@@ -1,0 +1,92 @@
+//! Human-readable formatting for report/bench output.
+
+/// Format a count with SI suffixes: 1_500_000 -> "1.50M".
+pub fn si(x: f64) -> String {
+    let (v, suf) = if x.abs() >= 1e12 {
+        (x / 1e12, "T")
+    } else if x.abs() >= 1e9 {
+        (x / 1e9, "G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "K")
+    } else {
+        (x, "")
+    };
+    if suf.is_empty() {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}{suf}")
+    }
+}
+
+/// Format a duration in seconds adaptively: "1.23s", "45.6ms", "789us".
+pub fn secs(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3}s")
+    } else if t >= 1e-3 {
+        format!("{:.2}ms", t * 1e3)
+    } else if t >= 1e-6 {
+        format!("{:.1}us", t * 1e6)
+    } else {
+        format!("{:.0}ns", t * 1e9)
+    }
+}
+
+/// Format bytes: "1.50 GiB".
+pub fn bytes(b: f64) -> String {
+    const KIB: f64 = 1024.0;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// A fixed-width left-aligned cell, for table printing.
+pub fn cell(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{s}{}", " ".repeat(w - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_suffixes() {
+        assert_eq!(si(950.0), "950");
+        assert_eq!(si(1500.0), "1.50K");
+        assert_eq!(si(1_500_000.0), "1.50M");
+        assert_eq!(si(2.5e9), "2.50G");
+        assert_eq!(si(3.2e12), "3.20T");
+    }
+
+    #[test]
+    fn secs_ranges() {
+        assert_eq!(secs(1.5), "1.500s");
+        assert_eq!(secs(0.0456), "45.60ms");
+        assert_eq!(secs(789e-6), "789.0us");
+        assert_eq!(secs(5e-9), "5ns");
+    }
+
+    #[test]
+    fn bytes_ranges() {
+        assert_eq!(bytes(512.0), "512 B");
+        assert_eq!(bytes(2048.0), "2.00 KiB");
+        assert_eq!(bytes(1024.0 * 1024.0 * 1.5), "1.50 MiB");
+    }
+
+    #[test]
+    fn cell_pads() {
+        assert_eq!(cell("ab", 4), "ab  ");
+        assert_eq!(cell("abcdef", 4), "abcdef");
+    }
+}

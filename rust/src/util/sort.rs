@@ -1,0 +1,92 @@
+//! Counting / radix sorting utilities used by graph construction.
+//!
+//! CSR construction is a counting sort of edges by source; the PNG layout
+//! is a counting sort of edges by (partition(dst), src). Both are built on
+//! the histogram/prefix-sum helpers here.
+
+/// Exclusive prefix sum; returns the total.
+pub fn exclusive_prefix_sum(xs: &mut [u64]) -> u64 {
+    let mut acc = 0u64;
+    for x in xs.iter_mut() {
+        let v = *x;
+        *x = acc;
+        acc += v;
+    }
+    acc
+}
+
+/// Histogram of `keys` with `n_buckets` buckets.
+pub fn histogram(keys: impl Iterator<Item = usize>, n_buckets: usize) -> Vec<u64> {
+    let mut h = vec![0u64; n_buckets];
+    for k in keys {
+        debug_assert!(k < n_buckets);
+        h[k] += 1;
+    }
+    h
+}
+
+/// Stable counting sort of `items` by `key(item) < n_buckets`.
+/// Returns `(sorted_items, bucket_offsets)` where `bucket_offsets` has
+/// `n_buckets + 1` entries (CSR-style).
+pub fn counting_sort_by_key<T: Copy, F: Fn(&T) -> usize>(
+    items: &[T],
+    n_buckets: usize,
+    key: F,
+) -> (Vec<T>, Vec<u64>) {
+    let mut offsets = histogram(items.iter().map(|it| key(it)), n_buckets);
+    offsets.push(0);
+    let total = exclusive_prefix_sum(&mut offsets[..n_buckets]);
+    offsets[n_buckets] = total;
+    let mut cursor = offsets[..n_buckets].to_vec();
+    let mut out: Vec<T> = Vec::with_capacity(items.len());
+    // SAFETY: every slot in 0..items.len() is written exactly once below
+    // (cursors partition the output range), after which we set the length.
+    unsafe {
+        out.set_len(items.len());
+    }
+    for it in items {
+        let k = key(it);
+        out[cursor[k] as usize] = *it;
+        cursor[k] += 1;
+    }
+    (out, offsets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_sum() {
+        let mut xs = vec![3, 0, 2, 5];
+        let total = exclusive_prefix_sum(&mut xs);
+        assert_eq!(xs, vec![0, 3, 3, 5]);
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram([0usize, 2, 2, 3].into_iter(), 4);
+        assert_eq!(h, vec![1, 0, 2, 1]);
+    }
+
+    #[test]
+    fn counting_sort_stable() {
+        // (key, payload) — payloads must keep insertion order per key.
+        let items = [(2u32, 'a'), (0, 'b'), (2, 'c'), (1, 'd'), (0, 'e')];
+        let (sorted, offs) = counting_sort_by_key(&items, 3, |it| it.0 as usize);
+        assert_eq!(
+            sorted,
+            vec![(0, 'b'), (0, 'e'), (1, 'd'), (2, 'a'), (2, 'c')]
+        );
+        assert_eq!(offs, vec![0, 2, 3, 5]);
+    }
+
+    #[test]
+    fn counting_sort_empty() {
+        let items: [(u32, u32); 0] = [];
+        let (sorted, offs) = counting_sort_by_key(&items, 3, |it| it.0 as usize);
+        assert!(sorted.is_empty());
+        assert_eq!(offs, vec![0, 0, 0, 0]);
+    }
+}

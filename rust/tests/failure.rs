@@ -1,0 +1,175 @@
+//! Failure-injection tests: malformed inputs, degenerate graphs and
+//! misconfigurations must fail loudly (or degrade gracefully), never
+//! corrupt results.
+
+use gpop::apps;
+use gpop::coordinator::{self, GraphSpec};
+use gpop::graph::{builder::graph_from_edges, gen, io};
+use gpop::ppm::{Engine, PpmConfig};
+use gpop::runtime::Manifest;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("gpop_fail_{}_{name}", std::process::id()));
+    p
+}
+
+// ------------------------------------------------------------ inputs
+
+#[test]
+fn malformed_edge_list_rejected() {
+    for body in ["0 x\n", "0\n", "9999999999999999999 1\n"] {
+        let p = tmp("bad.el");
+        std::fs::write(&p, body).unwrap();
+        assert!(io::read_edge_list(&p).is_err(), "accepted {body:?}");
+        std::fs::remove_file(&p).unwrap();
+    }
+}
+
+#[test]
+fn truncated_binary_rejected() {
+    let g = gen::chain(10);
+    let p = tmp("trunc.bin");
+    io::write_binary(&g, &p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(io::read_binary(&p).is_err());
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[test]
+fn malformed_manifest_rejected() {
+    for body in ["", "[]", "{\"k\": 8}", "{\"k\": \"eight\", \"q\": 1}"] {
+        assert!(Manifest::parse(body).is_err(), "accepted {body:?}");
+    }
+}
+
+#[test]
+fn cli_bad_inputs_surface_errors() {
+    let cases: Vec<Vec<&str>> = vec![
+        vec!["run", "--app", "bfs"],                       // no graph
+        vec!["run", "--app", "nope", "--graph", "chain:4"], // unknown app
+        vec!["run", "--app", "bfs", "--graph", "rmat"],     // bad spec
+        vec!["run", "--app", "bfs", "--graph", "chain:4", "--threads", "zero"],
+        vec!["run", "--app", "bfs", "--graph", "chain:4", "--mode", "fastest"],
+        vec!["frobnicate"],                                 // unknown command
+        vec!["gen", "--graph", "chain:4"],                  // no --out
+    ];
+    for argv in cases {
+        let r = coordinator::dispatch(argv.iter().map(|s| s.to_string()).collect());
+        assert!(r.is_err(), "should fail: {argv:?}");
+    }
+}
+
+#[test]
+fn spec_file_missing_errors() {
+    let spec = GraphSpec::parse("file:/definitely/not/here.bin").unwrap();
+    assert!(spec.build().is_err());
+}
+
+// -------------------------------------------------- degenerate graphs
+
+#[test]
+fn empty_graph_runs_everything() {
+    let g = graph_from_edges(0, &[]);
+    let mut eng = Engine::new(g, PpmConfig::default());
+    let pr = apps::pagerank::run(&mut eng, 0.85, 3);
+    assert!(pr.rank.is_empty());
+    let cc = apps::cc::run(&mut eng, 10);
+    assert!(cc.label.is_empty());
+}
+
+#[test]
+fn single_vertex_no_edges() {
+    let g = graph_from_edges(1, &[]);
+    let mut eng = Engine::new(g, PpmConfig::default());
+    let bfs = apps::bfs::run(&mut eng, 0);
+    assert_eq!(bfs.parent, vec![0]);
+    assert!(bfs.stats.converged);
+    let pr = apps::pagerank::run(&mut eng, 0.85, 2);
+    // Isolated vertex: rank = teleport mass only.
+    assert!((pr.rank[0] - 0.15).abs() < 1e-6);
+}
+
+#[test]
+fn self_loops_and_parallel_edges() {
+    let g = graph_from_edges(3, &[(0, 0), (0, 1), (0, 1), (1, 2), (2, 2)]);
+    let mut eng = Engine::new(g.clone(), PpmConfig { k: Some(3), ..Default::default() });
+    let bfs = apps::bfs::run(&mut eng, 0);
+    assert!(bfs.parent.iter().all(|&p| p >= 0), "all reachable: {:?}", bfs.parent);
+    // PageRank with self loops must still be bounded.
+    let pr = apps::pagerank::run(&mut eng, 0.85, 10);
+    let mass: f64 = pr.rank.iter().map(|&x| x as f64).sum();
+    assert!(mass <= 1.0 + 1e-5 && mass > 0.0);
+}
+
+#[test]
+fn star_hub_extreme_degree() {
+    // One vertex with n-1 out-edges: stresses single-partition bins.
+    let n = 5000u32;
+    let edges: Vec<(u32, u32)> = (1..n).map(|v| (0, v)).collect();
+    let g = graph_from_edges(n as usize, &edges);
+    let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(8), ..Default::default() });
+    let bfs = apps::bfs::run(&mut eng, 0);
+    assert_eq!(bfs.n_reached(), n as usize);
+    assert_eq!(bfs.stats.n_iters(), 2); // root scatter + empty check
+}
+
+#[test]
+fn unreachable_root_degenerate_frontier() {
+    let g = graph_from_edges(10, &[(0, 1)]);
+    let mut eng = Engine::new(g, PpmConfig::default());
+    let bfs = apps::bfs::run(&mut eng, 9); // deg(9) = 0
+    assert_eq!(bfs.n_reached(), 1);
+    assert!(bfs.stats.converged);
+}
+
+// ---------------------------------------------------- configurations
+
+#[test]
+fn k_exceeding_vertices_is_clamped() {
+    let g = gen::chain(5);
+    let eng = Engine::new(g, PpmConfig { k: Some(100), ..Default::default() });
+    assert!(eng.parts().k() <= 5);
+}
+
+#[test]
+fn extreme_bw_ratios_still_correct() {
+    let g = gen::rmat(9, Default::default(), false);
+    for ratio in [0.01, 100.0] {
+        let mut eng = Engine::new(
+            g.clone(),
+            PpmConfig { threads: 2, bw_ratio: ratio, ..Default::default() },
+        );
+        let res = apps::bfs::run(&mut eng, 0);
+        let fresh = apps::bfs::run(
+            &mut Engine::new(g.clone(), PpmConfig::default()),
+            0,
+        );
+        assert_eq!(res.n_reached(), fresh.n_reached(), "ratio {ratio}");
+    }
+}
+
+#[test]
+fn oversubscribed_threads_work() {
+    // 8 threads on a 1-hw-thread container: correctness must hold.
+    let g = gen::rmat(10, Default::default(), false);
+    let mut eng = Engine::new(g.clone(), PpmConfig { threads: 8, ..Default::default() });
+    let res = apps::bfs::run(&mut eng, 0);
+    let want = gpop::baselines::serial::bfs_levels(&g, 0);
+    assert_eq!(res.levels(0), want);
+}
+
+#[test]
+#[should_panic]
+fn zero_threads_rejected() {
+    let g = gen::chain(4);
+    let _ = Engine::new(g, PpmConfig { threads: 0, ..Default::default() });
+}
+
+#[test]
+#[should_panic]
+fn pjrt_blocks_shape_mismatch_panics() {
+    let g = gen::chain(5); // n=5 != k*q=4
+    let _ = gpop::runtime::pjrt::graph_to_blocks(&g, 2, 2);
+}

@@ -1,0 +1,210 @@
+//! Cross-module integration tests: CLI → engine → apps → IO → cachesim
+//! → PJRT, exercising the paths a user actually takes.
+
+use gpop::apps;
+use gpop::baselines::serial;
+use gpop::coordinator::{self, GraphSpec};
+use gpop::graph::{gen, io};
+use gpop::ppm::{Engine, ModePolicy, PpmConfig};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("gpop_it_{}_{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn cli_full_pipeline_gen_then_run() {
+    // gen a graph to disk, run three apps on it through the CLI layer.
+    let path = tmp("pipeline.bin");
+    let rc = coordinator::dispatch(
+        ["gen", "--graph", "rmat:10", "--out", path.to_str().unwrap()]
+            .map(String::from)
+            .to_vec(),
+    )
+    .unwrap();
+    assert_eq!(rc, 0);
+    let spec = format!("file:{}", path.display());
+    for app in ["bfs", "pr", "cc"] {
+        let rc = coordinator::dispatch(
+            ["run", "--app", app, "--graph", &spec, "--threads", "2", "--iters", "3"]
+                .map(String::from)
+                .to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rc, 0, "app {app}");
+    }
+    std::fs::remove_file(path).unwrap();
+}
+
+#[test]
+fn cli_config_file_supplies_defaults() {
+    let cfg = tmp("run.conf");
+    std::fs::write(&cfg, "app = pr\ngraph = er:100:400\niters = 2\nthreads = 2\n").unwrap();
+    let rc = coordinator::dispatch(
+        ["run", "--config", cfg.to_str().unwrap()].map(String::from).to_vec(),
+    )
+    .unwrap();
+    assert_eq!(rc, 0);
+    // CLI overrides the config value.
+    let rc = coordinator::dispatch(
+        ["run", "--config", cfg.to_str().unwrap(), "--app", "bfs"]
+            .map(String::from)
+            .to_vec(),
+    )
+    .unwrap();
+    assert_eq!(rc, 0);
+    // Missing config file is an error.
+    assert!(coordinator::dispatch(
+        ["run", "--config", "/no/such.conf"].map(String::from).to_vec()
+    )
+    .is_err());
+    std::fs::remove_file(cfg).unwrap();
+}
+
+#[test]
+fn cli_help_and_info() {
+    assert_eq!(coordinator::dispatch(vec!["help".into()]).unwrap(), 0);
+    assert_eq!(coordinator::dispatch(vec!["info".into()]).unwrap(), 0);
+    assert_eq!(coordinator::dispatch(vec![]).unwrap(), 2);
+}
+
+#[test]
+fn cli_cachesim_all_apps() {
+    for app in ["pr", "cc", "sssp"] {
+        let graph = if app == "sssp" { "rmat:9+w:1:4" } else { "rmat:9" };
+        let rc = coordinator::dispatch(
+            ["cachesim", "--app", app, "--graph", graph, "--iters", "2", "--cache-kb", "16"]
+                .map(String::from)
+                .to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rc, 0, "app {app}");
+    }
+}
+
+#[test]
+fn spec_roundtrips_through_both_io_formats() {
+    let g = GraphSpec::parse("rmat:9+w:1:3").unwrap().build().unwrap();
+    let bin = tmp("roundtrip.bin");
+    let el = tmp("roundtrip.el");
+    io::write_binary(&g, &bin).unwrap();
+    io::write_edge_list(&g, &el).unwrap();
+    let g_bin = io::read_binary(&bin).unwrap();
+    let g_el = io::read_edge_list(&el).unwrap();
+    assert_eq!(g_bin.out().targets(), g.out().targets());
+    assert_eq!(g_el.m(), g.m());
+    // Engines over all three must agree.
+    let d0 = apps::sssp::run(&mut Engine::new(g, PpmConfig::default()), 0).distance;
+    let d1 = apps::sssp::run(&mut Engine::new(g_bin, PpmConfig::default()), 0).distance;
+    let d2 = apps::sssp::run(&mut Engine::new(g_el, PpmConfig::default()), 0).distance;
+    assert_eq!(d0, d1);
+    for (a, b) in d0.iter().zip(&d2) {
+        // Edge-list text loses a little float precision.
+        assert!((a - b).abs() < 1e-3 || (a.is_infinite() && b.is_infinite()));
+    }
+    std::fs::remove_file(bin).unwrap();
+    std::fs::remove_file(el).unwrap();
+}
+
+#[test]
+fn one_engine_runs_every_app_sequentially() {
+    // The documented usage pattern: pay pre-processing once, run many
+    // algorithms (paper §5 Nibble amortization argument).
+    let g = gen::rmat(11, Default::default(), false);
+    let mut eng = Engine::new(g.clone(), PpmConfig { threads: 3, ..Default::default() });
+
+    let pr = apps::pagerank::run(&mut eng, 0.85, 5);
+    let serial_pr = serial::pagerank(&g, 0.85, 5);
+    for v in 0..g.n() {
+        assert!((pr.rank[v] as f64 - serial_pr[v]).abs() < 1e-5);
+    }
+
+    let bfs = apps::bfs::run(&mut eng, 0);
+    assert_eq!(
+        bfs.levels(0),
+        serial::bfs_levels(&g, 0),
+        "BFS after PageRank on the same engine"
+    );
+
+    let cc = apps::cc::run(&mut eng, 10_000);
+    assert_eq!(cc.label, serial::label_propagation(&g));
+
+    let nib = apps::nibble::run(&mut eng, &[3], 1e-4, 30);
+    let serial_nib = serial::nibble(&g, &[3], 1e-4, 30);
+    for v in 0..g.n() {
+        assert!((nib.pr[v] as f64 - serial_nib[v]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn mode_ablation_consistency_on_one_workload() {
+    // Fig. 9's premise: the three policies agree on results while
+    // differing in how they traverse.
+    let g = gen::rmat(12, Default::default(), false);
+    let mut results = Vec::new();
+    for mode in [ModePolicy::ForceSc, ModePolicy::ForceDc, ModePolicy::Hybrid] {
+        let mut eng =
+            Engine::new(g.clone(), PpmConfig { threads: 2, mode, ..Default::default() });
+        let res = apps::cc::run(&mut eng, 10_000);
+        // DC mode must never be reported under ForceSc and vice versa.
+        match mode {
+            ModePolicy::ForceSc => {
+                assert!(res.stats.iters.iter().all(|i| i.dc_parts == 0))
+            }
+            ModePolicy::ForceDc => {
+                assert!(res.stats.iters.iter().all(|i| i.sc_parts == 0))
+            }
+            ModePolicy::Hybrid => {}
+        }
+        results.push(res.label);
+    }
+    assert_eq!(results[0], results[1]);
+    assert_eq!(results[1], results[2]);
+}
+
+#[test]
+fn cachesim_gpop_advantage_on_real_histories() {
+    // End-to-end Tables 4/5 shape on a graph whose vertex data exceeds
+    // the simulated 16 KB cache.
+    use gpop::cachesim::model::{labelprop_history, pagerank_history, simulate, Framework};
+    use gpop::cachesim::CacheConfig;
+    let g = gen::rmat(14, Default::default(), false);
+    let cache = CacheConfig { size_bytes: 16 * 1024, line_bytes: 64, ways: 8 };
+    let pr_h = pagerank_history(&g, 3);
+    let lp_h = labelprop_history(&g);
+    for h in [&pr_h, &lp_h] {
+        let gpop = simulate(&g, Framework::Gpop, h, cache, 8);
+        let ligra = simulate(&g, Framework::Ligra, h, cache, 8);
+        assert!(ligra > gpop, "ligra {ligra} <= gpop {gpop}");
+    }
+}
+
+#[test]
+fn pjrt_artifacts_integration_when_built() {
+    // Full three-layer path (skips gracefully when artifacts absent;
+    // `make test` always builds them first).
+    let dir = gpop::runtime::pjrt::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = gpop::runtime::PjrtRuntime::new(&dir).unwrap();
+    let m = rt.manifest.clone();
+    let g = gen::erdos_renyi(m.n, m.n * 4, 7);
+    let (blocks, inv_deg) = gpop::runtime::pjrt::graph_to_blocks(&g, m.k, m.q);
+    let rank0 = vec![1.0f32 / m.n as f32; m.n];
+    let exe = rt.pagerank().unwrap();
+    // Fused executable == repeated single steps == native engine.
+    let fused = exe.run(&blocks, &rank0, &inv_deg, 0.85).unwrap();
+    let mut stepped = rank0.clone();
+    for _ in 0..m.iters {
+        stepped = exe.step(&blocks, &stepped, &inv_deg, 0.85).unwrap();
+    }
+    let mut eng = Engine::new(g, PpmConfig::with_threads(2));
+    let native = apps::pagerank::run(&mut eng, 0.85, m.iters);
+    for v in 0..m.n {
+        assert!((fused[v] - stepped[v]).abs() < 1e-6);
+        assert!((fused[v] - native.rank[v]).abs() < 1e-4);
+    }
+}

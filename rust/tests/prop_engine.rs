@@ -1,0 +1,207 @@
+//! Property tests over the PPM engine's core invariants (DESIGN.md
+//! §Key-invariants), driven by the mini framework in `prop_framework`.
+
+#[path = "prop_framework/mod.rs"]
+mod prop_framework;
+
+use gpop::apps;
+use gpop::baselines::serial;
+use gpop::partition::Partitioner;
+use gpop::ppm::{Engine, ModePolicy, PpmConfig};
+use prop_framework::{property, Gen};
+
+const CASES: u64 = 30;
+
+fn random_config(g: &mut Gen, n: usize) -> PpmConfig {
+    PpmConfig {
+        threads: g.usize_in(1, 4),
+        mode: *g.pick(&[ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc]),
+        bw_ratio: g.f64_in(0.5, 4.0),
+        k: if g.bool() { Some(g.usize_in(1, n.max(1))) } else { None },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_partitions_disjoint_and_covering() {
+    property("partition disjoint+covering", 200, |g| {
+        let n = g.sized(0, 10_000);
+        let k = g.usize_in(1, 64);
+        let p = Partitioner::with_k(n, k);
+        let mut seen = vec![false; n];
+        for part in 0..p.k() as u32 {
+            for v in p.range(part) {
+                prop_assert!(!seen[v as usize], "vertex {v} covered twice");
+                seen[v as usize] = true;
+                prop_assert_eq!(p.part_of(v), part, "part_of mismatch for {v}");
+                prop_assert!(p.local_index(v) < p.q(), "local index out of range");
+            }
+        }
+        prop_assert!(seen.iter().all(|&s| s), "some vertex uncovered (n={n}, k={k})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mode_choice_never_changes_bfs_result() {
+    // SC-only, DC-only and hybrid must agree with the serial reference:
+    // the §3.3 mode decision is a pure performance choice.
+    property("bfs mode-independence", CASES, |g| {
+        let graph = g.graph(600, 8);
+        let root = g.rng.below(graph.n() as u64) as u32;
+        let want = serial::bfs_levels(&graph, root);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            let mut cfg = random_config(g, graph.n());
+            cfg.mode = mode;
+            let mut eng = Engine::new(graph.clone(), cfg);
+            let res = apps::bfs::run(&mut eng, root);
+            let got = res.levels(root);
+            prop_assert_eq!(got, want, "mode {mode:?}, root {root}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pagerank_matches_serial_any_config() {
+    property("pagerank config-independence", CASES, |g| {
+        let graph = g.graph(500, 6);
+        let cfg = random_config(g, graph.n());
+        let iters = g.usize_in(1, 6);
+        let want = serial::pagerank(&graph, 0.85, iters);
+        let mut eng = Engine::new(graph.clone(), cfg.clone());
+        let res = apps::pagerank::run(&mut eng, 0.85, iters);
+        for v in 0..graph.n() {
+            let err = (res.rank[v] as f64 - want[v]).abs();
+            prop_assert!(
+                err < 1e-4,
+                "v={v}: {} vs {} (cfg {cfg:?}, iters {iters})",
+                res.rank[v],
+                want[v]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cc_fixpoint_matches_serial() {
+    property("labelprop fixpoint", CASES, |g| {
+        let graph = g.graph(400, 5);
+        let want = serial::label_propagation(&graph);
+        let mut eng = Engine::new(graph.clone(), random_config(g, graph.n()));
+        let res = apps::cc::run(&mut eng, 100_000);
+        prop_assert!(res.stats.converged, "did not converge");
+        prop_assert_eq!(res.label, want, "labels diverge");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sssp_matches_dijkstra() {
+    property("sssp vs dijkstra", CASES, |g| {
+        let base = g.graph(300, 5);
+        let graph = gpop::graph::gen::with_uniform_weights(&base, 0.5, 4.0, g.rng.next_u64());
+        let src = g.rng.below(graph.n() as u64) as u32;
+        let want = serial::sssp_dijkstra(&graph, src);
+        let mut eng = Engine::new(graph.clone(), random_config(g, graph.n()));
+        let res = apps::sssp::run(&mut eng, src);
+        for v in 0..graph.n() {
+            if want[v].is_finite() {
+                prop_assert!(
+                    (res.distance[v] - want[v]).abs() < 1e-3,
+                    "v={v}: {} vs {}",
+                    res.distance[v],
+                    want[v]
+                );
+            } else {
+                prop_assert!(res.distance[v].is_infinite(), "v={v} should be unreachable");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nibble_matches_serial_model() {
+    property("nibble vs straight-line model", CASES, |g| {
+        let graph = g.graph(300, 6);
+        let seeds = g.vertices(graph.n(), 3);
+        let eps = *g.pick(&[1e-3f32, 1e-4, 1e-5]);
+        let iters = g.usize_in(1, 20);
+        let want = serial::nibble(&graph, &seeds, eps as f64, iters);
+        let mut eng = Engine::new(graph.clone(), random_config(g, graph.n()));
+        let res = apps::nibble::run(&mut eng, &seeds, eps, iters);
+        for v in 0..graph.n() {
+            prop_assert!(
+                (res.pr[v] as f64 - want[v]).abs() < 1e-4,
+                "v={v}: {} vs {}",
+                res.pr[v],
+                want[v]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_messages_equal_active_edges_in_sc_mode() {
+    // Accounting identity: unweighted SC-mode gather reads exactly one
+    // message per active edge of the preceding scatter.
+    property("SC message accounting", CASES, |g| {
+        let graph = g.graph(500, 6);
+        if graph.is_weighted() {
+            return Ok(()); // identity below is for the unweighted layout
+        }
+        let mut eng = Engine::new(
+            graph.clone(),
+            PpmConfig {
+                threads: g.usize_in(1, 4),
+                mode: ModePolicy::ForceSc,
+                ..Default::default()
+            },
+        );
+        let prog = apps::bfs::Bfs::new(graph.n());
+        let root = g.rng.below(graph.n() as u64) as u32;
+        prog.parent.set(root, root as i32);
+        eng.load_frontier(&[root]);
+        for _ in 0..5 {
+            if eng.frontier_size() == 0 {
+                break;
+            }
+            let fr: u64 = eng
+                .frontier()
+                .iter()
+                .map(|&v| graph.out_degree(v) as u64)
+                .sum();
+            let stats = eng.iterate(&prog);
+            prop_assert_eq!(stats.messages, fr, "messages != active edges");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_reusable_across_runs() {
+    // Running BFS twice from different roots on one engine must give
+    // the same answers as fresh engines (state fully reset).
+    property("engine reuse", CASES, |g| {
+        let graph = g.graph(300, 5);
+        let r1 = g.rng.below(graph.n() as u64) as u32;
+        let r2 = g.rng.below(graph.n() as u64) as u32;
+        let mut eng = Engine::new(graph.clone(), random_config(g, graph.n()));
+        let a1 = apps::bfs::run(&mut eng, r1);
+        let a2 = apps::bfs::run(&mut eng, r2);
+        let b2 = {
+            let mut fresh = Engine::new(graph.clone(), PpmConfig::default());
+            apps::bfs::run(&mut fresh, r2)
+        };
+        prop_assert_eq!(
+            a2.levels(r2),
+            b2.levels(r2),
+            "reused engine diverged (roots {r1}, {r2})"
+        );
+        let _ = a1;
+        Ok(())
+    });
+}

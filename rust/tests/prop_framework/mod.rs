@@ -1,0 +1,116 @@
+//! A miniature property-testing framework (proptest is unavailable in
+//! this offline environment — DESIGN.md §Substitutions).
+//!
+//! Properties run against many deterministic PRNG seeds; on failure the
+//! seed is reported so the case can be replayed exactly
+//! (`GPOP_PROP_SEED=<seed>`), and small inputs are tried first (cheap
+//! shrinking by construction).
+
+use gpop::graph::{Graph, GraphBuilder};
+use gpop::util::rng::Rng;
+use gpop::VertexId;
+
+/// Input generator handle for one property case.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint in [0.0, 1.0]; early cases are small.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Scaled upper bound: early cases draw from a smaller range.
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let scaled_hi = lo + ((hi - lo) as f64 * self.size) as usize;
+        self.usize_in(lo, scaled_hi.max(lo))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// A random directed graph: n in [1, max_n], ~m edges, optional
+    /// weights/symmetry. Covers corner shapes (isolated vertices,
+    /// self-loop-free, parallel edges kept).
+    pub fn graph(&mut self, max_n: usize, max_degree: usize) -> Graph {
+        let n = self.sized(1, max_n);
+        let m = self.usize_in(0, n * max_degree);
+        let weighted = self.bool();
+        let mut b = GraphBuilder::new().with_n(n);
+        if weighted {
+            b = b.weighted();
+        }
+        for _ in 0..m {
+            let s = self.rng.below(n as u64) as VertexId;
+            let d = self.rng.below(n as u64) as VertexId;
+            if weighted {
+                b.add_weighted(s, d, 0.5 + self.rng.next_f32() * 4.0);
+            } else {
+                b.add(s, d);
+            }
+        }
+        b.build()
+    }
+
+    /// Random seed vertices (non-empty, within range).
+    pub fn vertices(&mut self, n: usize, max_count: usize) -> Vec<VertexId> {
+        let count = self.usize_in(1, max_count.min(n).max(1));
+        (0..count).map(|_| self.rng.below(n as u64) as VertexId).collect()
+    }
+}
+
+/// Run `f` for `cases` seeds; panic with the failing seed on error.
+pub fn property<F: Fn(&mut Gen) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    // Replay a single seed when requested.
+    if let Ok(seed) = std::env::var("GPOP_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("GPOP_PROP_SEED must be a u64");
+        let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
+        if let Err(e) = f(&mut g) {
+            panic!("property {name:?} failed on replayed seed {seed}: {e}");
+        }
+        return;
+    }
+    for i in 0..cases {
+        let seed = 0xC0FFEE ^ i.wrapping_mul(0x9E3779B97F4A7C15);
+        let size = ((i + 1) as f64 / cases as f64).min(1.0);
+        let mut g = Gen { rng: Rng::new(seed), size };
+        if let Err(e) = f(&mut g) {
+            panic!(
+                "property {name:?} failed on case {i}/{cases} (seed {seed}):\n  {e}\n\
+                 replay with GPOP_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{} != {}: {}", stringify!($a), stringify!($b), format!($($fmt)*)));
+        }
+    }};
+}
