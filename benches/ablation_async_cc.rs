@@ -11,10 +11,11 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps::{cc, cc_async};
+use gpop::api::{Convergence, Runner};
+use gpop::apps::{AsyncLabelProp, LabelProp};
 use gpop::bench::{bench, preamble, Table};
 use gpop::exec::ThreadPool;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 use gpop::util::fmt;
 
 fn main() {
@@ -28,14 +29,15 @@ fn main() {
     let mut table = Table::new(&["dataset", "variant", "time", "iters", "messages"]);
     for d in common::datasets() {
         let g = common::symmetrized(&d.graph);
-        let mut sync_eng =
-            Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+        let session = common::session(&g, PpmConfig { threads, ..Default::default() });
+        let runner =
+            Runner::on(&session).until(Convergence::FrontierEmpty.or_max_iters(10_000));
         let mut iters = 0;
         let mut msgs = 0;
         let t = bench("sync", cfg, || {
-            let res = cc::run(&mut sync_eng, 10_000);
-            iters = res.stats.n_iters();
-            msgs = res.stats.total_messages();
+            let res = runner.run(LabelProp::new(g.n()));
+            iters = res.n_iters();
+            msgs = res.total_messages();
         });
         table.row(&[
             d.name.clone(),
@@ -44,12 +46,10 @@ fn main() {
             iters.to_string(),
             fmt::si(msgs as f64),
         ]);
-        let mut async_eng =
-            Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
         let t = bench("async", cfg, || {
-            let res = cc_async::run(&mut async_eng, 10_000);
-            iters = res.stats.n_iters();
-            msgs = res.stats.total_messages();
+            let res = runner.run(AsyncLabelProp::new(g.n()));
+            iters = res.n_iters();
+            msgs = res.total_messages();
         });
         table.row(&[
             d.name.clone(),

@@ -9,11 +9,12 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps;
+use gpop::api::Runner;
+use gpop::apps::Sssp;
 use gpop::bench::{bench, preamble, Table};
 use gpop::exec::ThreadPool;
 use gpop::metrics::measure_bandwidth;
-use gpop::ppm::{Engine, ModePolicy, PpmConfig};
+use gpop::ppm::{ModePolicy, PpmConfig};
 use gpop::util::fmt;
 
 fn main() {
@@ -35,17 +36,14 @@ fn main() {
     let cfg = common::bench_config();
     let mut table = Table::new(&["policy", "bw-ratio", "time", "dc scatters", "sc scatters"]);
     let mut run = |name: &str, mode: ModePolicy, ratio: f64| {
-        let mut eng = Engine::new(
-            g.clone(),
+        let session = common::session(
+            &g,
             PpmConfig { threads, mode, bw_ratio: ratio, ..Default::default() },
         );
         let mut last = (0usize, 0usize);
         let t = bench(name, cfg, || {
-            let res = apps::sssp::run(&mut eng, 0);
-            last = (
-                res.stats.iters.iter().map(|i| i.dc_parts).sum(),
-                res.stats.iters.iter().map(|i| i.sc_parts).sum(),
-            );
+            let res = Runner::on(&session).run(Sssp::new(g.n(), 0));
+            last = (res.dc_parts(), res.sc_parts());
         })
         .median();
         table.row(&[

@@ -9,10 +9,11 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps;
+use gpop::api::{Convergence, Runner};
+use gpop::apps::PageRank;
 use gpop::bench::{bench, preamble, Table};
 use gpop::exec::ThreadPool;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 use gpop::util::fmt;
 
 const ITERS: usize = 5;
@@ -26,9 +27,7 @@ fn main() {
     );
     let d = &common::datasets()[0];
     let g = &d.graph;
-    let auto = Engine::new(g.clone(), PpmConfig { threads, ..Default::default() })
-        .parts()
-        .k();
+    let auto = PpmConfig { threads, ..Default::default() }.partitioner(g.n()).k();
     println!("# dataset {} — heuristic picks k = {auto}", d.name);
     let cfg = common::bench_config();
     let mut table = Table::new(&["k", "time", "edges/s", "note"]);
@@ -36,10 +35,12 @@ fn main() {
     ks.sort_unstable();
     ks.dedup();
     for k in ks {
-        let mut eng =
-            Engine::new(g.clone(), PpmConfig { threads, k: Some(k), ..Default::default() });
+        let session =
+            common::session(g, PpmConfig { threads, k: Some(k), ..Default::default() });
         let t = bench("pr", cfg, || {
-            let _ = apps::pagerank::run(&mut eng, 0.85, ITERS);
+            let _ = Runner::on(&session)
+                .until(Convergence::MaxIters(ITERS))
+                .run(PageRank::new(g, 0.85));
         })
         .median();
         table.row(&[

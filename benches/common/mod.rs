@@ -5,10 +5,18 @@
 //! paper's datasets are billions of edges on a 36-core Xeon; these
 //! defaults reproduce the *shapes* at container scale (DESIGN.md
 //! §Substitutions).
+//!
+//! Graphs are handed out as `Arc<Graph>`: benches build sessions and
+//! engines straight from the shared handle, so nothing in the bench
+//! suite deep-clones a graph.
 
 #![allow(dead_code)]
 
+use std::sync::Arc;
+
+use gpop::api::EngineSession;
 use gpop::graph::{gen, Graph};
+use gpop::ppm::PpmConfig;
 
 pub fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
@@ -34,8 +42,8 @@ pub fn exec_datasets() -> Vec<Dataset> {
     let n_er = 1usize << (s - 1);
     let er = gen::erdos_renyi(n_er, n_er * 16, 99);
     vec![
-        Dataset { name: format!("rmat{s}"), graph: rmat },
-        Dataset { name: format!("er{}", s - 1), graph: er },
+        Dataset { name: format!("rmat{s}"), graph: Arc::new(rmat) },
+        Dataset { name: format!("er{}", s - 1), graph: Arc::new(er) },
     ]
 }
 
@@ -55,7 +63,7 @@ pub fn bench_config() -> gpop::bench::BenchConfig {
 /// workload) and a uniform Erdős–Rényi contrast point.
 pub struct Dataset {
     pub name: String,
-    pub graph: Graph,
+    pub graph: Arc<Graph>,
 }
 
 pub fn datasets() -> Vec<Dataset> {
@@ -64,25 +72,30 @@ pub fn datasets() -> Vec<Dataset> {
     let n_er = 1usize << (s - 1);
     let er = gen::erdos_renyi(n_er, n_er * 16, 99);
     vec![
-        Dataset { name: format!("rmat{s}"), graph: rmat },
-        Dataset { name: format!("er{}", s - 1), graph: er },
+        Dataset { name: format!("rmat{s}"), graph: Arc::new(rmat) },
+        Dataset { name: format!("er{}", s - 1), graph: Arc::new(er) },
     ]
 }
 
+/// One engine session per (graph, config): the standard bench setup.
+pub fn session(graph: &Arc<Graph>, config: PpmConfig) -> EngineSession {
+    EngineSession::new(graph.clone(), config)
+}
+
 /// Symmetrized variant (for CC workloads).
-pub fn symmetrized(g: &Graph) -> Graph {
+pub fn symmetrized(g: &Graph) -> Arc<Graph> {
     let mut b = gpop::graph::GraphBuilder::new().with_n(g.n()).symmetrize();
     for v in 0..g.n() as u32 {
         for &u in g.out().neighbors(v) {
             b.add(v, u);
         }
     }
-    b.build()
+    Arc::new(b.build())
 }
 
 /// Weighted variant (for SSSP workloads).
-pub fn weighted(g: &Graph) -> Graph {
-    gen::with_uniform_weights(g, 1.0, 4.0, 7)
+pub fn weighted(g: &Graph) -> Arc<Graph> {
+    Arc::new(gen::with_uniform_weights(g, 1.0, 4.0, 7))
 }
 
 /// Simulated-L2 size for the table benches (KB). The paper's datasets

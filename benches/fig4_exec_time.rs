@@ -12,11 +12,12 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps;
+use gpop::api::{Convergence, Runner};
+use gpop::apps::{Bfs, LabelProp, Nibble, PageRank, Sssp};
 use gpop::baselines::{spmv, vc};
 use gpop::bench::{bench, preamble, Table};
 use gpop::exec::ThreadPool;
-use gpop::ppm::{Engine, ModePolicy, PpmConfig};
+use gpop::ppm::{ModePolicy, PpmConfig};
 use gpop::util::fmt;
 
 const PR_ITERS: usize = 10;
@@ -34,9 +35,9 @@ fn main() {
     for d in common::exec_datasets() {
         let g = &d.graph;
         let wg = common::weighted(g);
-        let mk_engine = |mode: ModePolicy, weighted: bool| {
-            Engine::new(
-                if weighted { wg.clone() } else { g.clone() },
+        let mk_session = |mode: ModePolicy, weighted: bool| {
+            common::session(
+                if weighted { &wg } else { g },
                 PpmConfig { threads, mode, ..Default::default() },
             )
         };
@@ -45,17 +46,17 @@ fn main() {
         let mut rows: Vec<(&str, &str, f64)> = Vec::new();
 
         // BFS
-        let mut eng = mk_engine(ModePolicy::Hybrid, false);
+        let s = mk_session(ModePolicy::Hybrid, false);
         let t = bench("bfs/gpop", cfg, || {
-            let _ = apps::bfs::run(&mut eng, 0);
+            let _ = Runner::on(&s).run(Bfs::new(g.n(), 0));
         });
         rows.push(("bfs", "GPOP", t.median()));
-        let mut eng = mk_engine(ModePolicy::ForceSc, false);
+        let s = mk_session(ModePolicy::ForceSc, false);
         let t = bench("bfs/gpop_sc", cfg, || {
-            let _ = apps::bfs::run(&mut eng, 0);
+            let _ = Runner::on(&s).run(Bfs::new(g.n(), 0));
         });
         rows.push(("bfs", "GPOP_SC", t.median()));
-        let mut gh = g.clone();
+        let mut gh = (**g).clone();
         gh.ensure_csc();
         let t = bench("bfs/ligra", cfg, || {
             let mut pool = ThreadPool::new(threads);
@@ -76,17 +77,21 @@ fn main() {
         rows.push(("bfs", "GraphMat", t.median()));
 
         // PageRank
-        let mut eng = mk_engine(ModePolicy::Hybrid, false);
+        let s = mk_session(ModePolicy::Hybrid, false);
         let t = bench("pr/gpop", cfg, || {
-            let _ = apps::pagerank::run(&mut eng, 0.85, PR_ITERS);
+            let _ = Runner::on(&s)
+                .until(Convergence::MaxIters(PR_ITERS))
+                .run(PageRank::new(g, 0.85));
         });
         rows.push(("pr", "GPOP", t.median()));
-        let mut eng = mk_engine(ModePolicy::ForceSc, false);
+        let s = mk_session(ModePolicy::ForceSc, false);
         let t = bench("pr/gpop_sc", cfg, || {
-            let _ = apps::pagerank::run(&mut eng, 0.85, PR_ITERS);
+            let _ = Runner::on(&s)
+                .until(Convergence::MaxIters(PR_ITERS))
+                .run(PageRank::new(g, 0.85));
         });
         rows.push(("pr", "GPOP_SC", t.median()));
-        let mut gp = g.clone();
+        let mut gp = (**g).clone();
         gp.ensure_csc();
         let t = bench("pr/ligra", cfg, || {
             let mut pool = ThreadPool::new(threads);
@@ -106,17 +111,18 @@ fn main() {
 
         // Label propagation / CC
         let sg = common::symmetrized(g);
-        let mut eng = Engine::new(sg.clone(), PpmConfig { threads, ..Default::default() });
+        let cc_until = || Convergence::FrontierEmpty.or_max_iters(10_000);
+        let s = common::session(&sg, PpmConfig { threads, ..Default::default() });
         let t = bench("cc/gpop", cfg, || {
-            let _ = apps::cc::run(&mut eng, 10_000);
+            let _ = Runner::on(&s).until(cc_until()).run(LabelProp::new(sg.n()));
         });
         rows.push(("cc", "GPOP", t.median()));
-        let mut eng = Engine::new(
-            sg.clone(),
+        let s = common::session(
+            &sg,
             PpmConfig { threads, mode: ModePolicy::ForceSc, ..Default::default() },
         );
         let t = bench("cc/gpop_sc", cfg, || {
-            let _ = apps::cc::run(&mut eng, 10_000);
+            let _ = Runner::on(&s).until(cc_until()).run(LabelProp::new(sg.n()));
         });
         rows.push(("cc", "GPOP_SC", t.median()));
         let t = bench("cc/ligra", cfg, || {
@@ -133,14 +139,14 @@ fn main() {
         rows.push(("cc", "GraphMat", t.median()));
 
         // SSSP (weighted)
-        let mut eng = mk_engine(ModePolicy::Hybrid, true);
+        let s = mk_session(ModePolicy::Hybrid, true);
         let t = bench("sssp/gpop", cfg, || {
-            let _ = apps::sssp::run(&mut eng, 0);
+            let _ = Runner::on(&s).run(Sssp::new(wg.n(), 0));
         });
         rows.push(("sssp", "GPOP", t.median()));
-        let mut eng = mk_engine(ModePolicy::ForceSc, true);
+        let s = mk_session(ModePolicy::ForceSc, true);
         let t = bench("sssp/gpop_sc", cfg, || {
-            let _ = apps::sssp::run(&mut eng, 0);
+            let _ = Runner::on(&s).run(Sssp::new(wg.n(), 0));
         });
         rows.push(("sssp", "GPOP_SC", t.median()));
         let t = bench("sssp/ligra", cfg, || {
@@ -161,14 +167,15 @@ fn main() {
             .find(|&v| (2..=8).contains(&g.out_degree(v)))
             .unwrap_or(0);
         let eps = 1e-4f32;
-        let mut eng = mk_engine(ModePolicy::Hybrid, false);
+        let nib_until = || Convergence::FrontierEmpty.or_max_iters(100);
+        let s = mk_session(ModePolicy::Hybrid, false);
         let t = bench("nibble/gpop", cfg, || {
-            let _ = apps::nibble::run(&mut eng, &[seed], eps, 100);
+            let _ = Runner::on(&s).until(nib_until()).run(Nibble::new(g, eps, &[seed]));
         });
         rows.push(("nibble", "GPOP", t.median()));
-        let mut eng = mk_engine(ModePolicy::ForceSc, false);
+        let s = mk_session(ModePolicy::ForceSc, false);
         let t = bench("nibble/gpop_sc", cfg, || {
-            let _ = apps::nibble::run(&mut eng, &[seed], eps, 100);
+            let _ = Runner::on(&s).until(nib_until()).run(Nibble::new(g, eps, &[seed]));
         });
         rows.push(("nibble", "GPOP_SC", t.median()));
         let t = bench("nibble/ligra", cfg, || {

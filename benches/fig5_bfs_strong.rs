@@ -10,12 +10,14 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps;
+use gpop::api::Runner;
+use gpop::apps::Bfs;
 use gpop::baselines::serial;
 use gpop::bench::{bench, preamble, Table};
 use gpop::graph::gen;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 use gpop::util::fmt;
+use std::sync::Arc;
 
 fn main() {
     let scales = [common::base_scale() - 2, common::base_scale()];
@@ -27,7 +29,7 @@ fn main() {
     let cfg = common::bench_config();
     let mut table = Table::new(&["graph", "threads", "time", "speedup vs serial"]);
     for scale in scales {
-        let g = gen::rmat(scale, Default::default(), false);
+        let g = Arc::new(gen::rmat(scale, Default::default(), false));
         let t_serial = bench("serial", cfg, || {
             let _ = serial::bfs_parents(&g, 0);
         })
@@ -39,9 +41,10 @@ fn main() {
             "1.00x".into(),
         ]);
         for threads in common::thread_sweep() {
-            let mut eng = Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+            let session =
+                common::session(&g, PpmConfig { threads, ..Default::default() });
             let t = bench("gpop", cfg, || {
-                let _ = apps::bfs::run(&mut eng, 0);
+                let _ = Runner::on(&session).run(Bfs::new(g.n(), 0));
             })
             .median();
             table.row(&[

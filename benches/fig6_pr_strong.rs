@@ -7,12 +7,14 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps;
+use gpop::api::{Convergence, Runner};
+use gpop::apps::PageRank;
 use gpop::baselines::serial;
 use gpop::bench::{bench, preamble, Table};
 use gpop::graph::gen;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 use gpop::util::fmt;
+use std::sync::Arc;
 
 const ITERS: usize = 10;
 
@@ -27,7 +29,7 @@ fn main() {
     let mut table =
         Table::new(&["graph", "threads", "time", "speedup vs serial", "edges/s"]);
     for scale in scales {
-        let g = gen::rmat(scale, Default::default(), false);
+        let g = Arc::new(gen::rmat(scale, Default::default(), false));
         let edges = (g.m() * ITERS) as f64;
         let t_serial = bench("serial", cfg, || {
             let _ = serial::pagerank(&g, 0.85, ITERS);
@@ -41,9 +43,12 @@ fn main() {
             fmt::si(edges / t_serial),
         ]);
         for threads in common::thread_sweep() {
-            let mut eng = Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+            let session =
+                common::session(&g, PpmConfig { threads, ..Default::default() });
             let t = bench("gpop", cfg, || {
-                let _ = apps::pagerank::run(&mut eng, 0.85, ITERS);
+                let _ = Runner::on(&session)
+                    .until(Convergence::MaxIters(ITERS))
+                    .run(PageRank::new(&g, 0.85));
             })
             .median();
             table.row(&[

@@ -8,11 +8,13 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps;
+use gpop::api::Runner;
+use gpop::apps::Bfs;
 use gpop::bench::{bench, preamble, Table};
 use gpop::graph::gen;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 use gpop::util::fmt;
+use std::sync::Arc;
 
 fn main() {
     let base = common::base_scale() - 3;
@@ -28,11 +30,11 @@ fn main() {
     let mut table = Table::new(&["graph", "edges(M)", "threads", "time", "vs first"]);
     let mut first = None;
     for (scale, threads) in points {
-        let g = gen::rmat(scale, Default::default(), false);
+        let g = Arc::new(gen::rmat(scale, Default::default(), false));
         let edges_m = g.m() as f64 / 1e6;
-        let mut eng = Engine::new(g, PpmConfig { threads, ..Default::default() });
+        let session = common::session(&g, PpmConfig { threads, ..Default::default() });
         let t = bench("gpop", cfg, || {
-            let _ = apps::bfs::run(&mut eng, 0);
+            let _ = Runner::on(&session).run(Bfs::new(g.n(), 0));
         })
         .median();
         let base_t = *first.get_or_insert(t);

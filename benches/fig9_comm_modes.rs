@@ -10,10 +10,11 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps;
+use gpop::api::{Convergence, Runner};
+use gpop::apps::{Bfs, LabelProp, Sssp};
 use gpop::bench::{preamble, Table};
 use gpop::exec::ThreadPool;
-use gpop::ppm::{Engine, IterStats, ModePolicy, PpmConfig};
+use gpop::ppm::{IterStats, ModePolicy, PpmConfig};
 use gpop::util::fmt;
 
 fn iter_times(stats: &[IterStats]) -> Vec<f64> {
@@ -67,32 +68,32 @@ fn main() {
         Table::new(&["app", "iter", "frontier", "SC", "DC", "hybrid"]);
 
     // BFS
+    let session = common::session(g, PpmConfig { threads, ..Default::default() });
     run_modes("bfs", &mut table, |mode| {
-        let mut eng =
-            Engine::new(g.clone(), PpmConfig { threads, mode, ..Default::default() });
-        let res = apps::bfs::run(&mut eng, 0);
-        let fr = res.stats.iters.iter().map(|i| i.frontier).collect();
-        (res.stats.iters, fr)
+        let res = Runner::on(&session).policy(mode).run(Bfs::new(g.n(), 0));
+        let fr = res.iters.iter().map(|i| i.frontier).collect();
+        (res.iters, fr)
     });
 
     // Label propagation (symmetrized)
     let sg = common::symmetrized(g);
+    let ssession = common::session(&sg, PpmConfig { threads, ..Default::default() });
     run_modes("labelprop", &mut table, |mode| {
-        let mut eng =
-            Engine::new(sg.clone(), PpmConfig { threads, mode, ..Default::default() });
-        let res = apps::cc::run(&mut eng, 10_000);
-        let fr = res.stats.iters.iter().map(|i| i.frontier).collect();
-        (res.stats.iters, fr)
+        let res = Runner::on(&ssession)
+            .policy(mode)
+            .until(Convergence::FrontierEmpty.or_max_iters(10_000))
+            .run(LabelProp::new(sg.n()));
+        let fr = res.iters.iter().map(|i| i.frontier).collect();
+        (res.iters, fr)
     });
 
     // SSSP (weighted)
     let wg = common::weighted(g);
+    let wsession = common::session(&wg, PpmConfig { threads, ..Default::default() });
     run_modes("sssp", &mut table, |mode| {
-        let mut eng =
-            Engine::new(wg.clone(), PpmConfig { threads, mode, ..Default::default() });
-        let res = apps::sssp::run(&mut eng, 0);
-        let fr = res.stats.iters.iter().map(|i| i.frontier).collect();
-        (res.stats.iters, fr)
+        let res = Runner::on(&wsession).policy(mode).run(Sssp::new(wg.n(), 0));
+        let fr = res.iters.iter().map(|i| i.frontier).collect();
+        (res.iters, fr)
     });
 
     table.print();

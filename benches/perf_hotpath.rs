@@ -8,11 +8,12 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use gpop::apps;
+use gpop::api::{Convergence, Runner};
+use gpop::apps::{Bfs, PageRank};
 use gpop::bench::{preamble, Table};
 use gpop::exec::ThreadPool;
 use gpop::metrics::measure_bandwidth;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 use gpop::util::fmt;
 
 const ITERS: usize = 10;
@@ -26,10 +27,13 @@ fn main() {
     );
     let d = &common::datasets()[0];
     let g = &d.graph;
-    let mut eng = Engine::new(g.clone(), PpmConfig { threads, ..Default::default() });
+    let session = common::session(g, PpmConfig { threads, ..Default::default() });
+    let runner = Runner::on(&session);
 
     // Phase breakdown over a PageRank run (all-DC steady state).
-    let res = apps::pagerank::run(&mut eng, 0.85, ITERS);
+    let res = Runner::on(&session)
+        .until(Convergence::MaxIters(ITERS))
+        .run(PageRank::new(g, 0.85));
     let (mut ts, mut tg, mut tf, mut msgs) = (0.0, 0.0, 0.0, 0u64);
     for it in &res.iters {
         ts += it.t_scatter;
@@ -62,13 +66,13 @@ fn main() {
         fmt::si((g.m() * ITERS) as f64 / total)
     );
 
-    // BFS end-to-end (frontier-driven path).
-    let bres = apps::bfs::run(&mut eng, 0);
-    let btime: f64 = bres.stats.iters.iter().map(|i| i.total_time()).sum();
+    // BFS end-to-end (frontier-driven path, reusing the pooled engine).
+    let bres = runner.run(Bfs::new(g.n(), 0));
+    let btime: f64 = bres.iters.iter().map(|i| i.total_time()).sum();
     println!(
         "bfs: {} iters, {} in-engine, {} msgs/s",
-        bres.stats.n_iters(),
+        bres.n_iters(),
         fmt::secs(btime),
-        fmt::si(bres.stats.total_messages() as f64 / btime)
+        fmt::si(bres.total_messages() as f64 / btime)
     );
 }

@@ -2,19 +2,20 @@
 //!
 //! Exercises every layer on a Graph500-style RMAT workload (default
 //! scale 18: 262K vertices, ~4.2M edges — pass a scale argument to go
-//! bigger): graph generation → partitioning/PNG pre-processing → all
-//! five paper applications through the PPM engine (hybrid mode) →
-//! per-iteration logs → cross-checks against serial references →
-//! throughput/metrics report. This is the run recorded in
+//! bigger): graph generation → ONE `EngineSession` (partitioning/PNG
+//! pre-processing paid once) → all five paper applications through the
+//! `Runner` → per-iteration logs → cross-checks against serial
+//! references → throughput/metrics report. This is the run recorded in
 //! EXPERIMENTS.md §End-to-end.
 //!
 //! Run: `cargo run --release --example e2e_driver [scale] [threads]`
 
-use gpop::apps;
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::{bfs, cc, Bfs, LabelProp, Nibble, PageRank, Sssp};
 use gpop::baselines::serial;
 use gpop::exec::ThreadPool;
 use gpop::graph::gen;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 use gpop::util::fmt;
 use std::time::Instant;
 
@@ -30,7 +31,7 @@ fn main() {
     println!("workload: rmat{scale} (Graph500 params, degree 16), {threads} threads\n");
 
     let t0 = Instant::now();
-    let graph = gen::rmat(scale, Default::default(), false);
+    let graph = std::sync::Arc::new(gen::rmat(scale, Default::default(), false));
     println!(
         "[gen]  {} vertices, {} edges in {}",
         fmt::si(graph.n() as f64),
@@ -40,67 +41,73 @@ fn main() {
 
     let t1 = Instant::now();
     let config = PpmConfig { threads, ..Default::default() };
-    let mut engine = Engine::new(graph.clone(), config);
+    let session = EngineSession::new(graph.clone(), config);
     println!(
         "[prep] k = {} partitions (q = {}) in {} — bins + PNG + active lists",
-        engine.parts().k(),
-        engine.parts().q(),
+        session.parts().k(),
+        session.parts().q(),
         fmt::secs(t1.elapsed().as_secs_f64())
     );
+    let runner = Runner::on(&session);
 
     // ---------------- PageRank ----------------
     let t = Instant::now();
-    let pr = apps::pagerank::run(&mut engine, 0.85, 10);
+    let pr = Runner::on(&session)
+        .until(Convergence::MaxIters(10))
+        .run(PageRank::new(&graph, 0.85));
     let pr_time = t.elapsed().as_secs_f64();
     let edges10 = graph.m() as f64 * 10.0;
     println!(
         "\n[pagerank] 10 iters in {} — {} edges/s ({} DC / {} SC scatters)",
         fmt::secs(pr_time),
         fmt::si(edges10 / pr_time),
-        pr.iters.iter().map(|i| i.dc_parts).sum::<usize>(),
-        pr.iters.iter().map(|i| i.sc_parts).sum::<usize>(),
+        pr.dc_parts(),
+        pr.sc_parts(),
     );
-    let mass: f64 = pr.rank.iter().map(|&x| x as f64).sum();
+    let mass: f64 = pr.output.iter().map(|&x| x as f64).sum();
     println!("[pagerank] rank mass = {mass:.4} (≤ 1, dangling dropped)");
 
     // ---------------- BFS ----------------
     let t = Instant::now();
-    let bfs = apps::bfs::run(&mut engine, 0);
+    let bfs_rep = runner.run(Bfs::new(graph.n(), 0));
     let bfs_time = t.elapsed().as_secs_f64();
+    let bfs_reached = bfs::n_reached(&bfs_rep.output);
     let serial_reach = serial::bfs_levels(&graph, 0).iter().filter(|&&l| l >= 0).count();
-    assert_eq!(bfs.n_reached(), serial_reach, "BFS reachability mismatch vs serial");
+    assert_eq!(bfs_reached, serial_reach, "BFS reachability mismatch vs serial");
     println!(
         "\n[bfs] {} iters, reached {} in {} — {} edges/s (verified vs serial)",
-        bfs.stats.n_iters(),
-        fmt::si(bfs.n_reached() as f64),
+        bfs_rep.n_iters(),
+        fmt::si(bfs_reached as f64),
         fmt::secs(bfs_time),
-        fmt::si(bfs.stats.total_messages() as f64 / bfs_time)
+        fmt::si(bfs_rep.total_messages() as f64 / bfs_time)
     );
 
     // ---------------- Connected components ----------------
     let t = Instant::now();
-    let cc = apps::cc::run(&mut engine, 10_000);
+    let cc_rep = Runner::on(&session)
+        .until(Convergence::FrontierEmpty.or_max_iters(10_000))
+        .run(LabelProp::new(graph.n()));
     let cc_time = t.elapsed().as_secs_f64();
     println!(
         "\n[cc] {} iters, {} label classes in {}",
-        cc.stats.n_iters(),
-        fmt::si(cc.n_components() as f64),
+        cc_rep.n_iters(),
+        fmt::si(cc::n_components(&cc_rep.output) as f64),
         fmt::secs(cc_time)
     );
 
     // ---------------- SSSP (weighted) ----------------
     let t = Instant::now();
     let wg = gen::with_uniform_weights(&graph, 1.0, 4.0, 7);
-    let mut wengine = Engine::new(wg.clone(), PpmConfig { threads, ..Default::default() });
+    let wsession = EngineSession::new(wg, PpmConfig { threads, ..Default::default() });
     let prep_w = t.elapsed().as_secs_f64();
     let t = Instant::now();
-    let sssp = apps::sssp::run(&mut wengine, 0);
+    let sssp = Runner::on(&wsession).run(Sssp::new(graph.n(), 0));
     let sssp_time = t.elapsed().as_secs_f64();
-    let reached = sssp.distance.iter().filter(|d| d.is_finite()).count();
+    let reached = sssp.output.iter().filter(|d| d.is_finite()).count();
     assert_eq!(reached, serial_reach, "SSSP reachability mismatch");
     println!(
         "\n[sssp] {} iters, reached {} in {} (weighted prep {})",
-        sssp.stats.n_iters(),
+        sssp.n_iters(),
         fmt::si(reached as f64),
         fmt::secs(sssp_time),
         fmt::secs(prep_w)
@@ -113,21 +120,23 @@ fn main() {
     let seed = (0..graph.n() as u32)
         .find(|&v| (1..=4).contains(&graph.out_degree(v)))
         .unwrap_or(0);
-    let nib = apps::nibble::run(&mut engine, &[seed], 1e-3, 200);
+    let nib = Runner::on(&session)
+        .until(Convergence::FrontierEmpty.or_max_iters(200))
+        .run(Nibble::new(&graph, 1e-3, &[seed]));
     let nib_time = t.elapsed().as_secs_f64();
-    let o_e_cost = nib.stats.n_iters() as u64 * graph.m() as u64;
+    let o_e_cost = nib.n_iters() as u64 * graph.m() as u64;
     println!(
         "\n[nibble] seed {seed} (deg {}): support {} / {} vertices in {} — {} messages \
          vs {} for an O(E)/iter engine",
         graph.out_degree(seed),
-        fmt::si(nib.support as f64),
+        fmt::si(nib.output.support as f64),
         fmt::si(graph.n() as f64),
         fmt::secs(nib_time),
-        fmt::si(nib.stats.total_messages() as f64),
+        fmt::si(nib.total_messages() as f64),
         fmt::si(o_e_cost as f64)
     );
     assert!(
-        nib.stats.total_messages() * 20 < o_e_cost.max(1),
+        nib.total_messages() * 20 < o_e_cost.max(1),
         "nibble must do a small fraction of O(E)-per-iteration work"
     );
 
@@ -143,26 +152,26 @@ fn main() {
     tab.row(&[
         "bfs".into(),
         fmt::secs(bfs_time),
-        bfs.stats.n_iters().to_string(),
-        format!("{} msgs/s", fmt::si(bfs.stats.total_messages() as f64 / bfs_time)),
+        bfs_rep.n_iters().to_string(),
+        format!("{} msgs/s", fmt::si(bfs_rep.total_messages() as f64 / bfs_time)),
     ]);
     tab.row(&[
         "cc".into(),
         fmt::secs(cc_time),
-        cc.stats.n_iters().to_string(),
-        format!("{} msgs/s", fmt::si(cc.stats.total_messages() as f64 / cc_time)),
+        cc_rep.n_iters().to_string(),
+        format!("{} msgs/s", fmt::si(cc_rep.total_messages() as f64 / cc_time)),
     ]);
     tab.row(&[
         "sssp".into(),
         fmt::secs(sssp_time),
-        sssp.stats.n_iters().to_string(),
-        format!("{} msgs/s", fmt::si(sssp.stats.total_messages() as f64 / sssp_time)),
+        sssp.n_iters().to_string(),
+        format!("{} msgs/s", fmt::si(sssp.total_messages() as f64 / sssp_time)),
     ]);
     tab.row(&[
         "nibble".into(),
         fmt::secs(nib_time),
-        nib.stats.n_iters().to_string(),
-        format!("support {}", nib.support),
+        nib.n_iters().to_string(),
+        format!("support {}", nib.output.support),
     ]);
     tab.print();
     println!("\nall cross-checks PASSED");

@@ -9,14 +9,15 @@
 //!
 //! Run: `make artifacts && cargo run --release --example hybrid_pjrt`
 
-use gpop::apps;
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::PageRank;
 use gpop::graph::gen;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 use gpop::runtime::{pjrt, PjrtRuntime};
 use gpop::util::fmt;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = pjrt::default_artifacts_dir();
     let rt = PjrtRuntime::new(&dir)?;
     let m = rt.manifest.clone();
@@ -56,19 +57,21 @@ fn main() -> anyhow::Result<()> {
     println!("1 fused run() call: {}", fmt::secs(fused_time));
 
     // --- native engine cross-check
-    let mut engine = Engine::new(graph, PpmConfig { threads: 4, ..Default::default() });
-    let native = apps::pagerank::run(&mut engine, 0.85, m.iters);
+    let session = EngineSession::new(graph, PpmConfig { threads: 4, ..Default::default() });
+    let native = Runner::on(&session)
+        .until(Convergence::MaxIters(m.iters))
+        .run(PageRank::new(session.graph(), 0.85));
 
     let err = |a: &[f32], b: &[f32]| {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
     };
-    let e_step = err(&rank, &native.rank);
-    let e_fused = err(&fused, &native.rank);
+    let e_step = err(&rank, &native.output);
+    let e_fused = err(&fused, &native.output);
     let e_paths = err(&rank, &fused);
     println!("\nmax |stepped - native| = {e_step:.3e}");
     println!("max |fused   - native| = {e_fused:.3e}");
     println!("max |stepped - fused|  = {e_paths:.3e}");
-    anyhow::ensure!(e_step < 1e-4 && e_fused < 1e-4, "layer mismatch");
+    assert!(e_step < 1e-4 && e_fused < 1e-4, "layer mismatch");
     println!("\nthree-layer numerics check PASSED");
     Ok(())
 }

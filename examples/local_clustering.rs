@@ -8,9 +8,10 @@
 //!
 //! Run: `cargo run --release --example local_clustering`
 
-use gpop::apps::{nibble, pagerank_nibble};
-use gpop::graph::{gen, Graph, GraphBuilder};
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::{Nibble, PageRankNibble};
+use gpop::graph::{Graph, GraphBuilder};
+use gpop::ppm::PpmConfig;
 use gpop::util::fmt;
 use gpop::VertexId;
 
@@ -77,7 +78,7 @@ fn sweep_conductance(g: &Graph, score: &[f32]) -> (Vec<VertexId>, f64) {
 fn main() {
     let (n_comms, csize) = (10, 1000);
     let half = csize; // size of the seed community
-    let graph = planted_communities(n_comms, csize, 1234);
+    let graph = std::sync::Arc::new(planted_communities(n_comms, csize, 1234));
     println!(
         "planted graph: {} communities x {} vertices — {} vertices, {} edges, bridge width 4",
         n_comms,
@@ -86,45 +87,49 @@ fn main() {
         graph.m()
     );
 
-    // ONE engine: pre-processing cost paid once, amortized over many
-    // local runs (§5: "the initialization cost can be amortized").
+    // ONE session: pre-processing cost paid once, amortized over many
+    // local runs (§5: "the initialization cost can be amortized"). The
+    // seed-sweep below goes through `run_batch`, so all three queries
+    // also share one checked-out engine.
     let t0 = std::time::Instant::now();
-    let mut engine = Engine::new(graph.clone(), PpmConfig { threads: 4, ..Default::default() });
-    println!("engine pre-processing: {}\n", fmt::secs(t0.elapsed().as_secs_f64()));
+    let session =
+        EngineSession::new(graph.clone(), PpmConfig { threads: 4, ..Default::default() });
+    println!("session pre-processing: {}\n", fmt::secs(t0.elapsed().as_secs_f64()));
 
     // --- Nibble from seeds in community 0; work must stay local.
     println!("-- Nibble (selective continuity via initFunc) --");
     let iters = 30;
-    for seed in [0u32, 7, 100] {
-        let t = std::time::Instant::now();
-        let res = nibble::run(&mut engine, &[seed], 2e-5, iters);
-        let in_comm0 = res
-            .pr
-            .iter()
-            .take(half)
-            .filter(|&&x| x > 0.0)
-            .count();
+    let seeds = [0u32, 7, 100];
+    let t = std::time::Instant::now();
+    let reports = Runner::on(&session)
+        .until(Convergence::FrontierEmpty.or_max_iters(iters))
+        .run_batch(seeds.map(|s| Nibble::new(&graph, 2e-5, &[s])));
+    let batch_time = t.elapsed().as_secs_f64();
+    for (seed, res) in seeds.iter().zip(&reports) {
+        let in_comm0 = res.output.pr.iter().take(half).filter(|&&x| x > 0.0).count();
         println!(
-            "seed {seed:>4}: support {:>5} ({} in seed community) msgs {:>8} in {}",
-            res.support,
+            "seed {seed:>4}: support {:>5} ({} in seed community) msgs {:>8}",
+            res.output.support,
             in_comm0,
-            res.stats.total_messages(),
-            fmt::secs(t.elapsed().as_secs_f64())
+            res.total_messages(),
         );
         // Work-efficiency: an O(E)-per-iteration framework would stream
         // iters * m edges; Nibble must do a fraction of that.
         assert!(
-            res.stats.total_messages() < (iters * graph.m()) as u64 / 5,
+            res.total_messages() < (iters * graph.m()) as u64 / 5,
             "local run must beat O(E)-per-iteration engines"
         );
     }
+    println!("batch of {} local runs in {}", seeds.len(), fmt::secs(batch_time));
 
     // --- PageRank-Nibble + sweep: recover the planted community.
     // eps keeps the diffusion support within ~1 community so the sweep
     // cannot drift around the ring (ACL: support ~ 1/(eps * vol)).
     println!("\n-- PageRank-Nibble + conductance sweep --");
-    let res = pagerank_nibble::run(&mut engine, &[0], 0.2, 1e-5, 300);
-    let (cluster, phi) = sweep_conductance(&graph, &res.p);
+    let res = Runner::on(&session)
+        .until(Convergence::FrontierEmpty.or_max_iters(300))
+        .run(PageRankNibble::new(&graph, 0.2, 1e-5, &[0]));
+    let (cluster, phi) = sweep_conductance(&graph, &res.output.p);
     let in_comm0 = cluster.iter().filter(|&&v| (v as usize) < half).count();
     println!(
         "cluster: {} vertices, conductance {:.4}, purity {:.1}%",

@@ -1,44 +1,57 @@
-//! Quickstart: the GPOP public API in ~40 lines.
+//! Quickstart: the GPOP public API in ~50 lines.
 //!
-//! Builds a small social-network-like RMAT graph, runs PageRank and BFS
-//! through the PPM engine, and prints the results — the "hello world"
-//! of the framework.
+//! Builds a small social-network-like RMAT graph, opens ONE
+//! `EngineSession` (pre-processing paid once), and serves three queries
+//! through the fluent `Runner` — PageRank to an L1 tolerance, a BFS,
+//! and a 4-root BFS batch — the "hello world" of the framework.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use gpop::apps;
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::{bfs, Bfs, PageRank};
 use gpop::graph::gen;
-use gpop::ppm::{Engine, PpmConfig};
+use gpop::ppm::PpmConfig;
 
 fn main() {
     // 64K-vertex scale-free graph, Graph500 RMAT parameters.
     let graph = gen::rmat(16, Default::default(), false);
     println!("graph: {} vertices, {} edges", graph.n(), graph.m());
 
-    // The engine picks k (partition count) so each partition's vertex
-    // data fits the 256 KB L2 budget, per the paper's §3.1 heuristic.
-    let config = PpmConfig { threads: 4, ..Default::default() };
-    let mut engine = Engine::new(graph, config);
-    println!("partitions: k = {} (q = {})", engine.parts().k(), engine.parts().q());
+    // The session picks k (partition count) so each partition's vertex
+    // data fits the 256 KB L2 budget (paper §3.1), builds the bin/PNG
+    // layout ONCE, and shares it across every query that follows.
+    let session = EngineSession::new(graph, PpmConfig { threads: 4, ..Default::default() });
+    println!("partitions: k = {} (q = {})", session.parts().k(), session.parts().q());
+    let n = session.graph().n();
 
-    // --- PageRank: 10 iterations, all vertices active, DC-mode heavy.
-    let pr = apps::pagerank::run(&mut engine, 0.85, 10);
-    let mut top: Vec<(usize, f32)> = pr.rank.iter().copied().enumerate().collect();
+    // --- PageRank: run to a numeric tolerance (bounded at 50 iters).
+    let pr = Runner::on(&session)
+        .until(Convergence::L1Norm(1e-7).or_max_iters(50))
+        .run(PageRank::new(session.graph(), 0.85));
+    let mut top: Vec<(usize, f32)> = pr.output.iter().copied().enumerate().collect();
     top.sort_by(|a, b| b.1.total_cmp(&a.1));
-    println!("\ntop-5 PageRank:");
+    println!("\ntop-5 PageRank ({} iters, converged: {}):", pr.n_iters(), pr.converged);
     for (v, r) in top.iter().take(5) {
         println!("  vertex {v:>6}: {r:.6}");
     }
-    let dc_parts: usize = pr.iters.iter().map(|i| i.dc_parts).sum();
-    let sc_parts: usize = pr.iters.iter().map(|i| i.sc_parts).sum();
-    println!("mode choices: {dc_parts} DC vs {sc_parts} SC partition-scatters");
+    println!("mode choices: {} DC vs {} SC partition-scatters", pr.dc_parts(), pr.sc_parts());
 
-    // --- BFS from vertex 0: frontier-driven, SC-mode heavy.
-    let bfs = apps::bfs::run(&mut engine, 0);
+    // --- BFS from vertex 0: frontier-driven, SC-mode heavy. Reuses the
+    // session's cached layout AND the engine PageRank just returned.
+    let report = Runner::on(&session).run(Bfs::new(n, 0));
     println!(
         "\nBFS: reached {} vertices in {} iterations ({} messages)",
-        bfs.n_reached(),
-        bfs.stats.n_iters(),
-        bfs.stats.total_messages()
+        bfs::n_reached(&report.output),
+        report.n_iters(),
+        report.total_messages()
     );
+
+    // --- Batched multi-query: 4 BFS roots against one checked-out
+    // engine — the serving pattern (partition metadata amortized).
+    let roots = [0u32, 1, 2, 3];
+    let reports = Runner::on(&session).run_batch(roots.map(|r| Bfs::new(n, r)));
+    println!("\nbatched BFS roots:");
+    for (root, rep) in roots.iter().zip(&reports) {
+        println!("  root {root}: reached {}", bfs::n_reached(&rep.output));
+    }
 }

@@ -1,0 +1,83 @@
+//! The [`Algorithm`] trait: a [`Program`] that owns its state and lets
+//! the engine — not each app — drive the iterate loop.
+//!
+//! The seed exposed eight bespoke `apps::*::run(engine, ...)` free
+//! functions, each hand-rolling the same seed-frontier / loop / extract
+//! sequence with its own ad-hoc result struct. `Algorithm` folds that
+//! sequence into three hooks the [`Runner`](crate::api::Runner) calls:
+//!
+//! 1. [`init_frontier`](Algorithm::init_frontier) — seed vertex data and
+//!    name the initial active set;
+//! 2. [`post_iteration`](Algorithm::post_iteration) /
+//!    [`progress_delta`](Algorithm::progress_delta) /
+//!    [`converged`](Algorithm::converged) — advance per-iteration state
+//!    (e.g. Heat-Kernel's Taylor stage) and report progress for
+//!    [`Convergence::L1Norm`](crate::api::Convergence::L1Norm);
+//! 3. [`finish`](Algorithm::finish) — surrender the typed output.
+
+use super::convergence::Convergence;
+use super::program::Program;
+use crate::graph::Graph;
+use crate::ppm::IterStats;
+use crate::VertexId;
+
+/// How an algorithm seeds the active set.
+pub enum FrontierInit {
+    /// Every vertex starts active (PageRank, Label Propagation).
+    All,
+    /// An explicit seed set (BFS root, SSSP source, Nibble seeds).
+    Seeds(Vec<VertexId>),
+}
+
+/// A complete GPOP algorithm: the four §4.1 user functions (via
+/// [`Program`]) plus lifecycle hooks and a typed output.
+///
+/// The `Program` methods run inside the parallel Scatter/Gather/Finalize
+/// phases and take `&self` (interior mutability via
+/// [`VertexData`](crate::api::VertexData)); the `Algorithm` hooks run
+/// single-threaded between iterations and may take `&mut self`.
+pub trait Algorithm: Program + Sized {
+    /// The algorithm's result payload (ranks, parents, labels, ...).
+    /// Run-wide statistics live in the surrounding
+    /// [`RunReport`](crate::api::RunReport), not here.
+    type Output;
+
+    /// Seed vertex data and return the initial frontier. Called exactly
+    /// once, before the first iteration.
+    fn init_frontier(&mut self, graph: &Graph) -> FrontierInit;
+
+    /// The stopping policy a [`Runner`](crate::api::Runner) uses when
+    /// the caller sets none. Frontier-driven algorithms keep the
+    /// default; algorithms whose frontier never drains (PageRank) MUST
+    /// override this with a bounded policy, or a bare
+    /// `Runner::on(&session).run(alg)` would never terminate.
+    fn default_until(&self) -> Convergence {
+        Convergence::FrontierEmpty
+    }
+
+    /// Algorithm-specific convergence, checked before each iteration in
+    /// addition to the runner's [`Convergence`](crate::api::Convergence)
+    /// policy (e.g. Heat-Kernel stops after its Taylor order).
+    fn converged(&self) -> bool {
+        false
+    }
+
+    /// Called after every engine iteration with that iteration's stats;
+    /// advance cross-iteration state here (e.g. Heat-Kernel's Taylor
+    /// stage).
+    fn post_iteration(&mut self, _stats: &IterStats) {}
+
+    /// Progress metric consumed by
+    /// [`Convergence::L1Norm`](crate::api::Convergence::L1Norm) (e.g.
+    /// the L1 rank change since the previous iteration). Only invoked —
+    /// after `post_iteration` — when the active policy actually
+    /// [wants a delta](Convergence::wants_delta), so an `O(n)`
+    /// implementation costs nothing under pure frontier/budget
+    /// policies.
+    fn progress_delta(&mut self) -> Option<f64> {
+        None
+    }
+
+    /// Consume the algorithm and surrender its output.
+    fn finish(self) -> Self::Output;
+}

@@ -1,0 +1,213 @@
+//! Typed convergence policies for the [`Runner`](crate::api::Runner).
+//!
+//! The paper's driver loop is `while FrontierSize > 0` (Alg. 4); real
+//! deployments layer iteration budgets and numeric tolerances on top.
+//! [`Convergence`] makes those policies first-class values that compose
+//! with `or`/`and`, replacing the `max_iters: usize` parameter threaded
+//! through every bespoke `run()` in the seed:
+//!
+//! ```ignore
+//! Convergence::L1Norm(1e-7).or_max_iters(100)   // PageRank
+//! Convergence::FrontierEmpty                    // BFS / SSSP / CC
+//! Convergence::FrontierEmpty.or_max_iters(30)   // bounded Nibble
+//! ```
+
+/// The engine state a policy is evaluated against, sampled *before*
+/// each iteration (so `iter` is the number of iterations already run).
+#[derive(Clone, Copy, Debug)]
+pub struct Probe {
+    /// Iterations completed so far.
+    pub iter: usize,
+    /// Current frontier size.
+    pub frontier: usize,
+    /// Last progress delta reported by
+    /// [`Algorithm::post_iteration`](crate::api::Algorithm::post_iteration)
+    /// (`None` before the first iteration or when the algorithm does not
+    /// report one).
+    pub delta: Option<f64>,
+}
+
+/// Why a run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stop {
+    /// A genuine fixpoint: empty frontier, tolerance met, or the
+    /// algorithm's own `converged` hook fired.
+    Converged,
+    /// An iteration budget ran out before convergence.
+    Exhausted,
+}
+
+/// A composable stopping policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Convergence {
+    /// Stop (converged) when the frontier drains — the paper's Alg. 4
+    /// condition and the right default for BFS/SSSP/CC/Nibble.
+    FrontierEmpty,
+    /// Stop (budget exhausted) after `n` iterations. `MaxIters(0)`
+    /// stops before the first iteration.
+    MaxIters(usize),
+    /// Stop (converged) when the algorithm's reported progress delta
+    /// falls to or below the tolerance. Never fires for algorithms that
+    /// report no delta.
+    L1Norm(f64),
+    /// Stop when either side says stop.
+    Or(Box<Convergence>, Box<Convergence>),
+    /// Stop only when both sides say stop.
+    And(Box<Convergence>, Box<Convergence>),
+}
+
+impl Convergence {
+    /// `self` OR `other`.
+    pub fn or(self, other: Convergence) -> Convergence {
+        Convergence::Or(Box::new(self), Box::new(other))
+    }
+
+    /// `self` AND `other`.
+    pub fn and(self, other: Convergence) -> Convergence {
+        Convergence::And(Box::new(self), Box::new(other))
+    }
+
+    /// Shorthand for `self.or(Convergence::MaxIters(n))`.
+    pub fn or_max_iters(self, n: usize) -> Convergence {
+        self.or(Convergence::MaxIters(n))
+    }
+
+    /// Does this policy ever read a progress delta? The runner skips
+    /// the algorithm's (possibly `O(n)`) delta computation when not.
+    pub fn wants_delta(&self) -> bool {
+        match self {
+            Convergence::L1Norm(_) => true,
+            Convergence::Or(a, b) | Convergence::And(a, b) => {
+                a.wants_delta() || b.wants_delta()
+            }
+            Convergence::FrontierEmpty | Convergence::MaxIters(_) => false,
+        }
+    }
+
+    /// Evaluate against `probe`: `None` keeps iterating, `Some(stop)`
+    /// halts the run with the given classification.
+    pub fn check(&self, probe: &Probe) -> Option<Stop> {
+        match self {
+            Convergence::FrontierEmpty => (probe.frontier == 0).then_some(Stop::Converged),
+            Convergence::MaxIters(n) => (probe.iter >= *n).then_some(Stop::Exhausted),
+            Convergence::L1Norm(tol) => match probe.delta {
+                Some(d) if d <= *tol => Some(Stop::Converged),
+                _ => None,
+            },
+            Convergence::Or(a, b) => match (a.check(probe), b.check(probe)) {
+                (Some(Stop::Converged), _) | (_, Some(Stop::Converged)) => Some(Stop::Converged),
+                (Some(s), _) | (_, Some(s)) => Some(s),
+                (None, None) => None,
+            },
+            Convergence::And(a, b) => match (a.check(probe), b.check(probe)) {
+                (Some(sa), Some(sb)) => {
+                    if sa == Stop::Converged || sb == Stop::Converged {
+                        Some(Stop::Converged)
+                    } else {
+                        Some(Stop::Exhausted)
+                    }
+                }
+                _ => None,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(iter: usize, frontier: usize, delta: Option<f64>) -> Probe {
+        Probe { iter, frontier, delta }
+    }
+
+    #[test]
+    fn frontier_empty_fires_only_on_zero() {
+        let c = Convergence::FrontierEmpty;
+        assert_eq!(c.check(&probe(3, 0, None)), Some(Stop::Converged));
+        assert_eq!(c.check(&probe(3, 1, None)), None);
+    }
+
+    #[test]
+    fn frontier_empty_already_converged_at_zero_iterations() {
+        // A run seeded with an empty frontier converges with 0 iters.
+        let c = Convergence::FrontierEmpty;
+        assert_eq!(c.check(&probe(0, 0, None)), Some(Stop::Converged));
+    }
+
+    #[test]
+    fn max_iters_is_a_budget_not_convergence() {
+        let c = Convergence::MaxIters(5);
+        assert_eq!(c.check(&probe(4, 10, None)), None);
+        assert_eq!(c.check(&probe(5, 10, None)), Some(Stop::Exhausted));
+        assert_eq!(c.check(&probe(6, 10, None)), Some(Stop::Exhausted));
+    }
+
+    #[test]
+    fn max_iters_zero_stops_before_first_iteration() {
+        let c = Convergence::MaxIters(0);
+        assert_eq!(c.check(&probe(0, 100, None)), Some(Stop::Exhausted));
+    }
+
+    #[test]
+    fn l1_norm_needs_a_reported_delta() {
+        let c = Convergence::L1Norm(1e-6);
+        assert_eq!(c.check(&probe(1, 10, None)), None, "no delta => keep going");
+        assert_eq!(c.check(&probe(1, 10, Some(1e-3))), None);
+        assert_eq!(c.check(&probe(1, 10, Some(1e-7))), Some(Stop::Converged));
+        // Boundary: <= tolerance converges.
+        assert_eq!(c.check(&probe(1, 10, Some(1e-6))), Some(Stop::Converged));
+    }
+
+    #[test]
+    fn l1_norm_zero_delta_converges() {
+        let c = Convergence::L1Norm(0.0);
+        assert_eq!(c.check(&probe(1, 10, Some(0.0))), Some(Stop::Converged));
+    }
+
+    #[test]
+    fn or_stops_on_either_and_prefers_converged() {
+        let c = Convergence::L1Norm(1e-6).or_max_iters(10);
+        assert_eq!(c.check(&probe(3, 5, Some(1.0))), None);
+        assert_eq!(c.check(&probe(10, 5, Some(1.0))), Some(Stop::Exhausted));
+        assert_eq!(c.check(&probe(3, 5, Some(0.0))), Some(Stop::Converged));
+        // Both fire at once: the convergent side wins the label.
+        assert_eq!(c.check(&probe(10, 5, Some(0.0))), Some(Stop::Converged));
+    }
+
+    #[test]
+    fn and_requires_both() {
+        let c = Convergence::FrontierEmpty.and(Convergence::MaxIters(3));
+        assert_eq!(c.check(&probe(5, 1, None)), None, "budget alone insufficient");
+        assert_eq!(c.check(&probe(1, 0, None)), None, "empty frontier alone insufficient");
+        assert_eq!(c.check(&probe(3, 0, None)), Some(Stop::Converged));
+    }
+
+    #[test]
+    fn and_of_two_budgets_is_exhausted() {
+        let c = Convergence::MaxIters(2).and(Convergence::MaxIters(4));
+        assert_eq!(c.check(&probe(3, 9, None)), None);
+        assert_eq!(c.check(&probe(4, 9, None)), Some(Stop::Exhausted));
+    }
+
+    #[test]
+    fn wants_delta_only_with_l1_term() {
+        assert!(Convergence::L1Norm(1e-6).wants_delta());
+        assert!(Convergence::L1Norm(1e-6).or_max_iters(10).wants_delta());
+        assert!(Convergence::FrontierEmpty.and(Convergence::L1Norm(0.0)).wants_delta());
+        assert!(!Convergence::FrontierEmpty.wants_delta());
+        assert!(!Convergence::FrontierEmpty.or_max_iters(10).wants_delta());
+    }
+
+    #[test]
+    fn nested_combinators() {
+        // (L1 or FrontierEmpty) or MaxIters — a realistic PageRank policy.
+        let c = Convergence::L1Norm(1e-7)
+            .or(Convergence::FrontierEmpty)
+            .or_max_iters(100);
+        assert_eq!(c.check(&probe(0, 10, None)), None);
+        assert_eq!(c.check(&probe(0, 0, None)), Some(Stop::Converged));
+        assert_eq!(c.check(&probe(100, 10, Some(1.0))), Some(Stop::Exhausted));
+        assert_eq!(c.check(&probe(42, 10, Some(1e-9))), Some(Stop::Converged));
+    }
+}

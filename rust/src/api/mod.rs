@@ -1,13 +1,31 @@
-//! The GPOP programming interface (paper §4.1).
+//! The GPOP programming interface (paper §4.1) and the session/runner
+//! layer built on top of it.
 //!
-//! A graph algorithm is expressed as a [`Program`] with four (optionally
-//! five) small functions; the PPM engine drives them through
-//! barrier-separated Scatter/Gather phases and guarantees that every
-//! vertex is updated by exactly one thread — no locks or atomics are
-//! required in user code.
+//! Two levels:
+//!
+//! - **[`Program`]** — the paper's four (optionally five) user
+//!   functions; the PPM engine drives them through barrier-separated
+//!   Scatter/Gather phases and guarantees that every vertex is updated
+//!   by exactly one thread — no locks or atomics in user code.
+//! - **[`Algorithm`] / [`EngineSession`] / [`Runner`]** — the serving
+//!   layer: an `Algorithm` owns its state, declares a typed `Output`
+//!   and hands the iterate loop to the engine; an `EngineSession`
+//!   caches the graph (`Arc`), partitioning and bin layout so many
+//!   queries — sequential or concurrent, single or
+//!   [batched](Runner::run_batch) — amortize the one-time `O(E)`
+//!   pre-processing; a `Runner` composes typed [`Convergence`]
+//!   policies and returns a uniform [`RunReport`].
 
+pub mod algorithm;
+pub mod convergence;
 pub mod program;
+pub mod runner;
+pub mod session;
 pub mod vertex_data;
 
+pub use algorithm::{Algorithm, FrontierInit};
+pub use convergence::{Convergence, Probe, Stop};
 pub use program::{MsgValue, Program};
+pub use runner::{drive, RunReport, Runner};
+pub use session::{EngineSession, SessionEngine};
 pub use vertex_data::VertexData;

@@ -1,0 +1,184 @@
+//! The fluent [`Runner`] — one uniform way to execute any
+//! [`Algorithm`] against an [`EngineSession`]:
+//!
+//! ```ignore
+//! let session = EngineSession::new(graph, PpmConfig::with_threads(8));
+//! let report = Runner::on(&session)
+//!     .policy(ModePolicy::Hybrid)
+//!     .until(Convergence::L1Norm(1e-7).or_max_iters(100))
+//!     .run(PageRank::new(session.graph(), 0.85));
+//! println!("{} iters, ranks: {:?}", report.n_iters(), report.output);
+//! ```
+//!
+//! Every run returns a [`RunReport`]: the algorithm's typed output plus
+//! per-iteration [`IterStats`], mode decisions and timing — replacing
+//! the eight bespoke result structs of the seed. [`Runner::run_batch`]
+//! executes many same-algorithm queries (multi-source BFS, Nibble
+//! sweeps) against ONE checked-out engine, amortizing partition metadata
+//! across the whole batch.
+
+use std::time::Instant;
+
+use super::algorithm::{Algorithm, FrontierInit};
+use super::convergence::{Convergence, Probe, Stop};
+use super::session::EngineSession;
+use crate::ppm::{Engine, IterStats, ModePolicy, RunStats};
+
+/// The uniform result of a [`Runner`] execution.
+#[derive(Clone, Debug)]
+pub struct RunReport<O> {
+    /// The algorithm's typed output (ranks, parents, labels, ...).
+    pub output: O,
+    /// Per-iteration statistics, including the per-iteration SC/DC mode
+    /// decisions (`sc_parts` / `dc_parts`).
+    pub iters: Vec<IterStats>,
+    /// `true` if the run stopped at a genuine fixpoint (empty frontier,
+    /// tolerance met, or the algorithm's own `converged` hook) rather
+    /// than an iteration budget.
+    pub converged: bool,
+    /// Wall-clock seconds from frontier load to output extraction.
+    pub total_time: f64,
+}
+
+impl<O> RunReport<O> {
+    pub fn n_iters(&self) -> usize {
+        self.iters.len()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.iters.iter().map(|i| i.messages).sum()
+    }
+
+    /// Total partition-scatters taken source-centric.
+    pub fn sc_parts(&self) -> usize {
+        self.iters.iter().map(|i| i.sc_parts).sum()
+    }
+
+    /// Total partition-scatters taken destination-centric.
+    pub fn dc_parts(&self) -> usize {
+        self.iters.iter().map(|i| i.dc_parts).sum()
+    }
+
+    /// Bridge to the legacy [`RunStats`] shape (deprecated callers).
+    pub fn run_stats(&self) -> RunStats {
+        RunStats { iters: self.iters.clone(), total_time: self.total_time, converged: self.converged }
+    }
+
+    /// Replace the output, keeping the run statistics (for shims that
+    /// re-wrap outputs into legacy result structs).
+    pub fn map<T>(self, f: impl FnOnce(O) -> T) -> RunReport<T> {
+        RunReport {
+            output: f(self.output),
+            iters: self.iters,
+            converged: self.converged,
+            total_time: self.total_time,
+        }
+    }
+}
+
+/// Drive `alg` on an already-prepared engine until `until` (or the
+/// algorithm's own `converged` hook) says stop.
+///
+/// This is the single iterate loop behind both [`Runner`] and the
+/// deprecated `apps::*::run` shims; it owns the
+/// `init_frontier → iterate → post_iteration` protocol described on
+/// [`Algorithm`].
+pub fn drive<A: Algorithm>(
+    engine: &mut Engine,
+    mut alg: A,
+    until: &Convergence,
+) -> RunReport<A::Output> {
+    let t0 = Instant::now();
+    let frontier_init = alg.init_frontier(engine.graph());
+    match frontier_init {
+        FrontierInit::All => engine.load_all_active(),
+        FrontierInit::Seeds(seeds) => engine.load_frontier(&seeds),
+    }
+    let want_delta = until.wants_delta();
+    let mut iters: Vec<IterStats> = Vec::new();
+    let mut delta: Option<f64> = None;
+    let stop = loop {
+        let probe = Probe { iter: iters.len(), frontier: engine.frontier_size(), delta };
+        if let Some(stop) = until.check(&probe) {
+            break stop;
+        }
+        if alg.converged() {
+            break Stop::Converged;
+        }
+        let stats = engine.iterate(&alg);
+        alg.post_iteration(&stats);
+        delta = if want_delta { alg.progress_delta() } else { None };
+        iters.push(stats);
+    };
+    RunReport {
+        output: alg.finish(),
+        iters,
+        converged: stop == Stop::Converged,
+        total_time: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Fluent builder executing algorithms against a session.
+pub struct Runner<'s> {
+    session: &'s EngineSession,
+    policy: Option<ModePolicy>,
+    until: Option<Convergence>,
+}
+
+impl<'s> Runner<'s> {
+    /// Target `session`. Defaults: the session's mode policy, and each
+    /// algorithm's own
+    /// [`default_until`](crate::api::Algorithm::default_until) stopping
+    /// policy (the paper's Alg. 4 `FrontierEmpty` for frontier-driven
+    /// apps, a bounded policy for all-active apps like PageRank).
+    pub fn on(session: &'s EngineSession) -> Self {
+        Self { session, policy: None, until: None }
+    }
+
+    /// Override the communication-mode policy for this runner's queries.
+    pub fn policy(mut self, mode: ModePolicy) -> Self {
+        self.policy = Some(mode);
+        self
+    }
+
+    /// Set the stopping policy (overriding the algorithm's default).
+    pub fn until(mut self, until: Convergence) -> Self {
+        self.until = Some(until);
+        self
+    }
+
+    fn mode(&self) -> ModePolicy {
+        self.policy.unwrap_or(self.session.config().mode)
+    }
+
+    fn until_for<A: Algorithm>(&self, alg: &A) -> Convergence {
+        self.until.clone().unwrap_or_else(|| alg.default_until())
+    }
+
+    /// Check out an engine, run one query, return the engine to the
+    /// session pool.
+    pub fn run<A: Algorithm>(&self, alg: A) -> RunReport<A::Output> {
+        let mut engine = self.session.checkout();
+        engine.set_mode_policy(self.mode());
+        let until = self.until_for(&alg);
+        drive(&mut engine, alg, &until)
+    }
+
+    /// Run a batch of same-algorithm queries against ONE checked-out
+    /// engine: partition metadata, bins and the worker pool are shared
+    /// across the whole batch (e.g. 16 BFS roots re-partition exactly
+    /// zero times beyond the session's one-time build).
+    pub fn run_batch<A: Algorithm>(
+        &self,
+        algs: impl IntoIterator<Item = A>,
+    ) -> Vec<RunReport<A::Output>> {
+        let mut engine = self.session.checkout();
+        engine.set_mode_policy(self.mode());
+        algs.into_iter()
+            .map(|alg| {
+                let until = self.until_for(&alg);
+                drive(&mut engine, alg, &until)
+            })
+            .collect()
+    }
+}

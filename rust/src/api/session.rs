@@ -1,0 +1,229 @@
+//! [`EngineSession`] — the shared-graph, amortized-preprocessing entry
+//! point for multi-query serving.
+//!
+//! `Engine::new` pays an `O(E)` pre-processing scan (partitioning, PNG
+//! layout, DC id streams). PCPM showed that cost is worth amortizing
+//! across runs; a session does exactly that: it owns `Arc<Graph>` + the
+//! cached [`Partitioner`] + [`BinLayout`] and checks out engines that
+//! share all three, allocating only interior-mutable frontier/bin
+//! scratch. Checked-in engines are pooled and reused, so a steady-state
+//! query stream allocates nothing.
+//!
+//! Sessions are `Sync`: many threads can `checkout()` concurrently, each
+//! getting an exclusive engine over the same immutable layout (lock-free
+//! on the data path, per the paper — the only lock is the pool's, held
+//! for a `Vec::pop`).
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::Graph;
+use crate::partition::Partitioner;
+use crate::ppm::{BinLayout, Engine, PpmConfig};
+
+/// Idle engines kept per session. Each pooled engine holds its worker
+/// threads plus `O(k² + E/k)` bin scratch, so the pool is capped: a
+/// burst of concurrent queries beyond the cap allocates transient
+/// engines that are dropped (worker threads joined) on check-in
+/// instead of being retained forever.
+const MAX_POOLED_ENGINES: usize = 4;
+
+/// A shared, reusable graph-processing context: one graph, one
+/// partitioning, one pre-processed bin layout, many queries.
+pub struct EngineSession {
+    graph: Arc<Graph>,
+    parts: Partitioner,
+    layout: Arc<BinLayout>,
+    config: PpmConfig,
+    pool: Mutex<Vec<Engine>>,
+}
+
+impl EngineSession {
+    /// Build a session, running pre-processing exactly once. Accepts a
+    /// `Graph` (moved) or an `Arc<Graph>` (shared with the caller).
+    pub fn new(graph: impl Into<Arc<Graph>>, config: PpmConfig) -> Self {
+        assert!(config.threads >= 1);
+        assert!(config.bw_ratio > 0.0);
+        let graph = graph.into();
+        let parts = config.partitioner(graph.n());
+        let layout = Arc::new(BinLayout::build(&graph, &parts));
+        Self { graph, parts, layout, config, pool: Mutex::new(Vec::new()) }
+    }
+
+    #[inline]
+    pub fn graph(&self) -> &Arc<Graph> {
+        &self.graph
+    }
+
+    #[inline]
+    pub fn parts(&self) -> &Partitioner {
+        &self.parts
+    }
+
+    #[inline]
+    pub fn layout(&self) -> &Arc<BinLayout> {
+        &self.layout
+    }
+
+    #[inline]
+    pub fn config(&self) -> &PpmConfig {
+        &self.config
+    }
+
+    /// Engines currently idle in the pool.
+    pub fn pooled_engines(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+
+    /// Check out an engine for exclusive use. Reuses a pooled engine if
+    /// one is idle; otherwise allocates fresh scratch over the shared
+    /// layout (never re-partitions, never re-scans the graph). The
+    /// engine returns to the pool when the guard drops.
+    pub fn checkout(&self) -> SessionEngine<'_> {
+        let pooled = self.pool.lock().unwrap().pop();
+        let mut engine = match pooled {
+            Some(e) => e,
+            None => Engine::with_layout(
+                self.graph.clone(),
+                self.parts.clone(),
+                self.layout.clone(),
+                self.config.clone(),
+            ),
+        };
+        // A previous borrower may have overridden the mode policy
+        // (Runner::policy); hand every checkout the session's own.
+        engine.set_mode_policy(self.config.mode);
+        SessionEngine { session: self, engine: Some(engine) }
+    }
+}
+
+/// RAII guard over a checked-out [`Engine`]; derefs to the engine and
+/// returns it to the session pool on drop.
+pub struct SessionEngine<'s> {
+    session: &'s EngineSession,
+    engine: Option<Engine>,
+}
+
+impl Deref for SessionEngine<'_> {
+    type Target = Engine;
+    #[inline]
+    fn deref(&self) -> &Engine {
+        self.engine.as_ref().expect("engine present until drop")
+    }
+}
+
+impl DerefMut for SessionEngine<'_> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut Engine {
+        self.engine.as_mut().expect("engine present until drop")
+    }
+}
+
+impl Drop for SessionEngine<'_> {
+    fn drop(&mut self) {
+        if let Some(engine) = self.engine.take() {
+            let mut pool = self.session.pool.lock().unwrap();
+            if pool.len() < MAX_POOLED_ENGINES {
+                pool.push(engine);
+            }
+            // Else: drop the engine here (joining its worker threads)
+            // rather than growing the pool without bound.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::ppm::layout_builds;
+
+    #[test]
+    fn checkout_reuses_pooled_engines() {
+        let session =
+            EngineSession::new(gen::chain(50), PpmConfig { k: Some(4), ..Default::default() });
+        assert_eq!(session.pooled_engines(), 0);
+        {
+            let _e = session.checkout();
+            assert_eq!(session.pooled_engines(), 0);
+        }
+        assert_eq!(session.pooled_engines(), 1);
+        {
+            let _a = session.checkout();
+            let _b = session.checkout();
+        }
+        assert_eq!(session.pooled_engines(), 2);
+    }
+
+    #[test]
+    fn pool_is_capped() {
+        let session =
+            EngineSession::new(gen::chain(20), PpmConfig { k: Some(2), ..Default::default() });
+        {
+            let _guards: Vec<_> = (0..MAX_POOLED_ENGINES + 2).map(|_| session.checkout()).collect();
+        }
+        assert_eq!(session.pooled_engines(), MAX_POOLED_ENGINES);
+    }
+
+    #[test]
+    fn checkout_resets_mode_policy_overrides() {
+        use crate::ppm::ModePolicy;
+        let session =
+            EngineSession::new(gen::chain(20), PpmConfig { k: Some(2), ..Default::default() });
+        {
+            let mut e = session.checkout();
+            e.set_mode_policy(ModePolicy::ForceDc);
+        }
+        let e = session.checkout();
+        assert_eq!(e.config().mode, ModePolicy::Hybrid, "pooled override must not leak");
+    }
+
+    #[test]
+    fn checkouts_never_rebuild_the_layout() {
+        let session =
+            EngineSession::new(gen::chain(64), PpmConfig { k: Some(8), ..Default::default() });
+        let before = layout_builds();
+        for _ in 0..5 {
+            let mut e = session.checkout();
+            e.load_frontier(&[0]);
+        }
+        assert_eq!(layout_builds(), before);
+    }
+
+    #[test]
+    fn session_shares_one_graph_allocation() {
+        let g = Arc::new(gen::chain(10));
+        let session = EngineSession::new(g.clone(), PpmConfig::default());
+        // Session + caller + no hidden clones.
+        let e = session.checkout();
+        assert!(Arc::ptr_eq(session.graph(), e.graph_arc()));
+        assert!(Arc::ptr_eq(session.graph(), &g));
+    }
+
+    #[test]
+    fn concurrent_checkouts_from_many_threads() {
+        let session = Arc::new(EngineSession::new(
+            gen::erdos_renyi(200, 1000, 11),
+            PpmConfig { threads: 1, k: Some(8), ..Default::default() },
+        ));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let session = Arc::clone(&session);
+                s.spawn(move || {
+                    // The build counter is thread-local, so assert on
+                    // THIS thread: a checkout that re-partitioned would
+                    // increment it right here.
+                    let before = layout_builds();
+                    let mut e = session.checkout();
+                    e.load_frontier(&[0]);
+                    assert_eq!(e.frontier_size(), 1);
+                    assert_eq!(
+                        layout_builds(),
+                        before,
+                        "concurrent checkout must not re-partition"
+                    );
+                });
+            }
+        });
+    }
+}

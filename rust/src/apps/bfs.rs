@@ -5,19 +5,28 @@
 //! inactive sentinel — §3.2 "a vertex can send its visited status or its
 //! index"), never keep the frontier (`init = false`), adopt the first
 //! parent seen, keep everything the gather activated.
+//!
+//! New API:
+//! ```ignore
+//! let report = Runner::on(&session).run(Bfs::new(session.graph().n(), root));
+//! let parents: &Vec<i32> = &report.output;
+//! ```
 
-use crate::api::{Program, VertexData};
+use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
 use crate::VertexId;
 
-/// The BFS GPOP program. `parent[v] = -1` until visited.
+/// The BFS GPOP algorithm. `parent[v] = -1` until visited; the typed
+/// output is the parent array.
 pub struct Bfs {
     pub parent: VertexData<i32>,
+    root: VertexId,
 }
 
 impl Bfs {
-    pub fn new(n: usize) -> Self {
-        Self { parent: VertexData::new(n, -1) }
+    pub fn new(n: usize, root: VertexId) -> Self {
+        Self { parent: VertexData::new(n, -1), root }
     }
 }
 
@@ -58,7 +67,51 @@ impl Program for Bfs {
     }
 }
 
-/// Result of a BFS run.
+impl Algorithm for Bfs {
+    type Output = Vec<i32>;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        self.parent.set(self.root, self.root as i32);
+        FrontierInit::Seeds(vec![self.root])
+    }
+
+    fn finish(self) -> Vec<i32> {
+        self.parent.to_vec()
+    }
+}
+
+/// Count of reached vertices in a parent array.
+pub fn n_reached(parent: &[i32]) -> usize {
+    parent.iter().filter(|&&p| p >= 0).count()
+}
+
+/// Derive hop levels from a parent tree.
+pub fn levels(parent: &[i32], root: VertexId) -> Vec<i32> {
+    let n = parent.len();
+    let mut level = vec![-1i32; n];
+    if n == 0 {
+        return level;
+    }
+    level[root as usize] = 0;
+    // Parent pointers form a DAG towards the root; resolve iteratively.
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for v in 0..n {
+            if level[v] >= 0 {
+                continue;
+            }
+            let p = parent[v];
+            if p >= 0 && level[p as usize] >= 0 {
+                level[v] = level[p as usize] + 1;
+                changed = true;
+            }
+        }
+    }
+    level
+}
+
+/// Result of a BFS run (legacy shape).
 pub struct BfsResult {
     /// Parent tree; `parent[root] = root`, `-1` if unreachable.
     pub parent: Vec<i32>,
@@ -67,60 +120,43 @@ pub struct BfsResult {
 
 impl BfsResult {
     pub fn n_reached(&self) -> usize {
-        self.parent.iter().filter(|&&p| p >= 0).count()
+        n_reached(&self.parent)
     }
 
-    /// Derive levels from the parent tree (root = 0).
+    /// Derive levels from the parent tree.
     pub fn levels(&self, root: VertexId) -> Vec<i32> {
-        let n = self.parent.len();
-        let mut level = vec![-1i32; n];
-        level[root as usize] = 0;
-        // Parent pointers form a DAG towards the root; resolve iteratively.
-        let mut changed = true;
-        while changed {
-            changed = false;
-            for v in 0..n {
-                if level[v] >= 0 {
-                    continue;
-                }
-                let p = self.parent[v];
-                if p >= 0 && level[p as usize] >= 0 {
-                    level[v] = level[p as usize] + 1;
-                    changed = true;
-                }
-            }
-        }
-        level
+        levels(&self.parent, root)
     }
 }
 
 /// Run BFS from `root` on a prepared engine.
+#[deprecated(note = "use api::Runner::on(&session).run(Bfs::new(n, root))")]
 pub fn run(engine: &mut Engine, root: VertexId) -> BfsResult {
-    let prog = Bfs::new(engine.graph().n());
-    prog.parent.set(root, root as i32);
-    engine.load_frontier(&[root]);
-    let stats = engine.run(&prog, usize::MAX);
-    BfsResult { parent: prog.parent.to_vec(), stats }
+    let alg = Bfs::new(engine.graph().n(), root);
+    let report = crate::api::drive(engine, alg, &Convergence::FrontierEmpty);
+    BfsResult { stats: report.run_stats(), parent: report.output }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{EngineSession, Runner};
     use crate::baselines::serial;
     use crate::graph::gen;
     use crate::ppm::{ModePolicy, PpmConfig};
 
     fn check_against_serial(g: &crate::graph::Graph, root: VertexId, config: PpmConfig) {
         let serial_lv = serial::bfs_levels(g, root);
-        let mut eng = Engine::new(g.clone(), config);
-        let res = run(&mut eng, root);
-        let lv = res.levels(root);
+        let session = EngineSession::new(g.clone(), config);
+        let report = Runner::on(&session).run(Bfs::new(g.n(), root));
+        assert!(report.converged);
+        let lv = levels(&report.output, root);
         // Parent trees may differ, but levels (shortest hop counts) and
         // reachability must match exactly.
         assert_eq!(lv, serial_lv);
         // Tree edges must be real edges.
         for v in 0..g.n() {
-            let p = res.parent[v];
+            let p = report.output[v];
             if p >= 0 && p as usize != v {
                 assert!(g.out().neighbors(p as u32).contains(&(v as u32)));
             }
@@ -142,12 +178,16 @@ mod tests {
     #[test]
     fn bfs_er_various_roots() {
         let g = gen::erdos_renyi(500, 3000, 17);
+        // One session serves all roots (the multi-query path).
+        let session = EngineSession::new(
+            g.clone(),
+            PpmConfig { threads: 3, k: Some(11), ..Default::default() },
+        );
+        let runner = Runner::on(&session);
         for root in [0u32, 7, 123, 499] {
-            check_against_serial(
-                &g,
-                root,
-                PpmConfig { threads: 3, k: Some(11), ..Default::default() },
-            );
+            let serial_lv = serial::bfs_levels(&g, root);
+            let report = runner.run(Bfs::new(g.n(), root));
+            assert_eq!(levels(&report.output, root), serial_lv, "root {root}");
         }
     }
 
@@ -160,10 +200,19 @@ mod tests {
 
     #[test]
     fn bfs_counts_reached() {
+        let session = EngineSession::new(gen::chain(10), PpmConfig::default());
+        let report = Runner::on(&session).run(Bfs::new(10, 3));
+        assert_eq!(n_reached(&report.output), 7); // 3..9
+        assert!(report.converged);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_still_works() {
         let g = gen::chain(10);
         let mut eng = Engine::new(g, PpmConfig::default());
         let res = run(&mut eng, 3);
-        assert_eq!(res.n_reached(), 7); // 3..9
+        assert_eq!(res.n_reached(), 7);
         assert!(res.stats.converged);
     }
 }

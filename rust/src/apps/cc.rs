@@ -5,8 +5,16 @@
 //! Only vertices whose label changed stay active, so iterations shrink —
 //! the workload of Fig. 9's middle panel. On a symmetrized graph the
 //! fixpoint labels are connected components.
+//!
+//! New API:
+//! ```ignore
+//! let report = Runner::on(&session)
+//!     .until(Convergence::FrontierEmpty.or_max_iters(10_000))
+//!     .run(LabelProp::new(session.graph().n()));
+//! ```
 
-use crate::api::{Program, VertexData};
+use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
 use crate::VertexId;
 
@@ -52,6 +60,27 @@ impl Program for LabelProp {
     }
 }
 
+impl Algorithm for LabelProp {
+    type Output = Vec<u32>;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        FrontierInit::All
+    }
+
+    fn finish(self) -> Vec<u32> {
+        self.label.to_vec()
+    }
+}
+
+/// Distinct label classes of a fixpoint labelling (= components on a
+/// symmetrized graph).
+pub fn n_components(label: &[u32]) -> usize {
+    let mut roots: Vec<u32> = label.to_vec();
+    roots.sort_unstable();
+    roots.dedup();
+    roots.len()
+}
+
 pub struct CcResult {
     pub label: Vec<u32>,
     pub stats: RunStats,
@@ -59,39 +88,47 @@ pub struct CcResult {
 
 impl CcResult {
     pub fn n_components(&self) -> usize {
-        let mut roots: Vec<u32> = self.label.clone();
-        roots.sort_unstable();
-        roots.dedup();
-        roots.len()
+        n_components(&self.label)
     }
 }
 
 /// Run label propagation to convergence.
+#[deprecated(note = "use api::Runner::on(&session).until(Convergence::FrontierEmpty.or_max_iters(n)).run(LabelProp::new(n))")]
 pub fn run(engine: &mut Engine, max_iters: usize) -> CcResult {
-    let prog = LabelProp::new(engine.graph().n());
-    engine.load_all_active();
-    let stats = engine.run(&prog, max_iters);
-    CcResult { label: prog.label.to_vec(), stats }
+    let alg = LabelProp::new(engine.graph().n());
+    let report = crate::api::drive(
+        engine,
+        alg,
+        &Convergence::FrontierEmpty.or_max_iters(max_iters),
+    );
+    CcResult { stats: report.run_stats(), label: report.output }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{EngineSession, Runner};
     use crate::baselines::serial;
     use crate::graph::gen;
     use crate::graph::GraphBuilder;
     use crate::ppm::{ModePolicy, PpmConfig};
+
+    fn run_cc(g: &crate::graph::Graph, config: PpmConfig) -> crate::api::RunReport<Vec<u32>> {
+        let session = EngineSession::new(g.clone(), config);
+        Runner::on(&session)
+            .until(Convergence::FrontierEmpty.or_max_iters(100_000))
+            .run(LabelProp::new(g.n()))
+    }
 
     #[test]
     fn cc_two_components() {
         let mut b = GraphBuilder::new().with_n(6).symmetrize();
         b.add(0, 1).add(1, 2).add(3, 4).add(4, 5);
         let g = b.build();
-        let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(3), ..Default::default() });
-        let res = run(&mut eng, 100);
-        assert!(res.stats.converged);
-        assert_eq!(res.label, vec![0, 0, 0, 3, 3, 3]);
-        assert_eq!(res.n_components(), 2);
+        let report = run_cc(&g, PpmConfig { threads: 2, k: Some(3), ..Default::default() });
+        assert!(report.converged);
+        assert_eq!(report.output, vec![0, 0, 0, 3, 3, 3]);
+        assert_eq!(n_components(&report.output), 2);
     }
 
     #[test]
@@ -108,13 +145,10 @@ mod tests {
         };
         let reference = serial::label_propagation(&g);
         for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
-            let mut eng = Engine::new(
-                g.clone(),
-                PpmConfig { threads: 4, mode, k: Some(8), ..Default::default() },
-            );
-            let res = run(&mut eng, 1000);
-            assert!(res.stats.converged, "mode {mode:?}");
-            assert_eq!(res.label, reference, "mode {mode:?}");
+            let report =
+                run_cc(&g, PpmConfig { threads: 4, mode, k: Some(8), ..Default::default() });
+            assert!(report.converged, "mode {mode:?}");
+            assert_eq!(report.output, reference, "mode {mode:?}");
         }
     }
 
@@ -124,10 +158,8 @@ mod tests {
         // semantics) must still agree with the serial engine.
         let g = gen::erdos_renyi(400, 2400, 8);
         let reference = serial::label_propagation(&g);
-        let mut eng =
-            Engine::new(g, PpmConfig { threads: 3, k: Some(10), ..Default::default() });
-        let res = run(&mut eng, 1000);
-        assert_eq!(res.label, reference);
+        let report = run_cc(&g, PpmConfig { threads: 3, k: Some(10), ..Default::default() });
+        assert_eq!(report.output, reference);
     }
 
     #[test]
@@ -142,9 +174,8 @@ mod tests {
             }
             b.build()
         };
-        let mut eng = Engine::new(g, PpmConfig { threads: 2, ..Default::default() });
-        let res = run(&mut eng, 1000);
-        let sizes: Vec<usize> = res.stats.iters.iter().map(|i| i.frontier).collect();
+        let report = run_cc(&g, PpmConfig { threads: 2, ..Default::default() });
+        let sizes: Vec<usize> = report.iters.iter().map(|i| i.frontier).collect();
         assert!(sizes[0] > *sizes.last().unwrap(), "frontier should shrink: {sizes:?}");
     }
 }

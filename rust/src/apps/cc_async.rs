@@ -14,7 +14,8 @@
 //! convergence — at the cost of a random read per message (exactly the
 //! cache-efficiency trade the paper describes).
 
-use crate::api::{Program, VertexData};
+use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
 use crate::VertexId;
 
@@ -61,23 +62,40 @@ impl Program for AsyncLabelProp {
     }
 }
 
+impl Algorithm for AsyncLabelProp {
+    type Output = Vec<u32>;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        FrontierInit::All
+    }
+
+    fn finish(self) -> Vec<u32> {
+        self.label.to_vec()
+    }
+}
+
 pub struct AsyncCcResult {
     pub label: Vec<u32>,
     pub stats: RunStats,
 }
 
 /// Run asynchronous label propagation to convergence.
+#[deprecated(note = "use api::Runner::on(&session).until(Convergence::FrontierEmpty.or_max_iters(n)).run(AsyncLabelProp::new(n))")]
 pub fn run(engine: &mut Engine, max_iters: usize) -> AsyncCcResult {
-    let prog = AsyncLabelProp::new(engine.graph().n());
-    engine.load_all_active();
-    let stats = engine.run(&prog, max_iters);
-    AsyncCcResult { label: prog.label.to_vec(), stats }
+    let alg = AsyncLabelProp::new(engine.graph().n());
+    let report = crate::api::drive(
+        engine,
+        alg,
+        &Convergence::FrontierEmpty.or_max_iters(max_iters),
+    );
+    AsyncCcResult { stats: report.run_stats(), label: report.output }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::cc;
+    use crate::api::{EngineSession, Runner};
+    use crate::apps::cc::LabelProp;
     use crate::baselines::serial;
     use crate::graph::{gen, GraphBuilder};
     use crate::ppm::PpmConfig;
@@ -93,14 +111,19 @@ mod tests {
         b.build()
     }
 
+    fn until() -> Convergence {
+        Convergence::FrontierEmpty.or_max_iters(10_000)
+    }
+
     #[test]
     fn async_reaches_same_fixpoint_as_sync() {
         let g = symmetrized(10);
         let want = serial::label_propagation(&g);
-        let mut eng = Engine::new(g, PpmConfig { threads: 4, ..Default::default() });
-        let res = run(&mut eng, 10_000);
-        assert!(res.stats.converged);
-        assert_eq!(res.label, want);
+        let session =
+            EngineSession::new(g.clone(), PpmConfig { threads: 4, ..Default::default() });
+        let report = Runner::on(&session).until(until()).run(AsyncLabelProp::new(g.n()));
+        assert!(report.converged);
+        assert_eq!(report.output, want);
     }
 
     #[test]
@@ -114,18 +137,18 @@ mod tests {
             b.add(v, v + 1);
         }
         let g = b.build();
-        let mut e_sync = Engine::new(g.clone(), PpmConfig::default());
-        let sync_iters = cc::run(&mut e_sync, 10_000).stats.n_iters();
-        let mut e_async = Engine::new(g, PpmConfig::default());
-        let res = run(&mut e_async, 10_000);
-        assert!(res.stats.converged);
+        let session = EngineSession::new(g.clone(), PpmConfig::default());
+        let runner = Runner::on(&session).until(until());
+        let sync_iters = runner.run(LabelProp::new(g.n())).n_iters();
+        let report = runner.run(AsyncLabelProp::new(g.n()));
+        assert!(report.converged);
         assert!(
-            res.stats.n_iters() <= sync_iters,
+            report.n_iters() <= sync_iters,
             "async took {} iters vs sync {}",
-            res.stats.n_iters(),
+            report.n_iters(),
             sync_iters
         );
-        assert!(res.label.iter().all(|&l| l == 0));
+        assert!(report.output.iter().all(|&l| l == 0));
     }
 
     #[test]
@@ -133,11 +156,14 @@ mod tests {
         use crate::ppm::ModePolicy;
         let g = symmetrized(9);
         let want = serial::label_propagation(&g);
+        let session =
+            EngineSession::new(g.clone(), PpmConfig { threads: 2, ..Default::default() });
         for mode in [ModePolicy::ForceSc, ModePolicy::ForceDc, ModePolicy::Hybrid] {
-            let mut eng =
-                Engine::new(g.clone(), PpmConfig { threads: 2, mode, ..Default::default() });
-            let res = run(&mut eng, 10_000);
-            assert_eq!(res.label, want, "mode {mode:?}");
+            let report = Runner::on(&session)
+                .policy(mode)
+                .until(until())
+                .run(AsyncLabelProp::new(g.n()));
+            assert_eq!(report.output, want, "mode {mode:?}");
         }
     }
 }

@@ -6,11 +6,14 @@
 //! matrix.
 //!
 //! The per-stage coefficient makes the program *stateful across
-//! iterations*: [`HeatKernel::advance_stage`] is bumped between engine
-//! iterations — exactly the driver pattern GPOP's `ppm()` loop supports.
+//! iterations*: [`Algorithm::post_iteration`] bumps the stage between
+//! engine iterations and [`Algorithm::converged`] stops the run after
+//! the Taylor order — exactly the driver hooks the unified API exists
+//! for (the seed hand-rolled this loop in its bespoke `run`).
 
-use crate::api::{Program, VertexData};
-use crate::ppm::Engine;
+use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
+use crate::ppm::{Engine, IterStats};
 use crate::VertexId;
 use std::sync::atomic::{AtomicU32, Ordering};
 
@@ -24,13 +27,15 @@ pub struct HeatKernel {
     pub t: f32,
     /// Taylor truncation order N.
     pub order: u32,
-    /// Current stage k (0-based), bumped by the driver.
+    /// Current stage k (0-based); advanced by `post_iteration`. Atomic
+    /// because the parallel Program methods read it mid-iteration.
     stage: AtomicU32,
     pub eps: f32,
+    seeds: Vec<VertexId>,
 }
 
 impl HeatKernel {
-    pub fn new(g: &crate::graph::Graph, t: f32, order: u32, eps: f32) -> Self {
+    pub fn new(g: &Graph, t: f32, order: u32, eps: f32, seeds: &[VertexId]) -> Self {
         Self {
             heat: VertexData::new(g.n(), 0.0),
             residual: VertexData::new(g.n(), 0.0),
@@ -39,9 +44,11 @@ impl HeatKernel {
             order,
             stage: AtomicU32::new(0),
             eps,
+            seeds: seeds.to_vec(),
         }
     }
 
+    /// Distribute unit mass over `seeds` (the initial frontier).
     pub fn seed(&self, seeds: &[VertexId]) -> Vec<VertexId> {
         let share = 1.0 / seeds.len() as f32;
         for &s in seeds {
@@ -120,6 +127,30 @@ impl Program for HeatKernel {
     }
 }
 
+impl Algorithm for HeatKernel {
+    type Output = Vec<f32>;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        let seeds = self.seeds.clone();
+        FrontierInit::Seeds(self.seed(&seeds))
+    }
+
+    fn converged(&self) -> bool {
+        self.stage.load(Ordering::Relaxed) >= self.order
+    }
+
+    fn post_iteration(&mut self, _stats: &IterStats) {
+        self.advance_stage();
+    }
+
+    fn finish(self) -> Vec<f32> {
+        // Settle whatever residual remains (stage >= order settles 100%).
+        (0..self.heat.len())
+            .map(|v| self.heat.get(v as VertexId) + self.residual.get(v as VertexId))
+            .collect()
+    }
+}
+
 pub struct HeatKernelResult {
     pub heat: Vec<f32>,
     pub iters: usize,
@@ -127,6 +158,7 @@ pub struct HeatKernelResult {
 
 /// Run N staged diffusion rounds (the `ppm()` driver loop of Alg. 4,
 /// with per-stage state advanced between iterations).
+#[deprecated(note = "use api::Runner::on(&session).run(HeatKernel::new(g, t, order, eps, seeds))")]
 pub fn run(
     engine: &mut Engine,
     seeds: &[VertexId],
@@ -134,56 +166,54 @@ pub fn run(
     order: u32,
     eps: f32,
 ) -> HeatKernelResult {
-    let prog = HeatKernel::new(engine.graph(), t, order, eps);
-    let frontier = prog.seed(seeds);
-    engine.load_frontier(&frontier);
-    let mut iters = 0;
-    for _ in 0..order {
-        if engine.frontier_size() == 0 {
-            break;
-        }
-        engine.iterate(&prog);
-        prog.advance_stage();
-        iters += 1;
-    }
-    // Settle whatever residual remains (stage >= order settles 100%).
-    let heat: Vec<f32> = (0..engine.graph().n())
-        .map(|v| prog.heat.get(v as u32) + prog.residual.get(v as u32))
-        .collect();
-    HeatKernelResult { heat, iters }
+    let alg = HeatKernel::new(engine.graph(), t, order, eps, seeds);
+    let report = crate::api::drive(engine, alg, &Convergence::FrontierEmpty);
+    HeatKernelResult { iters: report.n_iters(), heat: report.output }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{EngineSession, Runner};
     use crate::graph::gen;
     use crate::ppm::PpmConfig;
+
+    fn run_hk(
+        g: &crate::graph::Graph,
+        seeds: &[VertexId],
+        t: f32,
+        order: u32,
+        eps: f32,
+        config: PpmConfig,
+    ) -> crate::api::RunReport<Vec<f32>> {
+        let session = EngineSession::new(g.clone(), config);
+        Runner::on(&session).run(HeatKernel::new(g, t, order, eps, seeds))
+    }
 
     #[test]
     fn heat_mass_conserved() {
         let g = gen::grid(8, 8);
-        let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(4), ..Default::default() });
-        let res = run(&mut eng, &[0], 2.0, 8, 1e-7);
-        let sum: f64 = res.heat.iter().map(|&x| x as f64).sum();
+        let report =
+            run_hk(&g, &[0], 2.0, 8, 1e-7, PpmConfig { threads: 2, k: Some(4), ..Default::default() });
+        let sum: f64 = report.output.iter().map(|&x| x as f64).sum();
         assert!((sum - 1.0).abs() < 1e-3, "heat mass = {sum}");
+        assert!(report.n_iters() <= 8, "at most `order` stages");
     }
 
     #[test]
     fn small_t_stays_at_seed() {
         // t → 0 makes e^{tP} ≈ I: nearly all mass stays at the seed.
         let g = gen::grid(8, 8);
-        let mut eng = Engine::new(g, PpmConfig::default());
-        let res = run(&mut eng, &[27], 0.05, 6, 1e-9);
-        assert!(res.heat[27] > 0.9, "seed heat = {}", res.heat[27]);
+        let report = run_hk(&g, &[27], 0.05, 6, 1e-9, PpmConfig::default());
+        assert!(report.output[27] > 0.9, "seed heat = {}", report.output[27]);
     }
 
     #[test]
     fn larger_t_diffuses_further() {
         let g = gen::grid(8, 8);
         let spread = |t: f32| {
-            let mut eng = Engine::new(g.clone(), PpmConfig::default());
-            let res = run(&mut eng, &[27], t, 10, 1e-9);
-            res.heat.iter().filter(|&&x| x > 1e-4).count()
+            let report = run_hk(&g, &[27], t, 10, 1e-9, PpmConfig::default());
+            report.output.iter().filter(|&&x| x > 1e-4).count()
         };
         assert!(spread(4.0) > spread(0.2));
     }
@@ -191,11 +221,12 @@ mod tests {
     #[test]
     fn settle_fraction_telescopes_to_one() {
         let g = gen::chain(4);
-        let hk = HeatKernel::new(&g, 1.5, 3, 1e-6);
+        let hk = HeatKernel::new(&g, 1.5, 3, 1e-6, &[0]);
         // After `order` stages everything settles.
         for _ in 0..3 {
             hk.advance_stage();
         }
         assert_eq!(hk.settle_fraction(), 1.0);
+        assert!(hk.converged());
     }
 }

@@ -1,16 +1,22 @@
 //! The paper's five evaluated applications (§5) plus extensions, all
-//! expressed through the GPOP [`Program`](crate::api::Program) API in a
-//! handful of lines each — the programmability claim of §4.
+//! expressed through the GPOP [`Algorithm`](crate::api::Algorithm) API
+//! in a handful of lines each — the programmability claim of §4.
 //!
-//! | app | paper | msg | frontier |
-//! |---|---|---|---|
-//! | [`bfs`] | Alg. 5, Graph500 kernel 2 | `i32` parent id | rebuilt |
-//! | [`pagerank`] | Alg. 6, SpMV benchmark | `f32` rank share | all active |
-//! | [`cc`] (label propagation) | Alg. 7 | `u32` label | changed only |
-//! | [`sssp`] (Bellman-Ford) | Alg. 8, Graph500 kernel 3 | `f32` distance | rebuilt |
-//! | [`nibble`] | Alg. 4, local clustering | `f32` probability | **selective continuity** |
-//! | [`pagerank_nibble`] | §4.1 (extension) | `f32` residual | selective continuity |
-//! | [`heat_kernel`] | §4.1 (extension) | `f32` heat mass | selective continuity |
+//! | app | paper | msg | frontier | output |
+//! |---|---|---|---|---|
+//! | [`bfs`] | Alg. 5, Graph500 kernel 2 | `i32` parent id | rebuilt | `Vec<i32>` parents |
+//! | [`pagerank`] | Alg. 6, SpMV benchmark | `f32` rank share | all active | `Vec<f32>` ranks |
+//! | [`cc`] (label propagation) | Alg. 7 | `u32` label | changed only | `Vec<u32>` labels |
+//! | [`cc_async`] | §6.2.1 extension | `u32` pointer | changed only | `Vec<u32>` labels |
+//! | [`sssp`] (Bellman-Ford) | Alg. 8, Graph500 kernel 3 | `f32` distance | rebuilt | `Vec<f32>` distances |
+//! | [`nibble`] | Alg. 4, local clustering | `f32` probability | **selective continuity** | [`NibbleOutput`](nibble::NibbleOutput) |
+//! | [`pagerank_nibble`] | §4.1 (extension) | `f32` residual | selective continuity | [`PrNibbleOutput`](pagerank_nibble::PrNibbleOutput) |
+//! | [`heat_kernel`] | §4.1 (extension) | `f32` heat mass | selective continuity | `Vec<f32>` heat |
+//!
+//! Every app runs through
+//! [`Runner::on(&session)`](crate::api::Runner::on); the old
+//! `apps::*::run(engine, ...)` free functions remain as deprecated
+//! shims over the same driver.
 
 pub mod bfs;
 pub mod cc;
@@ -23,6 +29,9 @@ pub mod sssp;
 
 pub use bfs::Bfs;
 pub use cc::LabelProp;
+pub use cc_async::AsyncLabelProp;
+pub use heat_kernel::HeatKernel;
 pub use nibble::Nibble;
 pub use pagerank::PageRank;
+pub use pagerank_nibble::PageRankNibble;
 pub use sssp::Sssp;

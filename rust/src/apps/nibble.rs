@@ -7,10 +7,13 @@
 //! still above threshold — functionality "not supported intrinsically by
 //! the current frameworks" (§1). Work per iteration is O(active
 //! neighborhood) only; the O(V) array initialization is amortized across
-//! runs via [`Nibble::reset_seeds`] (§5: "the initialization cost can be
-//! amortized across multiple runs").
+//! runs by running many seed sets against one
+//! [`EngineSession`](crate::api::EngineSession) (§5: "the initialization
+//! cost can be amortized across multiple runs") — see
+//! [`Runner::run_batch`](crate::api::Runner::run_batch).
 
-use crate::api::{Program, VertexData};
+use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
 use crate::VertexId;
 
@@ -21,14 +24,16 @@ pub struct Nibble {
     /// `pr >= eps * deg` can't pin isolated vertices active forever.
     deg: Vec<u32>,
     pub eps: f32,
+    seeds: Vec<VertexId>,
 }
 
 impl Nibble {
-    pub fn new(g: &crate::graph::Graph, eps: f32) -> Self {
+    pub fn new(g: &Graph, eps: f32, seeds: &[VertexId]) -> Self {
         Self {
             pr: VertexData::new(g.n(), 0.0),
             deg: (0..g.n() as VertexId).map(|v| g.out_degree(v).max(1) as u32).collect(),
             eps,
+            seeds: seeds.to_vec(),
         }
     }
 
@@ -87,6 +92,29 @@ impl Program for Nibble {
     }
 }
 
+/// Typed output: the diffusion vector plus its support size.
+pub struct NibbleOutput {
+    /// Per-vertex probability mass.
+    pub pr: Vec<f32>,
+    /// Vertices with non-zero probability (the touched neighborhood).
+    pub support: usize,
+}
+
+impl Algorithm for Nibble {
+    type Output = NibbleOutput;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        let frontier = self.reset_seeds(&self.seeds.clone());
+        FrontierInit::Seeds(frontier)
+    }
+
+    fn finish(self) -> NibbleOutput {
+        let pr = self.pr.to_vec();
+        let support = pr.iter().filter(|&&x| x > 0.0).count();
+        NibbleOutput { pr, support }
+    }
+}
+
 pub struct NibbleResult {
     pub pr: Vec<f32>,
     pub stats: RunStats,
@@ -95,32 +123,50 @@ pub struct NibbleResult {
 }
 
 /// Run Nibble from `seeds` with threshold `eps` for at most `max_iters`.
+#[deprecated(note = "use api::Runner::on(&session).until(Convergence::FrontierEmpty.or_max_iters(n)).run(Nibble::new(g, eps, seeds))")]
 pub fn run(engine: &mut Engine, seeds: &[VertexId], eps: f32, max_iters: usize) -> NibbleResult {
-    let prog = Nibble::new(engine.graph(), eps);
-    let frontier = prog.reset_seeds(seeds);
-    engine.load_frontier(&frontier);
-    let stats = engine.run(&prog, max_iters);
-    let pr = prog.pr.to_vec();
-    let support = pr.iter().filter(|&&x| x > 0.0).count();
-    NibbleResult { pr, stats, support }
+    let alg = Nibble::new(engine.graph(), eps, seeds);
+    let report = crate::api::drive(
+        engine,
+        alg,
+        &Convergence::FrontierEmpty.or_max_iters(max_iters),
+    );
+    NibbleResult {
+        stats: report.run_stats(),
+        support: report.output.support,
+        pr: report.output.pr,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{EngineSession, Runner};
     use crate::baselines::serial;
     use crate::graph::gen;
     use crate::ppm::{ModePolicy, PpmConfig};
 
+    fn run_nibble(
+        g: &crate::graph::Graph,
+        seeds: &[VertexId],
+        eps: f32,
+        iters: usize,
+        config: PpmConfig,
+    ) -> crate::api::RunReport<NibbleOutput> {
+        let session = EngineSession::new(g.clone(), config);
+        Runner::on(&session)
+            .until(Convergence::FrontierEmpty.or_max_iters(iters))
+            .run(Nibble::new(g, eps, seeds))
+    }
+
     fn check(g: &crate::graph::Graph, seeds: &[VertexId], eps: f32, iters: usize, config: PpmConfig) {
         let reference = serial::nibble(g, seeds, eps as f64, iters);
-        let mut eng = Engine::new(g.clone(), config);
-        let res = run(&mut eng, seeds, eps, iters);
+        let report = run_nibble(g, seeds, eps, iters, config);
         for v in 0..g.n() {
             assert!(
-                (res.pr[v] as f64 - reference[v]).abs() < 1e-4,
+                (report.output.pr[v] as f64 - reference[v]).abs() < 1e-4,
                 "v={v}: {} vs {}",
-                res.pr[v],
+                report.output.pr[v],
                 reference[v]
             );
         }
@@ -161,16 +207,20 @@ mod tests {
     #[test]
     fn nibble_mass_conserved_and_local() {
         let g = gen::chain(2000);
-        let mut eng = Engine::new(g, PpmConfig { threads: 2, ..Default::default() });
-        let res = run(&mut eng, &[0], 1e-3, 200);
-        let sum: f64 = res.pr.iter().map(|&x| x as f64).sum();
+        let report =
+            run_nibble(&g, &[0], 1e-3, 200, PpmConfig { threads: 2, ..Default::default() });
+        let sum: f64 = report.output.pr.iter().map(|&x| x as f64).sum();
         assert!(sum <= 1.0 + 1e-5);
         // Support grows at most one hop per iteration on a chain and the
         // threshold truncates long before the tail: strongly local.
-        assert!(res.support < 300, "diffusion must stay local, touched {}", res.support);
+        assert!(
+            report.output.support < 300,
+            "diffusion must stay local, touched {}",
+            report.output.support
+        );
         // The wave advances at most one hop per iteration: the far end
         // of the chain must be untouched.
-        assert_eq!(res.pr[1999], 0.0);
+        assert_eq!(report.output.pr[1999], 0.0);
     }
 
     #[test]
@@ -180,12 +230,36 @@ mod tests {
         // messages must be far below |E|.
         let g = gen::rmat(12, Default::default(), true);
         let m = g.m() as u64;
-        let mut eng = Engine::new(g, PpmConfig { threads: 2, ..Default::default() });
-        let res = run(&mut eng, &[0], 1e-2, 100);
-        let msgs = res.stats.total_messages();
+        let report =
+            run_nibble(&g, &[0], 1e-2, 100, PpmConfig { threads: 2, ..Default::default() });
+        let msgs = report.total_messages();
         assert!(
             msgs < m / 10,
             "nibble sent {msgs} messages on an {m}-edge graph — not work-efficient"
         );
+    }
+
+    #[test]
+    fn nibble_batch_amortizes_one_session() {
+        // Many seed sets through run_batch: one layout build, distinct
+        // diffusion per query.
+        let g = gen::grid(10, 10);
+        let session = EngineSession::new(
+            g.clone(),
+            PpmConfig { threads: 2, k: Some(5), ..Default::default() },
+        );
+        let before = crate::ppm::layout_builds();
+        let batch: Vec<Nibble> =
+            [0u32, 33, 99].iter().map(|&s| Nibble::new(&g, 1e-5, &[s])).collect();
+        let reports = Runner::on(&session)
+            .until(Convergence::FrontierEmpty.or_max_iters(25))
+            .run_batch(batch);
+        assert_eq!(crate::ppm::layout_builds(), before);
+        for (i, &s) in [0u32, 33, 99].iter().enumerate() {
+            let reference = serial::nibble(&g, &[s], 1e-5, 25);
+            for v in 0..g.n() {
+                assert!((reports[i].output.pr[v] as f64 - reference[v]).abs() < 1e-4);
+            }
+        }
     }
 }

@@ -5,8 +5,18 @@
 //! Phase order per iteration (the reason Alg. 6 needs no second rank
 //! array): `scatter` reads the *current* rank, `init` zeroes it, `gather`
 //! accumulates shares, `filter` applies the damping.
+//!
+//! New API:
+//! ```ignore
+//! let report = Runner::on(&session)
+//!     .until(Convergence::L1Norm(1e-7).or_max_iters(100))
+//!     .run(PageRank::new(session.graph(), 0.85));
+//! ```
+//! [`PageRank::post_iteration`] reports the L1 rank change, so the
+//! `L1Norm` policy converges on numerics instead of a fixed count.
 
-use crate::api::{Program, VertexData};
+use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
 use crate::ppm::{Engine, IterStats};
 use crate::VertexId;
 
@@ -17,16 +27,21 @@ pub struct PageRank {
     pub rank: VertexData<f32>,
     /// Out-degrees (read-only after construction).
     deg: Vec<u32>,
+    /// Previous-iteration snapshot for the L1 progress delta. Empty
+    /// until `progress_delta` is first called, so budget-only policies
+    /// never pay for it.
+    prev: Vec<f32>,
     n: usize,
     d: f32,
 }
 
 impl PageRank {
-    pub fn new(g: &crate::graph::Graph, d: f32) -> Self {
+    pub fn new(g: &Graph, d: f32) -> Self {
         let n = g.n();
         Self {
             rank: VertexData::new(n, 1.0 / n as f32),
             deg: (0..n as VertexId).map(|v| g.out_degree(v) as u32).collect(),
+            prev: Vec::new(),
             n,
             d,
         }
@@ -63,39 +78,78 @@ impl Program for PageRank {
     }
 }
 
-/// Result of a PageRank run.
+impl Algorithm for PageRank {
+    type Output = Vec<f32>;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        FrontierInit::All
+    }
+
+    /// PageRank's frontier never drains, so a bare `FrontierEmpty`
+    /// would loop forever — bound the default.
+    fn default_until(&self) -> Convergence {
+        Convergence::L1Norm(1e-7).or_max_iters(100)
+    }
+
+    fn progress_delta(&mut self) -> Option<f64> {
+        // L1 rank change vs the previous iteration — the delta
+        // Convergence::L1Norm tests against. O(n), dwarfed by the O(E)
+        // iteration it follows; only invoked under an L1Norm policy.
+        if self.prev.len() != self.n {
+            // First call: snapshot only; no delta to report yet.
+            self.prev = self.rank.to_vec();
+            return None;
+        }
+        let mut delta = 0f64;
+        for v in 0..self.n {
+            let r = self.rank.get(v as VertexId);
+            delta += (r as f64 - self.prev[v] as f64).abs();
+            self.prev[v] = r;
+        }
+        Some(delta)
+    }
+
+    fn finish(self) -> Vec<f32> {
+        self.rank.to_vec()
+    }
+}
+
+/// Result of a PageRank run (legacy shape).
 pub struct PageRankResult {
     pub rank: Vec<f32>,
     pub iters: Vec<IterStats>,
 }
 
 /// Run `iters` synchronous PageRank iterations (paper: 10).
+#[deprecated(
+    note = "use api::Runner::on(&session).until(Convergence::MaxIters(iters)).run(PageRank::new(g, d))"
+)]
 pub fn run(engine: &mut Engine, d: f32, iters: usize) -> PageRankResult {
-    let prog = PageRank::new(engine.graph(), d);
-    engine.load_all_active();
-    let mut stats = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        stats.push(engine.iterate(&prog));
-    }
-    PageRankResult { rank: prog.rank.to_vec(), iters: stats }
+    let alg = PageRank::new(engine.graph(), d);
+    let report = crate::api::drive(engine, alg, &Convergence::MaxIters(iters));
+    PageRankResult { rank: report.output, iters: report.iters }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{EngineSession, Runner};
     use crate::baselines::serial;
     use crate::graph::gen;
     use crate::ppm::{ModePolicy, PpmConfig};
 
     fn check(g: &crate::graph::Graph, config: PpmConfig, iters: usize, tol: f64) {
         let reference = serial::pagerank(g, DEFAULT_DAMPING as f64, iters);
-        let mut eng = Engine::new(g.clone(), config);
-        let res = run(&mut eng, DEFAULT_DAMPING, iters);
+        let session = EngineSession::new(g.clone(), config);
+        let report = Runner::on(&session)
+            .until(Convergence::MaxIters(iters))
+            .run(PageRank::new(g, DEFAULT_DAMPING));
+        assert_eq!(report.n_iters(), iters);
         for v in 0..g.n() {
             assert!(
-                (res.rank[v] as f64 - reference[v]).abs() < tol,
+                (report.output[v] as f64 - reference[v]).abs() < tol,
                 "v={v}: {} vs {}",
-                res.rank[v],
+                report.output[v],
                 reference[v]
             );
         }
@@ -125,10 +179,12 @@ mod tests {
         // All-active frontier on a dense-enough graph: Eq. 1 should pick
         // DC for (nearly) all partitions — the Fig. 6 premise.
         let g = gen::rmat(10, Default::default(), false);
-        let mut eng =
-            Engine::new(g, PpmConfig { threads: 2, k: Some(8), ..Default::default() });
-        let res = run(&mut eng, DEFAULT_DAMPING, 2);
-        let it = &res.iters[0];
+        let session =
+            EngineSession::new(g.clone(), PpmConfig { threads: 2, k: Some(8), ..Default::default() });
+        let report = Runner::on(&session)
+            .until(Convergence::MaxIters(2))
+            .run(PageRank::new(&g, DEFAULT_DAMPING));
+        let it = &report.iters[0];
         assert!(it.dc_parts > 0, "expected DC-mode partitions, got {it:?}");
         assert!(it.dc_parts >= it.sc_parts);
     }
@@ -136,10 +192,46 @@ mod tests {
     #[test]
     fn pagerank_mass_bounded() {
         let g = gen::rmat(8, Default::default(), false);
-        let mut eng = Engine::new(g, PpmConfig::with_threads(2));
-        let res = run(&mut eng, DEFAULT_DAMPING, 10);
-        let sum: f64 = res.rank.iter().map(|&x| x as f64).sum();
+        let session = EngineSession::new(g.clone(), PpmConfig::with_threads(2));
+        let report = Runner::on(&session)
+            .until(Convergence::MaxIters(10))
+            .run(PageRank::new(&g, DEFAULT_DAMPING));
+        let sum: f64 = report.output.iter().map(|&x| x as f64).sum();
         assert!(sum <= 1.0 + 1e-4, "rank mass {sum} exceeds 1");
         assert!(sum > 0.2, "rank mass {sum} collapsed");
+    }
+
+    #[test]
+    fn bare_runner_terminates_via_default_until() {
+        // PageRank's frontier never drains; without the algorithm's
+        // bounded default_until a policy-less run would never stop.
+        let g = gen::erdos_renyi(200, 1200, 3);
+        let session = EngineSession::new(g.clone(), PpmConfig::with_threads(2));
+        let report = Runner::on(&session).run(PageRank::new(&g, DEFAULT_DAMPING));
+        assert!(report.n_iters() <= 100, "default budget must bound the run");
+        assert!(report.n_iters() > 0);
+    }
+
+    #[test]
+    fn pagerank_l1_policy_converges_before_budget() {
+        let g = gen::erdos_renyi(500, 4000, 9);
+        let session = EngineSession::new(
+            g.clone(),
+            PpmConfig { threads: 2, k: Some(8), ..Default::default() },
+        );
+        let report = Runner::on(&session)
+            .until(Convergence::L1Norm(1e-6).or_max_iters(1000))
+            .run(PageRank::new(&g, DEFAULT_DAMPING));
+        assert!(report.converged, "L1 policy should reach the tolerance");
+        assert!(
+            report.n_iters() < 1000,
+            "should converge before the budget, took {}",
+            report.n_iters()
+        );
+        // The converged ranks agree with a long fixed-count run.
+        let reference = serial::pagerank(&g, DEFAULT_DAMPING as f64, report.n_iters());
+        for v in 0..g.n() {
+            assert!((report.output[v] as f64 - reference[v]).abs() < 1e-4);
+        }
     }
 }

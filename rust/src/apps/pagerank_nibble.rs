@@ -8,7 +8,8 @@
 //!   r[v] ← (1-α)·r[v]/2.
 //! Invariant: p-mass + r-mass = 1 (up to float error).
 
-use crate::api::{Program, VertexData};
+use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
 use crate::VertexId;
 
@@ -20,16 +21,18 @@ pub struct PageRankNibble {
     deg: Vec<u32>,
     pub alpha: f32,
     pub eps: f32,
+    seeds: Vec<VertexId>,
 }
 
 impl PageRankNibble {
-    pub fn new(g: &crate::graph::Graph, alpha: f32, eps: f32) -> Self {
+    pub fn new(g: &Graph, alpha: f32, eps: f32, seeds: &[VertexId]) -> Self {
         Self {
             p: VertexData::new(g.n(), 0.0),
             r: VertexData::new(g.n(), 0.0),
             deg: (0..g.n() as VertexId).map(|v| g.out_degree(v).max(1) as u32).collect(),
             alpha,
             eps,
+            seeds: seeds.to_vec(),
         }
     }
 
@@ -38,6 +41,8 @@ impl PageRankNibble {
         self.r.get(v) >= self.eps * self.deg[v as usize] as f32
     }
 
+    /// Distribute unit residual mass over `seeds`; returns the seeds
+    /// passing the activation threshold.
     pub fn seed(&self, seeds: &[VertexId]) -> Vec<VertexId> {
         let share = 1.0 / seeds.len() as f32;
         for &s in seeds {
@@ -84,12 +89,32 @@ impl Program for PageRankNibble {
     }
 }
 
+/// Typed output: the settled/residual mass pair for conductance sweeps.
+pub struct PrNibbleOutput {
+    pub p: Vec<f32>,
+    pub r: Vec<f32>,
+}
+
+impl Algorithm for PageRankNibble {
+    type Output = PrNibbleOutput;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        let seeds = self.seeds.clone();
+        FrontierInit::Seeds(self.seed(&seeds))
+    }
+
+    fn finish(self) -> PrNibbleOutput {
+        PrNibbleOutput { p: self.p.to_vec(), r: self.r.to_vec() }
+    }
+}
+
 pub struct PrNibbleResult {
     pub p: Vec<f32>,
     pub r: Vec<f32>,
     pub stats: RunStats,
 }
 
+#[deprecated(note = "use api::Runner::on(&session).until(Convergence::FrontierEmpty.or_max_iters(n)).run(PageRankNibble::new(g, alpha, eps, seeds))")]
 pub fn run(
     engine: &mut Engine,
     seeds: &[VertexId],
@@ -97,49 +122,79 @@ pub fn run(
     eps: f32,
     max_iters: usize,
 ) -> PrNibbleResult {
-    let prog = PageRankNibble::new(engine.graph(), alpha, eps);
-    let frontier = prog.seed(seeds);
-    engine.load_frontier(&frontier);
-    let stats = engine.run(&prog, max_iters);
-    PrNibbleResult { p: prog.p.to_vec(), r: prog.r.to_vec(), stats }
+    let alg = PageRankNibble::new(engine.graph(), alpha, eps, seeds);
+    let report = crate::api::drive(
+        engine,
+        alg,
+        &Convergence::FrontierEmpty.or_max_iters(max_iters),
+    );
+    PrNibbleResult { stats: report.run_stats(), p: report.output.p, r: report.output.r }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{EngineSession, Runner};
     use crate::graph::gen;
     use crate::ppm::PpmConfig;
+
+    fn run_prn(
+        g: &crate::graph::Graph,
+        seeds: &[VertexId],
+        alpha: f32,
+        eps: f32,
+        iters: usize,
+        config: PpmConfig,
+    ) -> crate::api::RunReport<PrNibbleOutput> {
+        let session = EngineSession::new(g.clone(), config);
+        Runner::on(&session)
+            .until(Convergence::FrontierEmpty.or_max_iters(iters))
+            .run(PageRankNibble::new(g, alpha, eps, seeds))
+    }
 
     #[test]
     fn mass_invariant_p_plus_r_equals_one() {
         let g = gen::grid(10, 10);
-        let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(5), ..Default::default() });
-        let res = run(&mut eng, &[0], 0.15, 1e-6, 100);
-        let mass: f64 = res.p.iter().chain(res.r.iter()).map(|&x| x as f64).sum();
+        let report = run_prn(
+            &g,
+            &[0],
+            0.15,
+            1e-6,
+            100,
+            PpmConfig { threads: 2, k: Some(5), ..Default::default() },
+        );
+        let mass: f64 = report
+            .output
+            .p
+            .iter()
+            .chain(report.output.r.iter())
+            .map(|&x| x as f64)
+            .sum();
         assert!((mass - 1.0).abs() < 1e-4, "p+r mass = {mass}");
     }
 
     #[test]
     fn settles_mass_near_seed() {
         let g = gen::grid(20, 20);
-        let mut eng = Engine::new(g, PpmConfig { threads: 2, ..Default::default() });
-        let res = run(&mut eng, &[0], 0.15, 1e-5, 200);
+        let report =
+            run_prn(&g, &[0], 0.15, 1e-5, 200, PpmConfig { threads: 2, ..Default::default() });
         // Seed should hold the largest settled mass.
-        let max_v = (0..res.p.len()).max_by(|&a, &b| res.p[a].total_cmp(&res.p[b])).unwrap();
+        let p = &report.output.p;
+        let max_v = (0..p.len()).max_by(|&a, &b| p[a].total_cmp(&p[b])).unwrap();
         assert_eq!(max_v, 0);
-        assert!(res.p[0] > 0.1);
+        assert!(p[0] > 0.1);
     }
 
     #[test]
     fn converges_with_threshold() {
         let g = gen::rmat(8, Default::default(), true);
-        let mut eng = Engine::new(g, PpmConfig { threads: 2, ..Default::default() });
-        let res = run(&mut eng, &[3], 0.2, 1e-3, 500);
-        assert!(res.stats.converged);
+        let report =
+            run_prn(&g, &[3], 0.2, 1e-3, 500, PpmConfig { threads: 2, ..Default::default() });
+        assert!(report.converged);
         // All residuals below threshold at convergence.
-        for v in 0..res.r.len() {
-            let deg = eng.graph().out_degree(v as u32).max(1) as f32;
-            assert!(res.r[v] < 1e-3 * deg + 1e-6, "residual too big at {v}");
+        for v in 0..report.output.r.len() {
+            let deg = g.out_degree(v as u32).max(1) as f32;
+            assert!(report.output.r[v] < 1e-3 * deg + 1e-6, "residual too big at {v}");
         }
     }
 }

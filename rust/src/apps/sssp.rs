@@ -5,18 +5,25 @@
 //! applied per edge at scatter time. Updates are synchronous (visible
 //! next iteration), which the paper notes costs some convergence speed
 //! versus Ligra's asynchronous pushes (§6.2.1).
+//!
+//! New API:
+//! ```ignore
+//! let report = Runner::on(&session).run(Sssp::new(session.graph().n(), source));
+//! ```
 
-use crate::api::{Program, VertexData};
+use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
 use crate::{VertexId, Weight};
 
 pub struct Sssp {
     pub distance: VertexData<f32>,
+    source: VertexId,
 }
 
 impl Sssp {
-    pub fn new(n: usize) -> Self {
-        Self { distance: VertexData::new(n, f32::INFINITY) }
+    pub fn new(n: usize, source: VertexId) -> Self {
+        Self { distance: VertexData::new(n, f32::INFINITY), source }
     }
 }
 
@@ -56,42 +63,55 @@ impl Program for Sssp {
     }
 }
 
+impl Algorithm for Sssp {
+    type Output = Vec<f32>;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        self.distance.set(self.source, 0.0);
+        FrontierInit::Seeds(vec![self.source])
+    }
+
+    fn finish(self) -> Vec<f32> {
+        self.distance.to_vec()
+    }
+}
+
 pub struct SsspResult {
     pub distance: Vec<f32>,
     pub stats: RunStats,
 }
 
 /// Run Bellman-Ford from `source` until no distance changes.
+#[deprecated(note = "use api::Runner::on(&session).run(Sssp::new(n, source))")]
 pub fn run(engine: &mut Engine, source: VertexId) -> SsspResult {
-    let prog = Sssp::new(engine.graph().n());
-    prog.distance.set(source, 0.0);
-    engine.load_frontier(&[source]);
-    let stats = engine.run(&prog, usize::MAX);
-    SsspResult { distance: prog.distance.to_vec(), stats }
+    let alg = Sssp::new(engine.graph().n(), source);
+    let report = crate::api::drive(engine, alg, &Convergence::FrontierEmpty);
+    SsspResult { stats: report.run_stats(), distance: report.output }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{EngineSession, Runner};
     use crate::baselines::serial;
     use crate::graph::gen;
     use crate::ppm::{ModePolicy, PpmConfig};
 
     fn check(g: &crate::graph::Graph, source: VertexId, config: PpmConfig) {
         let reference = serial::sssp_dijkstra(g, source);
-        let mut eng = Engine::new(g.clone(), config);
-        let res = run(&mut eng, source);
-        assert!(res.stats.converged);
+        let session = EngineSession::new(g.clone(), config);
+        let report = Runner::on(&session).run(Sssp::new(g.n(), source));
+        assert!(report.converged);
         for v in 0..g.n() {
             if reference[v].is_finite() {
                 assert!(
-                    (res.distance[v] - reference[v]).abs() < 1e-3,
+                    (report.output[v] - reference[v]).abs() < 1e-3,
                     "v={v}: {} vs {}",
-                    res.distance[v],
+                    report.output[v],
                     reference[v]
                 );
             } else {
-                assert!(res.distance[v].is_infinite());
+                assert!(report.output[v].is_infinite());
             }
         }
     }
@@ -117,13 +137,13 @@ mod tests {
         let base = gen::erdos_renyi(300, 1800, 3);
         let lv = serial::bfs_levels(&base, 0);
         let g = gen::with_uniform_weights(&base, 1.0, 1.0 + f32::EPSILON, 1);
-        let mut eng = Engine::new(g.clone(), PpmConfig::with_threads(2));
-        let res = run(&mut eng, 0);
+        let session = EngineSession::new(g.clone(), PpmConfig::with_threads(2));
+        let report = Runner::on(&session).run(Sssp::new(g.n(), 0));
         for v in 0..g.n() {
             if lv[v] >= 0 {
-                assert_eq!(res.distance[v].round() as i32, lv[v]);
+                assert_eq!(report.output[v].round() as i32, lv[v]);
             } else {
-                assert!(res.distance[v].is_infinite());
+                assert!(report.output[v].is_infinite());
             }
         }
     }
@@ -131,10 +151,10 @@ mod tests {
     #[test]
     fn sssp_negative_free_chain() {
         let g = gen::with_uniform_weights(&gen::chain(50), 2.0, 2.0 + 1e-6, 1);
-        let mut eng = Engine::new(g, PpmConfig::default());
-        let res = run(&mut eng, 0);
+        let session = EngineSession::new(g, PpmConfig::default());
+        let report = Runner::on(&session).run(Sssp::new(50, 0));
         for v in 0..50 {
-            assert!((res.distance[v] - 2.0 * v as f32).abs() < 1e-3);
+            assert!((report.output[v] - 2.0 * v as f32).abs() < 1e-3);
         }
     }
 }

@@ -37,7 +37,7 @@ pub trait SpmvProgram: Sync {
 /// The engine: dense frontier mask, per-thread destination-range
 /// buckets, barrier-synchronized scatter/gather.
 pub struct SpmvEngine {
-    graph: Graph,
+    graph: std::sync::Arc<Graph>,
     pool: ThreadPool,
     /// Dense activity mask (O(V) scanned every iteration — the point).
     active: Bitset,
@@ -45,7 +45,9 @@ pub struct SpmvEngine {
 }
 
 impl SpmvEngine {
-    pub fn new(graph: Graph, threads: usize) -> Self {
+    /// Accepts a `Graph` (moved) or an `Arc<Graph>` (shared — no clone).
+    pub fn new(graph: impl Into<std::sync::Arc<Graph>>, threads: usize) -> Self {
+        let graph = graph.into();
         let n = graph.n();
         Self { graph, pool: ThreadPool::new(threads), active: Bitset::new(n), n_active: 0 }
     }

@@ -1,13 +1,14 @@
 //! `gpop` subcommand implementations.
 
 use super::spec::GraphSpec;
+use crate::api::{Convergence, EngineSession, RunReport, Runner};
 use crate::apps;
 use crate::cachesim::model::{self, Framework};
 use crate::cachesim::CacheConfig;
 use crate::exec::ThreadPool;
 use crate::graph::io;
 use crate::metrics;
-use crate::ppm::{Engine, ModePolicy, PpmConfig, RunStats};
+use crate::ppm::{ModePolicy, PpmConfig};
 use crate::util::cli::{Args, CliError};
 use crate::util::fmt;
 use std::path::Path;
@@ -44,16 +45,18 @@ fn build_graph(args: &Args) -> Result<crate::graph::Graph, CliError> {
     Ok(g)
 }
 
-fn print_run_stats(stats: &RunStats, verbose: bool) {
+fn print_report<O>(report: &RunReport<O>, verbose: bool) {
     println!(
-        "iterations: {}  total: {}  messages: {}  converged: {}",
-        stats.n_iters(),
-        fmt::secs(stats.total_time),
-        fmt::si(stats.total_messages() as f64),
-        stats.converged
+        "iterations: {}  total: {}  messages: {}  converged: {}  modes: {} SC / {} DC",
+        report.n_iters(),
+        fmt::secs(report.total_time),
+        fmt::si(report.total_messages() as f64),
+        report.converged,
+        report.sc_parts(),
+        report.dc_parts(),
     );
     if verbose {
-        for it in &stats.iters {
+        for it in &report.iters {
             println!(
                 "  iter {:>3}: frontier {:>9} edges {:>10} msgs {:>10} sc {:>4} dc {:>4} \
                  scatter {} gather {} finalize {}",
@@ -83,33 +86,43 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
     );
     let verbose = args.flag("verbose");
     let t0 = std::time::Instant::now();
-    let mut engine = Engine::new(g, config);
+    let session = EngineSession::new(g, config);
+    let graph = session.graph().clone();
     println!(
         "preprocessing: {} (k = {})",
         fmt::secs(t0.elapsed().as_secs_f64()),
-        engine.parts().k()
+        session.parts().k()
     );
+    let runner = Runner::on(&session);
     let root = args.get_parsed_or::<u32>("root", 0)?;
     let iters = args.get_parsed_or::<usize>("iters", 10)?;
     let seeds = args.get_list::<u32>("seeds")?.unwrap_or_else(|| vec![root]);
     let eps = args.get_parsed_or::<f32>("eps", 1e-6)?;
     match app.as_str() {
         "bfs" => {
-            let res = apps::bfs::run(&mut engine, root);
-            print_run_stats(&res.stats, verbose);
-            println!("reached: {} vertices from root {root}", fmt::si(res.n_reached() as f64));
+            let res = runner.run(apps::Bfs::new(graph.n(), root));
+            print_report(&res, verbose);
+            println!(
+                "reached: {} vertices from root {root}",
+                fmt::si(apps::bfs::n_reached(&res.output) as f64)
+            );
         }
         "pr" | "pagerank" => {
-            let res = apps::pagerank::run(&mut engine, apps::pagerank::DEFAULT_DAMPING, iters);
+            let res = runner
+                .until(Convergence::L1Norm(eps as f64).or_max_iters(iters))
+                .run(apps::PageRank::new(&graph, apps::pagerank::DEFAULT_DAMPING));
             let time: f64 = res.iters.iter().map(|i| i.total_time()).sum();
-            let edges = engine.graph().m() as u64 * iters as u64;
+            let edges = graph.m() as u64 * res.n_iters() as u64;
             println!(
-                "{iters} iterations in {} — {} edges/s",
+                "{} iterations in {} — {} edges/s ({})",
+                res.n_iters(),
                 fmt::secs(time),
-                fmt::si(edges as f64 / time)
+                fmt::si(edges as f64 / time),
+                if res.converged { "L1 tolerance met" } else { "iteration budget" }
             );
             if verbose {
-                let mut top: Vec<(usize, f32)> = res.rank.iter().copied().enumerate().collect();
+                let mut top: Vec<(usize, f32)> =
+                    res.output.iter().copied().enumerate().collect();
                 top.sort_by(|a, b| b.1.total_cmp(&a.1));
                 for (v, r) in top.iter().take(5) {
                     println!("  rank[{v}] = {r:.6}");
@@ -117,39 +130,48 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
             }
         }
         "cc" => {
-            let res = apps::cc::run(&mut engine, 10_000);
-            print_run_stats(&res.stats, verbose);
-            println!("components (label fixpoint classes): {}", res.n_components());
+            let res = runner
+                .until(Convergence::FrontierEmpty.or_max_iters(10_000))
+                .run(apps::LabelProp::new(graph.n()));
+            print_report(&res, verbose);
+            println!(
+                "components (label fixpoint classes): {}",
+                apps::cc::n_components(&res.output)
+            );
         }
         "sssp" => {
-            if !engine.graph().is_weighted() {
+            if !graph.is_weighted() {
                 return Err(CliError(
                     "sssp needs a weighted graph; add '+w:1:4' to the spec".into(),
                 ));
             }
-            let res = apps::sssp::run(&mut engine, root);
-            print_run_stats(&res.stats, verbose);
-            let reached = res.distance.iter().filter(|d| d.is_finite()).count();
+            let res = runner.run(apps::Sssp::new(graph.n(), root));
+            print_report(&res, verbose);
+            let reached = res.output.iter().filter(|d| d.is_finite()).count();
             println!("reached: {} vertices", fmt::si(reached as f64));
         }
         "nibble" => {
-            let res = apps::nibble::run(&mut engine, &seeds, eps, iters.max(100));
-            print_run_stats(&res.stats, verbose);
-            println!("support: {} vertices with non-zero probability", res.support);
+            let res = runner
+                .until(Convergence::FrontierEmpty.or_max_iters(iters.max(100)))
+                .run(apps::Nibble::new(&graph, eps, &seeds));
+            print_report(&res, verbose);
+            println!("support: {} vertices with non-zero probability", res.output.support);
         }
         "prnibble" => {
             let alpha = args.get_parsed_or::<f32>("alpha", 0.15)?;
-            let res = apps::pagerank_nibble::run(&mut engine, &seeds, alpha, eps, iters.max(100));
-            print_run_stats(&res.stats, verbose);
-            let settled: f64 = res.p.iter().map(|&x| x as f64).sum();
+            let res = runner
+                .until(Convergence::FrontierEmpty.or_max_iters(iters.max(100)))
+                .run(apps::PageRankNibble::new(&graph, alpha, eps, &seeds));
+            print_report(&res, verbose);
+            let settled: f64 = res.output.p.iter().map(|&x| x as f64).sum();
             println!("settled mass: {settled:.4}");
         }
         "heatkernel" => {
             let t = args.get_parsed_or::<f32>("t", 2.0)?;
             let order = args.get_parsed_or::<u32>("order", 10)?;
-            let res = apps::heat_kernel::run(&mut engine, &seeds, t, order, eps);
-            println!("heat-kernel: {} stages", res.iters);
-            let mass: f64 = res.heat.iter().map(|&x| x as f64).sum();
+            let res = runner.run(apps::HeatKernel::new(&graph, t, order, eps, &seeds));
+            println!("heat-kernel: {} stages", res.n_iters());
+            let mass: f64 = res.output.iter().map(|&x| x as f64).sum();
             println!("heat mass: {mass:.4}");
         }
         other => return Err(CliError(format!("unknown app {other:?}"))),
@@ -241,11 +263,13 @@ pub fn cmd_pjrt(args: &Args) -> Result<i32, CliError> {
         fmt::secs(t0.elapsed().as_secs_f64())
     );
     if args.flag("check") {
-        let mut eng = Engine::new(g, PpmConfig::with_threads(2));
-        let native = apps::pagerank::run(&mut eng, 0.85, m.iters);
+        let session = EngineSession::new(g, PpmConfig::with_threads(2));
+        let native = Runner::on(&session)
+            .until(Convergence::MaxIters(m.iters))
+            .run(apps::PageRank::new(session.graph(), 0.85));
         let max_err = rank
             .iter()
-            .zip(&native.rank)
+            .zip(&native.output)
             .map(|(a, b)| (a - b).abs())
             .fold(0f32, f32::max);
         println!("max |pjrt - native| = {max_err:.2e}");

@@ -3,9 +3,38 @@
 //! A reproduction of the GPOP framework (Lakhotia et al., PPoPP 2019):
 //! a cache- and work-efficient Partition-Centric Programming Model (PPM)
 //! for shared-memory graph analytics, plus the baselines and measurement
-//! substrate the paper evaluates against.
+//! substrate the paper evaluates against — grown into a multi-query
+//! serving engine.
 //!
-//! The crate is organised bottom-up:
+//! ## The 60-second tour
+//!
+//! One [`api::EngineSession`] per graph; the `O(E)` pre-processing
+//! (partitioning, bin/PNG layout) runs exactly once and every query —
+//! sequential, concurrent, or batched — reuses it:
+//!
+//! ```ignore
+//! use gpop::api::{Convergence, EngineSession, Runner};
+//! use gpop::apps::{Bfs, PageRank};
+//! use gpop::ppm::{ModePolicy, PpmConfig};
+//!
+//! let session = EngineSession::new(graph, PpmConfig::with_threads(8));
+//! let pr = Runner::on(&session)
+//!     .policy(ModePolicy::Hybrid)
+//!     .until(Convergence::L1Norm(1e-7).or_max_iters(100))
+//!     .run(PageRank::new(session.graph(), 0.85));
+//! let n = session.graph().n();
+//! let sweeps = Runner::on(&session)
+//!     .run_batch((0..16).map(|r| Bfs::new(n, r)));   // one engine, 16 queries
+//! ```
+//!
+//! Every run returns an [`api::RunReport`]: typed output + per-iteration
+//! stats + SC/DC mode decisions + timing. Algorithms implement
+//! [`api::Algorithm`] — the paper's four user functions (via
+//! [`api::Program`]) plus lifecycle hooks (`init_frontier`,
+//! `default_until`, `converged`, `post_iteration`, `progress_delta`,
+//! `finish`), so the engine drives the loop, not the app.
+//!
+//! ## Crate layout (bottom-up)
 //!
 //! - [`util`] — PRNG, bitsets, sorting, statistics (no external deps).
 //! - [`exec`] — OpenMP-style thread pool with dynamic scheduling and
@@ -13,12 +42,16 @@
 //! - [`graph`] — CSR/CSC storage, generators (RMAT, Erdős–Rényi), IO.
 //! - [`partition`] — index-based partitioner and the PNG
 //!   (Partition-Node bipartite Graph) layout used by DC-mode scatter.
-//! - [`ppm`] — the Partition-Centric engine: bin grid, 2-level active
-//!   lists, the Eq.-1 communication cost model, scatter/gather phases.
-//! - [`api`] — the user-facing programming interface
-//!   (`scatterFunc`/`initFunc`/`gatherFunc`/`filterFunc`/`applyWeight`).
-//! - [`apps`] — BFS, PageRank, Connected Components (label propagation),
-//!   SSSP (Bellman-Ford), Nibble, and extensions.
+//! - [`ppm`] — the Partition-Centric engine: the immutable
+//!   [`ppm::BinLayout`] (shared per session) vs per-engine bin scratch,
+//!   2-level active lists, the Eq.-1 communication cost model,
+//!   scatter/gather phases.
+//! - [`api`] — the user-facing interface: the §4.1 `Program` functions
+//!   plus the `Algorithm`/`EngineSession`/`Runner`/`Convergence`
+//!   serving layer.
+//! - [`apps`] — BFS, PageRank, Connected Components (sync + async
+//!   label propagation), SSSP (Bellman-Ford), Nibble, PageRank-Nibble,
+//!   Heat-Kernel — all expressed as `Algorithm`s.
 //! - [`baselines`] — serial references plus Ligra-like (vertex-centric
 //!   push/pull/direction-optimizing), GraphMat-like (SpMV) and
 //!   X-Stream-like (edge-centric) engines.
@@ -26,10 +59,17 @@
 //!   engine's memory access trace, reproducing the paper's Tables 4–6.
 //! - [`metrics`] — timers, DRAM-traffic estimation, iteration logs.
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`).
+//!   artifacts (`artifacts/*.hlo.txt`); stubbed unless built with
+//!   `--features pjrt`.
 //! - [`bench`] — a micro-benchmark harness (criterion is unavailable in
 //!   this offline environment).
 //! - [`coordinator`] — the CLI launcher and config system.
+//!
+//! ## Migrating from the pre-session API
+//!
+//! The bespoke free functions (`apps::bfs::run(&mut engine, root)`, ...)
+//! still exist as deprecated shims over the same driver; see CHANGES.md
+//! for the old → new mapping.
 
 pub mod api;
 pub mod apps;

@@ -1,6 +1,18 @@
 //! The 2-D grid of message bins (paper §3.2) and the PNG
 //! (Partition-Node bipartite Graph) layout for DC-mode scatter (§3.3).
 //!
+//! The grid is split along the mutability axis:
+//!
+//! - [`BinLayout`] — everything computed by the one-time `O(E)`
+//!   pre-processing pass: the PNG segments, the pre-written DC id
+//!   streams and the per-partition totals. Immutable after build, so an
+//!   [`EngineSession`](crate::api::EngineSession) shares ONE layout
+//!   (behind an `Arc`) across every engine checked out from it — queries
+//!   never re-partition or re-scan the graph.
+//! - [`BinGrid`] — the per-engine mutable scratch: the message values and
+//!   SC-mode id streams written each iteration. Cheap to allocate from a
+//!   layout (capacity reservation only, no graph scan).
+//!
 //! `bin[i][j]` stores all messages from partition `i` to partition `j`:
 //!
 //! - `data` — message values (bit-cast to `u32`; the paper's `d_v = 4`).
@@ -19,6 +31,9 @@
 //! (`applyWeight(val, w)`), so messages degenerate to one value per edge
 //! and `data` aligns 1:1 with the id stream in both modes.
 
+use std::cell::Cell;
+use std::sync::Arc;
+
 use super::shared::SharedCells;
 use crate::graph::Graph;
 use crate::partition::Partitioner;
@@ -29,6 +44,19 @@ pub const MSG_START: u32 = 1 << 31;
 /// Mask recovering the vertex id.
 pub const ID_MASK: u32 = !MSG_START;
 
+thread_local! {
+    /// Per-thread count of `O(E)` layout builds — the "partition build
+    /// counter" tests use to assert that sessions amortize
+    /// pre-processing. Thread-local (builds run on the calling thread)
+    /// so concurrently running tests cannot race each other's counts.
+    static LAYOUT_BUILDS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of `O(E)` bin-layout builds performed by the calling thread.
+pub fn layout_builds() -> usize {
+    LAYOUT_BUILDS.with(|c| c.get())
+}
+
 /// Communication mode a bin row was scattered with (paper §3.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
@@ -38,20 +66,11 @@ pub enum Mode {
     Dc,
 }
 
-/// One bin of the grid. All fields except `data`/`ids`/`mode` are
-/// immutable after pre-processing.
-pub struct Bin {
-    /// Message values written this iteration (bit-cast user values).
-    pub data: Vec<u32>,
-    /// SC-mode destination id stream (MSB-delimited).
-    pub ids: Vec<u32>,
-    /// Mode `data` was written with in the current iteration.
-    pub mode: Mode,
-    /// Set once this bin has been registered in the active lists for the
-    /// current iteration; reset when the owner clears its row.
-    pub registered: bool,
-
-    // ---- pre-processed, read-only during iterations ----
+/// The immutable, pre-processed half of one bin: the PNG segment and the
+/// pre-written DC destination stream. Shared read-only by every engine
+/// built from the same [`BinLayout`].
+#[derive(Clone, Debug, Default)]
+pub struct StaticBin {
     /// Pre-written DC-mode destination id stream (MSB-delimited for
     /// unweighted graphs, flat per-edge for weighted).
     pub dc_ids: Vec<u32>,
@@ -68,20 +87,22 @@ pub struct Bin {
     pub n_msgs: u32,
 }
 
+/// The mutable, per-iteration half of one bin.
+pub struct Bin {
+    /// Message values written this iteration (bit-cast user values).
+    pub data: Vec<u32>,
+    /// SC-mode destination id stream (MSB-delimited).
+    pub ids: Vec<u32>,
+    /// Mode `data` was written with in the current iteration.
+    pub mode: Mode,
+    /// Set once this bin has been registered in the active lists for the
+    /// current iteration; reset when the owner clears its row.
+    pub registered: bool,
+}
+
 impl Bin {
     fn empty() -> Self {
-        Self {
-            data: Vec::new(),
-            ids: Vec::new(),
-            mode: Mode::Sc,
-            registered: false,
-            dc_ids: Vec::new(),
-            dc_srcs: Vec::new(),
-            dc_cnts: Vec::new(),
-            dc_wts: Vec::new(),
-            n_edges: 0,
-            n_msgs: 0,
-        }
+        Self { data: Vec::new(), ids: Vec::new(), mode: Mode::Sc, registered: false }
     }
 
     /// Reset the per-iteration state (owner-only).
@@ -93,11 +114,13 @@ impl Bin {
     }
 
     /// Iterate `(value_bits, dst)` message pairs for the mode this bin
-    /// was last scattered with. `weighted` selects the flat layout.
-    pub fn messages<'a>(&'a self, weighted: bool) -> MessageIter<'a> {
+    /// was last scattered with. `stat` must be the matching static half
+    /// (it supplies the DC id stream); `weighted` selects the flat
+    /// layout.
+    pub fn messages<'a>(&'a self, stat: &'a StaticBin, weighted: bool) -> MessageIter<'a> {
         let ids: &[u32] = match self.mode {
             Mode::Sc => &self.ids,
-            Mode::Dc => &self.dc_ids,
+            Mode::Dc => &stat.dc_ids,
         };
         MessageIter { data: &self.data, ids, weighted, cursor: 0, data_cursor: usize::MAX }
     }
@@ -147,29 +170,27 @@ pub struct PartMeta {
     pub neighbor_parts: Vec<PartId>,
 }
 
-/// The k×k bin grid plus per-partition metadata.
-///
-/// Interior mutability discipline: during scatter, the thread owning
-/// partition `i` exclusively accesses row `i` (`bin(i, *)`); during
-/// gather, the thread owning partition `j` exclusively accesses column
-/// `j` (`bin(*, j)`). Phases are barrier-separated.
-pub struct BinGrid {
+/// The immutable product of pre-processing (paper §4): one scan of the
+/// CSR computes bin sizes, the PNG layout and `dc_bin` contents. `O(E)`
+/// work, done once per (graph, partitioning) and shared — via
+/// `Arc<BinLayout>` — by every engine a session checks out.
+pub struct BinLayout {
     k: usize,
-    bins: SharedCells<Bin>,
-    meta: Vec<PartMeta>,
     weighted: bool,
+    bins: Vec<StaticBin>,
+    meta: Vec<PartMeta>,
 }
 
-impl BinGrid {
-    /// Pre-processing (paper §4): one scan of the CSR computes bin
-    /// sizes, the PNG layout and `dc_bin` contents. `O(E)` work, done
-    /// once; amortized across iterations/runs.
+impl BinLayout {
+    /// Run the `O(E)` pre-processing scan. Increments the calling
+    /// thread's [`layout_builds`] counter so tests can assert
+    /// amortization.
     pub fn build(graph: &Graph, parts: &Partitioner) -> Self {
+        LAYOUT_BUILDS.with(|c| c.set(c.get() + 1));
         let k = parts.k();
         let weighted = graph.is_weighted();
         let csr = graph.out();
-        let mut bins: Vec<Bin> = Vec::with_capacity(k * k);
-        bins.resize_with(k * k, Bin::empty);
+        let mut bins: Vec<StaticBin> = vec![StaticBin::default(); k * k];
         let mut meta = vec![PartMeta::default(); k];
 
         for p in 0..k {
@@ -213,15 +234,8 @@ impl BinGrid {
                 m.edges += adj.len() as u64;
             }
             m.msgs = (0..k).map(|j| bins[p * k + j].n_msgs as u64).sum();
-            // Reserve SC capacity so scatter never reallocates.
-            for j in 0..k {
-                let bin = &mut bins[p * k + j];
-                let data_cap = if weighted { bin.n_edges } else { bin.n_msgs } as usize;
-                bin.data.reserve_exact(data_cap);
-                bin.ids.reserve_exact(bin.n_edges as usize);
-            }
         }
-        Self { k, bins: SharedCells::from_vec(bins), meta, weighted }
+        Self { k, weighted, bins, meta }
     }
 
     #[inline]
@@ -239,7 +253,87 @@ impl BinGrid {
         &self.meta[p as usize]
     }
 
-    /// Exclusive access to `bin(i, j)`.
+    /// The static half of `bin(i, j)`.
+    #[inline]
+    pub fn stat(&self, i: PartId, j: PartId) -> &StaticBin {
+        &self.bins[i as usize * self.k + j as usize]
+    }
+
+    /// Total bytes held in pre-processed DC structures (reporting).
+    pub fn dc_bytes(&self) -> usize {
+        self.bins
+            .iter()
+            .map(|b| {
+                b.dc_ids.len() * 4 + b.dc_srcs.len() * 4 + b.dc_cnts.len() * 4 + b.dc_wts.len() * 4
+            })
+            .sum()
+    }
+}
+
+/// The k×k mutable bin grid of one engine, backed by a shared layout.
+///
+/// Interior mutability discipline: during scatter, the thread owning
+/// partition `i` exclusively accesses row `i` (`bin(i, *)`); during
+/// gather, the thread owning partition `j` exclusively accesses column
+/// `j` (`bin(*, j)`). Phases are barrier-separated.
+pub struct BinGrid {
+    layout: Arc<BinLayout>,
+    cells: SharedCells<Bin>,
+}
+
+impl BinGrid {
+    /// Allocate the mutable scratch for a prebuilt layout. `O(k²)`
+    /// allocations with exact capacity reservation — no graph scan, so
+    /// this is what a session checkout pays instead of `O(E)`.
+    pub fn from_layout(layout: Arc<BinLayout>) -> Self {
+        let k = layout.k;
+        let weighted = layout.weighted;
+        let mut cells: Vec<Bin> = Vec::with_capacity(k * k);
+        for stat in &layout.bins {
+            let mut b = Bin::empty();
+            // Reserve SC capacity so scatter never reallocates.
+            let data_cap = if weighted { stat.n_edges } else { stat.n_msgs } as usize;
+            b.data.reserve_exact(data_cap);
+            b.ids.reserve_exact(stat.n_edges as usize);
+            cells.push(b);
+        }
+        Self { layout, cells: SharedCells::from_vec(cells) }
+    }
+
+    /// Pre-process `graph` and allocate scratch in one step (the
+    /// single-query path; sessions call [`BinLayout::build`] once and
+    /// [`BinGrid::from_layout`] per checkout instead).
+    pub fn build(graph: &Graph, parts: &Partitioner) -> Self {
+        Self::from_layout(Arc::new(BinLayout::build(graph, parts)))
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.layout.k
+    }
+
+    #[inline]
+    pub fn weighted(&self) -> bool {
+        self.layout.weighted
+    }
+
+    #[inline]
+    pub fn layout(&self) -> &Arc<BinLayout> {
+        &self.layout
+    }
+
+    #[inline]
+    pub fn meta(&self, p: PartId) -> &PartMeta {
+        self.layout.meta(p)
+    }
+
+    /// The immutable half of `bin(i, j)` (always safe to read).
+    #[inline]
+    pub fn stat(&self, i: PartId, j: PartId) -> &StaticBin {
+        self.layout.stat(i, j)
+    }
+
+    /// Exclusive access to the mutable half of `bin(i, j)`.
     ///
     /// # Safety
     /// Caller must hold phase ownership of row `i` (scatter) or column
@@ -247,35 +341,26 @@ impl BinGrid {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn bin_mut(&self, i: PartId, j: PartId) -> &mut Bin {
-        self.bins.get_mut(i as usize * self.k + j as usize)
+        self.cells.get_mut(i as usize * self.layout.k + j as usize)
     }
 
-    /// Shared read of `bin(i, j)`.
+    /// Shared read of the mutable half of `bin(i, j)`.
     ///
     /// # Safety
     /// No concurrent mutable access to the same bin.
     #[inline]
     pub unsafe fn bin(&self, i: PartId, j: PartId) -> &Bin {
-        self.bins.get(i as usize * self.k + j as usize)
+        self.cells.get(i as usize * self.layout.k + j as usize)
     }
 
     /// Safe access for tests / single-threaded inspection.
     pub fn bin_ref(&mut self, i: PartId, j: PartId) -> &Bin {
-        self.bins.get_mut_safe(i as usize * self.k + j as usize)
+        self.cells.get_mut_safe(i as usize * self.layout.k + j as usize)
     }
 
     /// Total bytes held in pre-processed DC structures (reporting).
-    pub fn dc_bytes(&mut self) -> usize {
-        let k = self.k;
-        let mut total = 0;
-        for i in 0..k * k {
-            let b = self.bins.get_mut_safe(i);
-            total += b.dc_ids.len() * 4
-                + b.dc_srcs.len() * 4
-                + b.dc_cnts.len() * 4
-                + b.dc_wts.len() * 4;
-        }
-        total
+    pub fn dc_bytes(&self) -> usize {
+        self.layout.dc_bytes()
     }
 }
 
@@ -298,16 +383,16 @@ mod tests {
     #[test]
     fn bin_sizes_match_edge_counts() {
         let (g, parts) = small();
-        let mut grid = BinGrid::build(&g, &parts);
+        let layout = BinLayout::build(&g, &parts);
         // Edges 0->1 stay in partition 0; 0->2, 1->2, 1->3 go 0->1; 0->5 goes 0->2.
-        assert_eq!(grid.bin_ref(0, 0).n_edges, 1);
-        assert_eq!(grid.bin_ref(0, 1).n_edges, 3);
-        assert_eq!(grid.bin_ref(0, 2).n_edges, 1);
-        assert_eq!(grid.bin_ref(2, 0).n_edges, 1); // 4->0
-        assert_eq!(grid.bin_ref(2, 2).n_edges, 2); // 5->4, 5->5
+        assert_eq!(layout.stat(0, 0).n_edges, 1);
+        assert_eq!(layout.stat(0, 1).n_edges, 3);
+        assert_eq!(layout.stat(0, 2).n_edges, 1);
+        assert_eq!(layout.stat(2, 0).n_edges, 1); // 4->0
+        assert_eq!(layout.stat(2, 2).n_edges, 2); // 5->4, 5->5
         // Messages: one per (source, dst-partition) pair.
-        assert_eq!(grid.bin_ref(0, 1).n_msgs, 2); // from 0 and from 1
-        assert_eq!(grid.bin_ref(2, 2).n_msgs, 1); // from 5
+        assert_eq!(layout.stat(0, 1).n_msgs, 2); // from 0 and from 1
+        assert_eq!(layout.stat(2, 2).n_msgs, 1); // from 5
     }
 
     #[test]
@@ -318,7 +403,6 @@ mod tests {
         assert_eq!(grid.meta(1).edges, 0);
         assert_eq!(grid.meta(2).edges, 3);
         let total_msgs: u64 = (0..3).map(|p| grid.meta(p).msgs).sum();
-        // (0: {p0:1 via 0->1? no — 0->1 is dst partition 0}): recompute:
         // src part 0: v0 -> {1(p0), 2(p1), 5(p2)} = 3 msgs; v1 -> {2,3}(p1) = 1 msg.
         // src part 2: v4 -> {0}(p0) = 1 msg; v5 -> {4,5}(p2) = 1 msg.
         assert_eq!(total_msgs, 6);
@@ -329,8 +413,8 @@ mod tests {
     #[test]
     fn dc_ids_are_msb_delimited_and_complete() {
         let (g, parts) = small();
-        let mut grid = BinGrid::build(&g, &parts);
-        let bin = grid.bin_ref(0, 1);
+        let layout = BinLayout::build(&g, &parts);
+        let bin = layout.stat(0, 1);
         // Sources 0 and 1 both send to partition 1: ids {2} and {2, 3}.
         assert_eq!(bin.dc_srcs, vec![0, 1]);
         assert_eq!(bin.dc_ids, vec![2 | MSG_START, 2 | MSG_START, 3]);
@@ -344,7 +428,8 @@ mod tests {
         bin.mode = Mode::Sc;
         bin.data = vec![100, 200];
         bin.ids = vec![5 | MSG_START, 6, 7 | MSG_START];
-        let msgs: Vec<(u32, u32)> = bin.messages(false).collect();
+        let stat = StaticBin::default();
+        let msgs: Vec<(u32, u32)> = bin.messages(&stat, false).collect();
         assert_eq!(msgs, vec![(100, 5), (100, 6), (200, 7)]);
     }
 
@@ -354,20 +439,20 @@ mod tests {
         bin.mode = Mode::Sc;
         bin.data = vec![10, 20, 30];
         bin.ids = vec![1, 2, 3];
-        let msgs: Vec<(u32, u32)> = bin.messages(true).collect();
+        let stat = StaticBin::default();
+        let msgs: Vec<(u32, u32)> = bin.messages(&stat, true).collect();
         assert_eq!(msgs, vec![(10, 1), (20, 2), (30, 3)]);
     }
 
     #[test]
     fn message_iter_dc_reads_prewritten_ids() {
         let (g, parts) = small();
-        let mut grid = BinGrid::build(&g, &parts);
-        let bin = grid.bin_ref(0, 1);
+        let layout = BinLayout::build(&g, &parts);
+        let stat = layout.stat(0, 1);
         let mut b = Bin::empty();
-        b.dc_ids = bin.dc_ids.clone();
         b.data = vec![11, 22]; // one value per source (0 and 1)
         b.mode = Mode::Dc;
-        let msgs: Vec<(u32, u32)> = b.messages(false).collect();
+        let msgs: Vec<(u32, u32)> = b.messages(stat, false).collect();
         assert_eq!(msgs, vec![(11, 2), (22, 2), (22, 3)]);
     }
 
@@ -379,8 +464,8 @@ mod tests {
             b.build()
         };
         let parts = Partitioner::with_k(4, 2);
-        let mut grid = BinGrid::build(&g, &parts);
-        let bin = grid.bin_ref(0, 1);
+        let layout = BinLayout::build(&g, &parts);
+        let bin = layout.stat(0, 1);
         assert_eq!(bin.dc_srcs, vec![0, 1]); // one entry per (src, part) run
         assert_eq!(bin.dc_cnts, vec![2, 1]);
         assert_eq!(bin.dc_ids, vec![2, 3, 2]);
@@ -391,15 +476,30 @@ mod tests {
     fn dc_stream_total_equals_edges() {
         let g = gen::rmat(8, Default::default(), false);
         let parts = Partitioner::with_k(g.n(), 8);
-        let mut grid = BinGrid::build(&g, &parts);
+        let layout = BinLayout::build(&g, &parts);
         let mut dc_total = 0u64;
         for i in 0..8 {
             for j in 0..8 {
-                dc_total += grid.bin_ref(i, j).dc_ids.len() as u64;
+                dc_total += layout.stat(i, j).dc_ids.len() as u64;
             }
         }
         assert_eq!(dc_total, g.m() as u64);
-        let meta_total: u64 = (0..8).map(|p| grid.meta(p).edges).sum();
+        let meta_total: u64 = (0..8).map(|p| layout.meta(p).edges).sum();
         assert_eq!(meta_total, g.m() as u64);
+    }
+
+    #[test]
+    fn shared_layout_spawns_independent_grids() {
+        let (g, parts) = small();
+        let before = layout_builds();
+        let layout = Arc::new(BinLayout::build(&g, &parts));
+        let mut g1 = BinGrid::from_layout(layout.clone());
+        let mut g2 = BinGrid::from_layout(layout.clone());
+        assert_eq!(layout_builds(), before + 1, "grids must not re-run pre-processing");
+        // Mutable halves are independent; static halves are shared.
+        unsafe { g1.bin_mut(0, 1) }.data.push(7);
+        assert_eq!(g1.bin_ref(0, 1).data, vec![7]);
+        assert!(g2.bin_ref(0, 1).data.is_empty());
+        assert_eq!(g1.stat(0, 1).n_edges, g2.stat(0, 1).n_edges);
     }
 }

@@ -2,10 +2,11 @@
 //! per-iteration statistics.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::active::ActiveState;
-use super::bins::{BinGrid, Mode};
+use super::bins::{BinGrid, BinLayout, Mode, StaticBin};
 use super::cost::{ModePolicy, PartCost};
 use crate::api::{MsgValue, Program};
 use crate::exec::ThreadPool;
@@ -50,6 +51,17 @@ impl Default for PpmConfig {
 impl PpmConfig {
     pub fn with_threads(threads: usize) -> Self {
         Self { threads, ..Default::default() }
+    }
+
+    /// The partitioning this configuration induces for an `n`-vertex
+    /// graph: the explicit `k` override, or the paper §3.1 heuristic.
+    /// Factored out so [`Engine`] and
+    /// [`EngineSession`](crate::api::EngineSession) agree byte-for-byte.
+    pub fn partitioner(&self, n: usize) -> Partitioner {
+        match self.k {
+            Some(k) => Partitioner::with_k(n, k),
+            None => Partitioner::auto(n, self.threads, self.cache_bytes, self.bytes_per_vertex),
+        }
     }
 }
 
@@ -98,11 +110,13 @@ impl RunStats {
     }
 }
 
-/// The PPM engine. Owns the graph, the partitioning, the bin grid, the
-/// frontier state and the worker pool. Pre-processing happens once in
-/// [`Engine::new`]; iterations are allocation-free on the hot path.
+/// The PPM engine. Holds the graph (shared, never cloned), the
+/// partitioning, the bin grid, the frontier state and the worker pool.
+/// The `O(E)` pre-processing happens once in [`Engine::new`] — or not at
+/// all in [`Engine::with_layout`], which reuses a session's cached
+/// [`BinLayout`]. Iterations are allocation-free on the hot path.
 pub struct Engine {
-    graph: Graph,
+    graph: Arc<Graph>,
     parts: Partitioner,
     grid: BinGrid,
     active: ActiveState,
@@ -113,19 +127,29 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(graph: Graph, config: PpmConfig) -> Self {
+    /// Build an engine, running the `O(E)` pre-processing scan. Accepts
+    /// either a `Graph` (moved, never cloned) or an `Arc<Graph>` (shared
+    /// with the caller).
+    pub fn new(graph: impl Into<Arc<Graph>>, config: PpmConfig) -> Self {
+        let graph = graph.into();
+        let parts = config.partitioner(graph.n());
+        let layout = Arc::new(BinLayout::build(&graph, &parts));
+        Self::with_layout(graph, parts, layout, config)
+    }
+
+    /// Build an engine around a prebuilt partitioning + bin layout —
+    /// the session checkout path, which allocates only mutable scratch
+    /// (no graph scan, no re-partitioning).
+    pub fn with_layout(
+        graph: Arc<Graph>,
+        parts: Partitioner,
+        layout: Arc<BinLayout>,
+        config: PpmConfig,
+    ) -> Self {
         assert!(config.threads >= 1);
         assert!(config.bw_ratio > 0.0);
-        let parts = match config.k {
-            Some(k) => Partitioner::with_k(graph.n(), k),
-            None => Partitioner::auto(
-                graph.n(),
-                config.threads,
-                config.cache_bytes,
-                config.bytes_per_vertex,
-            ),
-        };
-        let grid = BinGrid::build(&graph, &parts);
+        assert_eq!(parts.k(), layout.k(), "partitioner and layout disagree on k");
+        let grid = BinGrid::from_layout(layout);
         let k = parts.k();
         let costs = (0..k)
             .map(|p| {
@@ -143,9 +167,21 @@ impl Engine {
         &self.graph
     }
 
+    /// The shared graph handle (cheap to clone).
+    #[inline]
+    pub fn graph_arc(&self) -> &Arc<Graph> {
+        &self.graph
+    }
+
     #[inline]
     pub fn parts(&self) -> &Partitioner {
         &self.parts
+    }
+
+    /// The shared pre-processed bin layout.
+    #[inline]
+    pub fn layout(&self) -> &Arc<BinLayout> {
+        self.grid.layout()
     }
 
     #[inline]
@@ -201,6 +237,7 @@ impl Engine {
         let dc_count = AtomicU64::new(0);
         {
             let Engine { graph, parts, grid, active, pool, config, costs, .. } = self;
+            let graph: &Graph = &**graph;
             let spart: &[PartId] = active.spart();
             pool.for_each_dynamic(spart.len(), config.chunk, |idx, _tid| {
                 let p = spart[idx];
@@ -265,7 +302,8 @@ impl Engine {
                 let srcs = unsafe { active.col_srcs(j) };
                 for &i in srcs {
                     let bin = unsafe { grid.bin(i as PartId, j) };
-                    local_msgs += gather_bin(prog, bin, weighted, pf, base);
+                    let stat = grid.stat(i as PartId, j);
+                    local_msgs += gather_bin(prog, bin, stat, weighted, pf, base);
                 }
                 msg_count.fetch_add(local_msgs, Ordering::Relaxed);
                 if !pf.pushed.is_empty() {
@@ -281,6 +319,7 @@ impl Engine {
         let touched = self.active.collect_touched();
         {
             let Engine { graph, parts, active, pool, config, .. } = self;
+            let graph: &Graph = &**graph;
             pool.for_each_dynamic(touched.len(), config.chunk, |idx, _tid| {
                 let p = touched[idx];
                 // SAFETY: unique partition per task.
@@ -306,7 +345,9 @@ impl Engine {
     }
 
     /// Iterate until the frontier drains or `max_iters` is reached
-    /// (paper Alg. 4's `while FrontierSize > 0` driver).
+    /// (paper Alg. 4's `while FrontierSize > 0` driver). Prefer the
+    /// [`Runner`](crate::api::Runner) API, which layers typed
+    /// convergence policies over this loop.
     pub fn run<P: Program>(&mut self, prog: &P, max_iters: usize) -> RunStats {
         let t0 = Instant::now();
         let mut run = RunStats::default();
@@ -332,6 +373,7 @@ impl Engine {
 fn gather_bin<P: Program>(
     prog: &P,
     bin: &super::bins::Bin,
+    stat: &StaticBin,
     weighted: bool,
     pf: &mut super::active::PartFrontier,
     base: VertexId,
@@ -339,7 +381,7 @@ fn gather_bin<P: Program>(
     use super::bins::ID_MASK;
     let ids: &[u32] = match bin.mode {
         Mode::Sc => &bin.ids,
-        Mode::Dc => &bin.dc_ids,
+        Mode::Dc => &stat.dc_ids,
     };
     let data = &bin.data;
     if weighted {
@@ -467,19 +509,20 @@ fn scatter_dc<P: Program>(
             bin.registered = true;
             active.register_bin(p, j);
         }
-        let super::bins::Bin { data, dc_srcs, dc_cnts, dc_wts, .. } = bin;
+        let stat = grid.stat(p, j);
+        let data = &mut bin.data;
         if weighted {
             let mut e = 0usize;
-            for (si, &u) in dc_srcs.iter().enumerate() {
+            for (si, &u) in stat.dc_srcs.iter().enumerate() {
                 let val = P::Msg::from_bits(scratch[(u - base) as usize]);
-                let c = dc_cnts[si] as usize;
+                let c = stat.dc_cnts[si] as usize;
                 for t in e..e + c {
-                    data.push(prog.apply_weight(val, dc_wts[t]).to_bits());
+                    data.push(prog.apply_weight(val, stat.dc_wts[t]).to_bits());
                 }
                 e += c;
             }
         } else {
-            for &u in dc_srcs.iter() {
+            for &u in stat.dc_srcs.iter() {
                 data.push(scratch[(u - base) as usize]);
             }
         }
@@ -711,5 +754,25 @@ mod tests {
         assert_eq!(s.sc_parts, 0);
         assert!(s.dc_parts >= 1);
         assert_eq!(s.frontier, 1);
+    }
+
+    #[test]
+    fn with_layout_skips_rebuild_and_matches_new() {
+        use super::super::bins::layout_builds;
+        let g = Arc::new(gen::rmat(9, Default::default(), false));
+        let config = PpmConfig { threads: 2, k: Some(8), ..Default::default() };
+        let parts = config.partitioner(g.n());
+        let layout = Arc::new(BinLayout::build(&g, &parts));
+        let before = layout_builds();
+        let mut a = Engine::with_layout(g.clone(), parts.clone(), layout.clone(), config.clone());
+        let mut b = Engine::with_layout(g.clone(), parts, layout, config.clone());
+        assert_eq!(layout_builds(), before, "with_layout must not re-partition");
+        for eng in [&mut a, &mut b] {
+            let prog = Bfs { parent: VertexData::new(g.n(), -1) };
+            prog.parent.set(0, 0);
+            eng.load_frontier(&[0]);
+            let stats = eng.run(&prog, 10_000);
+            assert!(stats.converged);
+        }
     }
 }

@@ -23,6 +23,6 @@ pub mod cost;
 pub mod engine;
 pub mod shared;
 
-pub use bins::{Bin, BinGrid, Mode, MSG_START};
+pub use bins::{layout_builds, Bin, BinGrid, BinLayout, Mode, StaticBin, MSG_START};
 pub use cost::ModePolicy;
 pub use engine::{Engine, IterStats, PpmConfig, RunStats};

@@ -7,9 +7,27 @@
 //! The interchange format is HLO *text* — see aot.py and
 //! /opt/xla-example/README.md for why serialized protos don't work with
 //! xla_extension 0.5.1.
+//!
+//! The `xla` crate is optional (cargo feature `pjrt`); default builds
+//! get a stub — see [`pjrt`].
 
 pub mod manifest;
 pub mod pjrt;
 
 pub use manifest::Manifest;
-pub use pjrt::{PjrtRuntime, PageRankExecutable};
+pub use pjrt::{PageRankExecutable, PjrtRuntime};
+
+/// Error type for the runtime layer (kept dependency-free; the default
+/// build links no external crates).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;

@@ -1,10 +1,19 @@
 //! PJRT loader/executor wrapping the `xla` crate.
+//!
+//! The `xla` crate (and its libxla binaries) are only present in
+//! environments provisioned for PJRT execution, so the real
+//! implementation is gated behind the non-default `pjrt` cargo feature.
+//! Without it, a same-shape stub compiles instead: every entry point
+//! returns [`RuntimeError`] explaining how to enable the feature, and
+//! the pure helpers ([`graph_to_blocks`], [`default_artifacts_dir`])
+//! work in both builds. Callers already probe for
+//! `artifacts/manifest.json` before touching PJRT, so default builds
+//! skip gracefully.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
-
 use super::manifest::Manifest;
+use super::{Result, RuntimeError};
 use crate::graph::Graph;
 use crate::VertexId;
 
@@ -16,119 +25,6 @@ pub fn default_artifacts_dir() -> PathBuf {
         return local;
     }
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-/// A PJRT CPU client plus the artifact directory.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    pub manifest: Manifest,
-}
-
-impl PjrtRuntime {
-    /// Connect to the CPU PJRT plugin and read the artifact manifest.
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
-            .context("load artifacts/manifest.json (run `make artifacts`)")?;
-        Ok(Self { client, artifacts_dir: artifacts_dir.to_path_buf(), manifest })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO-text artifact.
-    pub fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
-        let path = self.artifacts_dir.join(name);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client.compile(&comp).with_context(|| format!("compile {name}"))
-    }
-
-    /// Compile the PageRank step/run executables.
-    pub fn pagerank(&self) -> Result<PageRankExecutable> {
-        Ok(PageRankExecutable {
-            step: self.compile("pagerank_step.hlo.txt")?,
-            run: self.compile("pagerank_run.hlo.txt")?,
-            manifest: self.manifest.clone(),
-        })
-    }
-
-    /// Compile the standalone gather executable and run it once.
-    pub fn gather(&self, vals: &[f32], dst: &[i32]) -> Result<Vec<f32>> {
-        let m = self.manifest.gather_m;
-        anyhow::ensure!(vals.len() == m && dst.len() == m, "gather expects length {m}");
-        let exe = self.compile("gather.hlo.txt")?;
-        let v = xla::Literal::vec1(vals);
-        let d = xla::Literal::vec1(dst);
-        let out = exe.execute::<xla::Literal>(&[v, d])?[0][0]
-            .to_literal_sync()?
-            .to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-/// The compiled PageRank artifacts plus shape metadata.
-pub struct PageRankExecutable {
-    step: xla::PjRtLoadedExecutable,
-    run: xla::PjRtLoadedExecutable,
-    manifest: Manifest,
-}
-
-impl PageRankExecutable {
-    fn literals(
-        &self,
-        blocks: &[f32],
-        rank: &[f32],
-        inv_deg: &[f32],
-        damping: f32,
-    ) -> Result<[xla::Literal; 4]> {
-        let (k, q, n) = (self.manifest.k, self.manifest.q, self.manifest.n);
-        anyhow::ensure!(blocks.len() == k * k * q * q, "blocks must be k*k*q*q");
-        anyhow::ensure!(rank.len() == n && inv_deg.len() == n, "vectors must be n={n}");
-        let b = xla::Literal::vec1(blocks).reshape(&[
-            k as i64,
-            k as i64,
-            q as i64,
-            q as i64,
-        ])?;
-        let r = xla::Literal::vec1(rank);
-        let d = xla::Literal::vec1(inv_deg);
-        let damp = xla::Literal::scalar(damping);
-        Ok([b, r, d, damp])
-    }
-
-    /// One PageRank iteration on the PJRT device.
-    pub fn step(
-        &self,
-        blocks: &[f32],
-        rank: &[f32],
-        inv_deg: &[f32],
-        damping: f32,
-    ) -> Result<Vec<f32>> {
-        let args = self.literals(blocks, rank, inv_deg, damping)?;
-        let out = self.step.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?
-            .to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// The fused `manifest.iters`-iteration executable (lax.scan body).
-    pub fn run(
-        &self,
-        blocks: &[f32],
-        rank0: &[f32],
-        inv_deg: &[f32],
-        damping: f32,
-    ) -> Result<Vec<f32>> {
-        let args = self.literals(blocks, rank0, inv_deg, damping)?;
-        let out = self.run.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?
-            .to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
 }
 
 /// Densify a graph into the blocked layout the artifacts expect:
@@ -159,6 +55,215 @@ pub fn graph_to_blocks(g: &Graph, k: usize, q: usize) -> (Vec<f32>, Vec<f32>) {
     (blocks, inv_deg)
 }
 
+// ---------------------------------------------------------------------
+// Real implementation (requires the `xla` crate).
+// ---------------------------------------------------------------------
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+
+    fn ctx<E: std::fmt::Display>(what: &str) -> impl FnOnce(E) -> RuntimeError + '_ {
+        move |e| RuntimeError(format!("{what}: {e}"))
+    }
+
+    /// A PJRT CPU client plus the artifact directory.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        artifacts_dir: PathBuf,
+        pub manifest: Manifest,
+    }
+
+    impl PjrtRuntime {
+        /// Connect to the CPU PJRT plugin and read the artifact manifest.
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(ctx("create PJRT CPU client"))?;
+            let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+                .map_err(ctx("load artifacts/manifest.json (run `make artifacts`)"))?;
+            Ok(Self { client, artifacts_dir: artifacts_dir.to_path_buf(), manifest })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one HLO-text artifact.
+        pub fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+            let path = self.artifacts_dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| RuntimeError(format!("parse HLO text {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client.compile(&comp).map_err(|e| RuntimeError(format!("compile {name}: {e}")))
+        }
+
+        /// Compile the PageRank step/run executables.
+        pub fn pagerank(&self) -> Result<PageRankExecutable> {
+            Ok(PageRankExecutable {
+                step: self.compile("pagerank_step.hlo.txt")?,
+                run: self.compile("pagerank_run.hlo.txt")?,
+                manifest: self.manifest.clone(),
+            })
+        }
+
+        /// Compile the standalone gather executable and run it once.
+        pub fn gather(&self, vals: &[f32], dst: &[i32]) -> Result<Vec<f32>> {
+            let m = self.manifest.gather_m;
+            if vals.len() != m || dst.len() != m {
+                return Err(RuntimeError(format!("gather expects length {m}")));
+            }
+            let exe = self.compile("gather.hlo.txt")?;
+            let v = xla::Literal::vec1(vals);
+            let d = xla::Literal::vec1(dst);
+            let out = exe
+                .execute::<xla::Literal>(&[v, d])
+                .map_err(ctx("execute gather"))?[0][0]
+                .to_literal_sync()
+                .map_err(ctx("sync gather output"))?
+                .to_tuple1()
+                .map_err(ctx("untuple gather output"))?;
+            out.to_vec::<f32>().map_err(ctx("read gather output"))
+        }
+    }
+
+    /// The compiled PageRank artifacts plus shape metadata.
+    pub struct PageRankExecutable {
+        step: xla::PjRtLoadedExecutable,
+        run: xla::PjRtLoadedExecutable,
+        manifest: Manifest,
+    }
+
+    impl PageRankExecutable {
+        fn literals(
+            &self,
+            blocks: &[f32],
+            rank: &[f32],
+            inv_deg: &[f32],
+            damping: f32,
+        ) -> Result<[xla::Literal; 4]> {
+            let (k, q, n) = (self.manifest.k, self.manifest.q, self.manifest.n);
+            if blocks.len() != k * k * q * q {
+                return Err(RuntimeError("blocks must be k*k*q*q".into()));
+            }
+            if rank.len() != n || inv_deg.len() != n {
+                return Err(RuntimeError(format!("vectors must be n={n}")));
+            }
+            let b = xla::Literal::vec1(blocks)
+                .reshape(&[k as i64, k as i64, q as i64, q as i64])
+                .map_err(ctx("reshape blocks"))?;
+            let r = xla::Literal::vec1(rank);
+            let d = xla::Literal::vec1(inv_deg);
+            let damp = xla::Literal::scalar(damping);
+            Ok([b, r, d, damp])
+        }
+
+        fn execute(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            args: &[xla::Literal; 4],
+        ) -> Result<Vec<f32>> {
+            let out = exe
+                .execute::<xla::Literal>(args)
+                .map_err(ctx("execute"))?[0][0]
+                .to_literal_sync()
+                .map_err(ctx("sync output"))?
+                .to_tuple1()
+                .map_err(ctx("untuple output"))?;
+            out.to_vec::<f32>().map_err(ctx("read output"))
+        }
+
+        /// One PageRank iteration on the PJRT device.
+        pub fn step(
+            &self,
+            blocks: &[f32],
+            rank: &[f32],
+            inv_deg: &[f32],
+            damping: f32,
+        ) -> Result<Vec<f32>> {
+            let args = self.literals(blocks, rank, inv_deg, damping)?;
+            self.execute(&self.step, &args)
+        }
+
+        /// The fused `manifest.iters`-iteration executable (lax.scan body).
+        pub fn run(
+            &self,
+            blocks: &[f32],
+            rank0: &[f32],
+            inv_deg: &[f32],
+            damping: f32,
+        ) -> Result<Vec<f32>> {
+            let args = self.literals(blocks, rank0, inv_deg, damping)?;
+            self.execute(&self.run, &args)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stub (default build): same surface, every PJRT call errors.
+// ---------------------------------------------------------------------
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+
+    fn unavailable() -> RuntimeError {
+        RuntimeError(
+            "PJRT support not compiled in; rebuild with `--features pjrt` \
+             (requires the xla crate and libxla binaries)"
+                .into(),
+        )
+    }
+
+    /// Stub runtime: construction always fails with a clear message.
+    pub struct PjrtRuntime {
+        pub manifest: Manifest,
+    }
+
+    impl PjrtRuntime {
+        pub fn new(_artifacts_dir: &Path) -> Result<Self> {
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn pagerank(&self) -> Result<PageRankExecutable> {
+            Err(unavailable())
+        }
+
+        pub fn gather(&self, _vals: &[f32], _dst: &[i32]) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub executable (unconstructible through the public API).
+    pub struct PageRankExecutable {
+        _private: (),
+    }
+
+    impl PageRankExecutable {
+        pub fn step(
+            &self,
+            _blocks: &[f32],
+            _rank: &[f32],
+            _inv_deg: &[f32],
+            _damping: f32,
+        ) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+
+        pub fn run(
+            &self,
+            _blocks: &[f32],
+            _rank0: &[f32],
+            _inv_deg: &[f32],
+            _damping: f32,
+        ) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+    }
+}
+
+pub use imp::{PageRankExecutable, PjrtRuntime};
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,10 +288,18 @@ mod tests {
         let _ = graph_to_blocks(&g, 2, 2);
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = PjrtRuntime::new(Path::new("/nowhere")).err().unwrap();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
     /// End-to-end PJRT test: requires `make artifacts` to have run.
     /// Silently skipped when artifacts are absent so `cargo test` works
     /// standalone; the Makefile's `test` target always builds artifacts
     /// first.
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_pagerank_matches_native_engine() {
         let dir = default_artifacts_dir();
@@ -203,21 +316,24 @@ mod tests {
         let exe = rt.pagerank().unwrap();
         let pjrt_rank = exe.step(&blocks, &rank0, &inv_deg, 0.85).unwrap();
         // Native engine, one iteration.
-        let mut eng = crate::ppm::Engine::new(
-            g.clone(),
+        let session = crate::api::EngineSession::new(
+            g,
             crate::ppm::PpmConfig { threads: 2, ..Default::default() },
         );
-        let native = crate::apps::pagerank::run(&mut eng, 0.85, 1);
+        let native = crate::api::Runner::on(&session)
+            .until(crate::api::Convergence::MaxIters(1))
+            .run(crate::apps::PageRank::new(session.graph(), 0.85));
         for v in 0..m.n {
             assert!(
-                (pjrt_rank[v] - native.rank[v]).abs() < 1e-5,
+                (pjrt_rank[v] - native.output[v]).abs() < 1e-5,
                 "v={v}: pjrt {} vs native {}",
                 pjrt_rank[v],
-                native.rank[v]
+                native.output[v]
             );
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_gather_matches_scalar_accumulation() {
         let dir = default_artifacts_dir();

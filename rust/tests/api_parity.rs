@@ -1,0 +1,232 @@
+//! Parity suite for the unified `Algorithm`/`Session` API: every ported
+//! app must produce **bit-identical** results through
+//! `Runner`/`EngineSession` and through the legacy (deprecated)
+//! `apps::*::run` free functions, on both RMAT and Erdős–Rényi
+//! workloads. Also asserts the amortization contract: one session =
+//! exactly one partition/bin-layout build, no matter how many queries.
+
+#![allow(deprecated)]
+
+use std::sync::Arc;
+
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::{self, bfs};
+use gpop::graph::{gen, Graph, GraphBuilder};
+use gpop::ppm::{layout_builds, Engine, PpmConfig};
+
+fn workloads() -> Vec<(&'static str, Arc<Graph>)> {
+    vec![
+        ("rmat10", Arc::new(gen::rmat(10, Default::default(), false))),
+        ("er", Arc::new(gen::erdos_renyi(700, 5600, 33))),
+    ]
+}
+
+fn weighted(g: &Graph) -> Arc<Graph> {
+    Arc::new(gen::with_uniform_weights(g, 0.5, 4.0, 11))
+}
+
+fn symmetrized(g: &Graph) -> Arc<Graph> {
+    let mut b = GraphBuilder::new().with_n(g.n()).symmetrize();
+    for v in 0..g.n() as u32 {
+        for &u in g.out().neighbors(v) {
+            b.add(v, u);
+        }
+    }
+    Arc::new(b.build())
+}
+
+/// Single-threaded: with >1 thread the bin registration order (and so
+/// the f32 accumulation order) is scheduling-dependent, which makes
+/// bitwise comparison meaningless even between two legacy runs. The
+/// multithreaded paths are covered (within numeric tolerance) by the
+/// per-app and property tests; here we pin the schedule to prove the
+/// new driver executes the *identical* computation.
+fn config() -> PpmConfig {
+    PpmConfig { threads: 1, k: Some(12), ..Default::default() }
+}
+
+/// Drive the legacy path on a fresh engine over the same shared graph.
+fn legacy_engine(g: &Arc<Graph>) -> Engine {
+    Engine::new(g.clone(), config())
+}
+
+#[test]
+fn bfs_report_bit_identical_to_legacy_run() {
+    for (name, g) in workloads() {
+        let old = apps::bfs::run(&mut legacy_engine(&g), 0);
+        let session = EngineSession::new(g.clone(), config());
+        let new = Runner::on(&session).run(apps::Bfs::new(g.n(), 0));
+        assert_eq!(new.output, old.parent, "{name}");
+        assert_eq!(new.converged, old.stats.converged, "{name}");
+        assert_eq!(new.n_iters(), old.stats.n_iters(), "{name}");
+        assert_eq!(new.total_messages(), old.stats.total_messages(), "{name}");
+    }
+}
+
+#[test]
+fn pagerank_report_bit_identical_to_legacy_run() {
+    for (name, g) in workloads() {
+        let old = apps::pagerank::run(&mut legacy_engine(&g), 0.85, 10);
+        let session = EngineSession::new(g.clone(), config());
+        let new = Runner::on(&session)
+            .until(Convergence::MaxIters(10))
+            .run(apps::PageRank::new(&g, 0.85));
+        // f32 ranks must agree bit-for-bit: same engine, same schedule.
+        let old_bits: Vec<u32> = old.rank.iter().map(|x| x.to_bits()).collect();
+        let new_bits: Vec<u32> = new.output.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(new_bits, old_bits, "{name}");
+        assert_eq!(new.n_iters(), old.iters.len(), "{name}");
+    }
+}
+
+#[test]
+fn cc_and_async_cc_bit_identical_to_legacy_run() {
+    for (name, g) in workloads() {
+        let sg = symmetrized(&g);
+        let old = apps::cc::run(&mut legacy_engine(&sg), 10_000);
+        let session = EngineSession::new(sg.clone(), config());
+        let until = Convergence::FrontierEmpty.or_max_iters(10_000);
+        let new = Runner::on(&session).until(until.clone()).run(apps::LabelProp::new(sg.n()));
+        assert_eq!(new.output, old.label, "{name}");
+        assert_eq!(new.n_iters(), old.stats.n_iters(), "{name}");
+
+        let old_a = apps::cc_async::run(&mut legacy_engine(&sg), 10_000);
+        let new_a = Runner::on(&session).until(until).run(apps::AsyncLabelProp::new(sg.n()));
+        assert_eq!(new_a.output, old_a.label, "{name} async");
+        assert_eq!(new_a.n_iters(), old_a.stats.n_iters(), "{name} async");
+    }
+}
+
+#[test]
+fn sssp_report_bit_identical_to_legacy_run() {
+    for (name, g) in workloads() {
+        let wg = weighted(&g);
+        let old = apps::sssp::run(&mut legacy_engine(&wg), 0);
+        let session = EngineSession::new(wg.clone(), config());
+        let new = Runner::on(&session).run(apps::Sssp::new(wg.n(), 0));
+        let old_bits: Vec<u32> = old.distance.iter().map(|x| x.to_bits()).collect();
+        let new_bits: Vec<u32> = new.output.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(new_bits, old_bits, "{name}");
+        assert_eq!(new.n_iters(), old.stats.n_iters(), "{name}");
+    }
+}
+
+#[test]
+fn nibble_family_bit_identical_to_legacy_run() {
+    for (name, g) in workloads() {
+        let session = EngineSession::new(g.clone(), config());
+        let until = Convergence::FrontierEmpty.or_max_iters(40);
+
+        let old = apps::nibble::run(&mut legacy_engine(&g), &[3], 1e-5, 40);
+        let new = Runner::on(&session).until(until.clone()).run(apps::Nibble::new(&g, 1e-5, &[3]));
+        let old_bits: Vec<u32> = old.pr.iter().map(|x| x.to_bits()).collect();
+        let new_bits: Vec<u32> = new.output.pr.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(new_bits, old_bits, "{name} nibble");
+        assert_eq!(new.output.support, old.support, "{name} nibble support");
+
+        let old_p = apps::pagerank_nibble::run(&mut legacy_engine(&g), &[3], 0.15, 1e-5, 40);
+        let new_p = Runner::on(&session)
+            .until(until)
+            .run(apps::PageRankNibble::new(&g, 0.15, 1e-5, &[3]));
+        assert_eq!(
+            new_p.output.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            old_p.p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{name} prnibble p"
+        );
+        assert_eq!(
+            new_p.output.r.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            old_p.r.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{name} prnibble r"
+        );
+
+        let old_h = apps::heat_kernel::run(&mut legacy_engine(&g), &[3], 2.0, 8, 1e-7);
+        let new_h = Runner::on(&session).run(apps::HeatKernel::new(&g, 2.0, 8, 1e-7, &[3]));
+        assert_eq!(
+            new_h.output.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            old_h.heat.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{name} heat-kernel"
+        );
+        assert_eq!(new_h.n_iters(), old_h.iters, "{name} heat-kernel stages");
+    }
+}
+
+#[test]
+fn two_sequential_queries_do_not_repartition() {
+    let g = Arc::new(gen::rmat(9, Default::default(), false));
+    let session = EngineSession::new(g.clone(), config());
+    let builds = layout_builds();
+    let a = Runner::on(&session).run(apps::Bfs::new(g.n(), 0));
+    let b = Runner::on(&session).run(apps::Bfs::new(g.n(), 5));
+    assert_eq!(
+        layout_builds(),
+        builds,
+        "sequential queries on one session must not re-partition"
+    );
+    assert!(a.converged && b.converged);
+    // The pooled engine was reused, not rebuilt.
+    assert_eq!(session.pooled_engines(), 1);
+}
+
+#[test]
+fn batch_of_16_bfs_roots_partitions_exactly_once() {
+    let g = Arc::new(gen::erdos_renyi(800, 6400, 77));
+    let builds = layout_builds();
+    let session = EngineSession::new(g.clone(), config());
+    assert_eq!(layout_builds(), builds + 1, "session build = one partition pass");
+
+    let roots: Vec<u32> = (0..16).map(|i| (i * 50) as u32).collect();
+    let reports =
+        Runner::on(&session).run_batch(roots.iter().map(|&r| apps::Bfs::new(g.n(), r)));
+    assert_eq!(
+        layout_builds(),
+        builds + 1,
+        "a 16-root batch must re-partition exactly once (the session build)"
+    );
+    assert_eq!(reports.len(), 16);
+    // Each query's result matches an independent single-query run.
+    for (&root, report) in roots.iter().zip(&reports) {
+        let fresh = Runner::on(&session).run(apps::Bfs::new(g.n(), root));
+        assert_eq!(
+            bfs::levels(&report.output, root),
+            bfs::levels(&fresh.output, root),
+            "root {root}"
+        );
+    }
+    // The whole batch shared ONE engine checkout.
+    assert!(session.pooled_engines() >= 1);
+}
+
+#[test]
+fn concurrent_sessions_queries_match_sequential() {
+    // The serving scenario: one shared session, queries from many
+    // threads; results must match the single-threaded answers and the
+    // layout must never be rebuilt.
+    let g = Arc::new(gen::erdos_renyi(500, 4000, 5));
+    let session = Arc::new(EngineSession::new(g.clone(), config()));
+    let builds = layout_builds();
+    let want: Vec<Vec<i32>> = (0..4u32)
+        .map(|r| {
+            bfs::levels(&Runner::on(&session).run(apps::Bfs::new(g.n(), r * 100)).output, r * 100)
+        })
+        .collect();
+    assert_eq!(layout_builds(), builds, "sequential warm-up must not re-partition");
+    std::thread::scope(|s| {
+        for (i, want_lv) in want.iter().enumerate() {
+            let session = Arc::clone(&session);
+            let g = Arc::clone(&g);
+            s.spawn(move || {
+                let root = (i as u32) * 100;
+                // The build counter is thread-local: a query that
+                // re-partitioned would increment it on THIS thread.
+                let before = layout_builds();
+                let res = Runner::on(&session).run(apps::Bfs::new(g.n(), root));
+                assert_eq!(&bfs::levels(&res.output, root), want_lv, "root {root}");
+                assert_eq!(
+                    layout_builds(),
+                    before,
+                    "concurrent query must not re-partition (root {root})"
+                );
+            });
+        }
+    });
+}

@@ -2,11 +2,13 @@
 //! misconfigurations must fail loudly (or degrade gracefully), never
 //! corrupt results.
 
-use gpop::apps;
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::{self, bfs};
 use gpop::coordinator::{self, GraphSpec};
 use gpop::graph::{builder::graph_from_edges, gen, io};
 use gpop::ppm::{Engine, PpmConfig};
 use gpop::runtime::Manifest;
+use std::sync::Arc;
 
 fn tmp(name: &str) -> std::path::PathBuf {
     let mut p = std::env::temp_dir();
@@ -72,34 +74,42 @@ fn spec_file_missing_errors() {
 #[test]
 fn empty_graph_runs_everything() {
     let g = graph_from_edges(0, &[]);
-    let mut eng = Engine::new(g, PpmConfig::default());
-    let pr = apps::pagerank::run(&mut eng, 0.85, 3);
-    assert!(pr.rank.is_empty());
-    let cc = apps::cc::run(&mut eng, 10);
-    assert!(cc.label.is_empty());
+    let session = EngineSession::new(g, PpmConfig::default());
+    let pr = Runner::on(&session)
+        .until(Convergence::MaxIters(3))
+        .run(apps::PageRank::new(session.graph(), 0.85));
+    assert!(pr.output.is_empty());
+    let cc = Runner::on(&session)
+        .until(Convergence::FrontierEmpty.or_max_iters(10))
+        .run(apps::LabelProp::new(0));
+    assert!(cc.output.is_empty());
 }
 
 #[test]
 fn single_vertex_no_edges() {
     let g = graph_from_edges(1, &[]);
-    let mut eng = Engine::new(g, PpmConfig::default());
-    let bfs = apps::bfs::run(&mut eng, 0);
-    assert_eq!(bfs.parent, vec![0]);
-    assert!(bfs.stats.converged);
-    let pr = apps::pagerank::run(&mut eng, 0.85, 2);
+    let session = EngineSession::new(g, PpmConfig::default());
+    let res = Runner::on(&session).run(apps::Bfs::new(1, 0));
+    assert_eq!(res.output, vec![0]);
+    assert!(res.converged);
+    let pr = Runner::on(&session)
+        .until(Convergence::MaxIters(2))
+        .run(apps::PageRank::new(session.graph(), 0.85));
     // Isolated vertex: rank = teleport mass only.
-    assert!((pr.rank[0] - 0.15).abs() < 1e-6);
+    assert!((pr.output[0] - 0.15).abs() < 1e-6);
 }
 
 #[test]
 fn self_loops_and_parallel_edges() {
     let g = graph_from_edges(3, &[(0, 0), (0, 1), (0, 1), (1, 2), (2, 2)]);
-    let mut eng = Engine::new(g.clone(), PpmConfig { k: Some(3), ..Default::default() });
-    let bfs = apps::bfs::run(&mut eng, 0);
-    assert!(bfs.parent.iter().all(|&p| p >= 0), "all reachable: {:?}", bfs.parent);
+    let session = EngineSession::new(g, PpmConfig { k: Some(3), ..Default::default() });
+    let res = Runner::on(&session).run(apps::Bfs::new(3, 0));
+    assert!(res.output.iter().all(|&p| p >= 0), "all reachable: {:?}", res.output);
     // PageRank with self loops must still be bounded.
-    let pr = apps::pagerank::run(&mut eng, 0.85, 10);
-    let mass: f64 = pr.rank.iter().map(|&x| x as f64).sum();
+    let pr = Runner::on(&session)
+        .until(Convergence::MaxIters(10))
+        .run(apps::PageRank::new(session.graph(), 0.85));
+    let mass: f64 = pr.output.iter().map(|&x| x as f64).sum();
     assert!(mass <= 1.0 + 1e-5 && mass > 0.0);
 }
 
@@ -109,19 +119,20 @@ fn star_hub_extreme_degree() {
     let n = 5000u32;
     let edges: Vec<(u32, u32)> = (1..n).map(|v| (0, v)).collect();
     let g = graph_from_edges(n as usize, &edges);
-    let mut eng = Engine::new(g, PpmConfig { threads: 2, k: Some(8), ..Default::default() });
-    let bfs = apps::bfs::run(&mut eng, 0);
-    assert_eq!(bfs.n_reached(), n as usize);
-    assert_eq!(bfs.stats.n_iters(), 2); // root scatter + empty check
+    let session =
+        EngineSession::new(g, PpmConfig { threads: 2, k: Some(8), ..Default::default() });
+    let res = Runner::on(&session).run(apps::Bfs::new(n as usize, 0));
+    assert_eq!(bfs::n_reached(&res.output), n as usize);
+    assert_eq!(res.n_iters(), 2); // root scatter + empty check
 }
 
 #[test]
 fn unreachable_root_degenerate_frontier() {
     let g = graph_from_edges(10, &[(0, 1)]);
-    let mut eng = Engine::new(g, PpmConfig::default());
-    let bfs = apps::bfs::run(&mut eng, 9); // deg(9) = 0
-    assert_eq!(bfs.n_reached(), 1);
-    assert!(bfs.stats.converged);
+    let session = EngineSession::new(g, PpmConfig::default());
+    let res = Runner::on(&session).run(apps::Bfs::new(10, 9)); // deg(9) = 0
+    assert_eq!(bfs::n_reached(&res.output), 1);
+    assert!(res.converged);
 }
 
 // ---------------------------------------------------- configurations
@@ -135,29 +146,31 @@ fn k_exceeding_vertices_is_clamped() {
 
 #[test]
 fn extreme_bw_ratios_still_correct() {
-    let g = gen::rmat(9, Default::default(), false);
+    let g = Arc::new(gen::rmat(9, Default::default(), false));
+    let baseline = {
+        let session = EngineSession::new(g.clone(), PpmConfig::default());
+        let res = Runner::on(&session).run(apps::Bfs::new(g.n(), 0));
+        bfs::n_reached(&res.output)
+    };
     for ratio in [0.01, 100.0] {
-        let mut eng = Engine::new(
+        let session = EngineSession::new(
             g.clone(),
             PpmConfig { threads: 2, bw_ratio: ratio, ..Default::default() },
         );
-        let res = apps::bfs::run(&mut eng, 0);
-        let fresh = apps::bfs::run(
-            &mut Engine::new(g.clone(), PpmConfig::default()),
-            0,
-        );
-        assert_eq!(res.n_reached(), fresh.n_reached(), "ratio {ratio}");
+        let res = Runner::on(&session).run(apps::Bfs::new(g.n(), 0));
+        assert_eq!(bfs::n_reached(&res.output), baseline, "ratio {ratio}");
     }
 }
 
 #[test]
 fn oversubscribed_threads_work() {
     // 8 threads on a 1-hw-thread container: correctness must hold.
-    let g = gen::rmat(10, Default::default(), false);
-    let mut eng = Engine::new(g.clone(), PpmConfig { threads: 8, ..Default::default() });
-    let res = apps::bfs::run(&mut eng, 0);
+    let g = Arc::new(gen::rmat(10, Default::default(), false));
+    let session =
+        EngineSession::new(g.clone(), PpmConfig { threads: 8, ..Default::default() });
+    let res = Runner::on(&session).run(apps::Bfs::new(g.n(), 0));
     let want = gpop::baselines::serial::bfs_levels(&g, 0);
-    assert_eq!(res.levels(0), want);
+    assert_eq!(bfs::levels(&res.output, 0), want);
 }
 
 #[test]
@@ -165,6 +178,13 @@ fn oversubscribed_threads_work() {
 fn zero_threads_rejected() {
     let g = gen::chain(4);
     let _ = Engine::new(g, PpmConfig { threads: 0, ..Default::default() });
+}
+
+#[test]
+#[should_panic]
+fn zero_threads_rejected_by_session() {
+    let g = gen::chain(4);
+    let _ = EngineSession::new(g, PpmConfig { threads: 0, ..Default::default() });
 }
 
 #[test]

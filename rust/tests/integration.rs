@@ -1,11 +1,14 @@
 //! Cross-module integration tests: CLI → engine → apps → IO → cachesim
 //! → PJRT, exercising the paths a user actually takes.
 
-use gpop::apps;
+use std::sync::Arc;
+
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::{self, bfs};
 use gpop::baselines::serial;
 use gpop::coordinator::{self, GraphSpec};
 use gpop::graph::{gen, io};
-use gpop::ppm::{Engine, ModePolicy, PpmConfig};
+use gpop::ppm::{ModePolicy, PpmConfig};
 
 fn tmp(name: &str) -> std::path::PathBuf {
     let mut p = std::env::temp_dir();
@@ -95,9 +98,14 @@ fn spec_roundtrips_through_both_io_formats() {
     assert_eq!(g_bin.out().targets(), g.out().targets());
     assert_eq!(g_el.m(), g.m());
     // Engines over all three must agree.
-    let d0 = apps::sssp::run(&mut Engine::new(g, PpmConfig::default()), 0).distance;
-    let d1 = apps::sssp::run(&mut Engine::new(g_bin, PpmConfig::default()), 0).distance;
-    let d2 = apps::sssp::run(&mut Engine::new(g_el, PpmConfig::default()), 0).distance;
+    let sssp_on = |g: gpop::graph::Graph| {
+        let n = g.n();
+        let session = EngineSession::new(g, PpmConfig::default());
+        Runner::on(&session).run(apps::Sssp::new(n, 0)).output
+    };
+    let d0 = sssp_on(g);
+    let d1 = sssp_on(g_bin);
+    let d2 = sssp_on(g_el);
     assert_eq!(d0, d1);
     for (a, b) in d0.iter().zip(&d2) {
         // Edge-list text loses a little float precision.
@@ -108,56 +116,75 @@ fn spec_roundtrips_through_both_io_formats() {
 }
 
 #[test]
-fn one_engine_runs_every_app_sequentially() {
+fn one_session_runs_every_app_sequentially() {
     // The documented usage pattern: pay pre-processing once, run many
-    // algorithms (paper §5 Nibble amortization argument).
-    let g = gen::rmat(11, Default::default(), false);
-    let mut eng = Engine::new(g.clone(), PpmConfig { threads: 3, ..Default::default() });
+    // algorithms (paper §5 Nibble amortization argument). One session,
+    // one layout build, four different algorithms.
+    let g = Arc::new(gen::rmat(11, Default::default(), false));
+    let session =
+        EngineSession::new(g.clone(), PpmConfig { threads: 3, ..Default::default() });
+    let builds_before = gpop::ppm::layout_builds();
 
-    let pr = apps::pagerank::run(&mut eng, 0.85, 5);
+    let pr = Runner::on(&session)
+        .until(Convergence::MaxIters(5))
+        .run(apps::PageRank::new(&g, 0.85));
     let serial_pr = serial::pagerank(&g, 0.85, 5);
     for v in 0..g.n() {
-        assert!((pr.rank[v] as f64 - serial_pr[v]).abs() < 1e-5);
+        assert!((pr.output[v] as f64 - serial_pr[v]).abs() < 1e-5);
     }
 
-    let bfs = apps::bfs::run(&mut eng, 0);
+    let bfs_rep = Runner::on(&session).run(apps::Bfs::new(g.n(), 0));
     assert_eq!(
-        bfs.levels(0),
+        bfs::levels(&bfs_rep.output, 0),
         serial::bfs_levels(&g, 0),
-        "BFS after PageRank on the same engine"
+        "BFS after PageRank on the same session"
     );
 
-    let cc = apps::cc::run(&mut eng, 10_000);
-    assert_eq!(cc.label, serial::label_propagation(&g));
+    let cc_rep = Runner::on(&session)
+        .until(Convergence::FrontierEmpty.or_max_iters(10_000))
+        .run(apps::LabelProp::new(g.n()));
+    assert_eq!(cc_rep.output, serial::label_propagation(&g));
 
-    let nib = apps::nibble::run(&mut eng, &[3], 1e-4, 30);
+    let nib = Runner::on(&session)
+        .until(Convergence::FrontierEmpty.or_max_iters(30))
+        .run(apps::Nibble::new(&g, 1e-4, &[3]));
     let serial_nib = serial::nibble(&g, &[3], 1e-4, 30);
     for v in 0..g.n() {
-        assert!((nib.pr[v] as f64 - serial_nib[v]).abs() < 1e-4);
+        assert!((nib.output.pr[v] as f64 - serial_nib[v]).abs() < 1e-4);
     }
+
+    assert_eq!(
+        gpop::ppm::layout_builds(),
+        builds_before,
+        "four apps on one session must not re-run pre-processing"
+    );
 }
 
 #[test]
 fn mode_ablation_consistency_on_one_workload() {
     // Fig. 9's premise: the three policies agree on results while
     // differing in how they traverse.
-    let g = gen::rmat(12, Default::default(), false);
+    let g = Arc::new(gen::rmat(12, Default::default(), false));
+    // One session serves all three policies via Runner::policy.
+    let session =
+        EngineSession::new(g.clone(), PpmConfig { threads: 2, ..Default::default() });
     let mut results = Vec::new();
     for mode in [ModePolicy::ForceSc, ModePolicy::ForceDc, ModePolicy::Hybrid] {
-        let mut eng =
-            Engine::new(g.clone(), PpmConfig { threads: 2, mode, ..Default::default() });
-        let res = apps::cc::run(&mut eng, 10_000);
+        let res = Runner::on(&session)
+            .policy(mode)
+            .until(Convergence::FrontierEmpty.or_max_iters(10_000))
+            .run(apps::LabelProp::new(g.n()));
         // DC mode must never be reported under ForceSc and vice versa.
         match mode {
             ModePolicy::ForceSc => {
-                assert!(res.stats.iters.iter().all(|i| i.dc_parts == 0))
+                assert!(res.iters.iter().all(|i| i.dc_parts == 0))
             }
             ModePolicy::ForceDc => {
-                assert!(res.stats.iters.iter().all(|i| i.sc_parts == 0))
+                assert!(res.iters.iter().all(|i| i.sc_parts == 0))
             }
             ModePolicy::Hybrid => {}
         }
-        results.push(res.label);
+        results.push(res.output);
     }
     assert_eq!(results[0], results[1]);
     assert_eq!(results[1], results[2]);
@@ -201,10 +228,12 @@ fn pjrt_artifacts_integration_when_built() {
     for _ in 0..m.iters {
         stepped = exe.step(&blocks, &stepped, &inv_deg, 0.85).unwrap();
     }
-    let mut eng = Engine::new(g, PpmConfig::with_threads(2));
-    let native = apps::pagerank::run(&mut eng, 0.85, m.iters);
+    let session = EngineSession::new(g, PpmConfig::with_threads(2));
+    let native = Runner::on(&session)
+        .until(Convergence::MaxIters(m.iters))
+        .run(apps::PageRank::new(session.graph(), 0.85));
     for v in 0..m.n {
         assert!((fused[v] - stepped[v]).abs() < 1e-6);
-        assert!((fused[v] - native.rank[v]).abs() < 1e-4);
+        assert!((fused[v] - native.output[v]).abs() < 1e-4);
     }
 }

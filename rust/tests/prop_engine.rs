@@ -4,7 +4,10 @@
 #[path = "prop_framework/mod.rs"]
 mod prop_framework;
 
-use gpop::apps;
+use std::sync::Arc;
+
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::{self, bfs};
 use gpop::baselines::serial;
 use gpop::partition::Partitioner;
 use gpop::ppm::{Engine, ModePolicy, PpmConfig};
@@ -47,16 +50,16 @@ fn prop_mode_choice_never_changes_bfs_result() {
     // SC-only, DC-only and hybrid must agree with the serial reference:
     // the §3.3 mode decision is a pure performance choice.
     property("bfs mode-independence", CASES, |g| {
-        let graph = g.graph(600, 8);
+        let graph = Arc::new(g.graph(600, 8));
         let root = g.rng.below(graph.n() as u64) as u32;
         let want = serial::bfs_levels(&graph, root);
         for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
             let mut cfg = random_config(g, graph.n());
             cfg.mode = mode;
-            let mut eng = Engine::new(graph.clone(), cfg);
-            let res = apps::bfs::run(&mut eng, root);
-            let got = res.levels(root);
-            prop_assert_eq!(got, want, "mode {mode:?}, root {root}");
+            let session = EngineSession::new(graph.clone(), cfg);
+            let res = Runner::on(&session).run(apps::Bfs::new(graph.n(), root));
+            let got = bfs::levels(&res.output, root);
+            prop_assert_eq!(got, want.clone(), "mode {mode:?}, root {root}");
         }
         Ok(())
     });
@@ -65,18 +68,20 @@ fn prop_mode_choice_never_changes_bfs_result() {
 #[test]
 fn prop_pagerank_matches_serial_any_config() {
     property("pagerank config-independence", CASES, |g| {
-        let graph = g.graph(500, 6);
+        let graph = Arc::new(g.graph(500, 6));
         let cfg = random_config(g, graph.n());
         let iters = g.usize_in(1, 6);
         let want = serial::pagerank(&graph, 0.85, iters);
-        let mut eng = Engine::new(graph.clone(), cfg.clone());
-        let res = apps::pagerank::run(&mut eng, 0.85, iters);
+        let session = EngineSession::new(graph.clone(), cfg.clone());
+        let res = Runner::on(&session)
+            .until(Convergence::MaxIters(iters))
+            .run(apps::PageRank::new(&graph, 0.85));
         for v in 0..graph.n() {
-            let err = (res.rank[v] as f64 - want[v]).abs();
+            let err = (res.output[v] as f64 - want[v]).abs();
             prop_assert!(
                 err < 1e-4,
                 "v={v}: {} vs {} (cfg {cfg:?}, iters {iters})",
-                res.rank[v],
+                res.output[v],
                 want[v]
             );
         }
@@ -87,12 +92,14 @@ fn prop_pagerank_matches_serial_any_config() {
 #[test]
 fn prop_cc_fixpoint_matches_serial() {
     property("labelprop fixpoint", CASES, |g| {
-        let graph = g.graph(400, 5);
+        let graph = Arc::new(g.graph(400, 5));
         let want = serial::label_propagation(&graph);
-        let mut eng = Engine::new(graph.clone(), random_config(g, graph.n()));
-        let res = apps::cc::run(&mut eng, 100_000);
-        prop_assert!(res.stats.converged, "did not converge");
-        prop_assert_eq!(res.label, want, "labels diverge");
+        let session = EngineSession::new(graph.clone(), random_config(g, graph.n()));
+        let res = Runner::on(&session)
+            .until(Convergence::FrontierEmpty.or_max_iters(100_000))
+            .run(apps::LabelProp::new(graph.n()));
+        prop_assert!(res.converged, "did not converge");
+        prop_assert_eq!(res.output, want, "labels diverge");
         Ok(())
     });
 }
@@ -101,21 +108,22 @@ fn prop_cc_fixpoint_matches_serial() {
 fn prop_sssp_matches_dijkstra() {
     property("sssp vs dijkstra", CASES, |g| {
         let base = g.graph(300, 5);
-        let graph = gpop::graph::gen::with_uniform_weights(&base, 0.5, 4.0, g.rng.next_u64());
+        let graph =
+            Arc::new(gpop::graph::gen::with_uniform_weights(&base, 0.5, 4.0, g.rng.next_u64()));
         let src = g.rng.below(graph.n() as u64) as u32;
         let want = serial::sssp_dijkstra(&graph, src);
-        let mut eng = Engine::new(graph.clone(), random_config(g, graph.n()));
-        let res = apps::sssp::run(&mut eng, src);
+        let session = EngineSession::new(graph.clone(), random_config(g, graph.n()));
+        let res = Runner::on(&session).run(apps::Sssp::new(graph.n(), src));
         for v in 0..graph.n() {
             if want[v].is_finite() {
                 prop_assert!(
-                    (res.distance[v] - want[v]).abs() < 1e-3,
+                    (res.output[v] - want[v]).abs() < 1e-3,
                     "v={v}: {} vs {}",
-                    res.distance[v],
+                    res.output[v],
                     want[v]
                 );
             } else {
-                prop_assert!(res.distance[v].is_infinite(), "v={v} should be unreachable");
+                prop_assert!(res.output[v].is_infinite(), "v={v} should be unreachable");
             }
         }
         Ok(())
@@ -125,18 +133,20 @@ fn prop_sssp_matches_dijkstra() {
 #[test]
 fn prop_nibble_matches_serial_model() {
     property("nibble vs straight-line model", CASES, |g| {
-        let graph = g.graph(300, 6);
+        let graph = Arc::new(g.graph(300, 6));
         let seeds = g.vertices(graph.n(), 3);
         let eps = *g.pick(&[1e-3f32, 1e-4, 1e-5]);
         let iters = g.usize_in(1, 20);
         let want = serial::nibble(&graph, &seeds, eps as f64, iters);
-        let mut eng = Engine::new(graph.clone(), random_config(g, graph.n()));
-        let res = apps::nibble::run(&mut eng, &seeds, eps, iters);
+        let session = EngineSession::new(graph.clone(), random_config(g, graph.n()));
+        let res = Runner::on(&session)
+            .until(Convergence::FrontierEmpty.or_max_iters(iters))
+            .run(apps::Nibble::new(&graph, eps, &seeds));
         for v in 0..graph.n() {
             prop_assert!(
-                (res.pr[v] as f64 - want[v]).abs() < 1e-4,
+                (res.output.pr[v] as f64 - want[v]).abs() < 1e-4,
                 "v={v}: {} vs {}",
-                res.pr[v],
+                res.output.pr[v],
                 want[v]
             );
         }
@@ -149,7 +159,7 @@ fn prop_messages_equal_active_edges_in_sc_mode() {
     // Accounting identity: unweighted SC-mode gather reads exactly one
     // message per active edge of the preceding scatter.
     property("SC message accounting", CASES, |g| {
-        let graph = g.graph(500, 6);
+        let graph = Arc::new(g.graph(500, 6));
         if graph.is_weighted() {
             return Ok(()); // identity below is for the unweighted layout
         }
@@ -161,8 +171,8 @@ fn prop_messages_equal_active_edges_in_sc_mode() {
                 ..Default::default()
             },
         );
-        let prog = apps::bfs::Bfs::new(graph.n());
         let root = g.rng.below(graph.n() as u64) as u32;
+        let prog = apps::bfs::Bfs::new(graph.n(), root);
         prog.parent.set(root, root as i32);
         eng.load_frontier(&[root]);
         for _ in 0..5 {
@@ -182,24 +192,26 @@ fn prop_messages_equal_active_edges_in_sc_mode() {
 }
 
 #[test]
-fn prop_engine_reusable_across_runs() {
-    // Running BFS twice from different roots on one engine must give
-    // the same answers as fresh engines (state fully reset).
-    property("engine reuse", CASES, |g| {
-        let graph = g.graph(300, 5);
+fn prop_session_reusable_across_runs() {
+    // Running BFS twice from different roots on one session must give
+    // the same answers as a fresh session (state fully reset between
+    // checkouts of the pooled engine).
+    property("session reuse", CASES, |g| {
+        let graph = Arc::new(g.graph(300, 5));
         let r1 = g.rng.below(graph.n() as u64) as u32;
         let r2 = g.rng.below(graph.n() as u64) as u32;
-        let mut eng = Engine::new(graph.clone(), random_config(g, graph.n()));
-        let a1 = apps::bfs::run(&mut eng, r1);
-        let a2 = apps::bfs::run(&mut eng, r2);
+        let session = EngineSession::new(graph.clone(), random_config(g, graph.n()));
+        let runner = Runner::on(&session);
+        let a1 = runner.run(apps::Bfs::new(graph.n(), r1));
+        let a2 = runner.run(apps::Bfs::new(graph.n(), r2));
         let b2 = {
-            let mut fresh = Engine::new(graph.clone(), PpmConfig::default());
-            apps::bfs::run(&mut fresh, r2)
+            let fresh = EngineSession::new(graph.clone(), PpmConfig::default());
+            Runner::on(&fresh).run(apps::Bfs::new(graph.n(), r2))
         };
         prop_assert_eq!(
-            a2.levels(r2),
-            b2.levels(r2),
-            "reused engine diverged (roots {r1}, {r2})"
+            bfs::levels(&a2.output, r2),
+            bfs::levels(&b2.output, r2),
+            "reused session diverged (roots {r1}, {r2})"
         );
         let _ = a1;
         Ok(())
