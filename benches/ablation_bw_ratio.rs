@@ -31,7 +31,8 @@ fn main() {
         host.random_gbps,
         host.copy_gbps / host.random_gbps.max(1e-9)
     );
-    let d = &common::datasets()[0];
+    let datasets = common::datasets();
+    let d = &datasets[0];
     let g = common::weighted(&d.graph);
     let cfg = common::bench_config();
     let mut table = Table::new(&["policy", "bw-ratio", "time", "dc scatters", "sc scatters"]);

@@ -25,7 +25,8 @@ fn main() {
         "ablation — partition count k (paper §3.1 heuristic)",
         &format!("PageRank x{ITERS}, largest bench dataset, {threads} threads"),
     );
-    let d = &common::datasets()[0];
+    let datasets = common::datasets();
+    let d = &datasets[0];
     let g = &d.graph;
     let auto = PpmConfig { threads, ..Default::default() }.partitioner(g.n()).k();
     println!("# dataset {} — heuristic picks k = {auto}", d.name);

@@ -1,0 +1,138 @@
+//! bench_smoke — short-mode hot-path benches emitting a machine-readable
+//! `BENCH_pr2.json` artifact (the bench-trajectory seed: messages/sec
+//! and gather time for PageRank, BFS and the new one-pass
+//! SSSP-with-parents).
+//!
+//! Runs each app a few times (`BenchConfig::quick`) on the first bench
+//! dataset and writes JSON to `$GPOP_BENCH_JSON` (default
+//! `BENCH_pr2.json` in the working directory). CI runs this with
+//! `GPOP_BENCH_SCALE=12` and uploads the file, so every PR leaves a
+//! comparable perf breadcrumb. No external deps: the JSON is assembled
+//! by hand from a flat struct.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::api::{Convergence, RunReport, Runner};
+use gpop::apps::{Bfs, PageRank, SsspParents};
+use gpop::bench::{bench, BenchConfig};
+use gpop::exec::ThreadPool;
+use gpop::ppm::PpmConfig;
+use gpop::util::fmt;
+
+const PR_ITERS: usize = 5;
+
+struct AppSample {
+    app: &'static str,
+    median_time: f64,
+    in_engine_time: f64,
+    gather_time: f64,
+    messages: u64,
+    msg_bytes: u64,
+    iters: usize,
+}
+
+impl AppSample {
+    fn from_report<O>(app: &'static str, median_time: f64, rep: &RunReport<O>) -> Self {
+        Self {
+            app,
+            median_time,
+            in_engine_time: rep.iters.iter().map(|i| i.total_time()).sum(),
+            gather_time: rep.iters.iter().map(|i| i.t_gather).sum(),
+            messages: rep.total_messages(),
+            msg_bytes: rep.iters.iter().map(|i| i.msg_bytes).sum(),
+            iters: rep.n_iters(),
+        }
+    }
+
+    fn msgs_per_sec(&self) -> f64 {
+        self.messages as f64 / self.in_engine_time.max(1e-12)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"app\":\"{}\",\"median_time_s\":{:.6},\"in_engine_time_s\":{:.6},\
+             \"gather_time_s\":{:.6},\"messages\":{},\"msg_bytes\":{},\
+             \"msgs_per_sec\":{:.1},\"iters\":{}}}",
+            self.app,
+            self.median_time,
+            self.in_engine_time,
+            self.gather_time,
+            self.messages,
+            self.msg_bytes,
+            self.msgs_per_sec(),
+            self.iters
+        )
+    }
+}
+
+fn main() {
+    let threads = ThreadPool::available_parallelism();
+    let config = BenchConfig::quick();
+    let datasets = common::datasets();
+    let d = &datasets[0];
+    let g = &d.graph;
+    println!(
+        "bench_smoke: {} ({} vertices, {} edges), {threads} threads",
+        d.name,
+        fmt::si(g.n() as f64),
+        fmt::si(g.m() as f64)
+    );
+    let session = common::session(g, PpmConfig { threads, ..Default::default() });
+    let runner = Runner::on(&session);
+    let mut samples: Vec<AppSample> = Vec::new();
+
+    let mut rep = None;
+    let r = bench("pagerank", config, || {
+        // `until` consumes the builder, so construct it per sample.
+        rep = Some(
+            Runner::on(&session)
+                .until(Convergence::MaxIters(PR_ITERS))
+                .run(PageRank::new(g, 0.85)),
+        );
+    });
+    samples.push(AppSample::from_report("pagerank", r.median(), rep.as_ref().unwrap()));
+
+    let mut rep = None;
+    let r = bench("bfs", config, || {
+        rep = Some(runner.run(Bfs::new(g.n(), 0)));
+    });
+    samples.push(AppSample::from_report("bfs", r.median(), rep.as_ref().unwrap()));
+
+    // The new 2-lane app runs on the weighted variant (its own session).
+    let wg = common::weighted(g);
+    let wsession = common::session(&wg, PpmConfig { threads, ..Default::default() });
+    let wrunner = Runner::on(&wsession);
+    let mut rep = None;
+    let r = bench("sssp_parents", config, || {
+        rep = Some(wrunner.run(SsspParents::new(wg.n(), 0)));
+    });
+    let sp = rep.as_ref().unwrap();
+    assert!(sp.output.n_reached() > 1, "smoke sanity: SSSP reached nothing");
+    samples.push(AppSample::from_report("sssp_parents", r.median(), sp));
+
+    for s in &samples {
+        println!(
+            "  {:>13}: median {} — {} msgs/s, gather {}",
+            s.app,
+            fmt::secs(s.median_time),
+            fmt::si(s.msgs_per_sec()),
+            fmt::secs(s.gather_time)
+        );
+    }
+
+    let path =
+        std::env::var("GPOP_BENCH_JSON").unwrap_or_else(|_| "BENCH_pr2.json".to_string());
+    let body = samples.iter().map(AppSample::json).collect::<Vec<_>>().join(",");
+    let json = format!(
+        "{{\"bench\":\"bench_smoke\",\"pr\":2,\"dataset\":\"{}\",\"vertices\":{},\
+         \"edges\":{},\"threads\":{},\"apps\":[{}]}}\n",
+        d.name,
+        g.n(),
+        g.m(),
+        threads,
+        body
+    );
+    std::fs::write(&path, json).expect("write bench artifact");
+    println!("wrote {path}");
+}

@@ -82,15 +82,9 @@ pub fn session(graph: &Arc<Graph>, config: PpmConfig) -> EngineSession {
     EngineSession::new(graph.clone(), config)
 }
 
-/// Symmetrized variant (for CC workloads).
+/// Symmetrized variant (for CC / k-core workloads).
 pub fn symmetrized(g: &Graph) -> Arc<Graph> {
-    let mut b = gpop::graph::GraphBuilder::new().with_n(g.n()).symmetrize();
-    for v in 0..g.n() as u32 {
-        for &u in g.out().neighbors(v) {
-            b.add(v, u);
-        }
-    }
-    Arc::new(b.build())
+    Arc::new(gen::symmetrized(g))
 }
 
 /// Weighted variant (for SSSP workloads).

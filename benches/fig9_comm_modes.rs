@@ -61,7 +61,8 @@ fn main() {
         "Fig. 9 — per-iteration time: GPOP_SC vs GPOP_DC vs hybrid",
         &format!("largest bench dataset, {threads} threads"),
     );
-    let d = &common::datasets()[0];
+    let datasets = common::datasets();
+    let d = &datasets[0];
     let g = &d.graph;
     println!("# dataset: {} ({} vertices, {} edges)", d.name, g.n(), g.m());
     let mut table =

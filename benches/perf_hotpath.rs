@@ -25,7 +25,8 @@ fn main() {
         "§Perf — engine phase breakdown + roofline fraction",
         &format!("PageRank x{ITERS} + BFS, largest bench dataset, {threads} threads"),
     );
-    let d = &common::datasets()[0];
+    let datasets = common::datasets();
+    let d = &datasets[0];
     let g = &d.graph;
     let session = common::session(g, PpmConfig { threads, ..Default::default() });
     let runner = Runner::on(&session);
@@ -34,12 +35,13 @@ fn main() {
     let res = Runner::on(&session)
         .until(Convergence::MaxIters(ITERS))
         .run(PageRank::new(g, 0.85));
-    let (mut ts, mut tg, mut tf, mut msgs) = (0.0, 0.0, 0.0, 0u64);
+    let (mut ts, mut tg, mut tf, mut msgs, mut bin_bytes) = (0.0, 0.0, 0.0, 0u64, 0u64);
     for it in &res.iters {
         ts += it.t_scatter;
         tg += it.t_gather;
         tf += it.t_finalize;
         msgs += it.messages;
+        bin_bytes += it.msg_bytes;
     }
     let total = ts + tg + tf;
     let mut table = Table::new(&["phase", "time", "share"]);
@@ -48,9 +50,12 @@ fn main() {
     table.row(&["finalize".into(), fmt::secs(tf), format!("{:.1}%", 100.0 * tf / total)]);
     table.print();
 
-    // Effective data movement: conservative per-message traffic model
-    // (value write+read = 8B, id read = 4B, edge stream = 4B).
-    let bytes_moved = msgs as f64 * 16.0;
+    // Effective data movement: the engine's exact gather-side bin bytes
+    // (ids + value lanes, lane-count-aware). This is the read-side
+    // stream only — a lower bound on total traffic, since scatter also
+    // writes the value lanes (and, in SC mode only, the id stream; DC
+    // ids are pre-written at preprocessing and never re-written).
+    let bytes_moved = bin_bytes as f64;
     let eff_gbps = bytes_moved / total / 1e9;
     let host = measure_bandwidth(threads, 128);
     println!(

@@ -1,14 +1,16 @@
-//! Quickstart: the GPOP public API in ~50 lines.
+//! Quickstart: the GPOP public API in ~70 lines.
 //!
 //! Builds a small social-network-like RMAT graph, opens ONE
-//! `EngineSession` (pre-processing paid once), and serves three queries
-//! through the fluent `Runner` — PageRank to an L1 tolerance, a BFS,
-//! and a 4-root BFS batch — the "hello world" of the framework.
+//! `EngineSession` (pre-processing paid once), and serves queries
+//! through the fluent `Runner` — PageRank to an L1 tolerance, a BFS, a
+//! 4-root BFS batch, and a one-pass SSSP-with-parents on the weighted
+//! variant (a 2-lane `(f32, u32)` message: typed payloads need no
+//! bit twiddling).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use gpop::api::{Convergence, EngineSession, Runner};
-use gpop::apps::{bfs, Bfs, PageRank};
+use gpop::apps::{bfs, sssp_parents::NO_PARENT, Bfs, PageRank, SsspParents};
 use gpop::graph::gen;
 use gpop::ppm::PpmConfig;
 
@@ -53,5 +55,23 @@ fn main() {
     println!("\nbatched BFS roots:");
     for (root, rep) in roots.iter().zip(&reports) {
         println!("  root {root}: reached {}", bfs::n_reached(&rep.output));
+    }
+
+    // --- One-pass SSSP with parents on a weighted session: the message
+    // is (candidate distance, proposing parent) — two lanes traveling
+    // together, so the shortest-path tree needs no second sweep.
+    let wgraph = gen::with_uniform_weights(session.graph(), 1.0, 4.0, 7);
+    let wsession = EngineSession::new(wgraph, PpmConfig { threads: 4, ..Default::default() });
+    let sp = Runner::on(&wsession).run(SsspParents::new(n, 0));
+    let tree_edges =
+        sp.output.parent.iter().enumerate().filter(|&(v, &p)| p != NO_PARENT && p as usize != v);
+    println!(
+        "\nSSSP+parents from 0: reached {} vertices, {} tree edges, {} iterations",
+        sp.output.n_reached(),
+        tree_edges.count(),
+        sp.n_iters()
+    );
+    if let Some(path) = sp.output.path_to((n - 1) as u32) {
+        println!("  shortest path to {}: {} hops", n - 1, path.len() - 1);
     }
 }

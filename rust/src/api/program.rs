@@ -1,45 +1,150 @@
 //! The `Program` trait — GPOP's four user-defined functions (paper §4.1)
-//! plus `applyWeight` for weighted graphs.
+//! plus `applyWeight` for weighted graphs — and the typed message plane
+//! beneath it.
+//!
+//! The paper fixes the message payload at one 4-byte word (`d_v = 4`,
+//! §3.2). This implementation generalizes that to **multi-lane
+//! payloads**: a message is any plain-old-data type occupying 1 or 2
+//! u32 *lanes* of bin storage, described by the [`Payload`] trait. The
+//! engine is monomorphized per program, so 1-lane programs compile to
+//! exactly the single-word hot loops of the paper (the lane arithmetic
+//! constant-folds away), while 2-lane programs — `Msg = (f32, u32)` for
+//! SSSP-with-parents, `Msg = f64` for high-precision accumulation,
+//! `Msg = u64` for packed state — just work, with no bit twiddling in
+//! user code.
 
 use crate::{VertexId, Weight};
 
-/// Message payload: a 4-byte value (`d_v = 4` in the paper), bit-cast
-/// into the bins' `u32` storage.
-pub trait MsgValue: Copy + Send + Sync + 'static {
-    fn to_bits(self) -> u32;
-    fn from_bits(bits: u32) -> Self;
+/// A value occupying exactly one u32 lane (the paper's `d_v = 4` case).
+///
+/// `Lane` is the building block of [`Payload`]: every `Lane` type is a
+/// 1-lane payload, and any pair `(A, B)` of `Lane` types is a 2-lane
+/// payload — so `Msg = (f32, u32)` needs no hand-written impl.
+pub trait Lane: Copy + Send + Sync + 'static {
+    fn to_lane(self) -> u32;
+    fn from_lane(bits: u32) -> Self;
 }
 
-impl MsgValue for u32 {
-    #[inline]
-    fn to_bits(self) -> u32 {
+impl Lane for u32 {
+    #[inline(always)]
+    fn to_lane(self) -> u32 {
         self
     }
-    #[inline]
-    fn from_bits(bits: u32) -> Self {
+    #[inline(always)]
+    fn from_lane(bits: u32) -> Self {
         bits
     }
 }
 
-impl MsgValue for i32 {
-    #[inline]
-    fn to_bits(self) -> u32 {
+impl Lane for i32 {
+    #[inline(always)]
+    fn to_lane(self) -> u32 {
         self as u32
     }
-    #[inline]
-    fn from_bits(bits: u32) -> Self {
+    #[inline(always)]
+    fn from_lane(bits: u32) -> Self {
         bits as i32
     }
 }
 
-impl MsgValue for f32 {
-    #[inline]
-    fn to_bits(self) -> u32 {
+impl Lane for f32 {
+    #[inline(always)]
+    fn to_lane(self) -> u32 {
         self.to_bits()
     }
-    #[inline]
-    fn from_bits(bits: u32) -> Self {
+    #[inline(always)]
+    fn from_lane(bits: u32) -> Self {
         f32::from_bits(bits)
+    }
+}
+
+/// Message payload: plain-old-data occupying [`LANES`](Self::LANES)
+/// consecutive u32 lanes of bin storage.
+///
+/// The encoding is a single u64: lane 0 in the low 32 bits, lane 1 (if
+/// any) in the high 32 bits. With `LANES = 1` the high word is never
+/// stored or loaded — the branch on the associated const is resolved at
+/// monomorphization time, so 1-lane programs keep the paper's exact
+/// 4-byte message layout and hot-loop code.
+///
+/// Provided impls: `u32`/`i32`/`f32` (1 lane), `u64`/`i64`/`f64` and
+/// every `(A, B)` pair of [`Lane`] types (2 lanes).
+pub trait Payload: Copy + Send + Sync + 'static {
+    /// Lanes occupied in bin storage (1 or 2).
+    const LANES: usize;
+
+    /// Encode into a u64 (lane 0 low, lane 1 high; high bits are zero
+    /// for 1-lane payloads).
+    fn to_bits64(self) -> u64;
+
+    /// Decode from the [`to_bits64`](Self::to_bits64) encoding. For
+    /// 1-lane payloads only the low 32 bits are meaningful.
+    fn from_bits64(bits: u64) -> Self;
+}
+
+macro_rules! impl_payload_one_lane {
+    ($($t:ty),*) => {$(
+        impl Payload for $t {
+            const LANES: usize = 1;
+            #[inline(always)]
+            fn to_bits64(self) -> u64 {
+                self.to_lane() as u64
+            }
+            #[inline(always)]
+            fn from_bits64(bits: u64) -> Self {
+                <$t as Lane>::from_lane(bits as u32)
+            }
+        }
+    )*};
+}
+
+impl_payload_one_lane!(u32, i32, f32);
+
+impl Payload for u64 {
+    const LANES: usize = 2;
+    #[inline(always)]
+    fn to_bits64(self) -> u64 {
+        self
+    }
+    #[inline(always)]
+    fn from_bits64(bits: u64) -> Self {
+        bits
+    }
+}
+
+impl Payload for i64 {
+    const LANES: usize = 2;
+    #[inline(always)]
+    fn to_bits64(self) -> u64 {
+        self as u64
+    }
+    #[inline(always)]
+    fn from_bits64(bits: u64) -> Self {
+        bits as i64
+    }
+}
+
+impl Payload for f64 {
+    const LANES: usize = 2;
+    #[inline(always)]
+    fn to_bits64(self) -> u64 {
+        self.to_bits()
+    }
+    #[inline(always)]
+    fn from_bits64(bits: u64) -> Self {
+        f64::from_bits(bits)
+    }
+}
+
+impl<A: Lane, B: Lane> Payload for (A, B) {
+    const LANES: usize = 2;
+    #[inline(always)]
+    fn to_bits64(self) -> u64 {
+        self.0.to_lane() as u64 | (self.1.to_lane() as u64) << 32
+    }
+    #[inline(always)]
+    fn from_bits64(bits: u64) -> Self {
+        (A::from_lane(bits as u32), B::from_lane((bits >> 32) as u32))
     }
 }
 
@@ -50,9 +155,11 @@ impl MsgValue for f32 {
 ///   **DC-mode caveat** (paper §3.3/§5): when a partition scatters
 ///   destination-centric, `scatter` is invoked for *every* vertex of
 ///   the partition with outgoing edges — including inactive ones — and
-///   may be invoked multiple times per vertex. Programs must return a
-///   value that `gather` treats as a no-op for inactive vertices (e.g.
-///   BFS sends `-1` while unvisited, SSSP sends `+inf`).
+///   may be invoked multiple times per vertex. For inactive vertices
+///   `scatter` must return a value that `gather` treats as a no-op;
+///   the program names that value once, as [`INACTIVE`](Self::INACTIVE),
+///   instead of sprinkling per-app magic numbers (BFS: `-1`, SSSP:
+///   `+inf`, diffusion apps: `0.0`).
 /// - [`init`](Self::init) (`initFunc`) once per active vertex in the
 ///   `initFrontier` step: return `true` to keep the vertex active next
 ///   iteration regardless of Gather (selective frontier continuity —
@@ -67,7 +174,15 @@ impl MsgValue for f32 {
 /// - [`apply_weight`](Self::apply_weight) (`applyWeight`) combines a
 ///   scattered value with an edge weight (weighted graphs only).
 pub trait Program: Sync {
-    type Msg: MsgValue;
+    type Msg: Payload;
+
+    /// The no-op message value: what `scatter` returns for a vertex
+    /// that is not in the current frontier (reachable only under
+    /// DC-mode full-partition scatter), and what `gather` must treat
+    /// as "nothing happened". Monotone programs whose every value is
+    /// harmless to re-deliver (e.g. min-label propagation) pick any
+    /// value their `gather` ignores.
+    const INACTIVE: Self::Msg;
 
     /// `scatterFunc(node)` — value sent to out-neighbors.
     fn scatter(&self, v: VertexId) -> Self::Msg;
@@ -92,23 +207,58 @@ pub trait Program: Sync {
 mod tests {
     use super::*;
 
-    #[test]
-    fn u32_roundtrip() {
-        assert_eq!(u32::from_bits(42u32.to_bits()), 42);
-    }
-
-    #[test]
-    fn i32_roundtrip_negative() {
-        assert_eq!(i32::from_bits((-1i32).to_bits()), -1);
-        assert_eq!(i32::from_bits(i32::MIN.to_bits()), i32::MIN);
-    }
-
-    #[test]
-    fn f32_roundtrip() {
-        for x in [0.0f32, -0.0, 1.5, f32::INFINITY, f32::MIN_POSITIVE] {
-            assert_eq!(f32::from_bits(MsgValue::to_bits(x)), x);
+    fn roundtrip<M: Payload + PartialEq + std::fmt::Debug>(vals: &[M]) {
+        for &v in vals {
+            assert_eq!(M::from_bits64(v.to_bits64()), v);
         }
-        let nan = f32::from_bits(MsgValue::to_bits(f32::NAN));
+    }
+
+    #[test]
+    fn one_lane_scalars_roundtrip() {
+        roundtrip(&[0u32, 1, 42, u32::MAX]);
+        roundtrip(&[0i32, -1, i32::MIN, i32::MAX]);
+        roundtrip(&[0.0f32, -0.0, 1.5, f32::INFINITY, f32::MIN_POSITIVE]);
+        let nan = f32::from_bits64(f32::NAN.to_bits64());
         assert!(nan.is_nan());
+    }
+
+    #[test]
+    fn one_lane_high_bits_are_zero() {
+        assert_eq!(u32::MAX.to_bits64() >> 32, 0);
+        assert_eq!((-1i32).to_bits64() >> 32, 0);
+        assert_eq!(f32::NEG_INFINITY.to_bits64() >> 32, 0);
+    }
+
+    #[test]
+    fn two_lane_scalars_roundtrip() {
+        roundtrip(&[0u64, 1, u64::MAX, 1 << 32]);
+        roundtrip(&[0i64, -1, i64::MIN, i64::MAX]);
+        roundtrip(&[0.0f64, -0.0, 1.0 / 3.0, f64::INFINITY, f64::MIN_POSITIVE]);
+    }
+
+    #[test]
+    fn tuple_payloads_roundtrip() {
+        roundtrip(&[(0.0f32, 0u32), (1.5, 7), (f32::INFINITY, u32::MAX)]);
+        roundtrip(&[(0u32, 0u32), (u32::MAX, 1), (1, u32::MAX)]);
+        roundtrip(&[(-1i32, -2i32), (i32::MIN, i32::MAX)]);
+        roundtrip(&[(1.25f32, -9i32), (f32::NEG_INFINITY, i32::MIN)]);
+    }
+
+    #[test]
+    fn tuple_lane_order_low_then_high() {
+        let bits = (0xAAAA_AAAAu32, 0x5555_5555u32).to_bits64();
+        assert_eq!(bits as u32, 0xAAAA_AAAA, "lane 0 must be the low word");
+        assert_eq!((bits >> 32) as u32, 0x5555_5555, "lane 1 must be the high word");
+    }
+
+    #[test]
+    fn lane_counts() {
+        assert_eq!(u32::LANES, 1);
+        assert_eq!(i32::LANES, 1);
+        assert_eq!(f32::LANES, 1);
+        assert_eq!(u64::LANES, 2);
+        assert_eq!(i64::LANES, 2);
+        assert_eq!(f64::LANES, 2);
+        assert_eq!(<(f32, u32)>::LANES, 2);
     }
 }

@@ -33,16 +33,18 @@ impl Bfs {
 impl Program for Bfs {
     type Msg = i32;
 
+    /// Unvisited vertices (reachable only under DC-mode full-partition
+    /// scatter) send this; `gather` ignores it.
+    const INACTIVE: i32 = -1;
+
     #[inline]
     fn scatter(&self, v: VertexId) -> i32 {
-        // Visited vertices propose themselves as parent; unvisited ones
-        // (reachable only under DC-mode full-partition scatter) send the
-        // ignorable sentinel -1.
+        // Visited vertices propose themselves as parent.
         let p = self.parent.get(v);
         if p >= 0 {
             v as i32
         } else {
-            -1
+            Self::INACTIVE
         }
     }
 

@@ -31,10 +31,14 @@ impl LabelProp {
 impl Program for LabelProp {
     type Msg = u32;
 
+    /// `u32::MAX` can never win the min in `gather`. Min-propagation is
+    /// monotone, so DC-mode scatter never needs the sentinel — an
+    /// inactive vertex's label was already delivered and re-sending it
+    /// is harmless — but the contract value exists for the API.
+    const INACTIVE: u32 = u32::MAX;
+
     #[inline]
     fn scatter(&self, v: VertexId) -> u32 {
-        // Min-propagation is monotone, so DC-mode scatter of inactive
-        // vertices is harmless (their label was already delivered).
         self.label.get(v)
     }
 

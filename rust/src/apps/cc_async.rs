@@ -32,6 +32,12 @@ impl AsyncLabelProp {
 impl Program for AsyncLabelProp {
     type Msg = u32;
 
+    /// A null pointer for the chase. `scatter` never produces it —
+    /// every source's pointer stays meaningful even when inactive
+    /// (that's what makes the async freshness work) — but `gather`
+    /// guards against it so the contract is total.
+    const INACTIVE: u32 = u32::MAX;
+
     #[inline]
     fn scatter(&self, v: VertexId) -> u32 {
         v // the "pointer": gather dereferences label[v] lazily
@@ -44,6 +50,9 @@ impl Program for AsyncLabelProp {
 
     #[inline]
     fn gather(&self, src: u32, v: VertexId) -> bool {
+        if src == Self::INACTIVE {
+            return false;
+        }
         // Pointer chase: read the *current* label of the source. This
         // is a fine-grained random read (the cache cost §6.2.1 warns
         // about) but may be fresher than the scatter-time value.

@@ -92,13 +92,16 @@ impl HeatKernel {
 impl Program for HeatKernel {
     type Msg = f32;
 
+    /// Zero heat mass is a no-op for the accumulating `gather`.
+    const INACTIVE: f32 = 0.0;
+
     #[inline]
     fn scatter(&self, v: VertexId) -> f32 {
         if self.above(v) {
             let keep = self.settle_fraction();
             (1.0 - keep) * self.residual.get(v) / self.deg[v as usize] as f32
         } else {
-            0.0
+            Self::INACTIVE
         }
     }
 

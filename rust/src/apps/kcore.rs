@@ -1,0 +1,279 @@
+//! k-core decomposition by parallel peeling — a workload the bespoke
+//! seed API could not express: the peel level is *cross-iteration
+//! state* advanced by the [`Algorithm`] hooks, and the run ends by
+//! [`FrontierEmpty`](crate::api::Convergence::FrontierEmpty) once every
+//! vertex has been peeled.
+//!
+//! The core number `core(v)` is the largest `k` such that `v` belongs
+//! to a subgraph where every vertex has degree ≥ `k`. Peeling computes
+//! it level by level: at level `k`, repeatedly remove vertices with
+//! remaining degree `< k` (they get `core = k - 1`), decrementing their
+//! neighbors; when removal stalls, jump to the next level that removes
+//! anything (`min` remaining degree `+ 1` — the standard batched-peel
+//! shortcut, which assigns identical core numbers).
+//!
+//! GPOP mapping (one engine iteration = one peel round):
+//!
+//! - every not-yet-dead vertex stays in the frontier via `init`'s
+//!   selective continuity — the same §4.1 capability Nibble uses;
+//! - `init` also *dooms* vertices whose degree fell below the level
+//!   (recording their core number), one round before their removal
+//!   message goes out — `init` runs after `scatter`, so a doomed vertex
+//!   scatters its decrement on the next iteration and then dies;
+//! - `scatter` sends `1` for doomed vertices ([`Program::INACTIVE`]
+//!   `= 0` otherwise), `gather` subtracts it from live neighbors;
+//! - `post_iteration` advances the level once two consecutive rounds
+//!   doom nothing (no decrement can still be in flight).
+//!
+//! Core numbers are degree-based, so run this on a **symmetrized**
+//! graph for the standard undirected notion (directed inputs yield the
+//! out-degree variant).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::api::{Algorithm, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
+use crate::ppm::IterStats;
+use crate::VertexId;
+
+const ALIVE: u32 = 0;
+/// Marked for removal; its decrement scatters next iteration.
+const DOOMED: u32 = 1;
+const DEAD: u32 = 2;
+
+pub struct KCore {
+    /// Core numbers, valid for DEAD vertices (all of them at the end).
+    pub core: VertexData<u32>,
+    status: VertexData<u32>,
+    /// Remaining (out-)degree under peeling.
+    deg: VertexData<u32>,
+    /// Current peel level `k`; atomic because the parallel `init` reads
+    /// it mid-iteration (cf. HeatKernel's stage counter).
+    level: AtomicU32,
+    /// Vertices doomed during the current iteration's `init`.
+    doomed_now: AtomicU64,
+    /// Dooms of the previous iteration (decrements still in flight).
+    doomed_prev: u64,
+    n: usize,
+}
+
+impl KCore {
+    pub fn new(g: &Graph) -> Self {
+        let n = g.n();
+        Self {
+            core: VertexData::new(n, 0),
+            status: VertexData::new(n, ALIVE),
+            deg: VertexData::from_fn(n, |v| g.out_degree(v as VertexId) as u32),
+            level: AtomicU32::new(1),
+            doomed_now: AtomicU64::new(0),
+            doomed_prev: 0,
+            n,
+        }
+    }
+
+    /// The current peel level (exposed for observability).
+    pub fn level(&self) -> u32 {
+        self.level.load(Ordering::Relaxed)
+    }
+}
+
+impl Program for KCore {
+    type Msg = u32;
+
+    /// Live vertices decrement nobody.
+    const INACTIVE: u32 = 0;
+
+    #[inline]
+    fn scatter(&self, v: VertexId) -> u32 {
+        // One decrement per out-edge of a doomed vertex (the engine
+        // delivers the message once per destination in each run).
+        if self.status.get(v) == DOOMED {
+            1
+        } else {
+            Self::INACTIVE
+        }
+    }
+
+    #[inline]
+    fn init(&self, v: VertexId) -> bool {
+        match self.status.get(v) {
+            // Doomed last round: the decrement went out in this
+            // iteration's scatter (scatter runs before init) — die now
+            // and leave the frontier.
+            DOOMED => {
+                self.status.set(v, DEAD);
+                false
+            }
+            ALIVE => {
+                let k = self.level.load(Ordering::Relaxed);
+                if self.deg.get(v) < k {
+                    self.status.set(v, DOOMED);
+                    self.core.set(v, k - 1);
+                    self.doomed_now.fetch_add(1, Ordering::Relaxed);
+                }
+                // Alive and doomed vertices both stay active: alive
+                // ones to keep being checked as the level rises, doomed
+                // ones to scatter their decrement next iteration.
+                true
+            }
+            _ => false, // DEAD never re-enters (unreachable: dead vertices left the frontier)
+        }
+    }
+
+    #[inline]
+    fn gather(&self, c: u32, v: VertexId) -> bool {
+        // Only live vertices lose degree; messages to doomed/dead
+        // vertices (e.g. mutually-adjacent vertices peeled in the same
+        // round, or self-loops) are dropped, exactly like serial
+        // peeling ignores edges to already-removed vertices.
+        if c > 0 && self.status.get(v) == ALIVE {
+            let d = self.deg.get(v);
+            self.deg.set(v, d.saturating_sub(c));
+        }
+        // Frontier continuity comes entirely from `init`: every
+        // non-dead vertex is already active.
+        false
+    }
+
+    #[inline]
+    fn filter(&self, _v: VertexId) -> bool {
+        true
+    }
+}
+
+impl Algorithm for KCore {
+    type Output = Vec<u32>;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        FrontierInit::All
+    }
+
+    fn post_iteration(&mut self, _stats: &IterStats) {
+        let now = self.doomed_now.swap(0, Ordering::Relaxed);
+        if now == 0 && self.doomed_prev == 0 {
+            // Two doom-free rounds: no decrement is in flight, so the
+            // level is exhausted. Jump straight to the next level that
+            // removes anything, and doom its victims right here (this
+            // hook runs single-threaded between iterations, so the
+            // writes are race-free) — their decrements go out on the
+            // very next scatter, saving one idle all-edge sweep per
+            // level versus waiting for the next `init` to notice.
+            let mut min_deg = u32::MAX;
+            for v in 0..self.n {
+                if self.status.get(v as VertexId) == ALIVE {
+                    min_deg = min_deg.min(self.deg.get(v as VertexId));
+                }
+            }
+            if min_deg != u32::MAX {
+                let k = self.level.load(Ordering::Relaxed).max(min_deg) + 1;
+                self.level.store(k, Ordering::Relaxed);
+                let mut doomed = 0u64;
+                for v in 0..self.n {
+                    let v = v as VertexId;
+                    if self.status.get(v) == ALIVE && self.deg.get(v) < k {
+                        self.status.set(v, DOOMED);
+                        self.core.set(v, k - 1);
+                        doomed += 1;
+                    }
+                }
+                // These dooms are "in flight" exactly like init-made
+                // ones: hold off the next level advance until their
+                // decrements have landed.
+                self.doomed_prev = doomed;
+                return;
+            }
+        }
+        self.doomed_prev = now;
+    }
+
+    fn finish(self) -> Vec<u32> {
+        self.core.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{EngineSession, Runner};
+    use crate::baselines::serial;
+    use crate::graph::gen::{self, symmetrized};
+    use crate::graph::GraphBuilder;
+    use crate::ppm::{ModePolicy, PpmConfig};
+
+    fn run_kcore(g: &crate::graph::Graph, config: PpmConfig) -> crate::api::RunReport<Vec<u32>> {
+        let session = EngineSession::new(g.clone(), config);
+        Runner::on(&session).run(KCore::new(g))
+    }
+
+    #[test]
+    fn clique_and_chain_cores() {
+        // A 4-clique glued to a tail: clique vertices have core 3, the
+        // tail degenerates to core 1.
+        let mut b = GraphBuilder::new().with_n(7).symmetrize();
+        for i in 0..4u32 {
+            for j in (i + 1)..4 {
+                b.add(i, j);
+            }
+        }
+        b.add(3, 4).add(4, 5).add(5, 6);
+        let g = b.build();
+        let report = run_kcore(&g, PpmConfig { threads: 2, k: Some(3), ..Default::default() });
+        assert!(report.converged, "peeling must drain the frontier");
+        assert_eq!(report.output, vec![3, 3, 3, 3, 1, 1, 1]);
+    }
+
+    #[test]
+    fn isolated_vertices_have_core_zero() {
+        let g = crate::graph::builder::graph_from_edges(5, &[(0, 1), (1, 0)]);
+        let report = run_kcore(&g, PpmConfig::default());
+        assert_eq!(report.output, vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn kcore_rmat_matches_serial_all_modes() {
+        let g = symmetrized(&gen::rmat(9, Default::default(), false));
+        let want = serial::kcore(&g);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            let report =
+                run_kcore(&g, PpmConfig { threads: 4, mode, k: Some(8), ..Default::default() });
+            assert!(report.converged, "mode {mode:?}");
+            assert_eq!(report.output, want, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn kcore_er_matches_serial() {
+        let g = symmetrized(&gen::erdos_renyi(400, 2400, 13));
+        let want = serial::kcore(&g);
+        let report = run_kcore(&g, PpmConfig { threads: 3, k: Some(10), ..Default::default() });
+        assert_eq!(report.output, want);
+    }
+
+    #[test]
+    fn max_core_bounded_by_degeneracy_witness() {
+        // Every vertex's core number is at most its degree, and the
+        // maximum core is realized by a subgraph: all vertices of the
+        // top core class have ≥ max_core neighbors within the class.
+        let g = symmetrized(&gen::rmat(8, Default::default(), false));
+        let report = run_kcore(&g, PpmConfig { threads: 2, ..Default::default() });
+        let core = &report.output;
+        let kmax = *core.iter().max().unwrap();
+        for v in 0..g.n() {
+            assert!(core[v] as usize <= g.out_degree(v as u32), "core exceeds degree at {v}");
+        }
+        for v in 0..g.n() {
+            if core[v] == kmax {
+                let within = g
+                    .out()
+                    .neighbors(v as u32)
+                    .iter()
+                    .filter(|&&u| u as usize != v && core[u as usize] >= kmax)
+                    .count();
+                assert!(
+                    within as u32 >= kmax,
+                    "v={v} in the {kmax}-core has only {within} in-core neighbors"
+                );
+            }
+        }
+    }
+}

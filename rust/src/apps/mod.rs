@@ -12,6 +12,14 @@
 //! | [`nibble`] | Alg. 4, local clustering | `f32` probability | **selective continuity** | [`NibbleOutput`](nibble::NibbleOutput) |
 //! | [`pagerank_nibble`] | §4.1 (extension) | `f32` residual | selective continuity | [`PrNibbleOutput`](pagerank_nibble::PrNibbleOutput) |
 //! | [`heat_kernel`] | §4.1 (extension) | `f32` heat mass | selective continuity | `Vec<f32>` heat |
+//! | [`sssp_parents`] | multi-lane extension | **`(f32, u32)` dist + parent** | rebuilt | [`SsspParentsOutput`](sssp_parents::SsspParentsOutput) |
+//! | [`kcore`] | peeling extension | `u32` decrement | selective continuity | `Vec<u32>` core numbers |
+//!
+//! SSSP-with-parents is only expressible on the multi-lane typed
+//! message plane (two lanes travel together in one message); k-core is
+//! a 1-lane program but leans on the `Algorithm` lifecycle hooks —
+//! cross-iteration peel-level state advanced in `post_iteration` until
+//! `FrontierEmpty` fires — which the bespoke seed API had no place for.
 //!
 //! Every app runs through
 //! [`Runner::on(&session)`](crate::api::Runner::on); the old
@@ -22,16 +30,20 @@ pub mod bfs;
 pub mod cc;
 pub mod cc_async;
 pub mod heat_kernel;
+pub mod kcore;
 pub mod nibble;
 pub mod pagerank;
 pub mod pagerank_nibble;
 pub mod sssp;
+pub mod sssp_parents;
 
 pub use bfs::Bfs;
 pub use cc::LabelProp;
 pub use cc_async::AsyncLabelProp;
 pub use heat_kernel::HeatKernel;
+pub use kcore::KCore;
 pub use nibble::Nibble;
 pub use pagerank::PageRank;
 pub use pagerank_nibble::PageRankNibble;
 pub use sssp::Sssp;
+pub use sssp_parents::SsspParents;

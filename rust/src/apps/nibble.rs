@@ -56,15 +56,18 @@ impl Nibble {
 impl Program for Nibble {
     type Msg = f32;
 
+    /// Zero probability mass is a no-op for the accumulating `gather`.
+    const INACTIVE: f32 = 0.0;
+
     #[inline]
     fn scatter(&self, v: VertexId) -> f32 {
         // Active vertices satisfy pr >= eps*deg (enforced by init and
-        // filter), so inactive vertices reached by DC-mode scatter return
-        // 0.0, which gather treats as a no-op.
+        // filter), so inactive vertices reached by DC-mode scatter
+        // return INACTIVE.
         if self.above_threshold(v) {
             self.pr.get(v) / (2.0 * self.deg[v as usize] as f32)
         } else {
-            0.0
+            Self::INACTIVE
         }
     }
 

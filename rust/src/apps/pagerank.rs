@@ -51,6 +51,11 @@ impl PageRank {
 impl Program for PageRank {
     type Msg = f32;
 
+    /// A zero rank share is a no-op for the accumulating `gather`.
+    /// Never actually sent — every vertex is active every iteration —
+    /// but DC mode requires the contract to be named.
+    const INACTIVE: f32 = 0.0;
+
     #[inline]
     fn scatter(&self, v: VertexId) -> f32 {
         // deg > 0 guaranteed: scatter is only invoked for vertices with

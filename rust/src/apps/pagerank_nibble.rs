@@ -55,12 +55,15 @@ impl PageRankNibble {
 impl Program for PageRankNibble {
     type Msg = f32;
 
+    /// Zero residual mass is a no-op for the accumulating `gather`.
+    const INACTIVE: f32 = 0.0;
+
     #[inline]
     fn scatter(&self, v: VertexId) -> f32 {
         if self.above(v) {
             (1.0 - self.alpha) * self.r.get(v) / (2.0 * self.deg[v as usize] as f32)
         } else {
-            0.0 // DC-mode inactive sentinel
+            Self::INACTIVE
         }
     }
 

@@ -30,10 +30,13 @@ impl Sssp {
 impl Program for Sssp {
     type Msg = f32;
 
+    /// `+inf` can never win the min in `gather`; unreached vertices
+    /// hold it as their distance, so scatter produces it for free.
+    const INACTIVE: f32 = f32::INFINITY;
+
     #[inline]
     fn scatter(&self, v: VertexId) -> f32 {
-        // Unreached vertices propagate +inf, which can never win the
-        // min in `gather` — the DC-mode inactive sentinel for free.
+        // Unreached vertices propagate INACTIVE (+inf) for free.
         self.distance.get(v)
     }
 

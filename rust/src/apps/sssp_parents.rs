@@ -1,0 +1,270 @@
+//! Single-Source Shortest Paths with parent recovery in ONE pass —
+//! the showcase for the multi-lane message plane.
+//!
+//! The paper's fixed 4-byte payload (`d_v = 4`, §3.2) forces SSSP to
+//! return distances only; recovering the shortest-path tree needed a
+//! second `O(E)` sweep over the graph (find, for each `v`, an in-edge
+//! with `dist[u] + w == dist[v]`). With `Msg = (f32, u32)` the
+//! candidate distance and the proposing parent travel together: `gather`
+//! commits both lanes atomically-per-vertex (the engine guarantees
+//! exclusive ownership), so the tree falls out of the same Bellman-Ford
+//! run at no extra pass.
+//!
+//! ```ignore
+//! let report = Runner::on(&session).run(SsspParents::new(session.graph().n(), source));
+//! let (dist, parent) = (&report.output.distance, &report.output.parent);
+//! ```
+//!
+//! At convergence the parents form a valid shortest-path tree:
+//! `parent[source] == source`, every other reached vertex has a real
+//! edge `parent[v] -> v` with `dist[v] == dist[parent[v]] + w`, and
+//! unreached vertices hold [`NO_PARENT`] / `+inf`.
+
+use crate::api::{Algorithm, FrontierInit, Program, VertexData};
+use crate::graph::Graph;
+use crate::{VertexId, Weight};
+
+/// Parent sentinel for unreached vertices.
+pub const NO_PARENT: u32 = u32::MAX;
+
+pub struct SsspParents {
+    pub distance: VertexData<f32>,
+    pub parent: VertexData<u32>,
+    source: VertexId,
+}
+
+impl SsspParents {
+    pub fn new(n: usize, source: VertexId) -> Self {
+        Self {
+            distance: VertexData::new(n, f32::INFINITY),
+            parent: VertexData::new(n, NO_PARENT),
+            source,
+        }
+    }
+}
+
+impl Program for SsspParents {
+    type Msg = (f32, u32);
+
+    /// `(+inf, NO_PARENT)`: the distance lane can never win the min in
+    /// `gather`, so the parent lane is never committed.
+    const INACTIVE: (f32, u32) = (f32::INFINITY, NO_PARENT);
+
+    #[inline]
+    fn scatter(&self, v: VertexId) -> (f32, u32) {
+        // Unreached vertices carry +inf, which `apply_weight` keeps at
+        // +inf — INACTIVE for free, like single-lane SSSP.
+        (self.distance.get(v), v)
+    }
+
+    #[inline]
+    fn init(&self, _v: VertexId) -> bool {
+        false
+    }
+
+    #[inline]
+    fn gather(&self, (d, p): (f32, u32), v: VertexId) -> bool {
+        if d < self.distance.get(v) {
+            self.distance.set(v, d);
+            self.parent.set(v, p);
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    fn filter(&self, _v: VertexId) -> bool {
+        true
+    }
+
+    #[inline]
+    fn apply_weight(&self, (d, p): (f32, u32), w: Weight) -> (f32, u32) {
+        (d + w, p)
+    }
+}
+
+/// Typed output: the distance array plus the shortest-path tree.
+pub struct SsspParentsOutput {
+    /// `dist[v]`, `+inf` if unreached.
+    pub distance: Vec<f32>,
+    /// `parent[v]` on a shortest path, [`NO_PARENT`] if unreached;
+    /// `parent[source] == source`.
+    pub parent: Vec<u32>,
+}
+
+impl SsspParentsOutput {
+    /// Reached vertices (finite distance).
+    pub fn n_reached(&self) -> usize {
+        self.distance.iter().filter(|d| d.is_finite()).count()
+    }
+
+    /// Walk the tree from `v` back to the source (`None` if unreached).
+    pub fn path_to(&self, v: VertexId) -> Option<Vec<VertexId>> {
+        if !self.distance[v as usize].is_finite() {
+            return None;
+        }
+        let mut path = vec![v];
+        let mut cur = v;
+        while self.parent[cur as usize] != cur {
+            cur = self.parent[cur as usize];
+            path.push(cur);
+            if path.len() > self.parent.len() {
+                return None; // defensive: malformed tree
+            }
+        }
+        path.reverse();
+        Some(path)
+    }
+}
+
+/// Validate a `(dist, parent)` pair as a shortest-path tree over `g`:
+/// `dist[source] == 0` and `parent[source] == source`; every other
+/// reached vertex has a real edge `parent[v] -> v` whose weight closes
+/// `dist[v] == dist[parent] + w` within `tol`; unreached vertices hold
+/// `+inf` / [`NO_PARENT`]. Returns the first violation as an error
+/// string — the single validator shared by the unit, integration and
+/// property suites (and usable by callers auditing query results).
+pub fn validate_tree(
+    g: &Graph,
+    source: crate::VertexId,
+    dist: &[f32],
+    parent: &[u32],
+    tol: f32,
+) -> Result<(), String> {
+    if dist[source as usize] != 0.0 {
+        return Err(format!("dist[source] = {} (expected 0)", dist[source as usize]));
+    }
+    if parent[source as usize] != source {
+        return Err(format!("parent[source] = {} != {source}", parent[source as usize]));
+    }
+    for v in 0..g.n() {
+        if v == source as usize {
+            continue;
+        }
+        if !dist[v].is_finite() {
+            if parent[v] != NO_PARENT {
+                return Err(format!("unreached v={v} has parent {}", parent[v]));
+            }
+            continue;
+        }
+        let p = parent[v];
+        if p == NO_PARENT {
+            return Err(format!("reached v={v} (dist {}) lacks a parent", dist[v]));
+        }
+        let adj = g.out().neighbors(p);
+        let wts = g.out().edge_weights(p).ok_or("validate_tree needs a weighted graph")?;
+        let mut edge_found = false;
+        let mut closes = false;
+        for (&u, &w) in adj.iter().zip(wts) {
+            if u as usize == v {
+                edge_found = true;
+                // Any parallel edge may be the tree edge.
+                if (dist[v] - (dist[p as usize] + w)).abs() <= tol {
+                    closes = true;
+                    break;
+                }
+            }
+        }
+        if !edge_found {
+            return Err(format!("parent edge {p}->{v} is not a real edge"));
+        }
+        if !closes {
+            return Err(format!(
+                "v={v}: no edge {p}->{v} closes dist {} = dist[{p}] {} + w",
+                dist[v],
+                dist[p as usize]
+            ));
+        }
+    }
+    Ok(())
+}
+
+impl Algorithm for SsspParents {
+    type Output = SsspParentsOutput;
+
+    fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
+        self.distance.set(self.source, 0.0);
+        self.parent.set(self.source, self.source);
+        FrontierInit::Seeds(vec![self.source])
+    }
+
+    fn finish(self) -> SsspParentsOutput {
+        SsspParentsOutput { distance: self.distance.to_vec(), parent: self.parent.to_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{EngineSession, Runner};
+    use crate::baselines::serial;
+    use crate::graph::gen;
+    use crate::ppm::{ModePolicy, PpmConfig};
+
+    /// Distances match Dijkstra; parents form a valid tree (real edges
+    /// closing the distance equation, per [`validate_tree`]).
+    fn check(g: &crate::graph::Graph, source: VertexId, config: PpmConfig) {
+        let reference = serial::sssp_dijkstra(g, source);
+        let session = EngineSession::new(g.clone(), config);
+        let report = Runner::on(&session).run(SsspParents::new(g.n(), source));
+        assert!(report.converged);
+        let out = &report.output;
+        for v in 0..g.n() {
+            if reference[v].is_finite() {
+                assert!(
+                    (out.distance[v] - reference[v]).abs() < 1e-3,
+                    "v={v}: {} vs {}",
+                    out.distance[v],
+                    reference[v]
+                );
+            } else {
+                assert!(out.distance[v].is_infinite());
+            }
+        }
+        validate_tree(g, source, &out.distance, &out.parent, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn sssp_parents_weighted_er_all_modes() {
+        let g = gen::with_uniform_weights(&gen::erdos_renyi(400, 3200, 21), 1.0, 10.0, 2);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            check(&g, 0, PpmConfig { threads: 4, mode, k: Some(8), ..Default::default() });
+        }
+    }
+
+    #[test]
+    fn sssp_parents_weighted_rmat() {
+        let g = gen::with_uniform_weights(&gen::rmat(9, Default::default(), true), 0.5, 4.0, 7);
+        check(&g, 1, PpmConfig { threads: 3, k: Some(12), ..Default::default() });
+    }
+
+    #[test]
+    fn distances_bit_identical_to_single_lane_sssp() {
+        // The parent lane must be a free rider: the distance lane's
+        // min-updates are order-independent, so the 2-lane program's
+        // distances agree bit-for-bit with the 1-lane Sssp on the same
+        // session.
+        use crate::apps::Sssp;
+        let g = gen::with_uniform_weights(&gen::rmat(9, Default::default(), true), 0.5, 4.0, 11);
+        let session = EngineSession::new(
+            g.clone(),
+            PpmConfig { threads: 2, k: Some(8), ..Default::default() },
+        );
+        let one = Runner::on(&session).run(Sssp::new(g.n(), 0));
+        let two = Runner::on(&session).run(SsspParents::new(g.n(), 0));
+        let one_bits: Vec<u32> = one.output.iter().map(|x| x.to_bits()).collect();
+        let two_bits: Vec<u32> = two.output.distance.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(two_bits, one_bits);
+    }
+
+    #[test]
+    fn path_to_walks_back_to_source() {
+        let g = gen::with_uniform_weights(&gen::chain(30), 2.0, 2.0 + 1e-6, 1);
+        let session = EngineSession::new(g, PpmConfig::default());
+        let report = Runner::on(&session).run(SsspParents::new(30, 0));
+        let path = report.output.path_to(29).expect("chain end reachable");
+        assert_eq!(path, (0..30).collect::<Vec<u32>>());
+        assert!(report.output.path_to(0).unwrap() == vec![0]);
+    }
+}

@@ -8,7 +8,7 @@
 //! trick), but unlike GPOP there is no active-list machinery: cost is
 //! flat regardless of frontier size.
 
-use crate::api::MsgValue;
+use crate::api::Lane;
 use crate::exec::ThreadPool;
 use crate::graph::Graph;
 use crate::util::bitset::Bitset;
@@ -16,7 +16,11 @@ use crate::VertexId;
 
 /// An edge-centric program: the X-Stream scatter/gather pair.
 pub trait EcProgram: Sync {
-    type Msg: MsgValue;
+    // These baselines reproduce fixed 4-byte-payload frameworks
+    // (X-Stream / GraphMat), so their message type stays a single
+    // [`Lane`]; GPOP's multi-lane [`Payload`](crate::api::Payload)
+    // plane is a PPM capability, not a baseline one.
+    type Msg: Lane;
     /// Is `v` active this iteration (checked per edge!)?
     fn is_active(&self, v: VertexId) -> bool;
     /// Value scattered along an active edge.
@@ -102,7 +106,7 @@ impl EcEngine {
             for e in offsets[pi]..offsets[pi + 1] {
                 let (s, d, w) = edges[e];
                 if prog.is_active(s) {
-                    buf.push((d, prog.scatter(s, w).to_bits()));
+                    buf.push((d, prog.scatter(s, w).to_lane()));
                 }
             }
             *updates[pi].lock().unwrap() = buf;
@@ -114,7 +118,7 @@ impl EcEngine {
         self.pool.for_each_dynamic(parts, 1, |pi, _tid| {
             let mut activated = Vec::new();
             for &(d, bits) in updates[pi].lock().unwrap().iter() {
-                if prog.gather(P::Msg::from_bits(bits), d) {
+                if prog.gather(P::Msg::from_lane(bits), d) {
                     activated.push(d);
                 }
             }

@@ -157,6 +157,76 @@ pub fn sssp_dijkstra(g: &Graph, source: VertexId) -> Vec<f32> {
     dist
 }
 
+/// Dijkstra with parent recovery (ground truth for one-pass
+/// SSSP-with-parents: distances must agree; parents may differ between
+/// equally-short trees but must satisfy `dist[v] = dist[parent] + w`).
+pub fn sssp_dijkstra_parents(g: &Graph, source: VertexId) -> (Vec<f32>, Vec<u32>) {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let n = g.n();
+    let mut dist = vec![f32::INFINITY; n];
+    let mut parent = vec![u32::MAX; n];
+    dist[source as usize] = 0.0;
+    parent[source as usize] = source;
+    let mut heap = BinaryHeap::new();
+    heap.push(Reverse((0u32, source)));
+    while let Some(Reverse((dbits, v))) = heap.pop() {
+        let dv = f32::from_bits(dbits);
+        if dv > dist[v as usize] {
+            continue;
+        }
+        let ws = g.out().edge_weights(v);
+        for (k, &u) in g.out().neighbors(v).iter().enumerate() {
+            let w = ws.map_or(1.0, |ws| ws[k]);
+            let cand = dv + w;
+            if cand < dist[u as usize] {
+                dist[u as usize] = cand;
+                parent[u as usize] = v;
+                heap.push(Reverse((cand.to_bits(), u)));
+            }
+        }
+    }
+    (dist, parent)
+}
+
+/// k-core decomposition by textbook iterative peeling: at level `k`,
+/// repeatedly remove every vertex with remaining degree `< k` (it gets
+/// `core = k - 1`, its still-present neighbors lose one degree per
+/// edge); when level `k` removes nothing, advance. Degrees are
+/// out-degrees with edge multiplicity — symmetrize the graph for the
+/// undirected notion, exactly like the parallel
+/// [`KCore`](crate::apps::KCore).
+pub fn kcore(g: &Graph) -> Vec<u32> {
+    let n = g.n();
+    let mut deg: Vec<u32> = (0..n).map(|v| g.out_degree(v as VertexId) as u32).collect();
+    let mut core = vec![0u32; n];
+    let mut removed = vec![false; n];
+    let mut remaining = n;
+    let mut k = 1u32;
+    while remaining > 0 {
+        let peel: Vec<usize> =
+            (0..n).filter(|&v| !removed[v] && deg[v] < k).collect();
+        if peel.is_empty() {
+            k += 1;
+            continue;
+        }
+        for v in peel {
+            removed[v] = true;
+            core[v] = k - 1;
+            remaining -= 1;
+            for &u in g.out().neighbors(v as VertexId) {
+                if !removed[u as usize] {
+                    // Saturating like the engine's gather: on directed
+                    // inputs an in-edge removal can outrun the victim's
+                    // own out-degree budget.
+                    deg[u as usize] = deg[u as usize].saturating_sub(1);
+                }
+            }
+        }
+    }
+    core
+}
+
 /// Serial Nibble (paper §5, Alg. 3/4 semantics): seeded random-walk
 /// probability diffusion with threshold `eps`, replicating GPOP's exact
 /// phase order: snapshot scatter values → halve → accumulate → filter.
@@ -288,6 +358,45 @@ mod tests {
                 assert!(bf[v].is_infinite());
             }
         }
+    }
+
+    #[test]
+    fn dijkstra_parents_close_distance_equation() {
+        let g = gen::with_uniform_weights(&gen::erdos_renyi(300, 3000, 9), 1.0, 10.0, 4);
+        let (dist, parent) = sssp_dijkstra_parents(&g, 0);
+        assert_eq!(dist, sssp_dijkstra(&g, 0), "parents must not perturb distances");
+        // Same structural validator the parallel SsspParents suite uses.
+        crate::apps::sssp_parents::validate_tree(&g, 0, &dist, &parent, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn kcore_clique_plus_tail() {
+        // 4-clique with a pendant path: cores [3,3,3,3,1,1].
+        let mut b = crate::graph::GraphBuilder::new().with_n(6).symmetrize();
+        for i in 0..4u32 {
+            for j in (i + 1)..4 {
+                b.add(i, j);
+            }
+        }
+        b.add(3, 4).add(4, 5);
+        let g = b.build();
+        assert_eq!(kcore(&g), vec![3, 3, 3, 3, 1, 1]);
+    }
+
+    #[test]
+    fn kcore_cycle_is_two_core() {
+        let mut b = crate::graph::GraphBuilder::new().with_n(5).symmetrize();
+        for v in 0..5u32 {
+            b.add(v, (v + 1) % 5);
+        }
+        let g = b.build();
+        assert_eq!(kcore(&g), vec![2; 5]);
+    }
+
+    #[test]
+    fn kcore_isolated_is_zero() {
+        let g = graph_from_edges(3, &[(0, 1), (1, 0)]);
+        assert_eq!(kcore(&g), vec![1, 1, 0]);
     }
 
     #[test]

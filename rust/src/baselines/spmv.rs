@@ -8,7 +8,7 @@
 //! thread-count-sized destination buckets that can exceed cache (the
 //! Azad/Buluç contrast in §7).
 
-use crate::api::MsgValue;
+use crate::api::Lane;
 use crate::exec::ThreadPool;
 use crate::graph::Graph;
 use crate::util::bitset::Bitset;
@@ -19,7 +19,7 @@ use crate::VertexId;
 /// `apply` commits the accumulator and reports whether the vertex
 /// becomes active.
 pub trait SpmvProgram: Sync {
-    type Msg: MsgValue;
+    type Msg: Lane;
     fn send(&self, v: VertexId) -> Self::Msg;
     fn edge_value(&self, val: Self::Msg, weight: f32) -> Self::Msg {
         let _ = weight;
@@ -101,7 +101,7 @@ impl SpmvEngine {
                         Some(ws) => prog.edge_value(val, ws[k]),
                         None => val,
                     };
-                    local[u as usize / per].push((u, mv.to_bits()));
+                    local[u as usize / per].push((u, mv.to_lane()));
                 }
             }
             for (dst_t, msgs) in local.into_iter().enumerate() {
@@ -121,7 +121,7 @@ impl SpmvEngine {
                 let msgs = buckets[src_t * t + tid].lock().unwrap();
                 for &(dst, bits) in msgs.iter() {
                     count += 1;
-                    if prog.process(P::Msg::from_bits(bits), dst) {
+                    if prog.process(P::Msg::from_lane(bits), dst) {
                         activated.push(dst);
                     }
                 }

@@ -203,7 +203,7 @@ fn gpop_trace(t: &mut Tracer, g: &Graph, history: &[Vec<VertexId>], config: Cach
             }
             let ea: u64 = by_part[p].iter().map(|&v| g.out_degree(v) as u64).sum();
             let cost = PartCost { edges: edges_of[p], msgs: msgs_of[p], k };
-            let dc = !force_sc && cost.choose_dc(ea, 2.0);
+            let dc = !force_sc && cost.choose_dc(ea, 2.0, crate::ppm::cost::D_V);
             if dc {
                 // Stream PNG sources + write one value per message.
                 for v in parts.range(p as u32) {

@@ -150,6 +150,39 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
             let reached = res.output.iter().filter(|d| d.is_finite()).count();
             println!("reached: {} vertices", fmt::si(reached as f64));
         }
+        "ssspp" | "sssp-parents" => {
+            if !graph.is_weighted() {
+                return Err(CliError(
+                    "sssp-parents needs a weighted graph; add '+w:1:4' to the spec".into(),
+                ));
+            }
+            let res = runner.run(apps::SsspParents::new(graph.n(), root));
+            print_report(&res, verbose);
+            println!(
+                "reached: {} vertices; (dist, parent) recovered in ONE pass \
+                 (2-lane messages)",
+                fmt::si(res.output.n_reached() as f64)
+            );
+            if verbose {
+                if let Some(path) = (0..graph.n() as u32)
+                    .rev()
+                    .find_map(|v| res.output.path_to(v).filter(|p| p.len() > 1))
+                {
+                    println!("  sample shortest path: {path:?}");
+                }
+            }
+        }
+        "kcore" => {
+            let res = runner.run(apps::KCore::new(&graph));
+            print_report(&res, verbose);
+            let kmax = res.output.iter().max().copied().unwrap_or(0);
+            let in_top = res.output.iter().filter(|&&c| c == kmax).count();
+            println!(
+                "degeneracy (max core): {kmax} — {} vertices in the {kmax}-core \
+                 (degree-based; symmetrize the graph for the undirected notion)",
+                fmt::si(in_top as f64)
+            );
+        }
         "nibble" => {
             let res = runner
                 .until(Convergence::FrontierEmpty.or_max_iters(iters.max(100)))
@@ -305,18 +338,22 @@ mod tests {
 
     #[test]
     fn run_all_apps_smoke() {
-        for app in ["pr", "cc", "nibble", "prnibble", "heatkernel"] {
+        for app in ["pr", "cc", "kcore", "nibble", "prnibble", "heatkernel"] {
             let a = args(&["--app", app, "--graph", "grid:8:8", "--threads", "2", "--iters", "3"]);
             assert_eq!(cmd_run(&a).unwrap(), 0, "app {app}");
         }
-        let a = args(&["--app", "sssp", "--graph", "grid:8:8+w:1:2", "--threads", "2"]);
-        assert_eq!(cmd_run(&a).unwrap(), 0);
+        for app in ["sssp", "ssspp", "sssp-parents"] {
+            let a = args(&["--app", app, "--graph", "grid:8:8+w:1:2", "--threads", "2"]);
+            assert_eq!(cmd_run(&a).unwrap(), 0, "app {app}");
+        }
     }
 
     #[test]
     fn run_sssp_unweighted_rejected() {
-        let a = args(&["--app", "sssp", "--graph", "chain:10"]);
-        assert!(cmd_run(&a).is_err());
+        for app in ["sssp", "ssspp"] {
+            let a = args(&["--app", app, "--graph", "chain:10"]);
+            assert!(cmd_run(&a).is_err(), "app {app}");
+        }
     }
 
     #[test]

@@ -14,7 +14,9 @@ USAGE: gpop <command> [options]
 
 COMMANDS:
   run        Run an application on a graph through the PPM engine
-             --app bfs|pr|cc|sssp|nibble|prnibble|heatkernel
+             --app bfs|pr|cc|sssp|ssspp|kcore|nibble|prnibble|heatkernel
+             (ssspp = one-pass SSSP with parents, needs weights;
+              kcore = k-core decomposition by peeling)
              --graph SPEC [--threads N] [--mode hybrid|sc|dc]
              [--iters N] [--root V] [--seeds a,b,c] [--eps X]
              [--bw-ratio X] [--k N] [--verbose]

@@ -110,6 +110,20 @@ pub fn grid(rows: usize, cols: usize) -> Graph {
     b.build()
 }
 
+/// Symmetrized copy of a graph: every edge gets its mirror (weights
+/// dropped — the symmetric workloads are structural: connected
+/// components, k-core). Multiplicities are kept, like the generators.
+pub fn symmetrized(g: &Graph) -> Graph {
+    let csr = g.out();
+    let mut b = GraphBuilder::new().with_n(g.n()).symmetrize();
+    for v in 0..g.n() as VertexId {
+        for &u in csr.neighbors(v) {
+            b.add(v, u);
+        }
+    }
+    b.build()
+}
+
 /// Assign uniform random weights in `[lo, hi)` to an unweighted graph
 /// (for SSSP workloads), deterministically from `seed`.
 pub fn with_uniform_weights(g: &Graph, lo: f32, hi: f32, seed: u64) -> Graph {
@@ -127,6 +141,20 @@ pub fn with_uniform_weights(g: &Graph, lo: f32, hi: f32, seed: u64) -> Graph {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn symmetrized_mirrors_every_edge() {
+        let g = rmat(7, RmatParams::default(), false);
+        let s = symmetrized(&g);
+        assert_eq!(s.m(), 2 * g.m(), "every edge gains a mirror");
+        for v in 0..g.n() as VertexId {
+            for &u in g.out().neighbors(v) {
+                assert!(s.out().neighbors(u).contains(&v), "missing mirror {u}->{v}");
+                assert!(s.out().neighbors(v).contains(&u), "missing original {v}->{u}");
+            }
+        }
+        assert!(!s.is_weighted());
+    }
 
     #[test]
     fn rmat_shape() {

@@ -50,8 +50,10 @@
 //!   plus the `Algorithm`/`EngineSession`/`Runner`/`Convergence`
 //!   serving layer.
 //! - [`apps`] — BFS, PageRank, Connected Components (sync + async
-//!   label propagation), SSSP (Bellman-Ford), Nibble, PageRank-Nibble,
-//!   Heat-Kernel — all expressed as `Algorithm`s.
+//!   label propagation), SSSP (Bellman-Ford), one-pass
+//!   SSSP-with-parents (2-lane `(f32, u32)` messages), k-core
+//!   decomposition, Nibble, PageRank-Nibble, Heat-Kernel — all
+//!   expressed as `Algorithm`s.
 //! - [`baselines`] — serial references plus Ligra-like (vertex-centric
 //!   push/pull/direction-optimizing), GraphMat-like (SpMV) and
 //!   X-Stream-like (edge-centric) engines.

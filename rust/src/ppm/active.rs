@@ -27,9 +27,12 @@ pub struct PartFrontier {
     pub pushed: Vec<VertexId>,
     /// Partition-local dedup guard over `pushed` (size `q`).
     pub dedup: Bitset,
-    /// DC-mode scratch: per-local-vertex scattered value bits, computed
-    /// once per partition scatter instead of once per neighbor bin
-    /// (EXPERIMENTS.md §Perf #2). Owner-exclusive like everything else.
+    /// DC-mode scratch: per-local-vertex scattered value lanes
+    /// (`Msg::LANES` u32 words per vertex), computed once per partition
+    /// scatter instead of once per neighbor bin (EXPERIMENTS.md §Perf
+    /// #2). Sized for 1-lane payloads up front; wider programs grow it
+    /// once via [`ensure_scratch`](Self::ensure_scratch).
+    /// Owner-exclusive like everything else.
     pub scratch: Vec<u32>,
 }
 
@@ -49,6 +52,15 @@ impl PartFrontier {
     pub fn push_next(&mut self, v: VertexId, local: usize) {
         if self.dedup.set_checked(local) {
             self.pushed.push(v);
+        }
+    }
+
+    /// Grow the DC scratch to at least `lanes` u32 words (no-op once a
+    /// payload width has been seen; amortized across the run).
+    #[inline]
+    pub fn ensure_scratch(&mut self, lanes: usize) {
+        if self.scratch.len() < lanes {
+            self.scratch.resize(lanes, 0);
         }
     }
 }
@@ -215,6 +227,25 @@ impl ActiveState {
         }
         self.publish();
     }
+
+    /// Activate every vertex, seeding each partition's frontier straight
+    /// from its contiguous vertex range — `O(n)` writes into the
+    /// per-partition lists, with no n-element staging `Vec`, no
+    /// `part_of` lookups and no dedup passes (the range is duplicate-free
+    /// by construction). Produces exactly the state
+    /// [`load`](Self::load) would for `0..n`.
+    pub fn load_all(&mut self, parts: &Partitioner, degree_of: impl Fn(VertexId) -> u64) {
+        for p in 0..self.parts.len() {
+            let pf = self.parts.get_mut_safe(p);
+            pf.pushed.clear();
+            pf.dedup.clear_all();
+            pf.cur.clear();
+            let range = parts.range(p as PartId);
+            pf.cur.extend(range.clone());
+            pf.cur_edges = range.map(°ree_of).sum();
+        }
+        self.publish();
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +265,36 @@ mod tests {
         assert_eq!(st.spart(), &[0, 1, 3]);
         assert_eq!(st.total_active_edges(), 0 + 5 + 12 + 39);
         assert_eq!(st.part_ref(0).cur, vec![0, 5]);
+    }
+
+    #[test]
+    fn load_all_matches_explicit_load() {
+        let parts = parts4();
+        let mut a = ActiveState::new(&parts);
+        let all: Vec<VertexId> = (0..40).collect();
+        a.load(&parts, &all, |v| v as u64);
+        let mut b = ActiveState::new(&parts);
+        b.load_all(&parts, |v| v as u64);
+        assert_eq!(b.total_active(), a.total_active());
+        assert_eq!(b.total_active_edges(), a.total_active_edges());
+        assert_eq!(b.spart(), a.spart());
+        for p in 0..4 {
+            assert_eq!(b.part_ref(p).cur, a.part_ref(p).cur, "partition {p}");
+            assert_eq!(b.part_ref(p).cur_edges, a.part_ref(p).cur_edges);
+            assert!(b.part_ref(p).pushed.is_empty());
+        }
+    }
+
+    #[test]
+    fn ensure_scratch_grows_monotonically() {
+        let parts = parts4();
+        let mut st = ActiveState::new(&parts);
+        let pf = st.part_ref(0);
+        let q = pf.scratch.len();
+        pf.ensure_scratch(2 * q);
+        assert_eq!(pf.scratch.len(), 2 * q);
+        pf.ensure_scratch(q); // narrower payload later: no shrink
+        assert_eq!(pf.scratch.len(), 2 * q);
     }
 
     #[test]

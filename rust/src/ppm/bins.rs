@@ -15,10 +15,13 @@
 //!
 //! `bin[i][j]` stores all messages from partition `i` to partition `j`:
 //!
-//! - `data` — message values (bit-cast to `u32`; the paper's `d_v = 4`).
+//! - `data` — message values, each occupying `Msg::LANES` consecutive
+//!   u32 lanes (the paper's `d_v = 4` is the 1-lane case; 2-lane
+//!   payloads like `(f32, u32)` or `f64` take two words per message).
 //! - `ids` — SC-mode destination ids. Messages are delimited by setting
 //!   the MSB on the *first* destination id of each message, so a message
-//!   costs `d_v + |dsts| * d_i` bytes, exactly the paper's accounting.
+//!   costs `d_v + |dsts| * d_i` bytes with `d_v = 4 * LANES`, exactly
+//!   the paper's accounting generalized to wider payloads.
 //! - `dc_ids` — the same destination stream *pre-written* during
 //!   pre-processing, so DC-mode scatter writes only values (§3.3:
 //!   "messages from a partition in DC mode contain only vertex data and
@@ -35,6 +38,7 @@ use std::cell::Cell;
 use std::sync::Arc;
 
 use super::shared::SharedCells;
+use crate::api::Payload;
 use crate::graph::Graph;
 use crate::partition::Partitioner;
 use crate::{PartId, VertexId};
@@ -43,6 +47,36 @@ use crate::{PartId, VertexId};
 pub const MSG_START: u32 = 1 << 31;
 /// Mask recovering the vertex id.
 pub const ID_MASK: u32 = !MSG_START;
+
+/// Append one message payload to a lane stream (`LANES` u32 words;
+/// the high-word push is compiled out for 1-lane payloads).
+#[inline(always)]
+pub fn push_msg<M: Payload>(data: &mut Vec<u32>, m: M) {
+    let bits = m.to_bits64();
+    data.push(bits as u32);
+    if M::LANES == 2 {
+        data.push((bits >> 32) as u32);
+    }
+}
+
+/// Write one message payload at lane offset `idx` of a scratch buffer.
+#[inline(always)]
+pub fn write_msg<M: Payload>(buf: &mut [u32], idx: usize, m: M) {
+    let bits = m.to_bits64();
+    buf[idx] = bits as u32;
+    if M::LANES == 2 {
+        buf[idx + 1] = (bits >> 32) as u32;
+    }
+}
+
+/// Read one message payload at lane offset `idx` (bounds-checked twin
+/// of the engine's unchecked hot-loop read).
+#[inline(always)]
+pub fn read_msg<M: Payload>(data: &[u32], idx: usize) -> M {
+    let lo = data[idx] as u64;
+    let bits = if M::LANES == 2 { lo | (data[idx + 1] as u64) << 32 } else { lo };
+    M::from_bits64(bits)
+}
 
 thread_local! {
     /// Per-thread count of `O(E)` layout builds — the "partition build
@@ -89,7 +123,8 @@ pub struct StaticBin {
 
 /// The mutable, per-iteration half of one bin.
 pub struct Bin {
-    /// Message values written this iteration (bit-cast user values).
+    /// Message values written this iteration: `Msg::LANES` u32 lanes
+    /// per message (lane 0 first).
     pub data: Vec<u32>,
     /// SC-mode destination id stream (MSB-delimited).
     pub ids: Vec<u32>,
@@ -113,45 +148,58 @@ impl Bin {
         self.registered = false;
     }
 
-    /// Iterate `(value_bits, dst)` message pairs for the mode this bin
-    /// was last scattered with. `stat` must be the matching static half
+    /// Iterate `(value, dst)` message pairs for the mode this bin was
+    /// last scattered with, decoded as payload type `M` (the type the
+    /// bin was written with). `stat` must be the matching static half
     /// (it supplies the DC id stream); `weighted` selects the flat
     /// layout.
-    pub fn messages<'a>(&'a self, stat: &'a StaticBin, weighted: bool) -> MessageIter<'a> {
+    pub fn messages<'a, M: Payload>(
+        &'a self,
+        stat: &'a StaticBin,
+        weighted: bool,
+    ) -> MessageIter<'a, M> {
         let ids: &[u32] = match self.mode {
             Mode::Sc => &self.ids,
             Mode::Dc => &stat.dc_ids,
         };
-        MessageIter { data: &self.data, ids, weighted, cursor: 0, data_cursor: usize::MAX }
+        MessageIter {
+            data: &self.data,
+            ids,
+            weighted,
+            cursor: 0,
+            data_cursor: 0usize.wrapping_sub(M::LANES),
+            _marker: std::marker::PhantomData,
+        }
     }
 }
 
-/// Iterator over `(value_bits, dst)` pairs of one bin.
-pub struct MessageIter<'a> {
+/// Iterator over `(value, dst)` pairs of one bin.
+pub struct MessageIter<'a, M: Payload> {
     data: &'a [u32],
     ids: &'a [u32],
     weighted: bool,
     cursor: usize,
-    data_cursor: usize, // usize::MAX until first MSG_START seen
+    data_cursor: usize, // 0 - LANES until the first MSG_START seen
+    _marker: std::marker::PhantomData<M>,
 }
 
-impl<'a> Iterator for MessageIter<'a> {
-    type Item = (u32, VertexId);
+impl<'a, M: Payload> Iterator for MessageIter<'a, M> {
+    type Item = (M, VertexId);
 
     #[inline]
-    fn next(&mut self) -> Option<(u32, VertexId)> {
+    fn next(&mut self) -> Option<(M, VertexId)> {
         if self.cursor >= self.ids.len() {
             return None;
         }
         let raw = self.ids[self.cursor];
         let val = if self.weighted {
             // Flat layout: one value per id.
-            self.data[self.cursor]
+            read_msg::<M>(self.data, self.cursor * M::LANES)
         } else {
             if raw & MSG_START != 0 {
-                self.data_cursor = self.data_cursor.wrapping_add(1);
+                self.data_cursor = self.data_cursor.wrapping_add(M::LANES);
             }
-            self.data[self.data_cursor]
+            read_msg::<M>(self.data, self.data_cursor)
         };
         self.cursor += 1;
         Some((val, raw & ID_MASK))
@@ -285,6 +333,12 @@ impl BinGrid {
     /// Allocate the mutable scratch for a prebuilt layout. `O(k²)`
     /// allocations with exact capacity reservation — no graph scan, so
     /// this is what a session checkout pays instead of `O(E)`.
+    ///
+    /// Capacity is reserved for the 1-lane payload layout (the common
+    /// case and the paper's `d_v = 4`); a 2-lane program doubles the
+    /// value stream and pays one amortized `Vec` growth on its first
+    /// iteration, after which `clear()` keeps the capacity and the hot
+    /// path is allocation-free again.
     pub fn from_layout(layout: Arc<BinLayout>) -> Self {
         let k = layout.k;
         let weighted = layout.weighted;
@@ -429,8 +483,46 @@ mod tests {
         bin.data = vec![100, 200];
         bin.ids = vec![5 | MSG_START, 6, 7 | MSG_START];
         let stat = StaticBin::default();
-        let msgs: Vec<(u32, u32)> = bin.messages(&stat, false).collect();
+        let msgs: Vec<(u32, u32)> = bin.messages::<u32>(&stat, false).collect();
         assert_eq!(msgs, vec![(100, 5), (100, 6), (200, 7)]);
+    }
+
+    #[test]
+    fn message_iter_two_lane_payloads() {
+        // Two MSB-delimited messages of a 2-lane payload: data holds
+        // LANES words per message (lane 0 low, lane 1 high).
+        let mut bin = Bin::empty();
+        bin.mode = Mode::Sc;
+        push_msg(&mut bin.data, (1.5f32, 9u32));
+        push_msg(&mut bin.data, (2.5f32, 11u32));
+        bin.ids = vec![5 | MSG_START, 6, 7 | MSG_START];
+        let stat = StaticBin::default();
+        let msgs: Vec<((f32, u32), u32)> = bin.messages::<(f32, u32)>(&stat, false).collect();
+        assert_eq!(msgs, vec![((1.5, 9), 5), ((1.5, 9), 6), ((2.5, 11), 7)]);
+    }
+
+    #[test]
+    fn message_iter_two_lane_weighted_flat() {
+        let mut bin = Bin::empty();
+        bin.mode = Mode::Sc;
+        for m in [(10u32, 1u32), (20, 2), (30, 3)] {
+            push_msg(&mut bin.data, m);
+        }
+        bin.ids = vec![4, 5, 6];
+        let stat = StaticBin::default();
+        let msgs: Vec<((u32, u32), u32)> = bin.messages::<(u32, u32)>(&stat, true).collect();
+        assert_eq!(msgs, vec![((10, 1), 4), ((20, 2), 5), ((30, 3), 6)]);
+    }
+
+    #[test]
+    fn lane_helpers_roundtrip_at_offsets() {
+        let mut buf = vec![0u32; 6];
+        write_msg(&mut buf, 0, (1.25f32, 7u32));
+        write_msg(&mut buf, 2, 42u32);
+        write_msg(&mut buf, 4, -2.5f64);
+        assert_eq!(read_msg::<(f32, u32)>(&buf, 0), (1.25, 7));
+        assert_eq!(read_msg::<u32>(&buf, 2), 42);
+        assert_eq!(read_msg::<f64>(&buf, 4), -2.5);
     }
 
     #[test]
@@ -440,7 +532,7 @@ mod tests {
         bin.data = vec![10, 20, 30];
         bin.ids = vec![1, 2, 3];
         let stat = StaticBin::default();
-        let msgs: Vec<(u32, u32)> = bin.messages(&stat, true).collect();
+        let msgs: Vec<(u32, u32)> = bin.messages::<u32>(&stat, true).collect();
         assert_eq!(msgs, vec![(10, 1), (20, 2), (30, 3)]);
     }
 
@@ -452,7 +544,7 @@ mod tests {
         let mut b = Bin::empty();
         b.data = vec![11, 22]; // one value per source (0 and 1)
         b.mode = Mode::Dc;
-        let msgs: Vec<(u32, u32)> = b.messages(stat, false).collect();
+        let msgs: Vec<(u32, u32)> = b.messages::<u32>(stat, false).collect();
         assert_eq!(msgs, vec![(11, 2), (22, 2), (22, 3)]);
     }
 

@@ -9,11 +9,16 @@
 //! DC volume = `E^p ((r+1) d_i + 2 r d_v) + k d_i`
 //!
 //! with `r` = messages per out-edge of `p` (pre-computed), `E_a^p` the
-//! active edges and `d_i = d_v = 4` bytes.
+//! active edges and `d_i = 4` bytes. The paper fixes `d_v = 4`; here
+//! `d_v` is a parameter (`4 * Msg::LANES` bytes), so wider payloads
+//! shift the Eq. 1 crossover in favor of SC exactly as the volume
+//! formulas predict — for 1-lane programs the decisions are
+//! byte-identical to the paper's.
 
 /// Index size in bytes (paper: 4).
 pub const D_I: f64 = 4.0;
-/// Vertex-data size in bytes (paper: 4 for all evaluated algorithms).
+/// Vertex-data size in bytes for a 1-lane payload (the paper's fixed
+/// `d_v = 4`; multi-lane programs pass `4 * LANES` instead).
 pub const D_V: f64 = 4.0;
 
 /// Mode-selection policy.
@@ -60,23 +65,25 @@ impl PartCost {
         }
     }
 
-    /// Predicted SC communication volume (bytes) for `active_edges`.
-    pub fn sc_volume(&self, active_edges: u64) -> f64 {
+    /// Predicted SC communication volume (bytes) for `active_edges`,
+    /// with message payloads of `d_v` bytes.
+    pub fn sc_volume(&self, active_edges: u64, d_v: f64) -> f64 {
         let ea = active_edges as f64;
-        2.0 * self.r() * ea * D_V + 3.0 * ea * D_I
+        2.0 * self.r() * ea * d_v + 3.0 * ea * D_I
     }
 
-    /// Predicted DC communication volume (bytes).
-    pub fn dc_volume(&self) -> f64 {
+    /// Predicted DC communication volume (bytes) with message payloads
+    /// of `d_v` bytes.
+    pub fn dc_volume(&self, d_v: f64) -> f64 {
         let e = self.edges as f64;
         let r = self.r();
-        e * ((r + 1.0) * D_I + 2.0 * r * D_V) + self.k as f64 * D_I
+        e * ((r + 1.0) * D_I + 2.0 * r * d_v) + self.k as f64 * D_I
     }
 
     /// Eq. 1: scatter in DC mode iff `dc_volume / BW_DC <= sc_volume /
     /// BW_SC`, i.e. `dc_volume <= bw_ratio * sc_volume`.
-    pub fn choose_dc(&self, active_edges: u64, bw_ratio: f64) -> bool {
-        self.dc_volume() <= bw_ratio * self.sc_volume(active_edges)
+    pub fn choose_dc(&self, active_edges: u64, bw_ratio: f64, d_v: f64) -> bool {
+        self.dc_volume(d_v) <= bw_ratio * self.sc_volume(active_edges, d_v)
     }
 }
 
@@ -100,15 +107,15 @@ mod tests {
     fn volumes_match_formulas() {
         let p = part();
         // SC with 100 active edges: 2*0.4*100*4 + 3*100*4 = 320 + 1200.
-        assert!((p.sc_volume(100) - 1520.0).abs() < 1e-9);
+        assert!((p.sc_volume(100, D_V) - 1520.0).abs() < 1e-9);
         // DC: 10000*((1.4)*4 + 2*0.4*4) + 64*4 = 10000*8.8 + 256.
-        assert!((p.dc_volume() - 88256.0).abs() < 1e-9);
+        assert!((p.dc_volume(D_V) - 88256.0).abs() < 1e-9);
     }
 
     #[test]
     fn sparse_frontier_prefers_sc() {
         let p = part();
-        assert!(!p.choose_dc(10, 2.0));
+        assert!(!p.choose_dc(10, 2.0, D_V));
     }
 
     #[test]
@@ -116,7 +123,7 @@ mod tests {
         let p = part();
         // Fully active: SC volume = 2*0.4*10000*4 + 3*10000*4 = 152_000;
         // DC = 88_256 <= 2 * 152_000.
-        assert!(p.choose_dc(10_000, 2.0));
+        assert!(p.choose_dc(10_000, 2.0, D_V));
     }
 
     #[test]
@@ -124,7 +131,7 @@ mod tests {
         let p = part();
         let mut prev = false;
         for ea in (0..=10_000).step_by(100) {
-            let dc = p.choose_dc(ea, 2.0);
+            let dc = p.choose_dc(ea, 2.0, D_V);
             // Once DC becomes preferable it stays preferable as E_a grows.
             assert!(!prev || dc, "DC choice regressed at E_a = {ea}");
             prev = dc;
@@ -136,9 +143,21 @@ mod tests {
         let p = part();
         // Find crossover for ratio 2 and ratio 1.
         let cross = |ratio: f64| {
-            (0..=10_000u64).find(|&ea| p.choose_dc(ea, ratio)).unwrap_or(u64::MAX)
+            (0..=10_000u64).find(|&ea| p.choose_dc(ea, ratio, D_V)).unwrap_or(u64::MAX)
         };
         assert!(cross(1.0) > cross(2.0), "higher DC bandwidth should favor DC earlier");
+    }
+
+    #[test]
+    fn wider_payloads_shift_crossover_toward_sc() {
+        // Doubling d_v (a 2-lane payload) inflates DC volume (all E^p
+        // values rewritten) faster than SC volume (only active
+        // messages), so DC should become attractive later.
+        let p = part();
+        let cross = |d_v: f64| {
+            (0..=10_000u64).find(|&ea| p.choose_dc(ea, 2.0, d_v)).unwrap_or(u64::MAX)
+        };
+        assert!(cross(8.0) >= cross(4.0), "2-lane crossover must not move toward DC");
     }
 
     #[test]

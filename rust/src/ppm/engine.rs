@@ -6,9 +6,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::active::ActiveState;
-use super::bins::{BinGrid, BinLayout, Mode, StaticBin};
+use super::bins::{push_msg, write_msg, BinGrid, BinLayout, Mode, StaticBin};
 use super::cost::{ModePolicy, PartCost};
-use crate::api::{MsgValue, Program};
+use crate::api::{Payload, Program};
 use crate::exec::ThreadPool;
 use crate::graph::Graph;
 use crate::partition::{Partitioner, DEFAULT_BYTES_PER_VERTEX, DEFAULT_CACHE_BYTES};
@@ -78,6 +78,11 @@ pub struct IterStats {
     pub dc_parts: usize,
     /// Messages delivered (gather-side message count).
     pub messages: u64,
+    /// Bytes streamed through the bins on the gather side (destination
+    /// ids plus value lanes), lane-count-aware: a 2-lane program moves
+    /// twice the value bytes of a 1-lane program for the same message
+    /// count.
+    pub msg_bytes: u64,
     /// Active vertices after finalize.
     pub next_frontier: usize,
     pub t_scatter: f64,
@@ -199,10 +204,18 @@ impl Engine {
     }
 
     /// Snapshot of the current frontier (sorted by partition).
-    pub fn frontier(&mut self) -> Vec<VertexId> {
+    ///
+    /// Takes `&self`: this only reads the per-partition `cur` lists,
+    /// and the engine's parallel phases run exclusively inside
+    /// [`iterate`](Self::iterate)`(&mut self)`, so holding a shared
+    /// borrow of the engine proves no worker is mutating the frontier.
+    pub fn frontier(&self) -> Vec<VertexId> {
         let mut out = Vec::with_capacity(self.active.total_active());
         for p in 0..self.parts.k() {
-            out.extend_from_slice(&self.active.part_ref(p as PartId).cur);
+            // SAFETY: no parallel phase is running (they require `&mut
+            // self`), so a shared read of each partition's frontier
+            // cannot race.
+            out.extend_from_slice(&unsafe { self.active.part(p as PartId) }.cur);
         }
         out
     }
@@ -215,9 +228,13 @@ impl Engine {
     }
 
     /// Activate every vertex (PageRank / Label Propagation start).
+    /// Seeds each partition's frontier directly from its vertex range —
+    /// no n-element id `Vec` is materialized, no per-vertex partition
+    /// lookups or dedup passes run.
     pub fn load_all_active(&mut self) {
-        let all: Vec<VertexId> = (0..self.graph.n() as VertexId).collect();
-        self.load_frontier(&all);
+        self.iter = 0;
+        let graph = &self.graph;
+        self.active.load_all(&self.parts, |v| graph.out_degree(v) as u64);
     }
 
     /// Run one Scatter → Gather → Finalize iteration.
@@ -235,6 +252,9 @@ impl Engine {
         let t0 = Instant::now();
         let sc_count = AtomicU64::new(0);
         let dc_count = AtomicU64::new(0);
+        // Eq. 1's d_v follows the program's payload width (4 bytes per
+        // lane); for 1-lane programs this is the paper's constant 4.
+        let d_v = (P::Msg::LANES * 4) as f64;
         {
             let Engine { graph, parts, grid, active, pool, config, costs, .. } = self;
             let graph: &Graph = &**graph;
@@ -255,7 +275,7 @@ impl Engine {
                         ModePolicy::ForceSc => false,
                         ModePolicy::ForceDc => true,
                         ModePolicy::Hybrid => {
-                            costs[p as usize].choose_dc(cur_edges, config.bw_ratio)
+                            costs[p as usize].choose_dc(cur_edges, config.bw_ratio, d_v)
                         }
                     };
                     if use_dc {
@@ -288,6 +308,7 @@ impl Engine {
         // ---------------- Gather ----------------
         let t1 = Instant::now();
         let msg_count = AtomicU64::new(0);
+        let byte_count = AtomicU64::new(0);
         let gpart = self.active.collect_gpart();
         {
             let Engine { parts, grid, active, pool, config, .. } = self;
@@ -299,13 +320,17 @@ impl Engine {
                 let pf = unsafe { active.part_mut(j) };
                 let base = parts.range(j).start;
                 let mut local_msgs = 0u64;
+                let mut local_bytes = 0u64;
                 let srcs = unsafe { active.col_srcs(j) };
                 for &i in srcs {
                     let bin = unsafe { grid.bin(i as PartId, j) };
                     let stat = grid.stat(i as PartId, j);
-                    local_msgs += gather_bin(prog, bin, stat, weighted, pf, base);
+                    let (msgs, bytes) = gather_bin(prog, bin, stat, weighted, pf, base);
+                    local_msgs += msgs;
+                    local_bytes += bytes;
                 }
                 msg_count.fetch_add(local_msgs, Ordering::Relaxed);
+                byte_count.fetch_add(local_bytes, Ordering::Relaxed);
                 if !pf.pushed.is_empty() {
                     active.mark_touched(j);
                 }
@@ -313,6 +338,7 @@ impl Engine {
         }
         stats.t_gather = t1.elapsed().as_secs_f64();
         stats.messages = msg_count.load(Ordering::Relaxed);
+        stats.msg_bytes = byte_count.load(Ordering::Relaxed);
 
         // ---------------- Finalize (filterFrontier) ----------------
         let t2 = Instant::now();
@@ -366,9 +392,26 @@ impl Engine {
     }
 }
 
+/// Read one payload at lane offset `idx` of a bin's value stream. For
+/// 1-lane payloads the high-word load is compiled out, leaving exactly
+/// the single unchecked u32 read the paper's layout implies.
+///
+/// # Safety
+/// `idx + M::LANES <= data.len()`.
+#[inline(always)]
+unsafe fn read_msg_unchecked<M: Payload>(data: &[u32], idx: usize) -> M {
+    let lo = *data.get_unchecked(idx) as u64;
+    let bits =
+        if M::LANES == 2 { lo | (*data.get_unchecked(idx + 1) as u64) << 32 } else { lo };
+    M::from_bits64(bits)
+}
+
 /// Apply all messages of one bin (the gather hot loop, >80% of
 /// PageRank time). Specialized per layout with unchecked indexing and a
-/// branchless message-cursor advance — see EXPERIMENTS.md §Perf #1.
+/// branchless message-cursor advance — see EXPERIMENTS.md §Perf #1. The
+/// cursor steps in units of `Msg::LANES`, a monomorphization-time
+/// constant, so 1-lane programs compile to the identical single-word
+/// loop. Returns `(messages delivered, bin bytes streamed)`.
 #[inline]
 fn gather_bin<P: Program>(
     prog: &P,
@@ -377,45 +420,48 @@ fn gather_bin<P: Program>(
     weighted: bool,
     pf: &mut super::active::PartFrontier,
     base: VertexId,
-) -> u64 {
+) -> (u64, u64) {
     use super::bins::ID_MASK;
+    let lanes = P::Msg::LANES;
     let ids: &[u32] = match bin.mode {
         Mode::Sc => &bin.ids,
         Mode::Dc => &stat.dc_ids,
     };
     let data = &bin.data;
     if weighted {
-        // Flat layout: one value per id.
-        debug_assert_eq!(data.len(), ids.len());
+        // Flat layout: one value (LANES words) per id.
+        debug_assert_eq!(data.len(), ids.len() * lanes);
         for (e, &dst) in ids.iter().enumerate() {
-            // SAFETY: data.len() == ids.len() by the scatter layout.
-            let bits = unsafe { *data.get_unchecked(e) };
-            if prog.gather(P::Msg::from_bits(bits), dst) {
+            // SAFETY: data.len() == ids.len() * LANES by the scatter
+            // layout.
+            let msg = unsafe { read_msg_unchecked::<P::Msg>(data, e * lanes) };
+            if prog.gather(msg, dst) {
                 pf.push_next(dst, (dst - base) as usize);
             }
         }
     } else {
         // MSB-delimited layout: the high bit starts a new message, so
-        // the data cursor advances branchlessly by (raw >> 31).
+        // the data cursor advances branchlessly by (raw >> 31) * LANES.
         debug_assert_eq!(
-            ids.iter().filter(|&&x| x & super::bins::MSG_START != 0).count(),
+            ids.iter().filter(|&&x| x & super::bins::MSG_START != 0).count() * lanes,
             data.len(),
             "message starts must match data entries"
         );
-        let mut di = usize::MAX;
+        let mut di = 0usize.wrapping_sub(lanes);
         for &raw in ids {
-            di = di.wrapping_add((raw >> 31) as usize);
+            di = di.wrapping_add((raw >> 31) as usize * lanes);
             // SAFETY: every stream begins with an MSG_START id (scatter
             // writes the flag on the first id of each message), so di
-            // lands in 0..data.len() before the first read.
-            let bits = unsafe { *data.get_unchecked(di) };
+            // lands on a message boundary in 0..data.len() before the
+            // first read.
+            let msg = unsafe { read_msg_unchecked::<P::Msg>(data, di) };
             let dst = raw & ID_MASK;
-            if prog.gather(P::Msg::from_bits(bits), dst) {
+            if prog.gather(msg, dst) {
                 pf.push_next(dst, (dst - base) as usize);
             }
         }
     }
-    ids.len() as u64
+    (ids.len() as u64, ((ids.len() + data.len()) * 4) as u64)
 }
 
 /// Source-centric scatter of partition `p` (paper §3.3 "SC mode"):
@@ -458,11 +504,11 @@ fn scatter_sc<P: Program>(
             if weighted {
                 let w = wts.expect("weighted grid implies weighted CSR");
                 for t in e..end {
-                    bin.data.push(prog.apply_weight(val, w[t]).to_bits());
+                    push_msg(&mut bin.data, prog.apply_weight(val, w[t]));
                     bin.ids.push(adj[t]);
                 }
             } else {
-                bin.data.push(val.to_bits());
+                push_msg(&mut bin.data, val);
                 bin.ids.push(adj[e] | MSG_START);
                 bin.ids.extend_from_slice(&adj[e + 1..end]);
             }
@@ -490,14 +536,18 @@ fn scatter_dc<P: Program>(
     p: PartId,
 ) {
     let weighted = grid.weighted();
+    let lanes = P::Msg::LANES;
     let meta = grid.meta(p);
     // SAFETY: this task owns partition p in the scatter phase.
     let pf = unsafe { active.part_mut(p) };
     let range = parts.range(p);
     let base = range.start;
+    // Scratch holds LANES words per local vertex; grown once when a
+    // wider payload first runs on this engine.
+    pf.ensure_scratch(range.len() * lanes);
     for v in range {
         if graph.out_degree(v) > 0 {
-            pf.scratch[(v - base) as usize] = prog.scatter(v).to_bits();
+            write_msg(&mut pf.scratch, (v - base) as usize * lanes, prog.scatter(v));
         }
     }
     let scratch = &pf.scratch;
@@ -514,16 +564,20 @@ fn scatter_dc<P: Program>(
         if weighted {
             let mut e = 0usize;
             for (si, &u) in stat.dc_srcs.iter().enumerate() {
-                let val = P::Msg::from_bits(scratch[(u - base) as usize]);
+                let val = super::bins::read_msg::<P::Msg>(scratch, (u - base) as usize * lanes);
                 let c = stat.dc_cnts[si] as usize;
                 for t in e..e + c {
-                    data.push(prog.apply_weight(val, stat.dc_wts[t]).to_bits());
+                    push_msg(data, prog.apply_weight(val, stat.dc_wts[t]));
                 }
                 e += c;
             }
         } else {
             for &u in stat.dc_srcs.iter() {
-                data.push(scratch[(u - base) as usize]);
+                let s = (u - base) as usize * lanes;
+                data.push(scratch[s]);
+                if lanes == 2 {
+                    data.push(scratch[s + 1]);
+                }
             }
         }
     }
@@ -543,12 +597,14 @@ mod tests {
 
     impl Program for Bfs {
         type Msg = i32;
+        const INACTIVE: i32 = -1;
         fn scatter(&self, v: VertexId) -> i32 {
-            // DC-safe: unvisited vertices propagate -1 (ignored below).
+            // DC-safe: unvisited vertices propagate INACTIVE (ignored
+            // below).
             if self.parent.get(v) >= 0 {
                 v as i32
             } else {
-                -1
+                Self::INACTIVE
             }
         }
         fn init(&self, _v: VertexId) -> bool {
@@ -636,6 +692,114 @@ mod tests {
         }
     }
 
+    /// A 2-lane program: BFS carrying `(parent, depth)` in one message,
+    /// exercising the multi-lane bin layout through every mode.
+    struct Bfs2 {
+        parent: VertexData<u32>, // u32::MAX = unvisited
+        depth: VertexData<u32>,
+    }
+
+    impl Program for Bfs2 {
+        type Msg = (u32, u32);
+        const INACTIVE: (u32, u32) = (u32::MAX, 0);
+        fn scatter(&self, v: VertexId) -> (u32, u32) {
+            if self.parent.get(v) != u32::MAX {
+                (v, self.depth.get(v) + 1)
+            } else {
+                Self::INACTIVE
+            }
+        }
+        fn init(&self, _v: VertexId) -> bool {
+            false
+        }
+        fn gather(&self, (p, d): (u32, u32), v: VertexId) -> bool {
+            if p != u32::MAX && self.parent.get(v) == u32::MAX {
+                self.parent.set(v, p);
+                self.depth.set(v, d);
+                true
+            } else {
+                false
+            }
+        }
+        fn filter(&self, _v: VertexId) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn two_lane_bfs_matches_serial_levels_all_modes() {
+        let g = gen::rmat(9, Default::default(), false);
+        let serial = {
+            let mut level = vec![-1i32; g.n()];
+            level[0] = 0;
+            let mut q = std::collections::VecDeque::from([0u32]);
+            while let Some(v) = q.pop_front() {
+                for &u in g.out().neighbors(v) {
+                    if level[u as usize] < 0 {
+                        level[u as usize] = level[v as usize] + 1;
+                        q.push_back(u);
+                    }
+                }
+            }
+            level
+        };
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            let config = PpmConfig { threads: 3, mode, k: Some(10), ..Default::default() };
+            let mut eng = Engine::new(g.clone(), config);
+            let prog =
+                Bfs2 { parent: VertexData::new(g.n(), u32::MAX), depth: VertexData::new(g.n(), 0) };
+            prog.parent.set(0, 0);
+            eng.load_frontier(&[0]);
+            let stats = eng.run(&prog, 10_000);
+            assert!(stats.converged, "mode {mode:?}");
+            for v in 0..g.n() {
+                let want = serial[v];
+                let got = if prog.parent.get(v as u32) == u32::MAX {
+                    -1
+                } else {
+                    prog.depth.get(v as u32) as i32
+                };
+                assert_eq!(got, want, "mode {mode:?}, depth of v={v}");
+                // Both lanes must travel together: the parent edge is real.
+                let p = prog.parent.get(v as u32);
+                if p != u32::MAX && p as usize != v {
+                    assert!(
+                        g.out().neighbors(p).contains(&(v as u32)),
+                        "mode {mode:?}: parent edge {p}->{v} missing"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn msg_bytes_accounts_for_lane_width() {
+        // One SC iteration of a 1-lane vs a 2-lane program on the same
+        // engine: ids bytes match, value bytes double.
+        let g = gen::chain(100);
+        let config =
+            PpmConfig { threads: 1, mode: ModePolicy::ForceSc, k: Some(8), ..Default::default() };
+        let mut eng = Engine::new(g.clone(), config);
+
+        let one = Bfs { parent: VertexData::new(g.n(), -1) };
+        one.parent.set(0, 0);
+        eng.load_frontier(&[0]);
+        let s1 = eng.iterate(&one);
+
+        let two = Bfs2 {
+            parent: VertexData::new(g.n(), u32::MAX),
+            depth: VertexData::new(g.n(), 0),
+        };
+        two.parent.set(0, 0);
+        eng.load_frontier(&[0]);
+        let s2 = eng.iterate(&two);
+
+        assert_eq!(s1.messages, s2.messages, "same deliveries either width");
+        // bytes = 4*ids + 4*lanes*msg_starts: the 2-lane run adds
+        // exactly one extra word per message start.
+        assert!(s2.msg_bytes > s1.msg_bytes, "{} !> {}", s2.msg_bytes, s1.msg_bytes);
+    }
+
     #[test]
     fn empty_frontier_converges_immediately() {
         let g = gen::chain(10);
@@ -686,6 +850,7 @@ mod tests {
         struct Keep;
         impl Program for Keep {
             type Msg = u32;
+            const INACTIVE: u32 = 0;
             fn scatter(&self, _v: VertexId) -> u32 {
                 0
             }
@@ -717,6 +882,7 @@ mod tests {
         struct FilterOdd;
         impl Program for FilterOdd {
             type Msg = u32;
+            const INACTIVE: u32 = 0;
             fn scatter(&self, _v: VertexId) -> u32 {
                 0
             }

@@ -23,6 +23,9 @@ pub mod cost;
 pub mod engine;
 pub mod shared;
 
-pub use bins::{layout_builds, Bin, BinGrid, BinLayout, Mode, StaticBin, MSG_START};
+pub use bins::{
+    layout_builds, push_msg, read_msg, write_msg, Bin, BinGrid, BinLayout, Mode, StaticBin,
+    MSG_START,
+};
 pub use cost::ModePolicy;
 pub use engine::{Engine, IterStats, PpmConfig, RunStats};

@@ -4,6 +4,14 @@
 //! `apps::*::run` free functions, on both RMAT and Erdős–Rényi
 //! workloads. Also asserts the amortization contract: one session =
 //! exactly one partition/bin-layout build, no matter how many queries.
+//!
+//! Since the typed-message-plane redesign (PR 2) this suite doubles as
+//! the 1-lane payload parity proof: all eight apps here run through the
+//! lane-generic bins/scratch/gather paths with `Msg::LANES = 1`, and
+//! the bitwise assertions (f32 ranks, distances, diffusion vectors)
+//! pin that the monomorphized 1-lane plane computes exactly what the
+//! fixed 4-byte plane did — any change in message layout, cursor
+//! stepping, or Eq. 1 byte accounting for `d_v = 4` breaks them.
 
 #![allow(deprecated)]
 
@@ -11,7 +19,7 @@ use std::sync::Arc;
 
 use gpop::api::{Convergence, EngineSession, Runner};
 use gpop::apps::{self, bfs};
-use gpop::graph::{gen, Graph, GraphBuilder};
+use gpop::graph::{gen, Graph};
 use gpop::ppm::{layout_builds, Engine, PpmConfig};
 
 fn workloads() -> Vec<(&'static str, Arc<Graph>)> {
@@ -26,13 +34,7 @@ fn weighted(g: &Graph) -> Arc<Graph> {
 }
 
 fn symmetrized(g: &Graph) -> Arc<Graph> {
-    let mut b = GraphBuilder::new().with_n(g.n()).symmetrize();
-    for v in 0..g.n() as u32 {
-        for &u in g.out().neighbors(v) {
-            b.add(v, u);
-        }
-    }
-    Arc::new(b.build())
+    Arc::new(gen::symmetrized(g))
 }
 
 /// Single-threaded: with >1 thread the bin registration order (and so

@@ -153,10 +153,18 @@ fn one_session_runs_every_app_sequentially() {
         assert!((nib.output.pr[v] as f64 - serial_nib[v]).abs() < 1e-4);
     }
 
+    let kc = Runner::on(&session).run(apps::KCore::new(&g));
+    assert!(kc.converged, "peeling must drain the frontier");
+    assert_eq!(
+        kc.output,
+        serial::kcore(&g),
+        "k-core (out-degree variant on this directed graph) after Nibble"
+    );
+
     assert_eq!(
         gpop::ppm::layout_builds(),
         builds_before,
-        "four apps on one session must not re-run pre-processing"
+        "five apps on one session must not re-run pre-processing"
     );
 }
 

@@ -1,0 +1,242 @@
+//! Tests for the typed multi-lane message plane (the PR 2 redesign):
+//!
+//! 1. **Payload round-trip properties** — every provided 1- and 2-lane
+//!    [`Payload`] impl survives encode → decode on random bit patterns.
+//! 2. **Weighted `apply_weight` parity per mode** — SC-only, DC-only
+//!    and hybrid scatter produce *bit-identical* SSSP distances on a
+//!    weighted RMAT graph, and all agree with serial Dijkstra (the
+//!    previously untested per-mode weighted path).
+//! 3. **Two-lane algorithms end-to-end** — one-pass SSSP-with-parents
+//!    validates against `serial::sssp_dijkstra_parents` (distances
+//!    equal, parents form real edges with `dist[v] = dist[parent] + w`)
+//!    and k-core against serial peeling, through sessions whose pooled
+//!    engines are shared between 1- and 2-lane programs.
+
+#[path = "prop_framework/mod.rs"]
+mod prop_framework;
+
+use std::sync::Arc;
+
+use gpop::api::{EngineSession, Payload, Runner};
+use gpop::apps::{
+    sssp_parents::{validate_tree, NO_PARENT},
+    Bfs, KCore, Sssp, SsspParents,
+};
+use gpop::baselines::serial;
+use gpop::graph::{gen, Graph};
+use gpop::ppm::{ModePolicy, PpmConfig};
+use prop_framework::property;
+
+// ---------------------------------------------------------------
+// 1. Payload round-trips on random bit patterns
+// ---------------------------------------------------------------
+
+fn roundtrip_bits<M: Payload>(bits: u64) -> Result<(), String> {
+    let masked = if M::LANES == 1 { bits & 0xFFFF_FFFF } else { bits };
+    let decoded = M::from_bits64(masked);
+    let re = decoded.to_bits64();
+    prop_assert!(
+        re == masked,
+        "{}-lane payload: {masked:#x} -> {re:#x}",
+        M::LANES
+    );
+    Ok(())
+}
+
+#[test]
+fn prop_integer_payloads_roundtrip_all_bit_patterns() {
+    property("integer payload roundtrip", 200, |g| {
+        let bits = g.rng.next_u64();
+        roundtrip_bits::<u32>(bits)?;
+        roundtrip_bits::<i32>(bits)?;
+        roundtrip_bits::<u64>(bits)?;
+        roundtrip_bits::<i64>(bits)?;
+        roundtrip_bits::<(u32, u32)>(bits)?;
+        roundtrip_bits::<(i32, i32)>(bits)?;
+        roundtrip_bits::<(u32, i32)>(bits)?;
+        roundtrip_bits::<(i32, u32)>(bits)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_float_payloads_roundtrip_finite_values() {
+    property("float payload roundtrip", 200, |g| {
+        let a = g.f64_in(-1e30, 1e30);
+        let f1 = a as f32;
+        prop_assert_eq!(f32::from_bits64(f1.to_bits64()), f1, "f32 {f1}");
+        prop_assert_eq!(f64::from_bits64(a.to_bits64()), a, "f64 {a}");
+        let pair = (f1, g.rng.next_u64() as u32);
+        prop_assert_eq!(<(f32, u32)>::from_bits64(pair.to_bits64()), pair, "(f32,u32) {pair:?}");
+        let ff = (f1, -f1);
+        prop_assert_eq!(<(f32, f32)>::from_bits64(ff.to_bits64()), ff, "(f32,f32) {ff:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn float_payload_special_values() {
+    for x in [f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0, f32::MIN_POSITIVE] {
+        assert_eq!(f32::from_bits64(x.to_bits64()).to_bits(), x.to_bits());
+    }
+    assert!(f32::from_bits64(f32::NAN.to_bits64()).is_nan());
+    assert!(f64::from_bits64(f64::NAN.to_bits64()).is_nan());
+}
+
+// ---------------------------------------------------------------
+// 2. Weighted apply_weight path: SC vs DC vs serial parity
+// ---------------------------------------------------------------
+
+fn weighted_rmat(scale: u32, seed: u64) -> Arc<Graph> {
+    let base = gen::rmat(scale, Default::default(), false);
+    Arc::new(gen::with_uniform_weights(&base, 0.5, 4.0, seed))
+}
+
+/// Min-updates are order-independent and DC's extra stale candidates
+/// can never win, so the three mode policies must agree *bitwise* on a
+/// weighted graph — stronger than the existing tolerance checks, and
+/// the first per-mode exercise of `apply_weight` on both the SC
+/// per-edge path and the DC scratch-replay path.
+#[test]
+fn weighted_sssp_bitwise_identical_across_modes_and_serial_close() {
+    let g = weighted_rmat(10, 33);
+    let reference = serial::sssp_dijkstra(&g, 0);
+    let mut per_mode: Vec<Vec<u32>> = Vec::new();
+    for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+        let session = EngineSession::new(
+            g.clone(),
+            PpmConfig { threads: 3, mode, k: Some(12), ..Default::default() },
+        );
+        let report = Runner::on(&session).run(Sssp::new(g.n(), 0));
+        assert!(report.converged, "mode {mode:?}");
+        for v in 0..g.n() {
+            if reference[v].is_finite() {
+                assert!(
+                    (report.output[v] - reference[v]).abs() < 1e-3,
+                    "mode {mode:?}, v={v}: {} vs serial {}",
+                    report.output[v],
+                    reference[v]
+                );
+            } else {
+                assert!(report.output[v].is_infinite(), "mode {mode:?}, v={v}");
+            }
+        }
+        per_mode.push(report.output.iter().map(|x| x.to_bits()).collect());
+    }
+    assert_eq!(per_mode[0], per_mode[1], "hybrid vs forced-SC distances");
+    assert_eq!(per_mode[0], per_mode[2], "hybrid vs forced-DC distances");
+}
+
+/// Same parity for the 2-lane program: the parent lane must not perturb
+/// the distance lane in any mode.
+#[test]
+fn weighted_sssp_parents_distances_identical_across_modes() {
+    let g = weighted_rmat(9, 7);
+    let mut per_mode: Vec<Vec<u32>> = Vec::new();
+    for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+        let session = EngineSession::new(
+            g.clone(),
+            PpmConfig { threads: 2, mode, k: Some(8), ..Default::default() },
+        );
+        let report = Runner::on(&session).run(SsspParents::new(g.n(), 0));
+        assert!(report.converged, "mode {mode:?}");
+        per_mode.push(report.output.distance.iter().map(|x| x.to_bits()).collect());
+    }
+    assert_eq!(per_mode[0], per_mode[1]);
+    assert_eq!(per_mode[0], per_mode[2]);
+}
+
+// ---------------------------------------------------------------
+// 3. Two-lane algorithms end-to-end
+// ---------------------------------------------------------------
+
+/// One session serves 1-lane (Bfs, Sssp) and 2-lane (SsspParents)
+/// queries back to back: the pooled engine's bins and DC scratch are
+/// reused across payload widths, and results stay correct in both
+/// directions (narrow → wide → narrow).
+#[test]
+fn pooled_engine_is_shared_across_lane_widths() {
+    let g = weighted_rmat(9, 21);
+    let session =
+        EngineSession::new(g.clone(), PpmConfig { threads: 2, k: Some(10), ..Default::default() });
+    let runner = Runner::on(&session);
+
+    let bfs1 = runner.run(Bfs::new(g.n(), 0));
+    let wide = runner.run(SsspParents::new(g.n(), 0));
+    let narrow = runner.run(Sssp::new(g.n(), 0));
+    assert_eq!(session.pooled_engines(), 1, "all three queries share one engine");
+
+    // Narrow-after-wide must agree with the wide run's distance lane.
+    let wide_bits: Vec<u32> = wide.output.distance.iter().map(|x| x.to_bits()).collect();
+    let narrow_bits: Vec<u32> = narrow.output.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(narrow_bits, wide_bits);
+
+    // BFS reachability agrees with SSSP reachability on the same graph.
+    for v in 0..g.n() {
+        assert_eq!(
+            bfs1.output[v] >= 0,
+            wide.output.distance[v].is_finite(),
+            "reachability mismatch at v={v}"
+        );
+    }
+}
+
+#[test]
+fn sssp_parents_tree_validates_against_dijkstra() {
+    let g = weighted_rmat(10, 5);
+    let (ref_dist, _ref_parent) = serial::sssp_dijkstra_parents(&g, 3);
+    let session =
+        EngineSession::new(g.clone(), PpmConfig { threads: 4, k: Some(16), ..Default::default() });
+    let report = Runner::on(&session).run(SsspParents::new(g.n(), 3));
+    assert!(report.converged);
+    let out = &report.output;
+    for v in 0..g.n() {
+        if !ref_dist[v].is_finite() {
+            assert!(out.distance[v].is_infinite(), "v={v} should be unreached");
+            assert_eq!(out.parent[v], NO_PARENT);
+        } else {
+            assert!(
+                (out.distance[v] - ref_dist[v]).abs() < 1e-3,
+                "v={v}: {} vs {}",
+                out.distance[v],
+                ref_dist[v]
+            );
+        }
+    }
+    // Parent trees may legitimately differ from Dijkstra's between
+    // equally-short paths; validate structurally instead (the shared
+    // validator checks edges exist and close the distance equation).
+    validate_tree(&g, 3, &out.distance, &out.parent, 1e-3).unwrap();
+}
+
+#[test]
+fn kcore_matches_serial_peeling_on_rmat_and_er() {
+    let workloads = [
+        Arc::new(gen::symmetrized(&gen::rmat(9, Default::default(), false))),
+        Arc::new(gen::symmetrized(&gen::erdos_renyi(500, 3000, 17))),
+    ];
+    for g in workloads {
+        let want = serial::kcore(&g);
+        for mode in [ModePolicy::Hybrid, ModePolicy::ForceSc, ModePolicy::ForceDc] {
+            let session = EngineSession::new(
+                g.clone(),
+                PpmConfig { threads: 3, mode, k: Some(8), ..Default::default() },
+            );
+            let report = Runner::on(&session).run(KCore::new(&g));
+            assert!(report.converged, "mode {mode:?}: peeling must drain the frontier");
+            assert_eq!(report.output, want, "mode {mode:?}");
+        }
+    }
+}
+
+/// The acceptance shape for FrontierEmpty-driven peeling: a run that is
+/// budget-capped before completion reports `converged = false`.
+#[test]
+fn kcore_budget_cap_reports_unconverged() {
+    use gpop::api::Convergence;
+    let g = Arc::new(gen::symmetrized(&gen::erdos_renyi(300, 2400, 9)));
+    let session = EngineSession::new(g.clone(), PpmConfig::with_threads(2));
+    let report = Runner::on(&session).until(Convergence::MaxIters(1)).run(KCore::new(&g));
+    assert!(!report.converged);
+    assert_eq!(report.n_iters(), 1);
+}

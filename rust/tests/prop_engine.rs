@@ -192,6 +192,52 @@ fn prop_messages_equal_active_edges_in_sc_mode() {
 }
 
 #[test]
+fn prop_sssp_parents_tree_valid_any_config() {
+    // The 2-lane program under random graphs/configs: distances match
+    // Dijkstra, and the shared validator confirms every parent is a
+    // real edge closing the distance equation.
+    property("sssp-parents tree validity", CASES, |g| {
+        let base = g.graph(300, 5);
+        let graph =
+            Arc::new(gpop::graph::gen::with_uniform_weights(&base, 0.5, 4.0, g.rng.next_u64()));
+        let src = g.rng.below(graph.n() as u64) as u32;
+        let want = serial::sssp_dijkstra(&graph, src);
+        let session = EngineSession::new(graph.clone(), random_config(g, graph.n()));
+        let res = Runner::on(&session).run(apps::SsspParents::new(graph.n(), src));
+        let out = &res.output;
+        for v in 0..graph.n() {
+            if !want[v].is_finite() {
+                prop_assert!(out.distance[v].is_infinite(), "v={v} should be unreachable");
+            } else {
+                prop_assert!(
+                    (out.distance[v] - want[v]).abs() < 1e-3,
+                    "v={v}: {} vs {}",
+                    out.distance[v],
+                    want[v]
+                );
+            }
+        }
+        apps::sssp_parents::validate_tree(&graph, src, &out.distance, &out.parent, 1e-3)
+    });
+}
+
+#[test]
+fn prop_kcore_matches_serial_any_config() {
+    property("kcore vs serial peeling", CASES, |g| {
+        let base = g.graph(250, 5);
+        // Symmetrize for the undirected notion (weights dropped: core
+        // numbers are purely structural).
+        let graph = Arc::new(gpop::graph::gen::symmetrized(&base));
+        let want = serial::kcore(&graph);
+        let session = EngineSession::new(graph.clone(), random_config(g, graph.n()));
+        let res = Runner::on(&session).run(apps::KCore::new(&graph));
+        prop_assert!(res.converged, "peeling did not drain the frontier");
+        prop_assert_eq!(res.output, want, "core numbers diverge");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_session_reusable_across_runs() {
     // Running BFS twice from different roots on one session must give
     // the same answers as a fresh session (state fully reset between

@@ -6,6 +6,9 @@
 //! (`GPOP_PROP_SEED=<seed>`), and small inputs are tried first (cheap
 //! shrinking by construction).
 
+// Shared by several test crates; not every crate uses every generator.
+#![allow(dead_code)]
+
 use gpop::graph::{Graph, GraphBuilder};
 use gpop::util::rng::Rng;
 use gpop::VertexId;
