@@ -1,0 +1,143 @@
+//! bench_preprocess — the §4 pre-processing pipeline, serial vs
+//! parallel, emitting a machine-readable `BENCH_pr3.json` artifact.
+//!
+//! The iterate loop was always parallel; pre-processing (partitioning,
+//! the `O(E)` [`BinLayout`] scan, CSR construction, generation) used to
+//! be the serial cold-start tax on every session build and graph swap.
+//! This bench times `BinLayout::build` (serial) against
+//! `BinLayout::build_par` at 1/2/4/8 threads on RMAT + Erdős–Rényi,
+//! unweighted and weighted, plus end-to-end `gen → CSR → layout`
+//! pipelines, and writes the medians + speedups to
+//! `$GPOP_BENCH_PREPROCESS_JSON` (default `BENCH_pr3.json`).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::bench::{bench, Table};
+use gpop::exec::ThreadPool;
+use gpop::graph::{gen, Graph};
+use gpop::partition::Partitioner;
+use gpop::ppm::BinLayout;
+use gpop::util::fmt;
+
+struct Sample {
+    dataset: String,
+    weighted: bool,
+    threads: usize,
+    t_serial: f64,
+    t_par: f64,
+}
+
+impl Sample {
+    fn speedup(&self) -> f64 {
+        self.t_serial / self.t_par.max(1e-12)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"dataset\":\"{}\",\"weighted\":{},\"threads\":{},\
+             \"t_serial_s\":{:.6},\"t_par_s\":{:.6},\"speedup\":{:.3}}}",
+            self.dataset,
+            self.weighted,
+            self.threads,
+            self.t_serial,
+            self.t_par,
+            self.speedup()
+        )
+    }
+}
+
+fn layout_samples(name: &str, g: &Graph, out: &mut Vec<Sample>) {
+    let config = common::bench_config();
+    let parts = Partitioner::auto_default(g.n(), 8);
+    let serial = bench(&format!("{name} serial"), config, || {
+        std::hint::black_box(BinLayout::build(g, &parts));
+    });
+    for threads in [1usize, 2, 4, 8] {
+        let mut pool = ThreadPool::new(threads);
+        let par = bench(&format!("{name} t={threads}"), config, || {
+            std::hint::black_box(BinLayout::build_par(g, &parts, &mut pool));
+        });
+        out.push(Sample {
+            dataset: name.to_string(),
+            weighted: g.is_weighted(),
+            threads,
+            t_serial: serial.median(),
+            t_par: par.median(),
+        });
+    }
+}
+
+fn main() {
+    let scale = common::base_scale();
+    let mut samples: Vec<Sample> = Vec::new();
+
+    let rmat = gen::rmat(scale, Default::default(), false);
+    let n_er = 1usize << (scale - 1);
+    let er = gen::erdos_renyi(n_er, n_er * 16, 99);
+    let rmat_w = gen::with_uniform_weights(&rmat, 1.0, 4.0, 5);
+    let er_w = gen::with_uniform_weights(&er, 1.0, 4.0, 5);
+
+    println!(
+        "bench_preprocess: rmat{scale} ({} edges), er{} ({} edges)",
+        fmt::si(rmat.m() as f64),
+        scale - 1,
+        fmt::si(er.m() as f64)
+    );
+
+    layout_samples(&format!("rmat{scale}"), &rmat, &mut samples);
+    layout_samples(&format!("er{}", scale - 1), &er, &mut samples);
+    layout_samples(&format!("rmat{scale}+w"), &rmat_w, &mut samples);
+    layout_samples(&format!("er{}+w", scale - 1), &er_w, &mut samples);
+
+    // End-to-end generation → CSR → layout pipelines (the full graph
+    // swap path), serial vs the pool-parallel variants.
+    let e2e_config = common::bench_config();
+    let e2e_serial = bench("e2e rmat serial", e2e_config, || {
+        let g = gen::rmat(scale, Default::default(), false);
+        let parts = Partitioner::auto_default(g.n(), 8);
+        std::hint::black_box(BinLayout::build(&g, &parts));
+    });
+    for threads in [2usize, 4] {
+        let mut pool = ThreadPool::new(threads);
+        let e2e_par = bench(&format!("e2e rmat t={threads}"), e2e_config, || {
+            let g = gen::rmat_par(scale, Default::default(), false, &mut pool);
+            let parts = Partitioner::auto_default(g.n(), 8);
+            std::hint::black_box(BinLayout::build_par(&g, &parts, &mut pool));
+        });
+        samples.push(Sample {
+            dataset: format!("e2e-rmat{scale}"),
+            weighted: false,
+            threads,
+            t_serial: e2e_serial.median(),
+            t_par: e2e_par.median(),
+        });
+    }
+
+    let mut table = Table::new(&["dataset", "threads", "serial", "parallel", "speedup"]);
+    for s in &samples {
+        table.row(&[
+            format!("{}{}", s.dataset, if s.weighted { " (w)" } else { "" }),
+            s.threads.to_string(),
+            fmt::secs(s.t_serial),
+            fmt::secs(s.t_par),
+            format!("{:.2}x", s.speedup()),
+        ]);
+    }
+    table.print();
+
+    let path = std::env::var("GPOP_BENCH_PREPROCESS_JSON")
+        .unwrap_or_else(|_| "BENCH_pr3.json".to_string());
+    let body = samples.iter().map(Sample::json).collect::<Vec<_>>().join(",");
+    let json = format!(
+        "{{\"bench\":\"bench_preprocess\",\"pr\":3,\"scale\":{scale},\"samples\":[{body}]}}\n"
+    );
+    std::fs::write(&path, json).expect("write bench json");
+    println!("wrote {path}");
+
+    // The acceptance bar for this PR: parallel layout build beats the
+    // serial scan on RMAT at 4 threads.
+    if let Some(s) = samples.iter().find(|s| s.dataset.starts_with("rmat") && s.threads == 4) {
+        println!("rmat @ 4 threads speedup: {:.2}x", s.speedup());
+    }
+}

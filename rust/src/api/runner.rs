@@ -38,6 +38,12 @@ pub struct RunReport<O> {
     pub converged: bool,
     /// Wall-clock seconds from frontier load to output extraction.
     pub total_time: f64,
+    /// One-time pre-processing seconds amortized behind this query: the
+    /// session's partition + parallel layout build (`0.0` for
+    /// [`drive`] calls on a caller-prepared engine). Every query on a
+    /// session reports the same value — the cost is paid once, not per
+    /// run.
+    pub t_preprocess: f64,
 }
 
 impl<O> RunReport<O> {
@@ -72,6 +78,7 @@ impl<O> RunReport<O> {
             iters: self.iters,
             converged: self.converged,
             total_time: self.total_time,
+            t_preprocess: self.t_preprocess,
         }
     }
 }
@@ -115,6 +122,7 @@ pub fn drive<A: Algorithm>(
         iters,
         converged: stop == Stop::Converged,
         total_time: t0.elapsed().as_secs_f64(),
+        t_preprocess: 0.0,
     }
 }
 
@@ -161,7 +169,9 @@ impl<'s> Runner<'s> {
         let mut engine = self.session.checkout();
         engine.set_mode_policy(self.mode());
         let until = self.until_for(&alg);
-        drive(&mut engine, alg, &until)
+        let mut report = drive(&mut engine, alg, &until);
+        report.t_preprocess = self.session.build_stats().t_preprocess();
+        report
     }
 
     /// Run a batch of same-algorithm queries against ONE checked-out
@@ -174,10 +184,13 @@ impl<'s> Runner<'s> {
     ) -> Vec<RunReport<A::Output>> {
         let mut engine = self.session.checkout();
         engine.set_mode_policy(self.mode());
+        let t_preprocess = self.session.build_stats().t_preprocess();
         algs.into_iter()
             .map(|alg| {
                 let until = self.until_for(&alg);
-                drive(&mut engine, alg, &until)
+                let mut report = drive(&mut engine, alg, &until);
+                report.t_preprocess = t_preprocess;
+                report
             })
             .collect()
     }

@@ -16,10 +16,12 @@
 
 use std::ops::{Deref, DerefMut};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
+use crate::exec::ThreadPool;
 use crate::graph::Graph;
 use crate::partition::Partitioner;
-use crate::ppm::{BinLayout, Engine, PpmConfig};
+use crate::ppm::{BinLayout, BuildStats, Engine, PpmConfig};
 
 /// Idle engines kept per session. Each pooled engine holds its worker
 /// threads plus `O(k² + E/k)` bin scratch, so the pool is capped: a
@@ -35,19 +37,40 @@ pub struct EngineSession {
     parts: Partitioner,
     layout: Arc<BinLayout>,
     config: PpmConfig,
+    build: BuildStats,
     pool: Mutex<Vec<Engine>>,
 }
 
 impl EngineSession {
-    /// Build a session, running pre-processing exactly once. Accepts a
+    /// Build a session, running pre-processing exactly once — in
+    /// parallel on `config.threads` workers ([`BinLayout::build_par`]).
+    /// The preprocessing worker team is not thrown away: it is wrapped
+    /// into the session's first pooled engine, so the first `checkout()`
+    /// pays neither a thread spawn nor any scratch allocation. Accepts a
     /// `Graph` (moved) or an `Arc<Graph>` (shared with the caller).
     pub fn new(graph: impl Into<Arc<Graph>>, config: PpmConfig) -> Self {
-        assert!(config.threads >= 1);
-        assert!(config.bw_ratio > 0.0);
+        config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
         let graph = graph.into();
+        let t0 = Instant::now();
         let parts = config.partitioner(graph.n());
-        let layout = Arc::new(BinLayout::build(&graph, &parts));
-        Self { graph, parts, layout, config, pool: Mutex::new(Vec::new()) }
+        let t_partition = t0.elapsed().as_secs_f64();
+        let mut pool = ThreadPool::new(config.threads);
+        let t1 = Instant::now();
+        let layout = Arc::new(BinLayout::build_par(&graph, &parts, &mut pool));
+        let build = BuildStats {
+            t_partition,
+            t_layout: t1.elapsed().as_secs_f64(),
+            threads: config.threads,
+        };
+        let warm = Engine::from_parts(
+            graph.clone(),
+            parts.clone(),
+            layout.clone(),
+            config.clone(),
+            pool,
+            build,
+        );
+        Self { graph, parts, layout, config, build, pool: Mutex::new(vec![warm]) }
     }
 
     #[inline]
@@ -68,6 +91,13 @@ impl EngineSession {
     #[inline]
     pub fn config(&self) -> &PpmConfig {
         &self.config
+    }
+
+    /// Wall-clock cost of this session's one-time pre-processing
+    /// (partitioning + parallel layout build).
+    #[inline]
+    pub fn build_stats(&self) -> BuildStats {
+        self.build
     }
 
     /// Engines currently idle in the pool.
@@ -142,10 +172,11 @@ mod tests {
     fn checkout_reuses_pooled_engines() {
         let session =
             EngineSession::new(gen::chain(50), PpmConfig { k: Some(4), ..Default::default() });
-        assert_eq!(session.pooled_engines(), 0);
+        // The preprocessing worker team is pre-warmed into the pool.
+        assert_eq!(session.pooled_engines(), 1);
         {
             let _e = session.checkout();
-            assert_eq!(session.pooled_engines(), 0);
+            assert_eq!(session.pooled_engines(), 0, "checkout takes the warm engine");
         }
         assert_eq!(session.pooled_engines(), 1);
         {
@@ -153,6 +184,18 @@ mod tests {
             let _b = session.checkout();
         }
         assert_eq!(session.pooled_engines(), 2);
+    }
+
+    #[test]
+    fn session_records_preprocess_cost() {
+        let session = EngineSession::new(
+            gen::erdos_renyi(500, 4000, 9),
+            PpmConfig { threads: 2, k: Some(8), ..Default::default() },
+        );
+        let b = session.build_stats();
+        assert_eq!(b.threads, 2);
+        assert!(b.t_layout > 0.0, "layout build must be timed");
+        assert!(b.t_preprocess() >= b.t_layout);
     }
 
     #[test]

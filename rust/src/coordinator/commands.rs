@@ -16,7 +16,7 @@ use std::path::Path;
 fn engine_config(args: &Args) -> Result<PpmConfig, CliError> {
     let threads = args
         .get_parsed_or::<usize>("threads", ThreadPool::available_parallelism())?;
-    Ok(PpmConfig {
+    let config = PpmConfig {
         threads,
         mode: args
             .get_or("mode", "hybrid")
@@ -25,8 +25,13 @@ fn engine_config(args: &Args) -> Result<PpmConfig, CliError> {
         bw_ratio: args.get_parsed_or("bw-ratio", 2.0)?,
         k: args.get_parsed("k")?,
         cache_bytes: args.get_parsed_or("cache-kb", 256usize)? * 1024,
+        chunk: args.get_parsed_or("chunk", 1usize)?,
         ..Default::default()
-    })
+    };
+    // Reject nonsense (e.g. `--threads 0`, `--chunk 0`) as a usage
+    // error instead of an assert backtrace deep in the thread pool.
+    config.validate().map_err(|e| CliError(format!("invalid engine configuration: {e}")))?;
+    Ok(config)
 }
 
 fn build_graph(args: &Args) -> Result<crate::graph::Graph, CliError> {
@@ -85,12 +90,15 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
         config.k.map(|k| k.to_string()).unwrap_or_else(|| "auto".into())
     );
     let verbose = args.flag("verbose");
-    let t0 = std::time::Instant::now();
     let session = EngineSession::new(g, config);
     let graph = session.graph().clone();
+    let build = session.build_stats();
     println!(
-        "preprocessing: {} (k = {})",
-        fmt::secs(t0.elapsed().as_secs_f64()),
+        "preprocessing: {} (partition {}, layout {} on {} threads, k = {})",
+        fmt::secs(build.t_preprocess()),
+        fmt::secs(build.t_partition),
+        fmt::secs(build.t_layout),
+        build.threads,
         session.parts().k()
     );
     let runner = Runner::on(&session);
@@ -231,6 +239,9 @@ pub fn cmd_cachesim(args: &Args) -> Result<i32, CliError> {
     let g = build_graph(args)?;
     let iters = args.get_parsed_or::<usize>("iters", 10)?;
     let threads = args.get_parsed_or::<usize>("threads", 8)?;
+    if threads == 0 {
+        return Err(CliError("--threads must be >= 1".into()));
+    }
     let history = match app.as_str() {
         "pr" | "pagerank" => model::pagerank_history(&g, iters),
         "cc" | "labelprop" => model::labelprop_history(&g),
@@ -262,6 +273,9 @@ pub fn cmd_cachesim(args: &Args) -> Result<i32, CliError> {
 
 pub fn cmd_membench(args: &Args) -> Result<i32, CliError> {
     let threads = args.get_parsed_or::<usize>("threads", ThreadPool::available_parallelism())?;
+    if threads == 0 {
+        return Err(CliError("--threads must be >= 1".into()));
+    }
     let mb = args.get_parsed_or::<usize>("mb", 256)?;
     println!("membench: {threads} threads, {mb} MiB working set");
     let r = metrics::measure_bandwidth(threads, mb);
@@ -388,5 +402,19 @@ mod tests {
     fn unknown_app_rejected() {
         let a = args(&["--app", "wat", "--graph", "chain:4"]);
         assert!(cmd_run(&a).is_err());
+    }
+
+    #[test]
+    fn zero_threads_is_a_usage_error_not_a_crash() {
+        let a = args(&["--app", "bfs", "--graph", "chain:4", "--threads", "0"]);
+        let err = cmd_run(&a).unwrap_err();
+        assert!(err.0.contains("threads"), "got: {}", err.0);
+        let a = args(&["--app", "bfs", "--graph", "chain:4", "--chunk", "0"]);
+        let err = cmd_run(&a).unwrap_err();
+        assert!(err.0.contains("chunk"), "got: {}", err.0);
+        let a = args(&["--graph", "chain:4", "--threads", "0"]);
+        assert!(cmd_membench(&a).is_err());
+        let a = args(&["--app", "pr", "--graph", "chain:4", "--threads", "0"]);
+        assert!(cmd_cachesim(&a).is_err());
     }
 }

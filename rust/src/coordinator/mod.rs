@@ -19,7 +19,7 @@ COMMANDS:
               kcore = k-core decomposition by peeling)
              --graph SPEC [--threads N] [--mode hybrid|sc|dc]
              [--iters N] [--root V] [--seeds a,b,c] [--eps X]
-             [--bw-ratio X] [--k N] [--verbose]
+             [--bw-ratio X] [--k N] [--chunk N] [--verbose]
   gen        Generate a graph and write it to disk
              --graph SPEC --out PATH [--format bin|el]
   cachesim   Simulated L2 misses per framework (Tables 4-6)

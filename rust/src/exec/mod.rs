@@ -11,6 +11,8 @@
 
 pub mod barrier;
 pub mod pool;
+pub mod slice;
 
 pub use barrier::SpinBarrier;
 pub use pool::ThreadPool;
+pub use slice::SharedSlice;

@@ -4,10 +4,25 @@
 //! every worker (with its thread id), and `run` returns only after all
 //! workers finish — the implicit barrier PPM relies on between Scatter
 //! and Gather. [`ThreadPool::for_each_dynamic`] layers dynamic chunked
-//! scheduling on top, which is how both phases iterate over partitions.
+//! scheduling on top, which is how both phases iterate over partitions,
+//! and [`ThreadPool::map_parts`] collects per-item owned results — the
+//! primitive the §4 pre-processing pipeline parallelizes over.
+//!
+//! # Panic safety
+//!
+//! A panicking region closure propagates as a normal Rust panic from the
+//! opening call on the caller's thread. The region barrier still holds:
+//! `run` never resumes an unwind (its own or a worker's payload) while
+//! any worker might still dereference the stack closure, and workers
+//! always decrement the region counter — via a drop guard — even when
+//! the closure panics, so a panic can neither dangle the job pointer
+//! nor deadlock the caller.
 
+use std::any::Any;
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 /// Type-erased job pointer. The referenced closure outlives the region
@@ -17,13 +32,39 @@ struct JobPtr(*const (dyn Fn(usize) + Sync));
 // SAFETY: the pointee is Sync and lives for the duration of the region.
 unsafe impl Send for JobPtr {}
 
+/// Lock that shrugs off poisoning: pool mutexes guard tiny scalar
+/// critical sections (no invariants can be torn mid-update), and the
+/// pool must keep functioning after a region closure panics.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 struct Shared {
     job: Mutex<Option<(JobPtr, u64)>>, // (job, epoch)
     start: Condvar,
     remaining: AtomicUsize,
     done: Condvar,
     done_lock: Mutex<()>,
+    /// First panic payload caught in a worker this region; re-raised by
+    /// `run` on the caller's thread after the barrier.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
     shutdown: std::sync::atomic::AtomicBool,
+}
+
+/// Decrements `remaining` and wakes the caller on drop, so a worker
+/// leaves the region barrier even if its closure (or the panic-payload
+/// bookkeeping) panics.
+struct RegionGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for RegionGuard<'_> {
+    fn drop(&mut self) {
+        if self.shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = lock(&self.shared.done_lock);
+            self.shared.done.notify_all();
+        }
+    }
 }
 
 /// A fixed team of `n` workers (ids `1..n`); the caller participates as
@@ -44,6 +85,7 @@ impl ThreadPool {
             remaining: AtomicUsize::new(0),
             done: Condvar::new(),
             done_lock: Mutex::new(()),
+            panic: Mutex::new(None),
             shutdown: std::sync::atomic::AtomicBool::new(false),
         });
         let handles = (1..n_threads)
@@ -70,28 +112,47 @@ impl ThreadPool {
 
     /// Open a parallel region: `f(tid)` runs on every thread of the team;
     /// returns when all have finished (implicit barrier).
+    ///
+    /// If `f` panics on any thread, the panic resumes on the caller's
+    /// thread *after* the barrier (see module docs); when several
+    /// threads panic, the caller's own payload wins, otherwise the
+    /// first worker payload is re-raised.
     pub fn run<F: Fn(usize) + Sync>(&mut self, f: F) {
         if self.n_threads == 1 {
+            // No workers exist, so an unwind straight through is sound.
             f(0);
             return;
         }
         self.epoch += 1;
         let n_workers = self.n_threads - 1;
         self.shared.remaining.store(n_workers, Ordering::Release);
-        // Erase the closure's lifetime; sound because we wait below.
+        // Erase the closure's lifetime; sound because we wait below —
+        // on the normal path AND before resuming any unwind.
         let ptr: *const (dyn Fn(usize) + Sync) = &f;
         let job = JobPtr(unsafe { std::mem::transmute::<_, *const (dyn Fn(usize) + Sync)>(ptr) });
         {
-            let mut slot = self.shared.job.lock().unwrap();
+            let mut slot = lock(&self.shared.job);
             *slot = Some((job, self.epoch));
             self.shared.start.notify_all();
         }
-        // The caller is team member 0.
-        f(0);
-        // Wait for the workers.
-        let mut guard = self.shared.done_lock.lock().unwrap();
-        while self.shared.remaining.load(Ordering::Acquire) != 0 {
-            guard = self.shared.done.wait(guard).unwrap();
+        // The caller is team member 0. Catch its panic: `f` lives in
+        // this frame and workers still hold a pointer to it.
+        let caller = catch_unwind(AssertUnwindSafe(|| f(0)));
+        // Wait for the workers (the implicit barrier).
+        {
+            let mut guard = lock(&self.shared.done_lock);
+            while self.shared.remaining.load(Ordering::Acquire) != 0 {
+                guard = self.shared.done.wait(guard).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        // Quiesced: no worker can touch `f` any more. Now it is safe to
+        // unwind out of this frame.
+        let worker_panic = lock(&self.shared.panic).take();
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = worker_panic {
+            resume_unwind(payload);
         }
     }
 
@@ -124,13 +185,40 @@ impl ThreadPool {
             }
         });
     }
+
+    /// Parallel map collecting *owned* per-item results in index order —
+    /// the region primitive pre-processing builds on (`for_each_dynamic`
+    /// only supports `Fn(usize, usize)` side effects). Items are pulled
+    /// from a dynamic cursor one at a time, so irregular per-item work
+    /// (e.g. skewed partition rows) load-balances.
+    pub fn map_parts<T: Send, F: Fn(usize) -> T + Sync>(&mut self, n_items: usize, f: F) -> Vec<T> {
+        /// One write slot per item, written by exactly one task.
+        struct Slots<T>(Box<[UnsafeCell<Option<T>>]>);
+        // SAFETY: the dynamic cursor hands each index to exactly one
+        // task, so writes to distinct slots never alias.
+        unsafe impl<T: Send> Sync for Slots<T> {}
+
+        let slots: Slots<T> = Slots((0..n_items).map(|_| UnsafeCell::new(None)).collect());
+        self.for_each_dynamic(n_items, 1, |i, _tid| {
+            // SAFETY: index `i` is visited exactly once (see Slots).
+            unsafe { *slots.0[i].get() = Some(f(i)) };
+        });
+        // A panic in `f` propagated out of for_each_dynamic above, so
+        // every slot is filled here.
+        slots
+            .0
+            .into_vec()
+            .into_iter()
+            .map(|c| c.into_inner().expect("map_parts visited every index"))
+            .collect()
+    }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
         {
-            let _slot = self.shared.job.lock().unwrap();
+            let _slot = lock(&self.shared.job);
             self.shared.start.notify_all();
         }
         for h in self.handles.drain(..) {
@@ -143,7 +231,7 @@ fn worker_loop(tid: usize, shared: Arc<Shared>) {
     let mut last_epoch = 0u64;
     loop {
         let job = {
-            let mut slot = shared.job.lock().unwrap();
+            let mut slot = lock(&shared.job);
             loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
@@ -153,17 +241,22 @@ fn worker_loop(tid: usize, shared: Arc<Shared>) {
                         last_epoch = epoch;
                         break job;
                     }
-                    _ => slot = shared.start.wait(slot).unwrap(),
+                    _ => slot = shared.start.wait(slot).unwrap_or_else(|e| e.into_inner()),
                 }
             }
         };
-        // SAFETY: `run` keeps the closure alive until remaining == 0.
+        // SAFETY: `run` keeps the closure alive until remaining == 0,
+        // and the guard below guarantees this worker decrements
+        // `remaining` exactly once — panic or not.
         let f = unsafe { &*job.0 };
-        f(tid);
-        if shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let _g = shared.done_lock.lock().unwrap();
-            shared.done.notify_all();
+        let _region = RegionGuard { shared: &shared };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(tid))) {
+            let mut slot = lock(&shared.panic);
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
         }
+        // `_region` drops here: decrement + wake the caller.
     }
 }
 
@@ -258,5 +351,98 @@ mod tests {
             });
         }
         assert_eq!(c.load(Ordering::Relaxed), 4000);
+    }
+
+    #[test]
+    fn map_parts_collects_in_index_order() {
+        let mut pool = ThreadPool::new(4);
+        let out = pool.map_parts(1000, |i| i * i);
+        assert_eq!(out.len(), 1000);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn map_parts_owned_non_copy_results() {
+        let mut pool = ThreadPool::new(3);
+        let out = pool.map_parts(17, |i| vec![i as u32; i]);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.len(), i);
+            assert!(v.iter().all(|&x| x == i as u32));
+        }
+    }
+
+    #[test]
+    fn map_parts_empty_and_single_thread() {
+        let mut pool = ThreadPool::new(1);
+        assert!(pool.map_parts(0, |i| i).is_empty());
+        assert_eq!(pool.map_parts(3, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker boom")]
+    fn worker_panic_propagates_to_caller() {
+        let mut pool = ThreadPool::new(4);
+        pool.run(|tid| {
+            if tid == 2 {
+                panic!("worker boom");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "caller boom")]
+    fn caller_panic_still_waits_for_workers() {
+        let mut pool = ThreadPool::new(4);
+        let slow = AtomicU64::new(0);
+        pool.run(|tid| {
+            if tid == 0 {
+                panic!("caller boom");
+            }
+            // Workers outlive the caller's panic; `run` must not free
+            // the closure under them.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            slow.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+
+    #[test]
+    fn pool_stays_usable_after_a_panicking_region() {
+        let mut pool = ThreadPool::new(4);
+        for round in 0..3 {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(|tid| {
+                    if tid == 1 {
+                        panic!("round {round} boom");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "panic must propagate");
+            // The next region must run on the full team — no deadlock,
+            // no lost worker.
+            let seen = [(); 4].map(|_| AtomicU64::new(0));
+            pool.run(|tid| {
+                seen[tid].fetch_add(1, Ordering::Relaxed);
+            });
+            for s in &seen {
+                assert_eq!(s.load(Ordering::Relaxed), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_map_parts_propagates_and_pool_survives() {
+        let mut pool = ThreadPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.map_parts(64, |i| {
+                if i == 13 {
+                    panic!("unlucky item");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.map_parts(4, |i| i), vec![0, 1, 2, 3]);
     }
 }

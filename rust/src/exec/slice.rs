@@ -1,0 +1,136 @@
+//! [`SharedSlice`] — disjoint-index parallel writes into a borrowed
+//! slice.
+//!
+//! The parallel pre-processing passes (CSR scatter, per-vertex adjacency
+//! sorts) write to *provably disjoint* ranges of one output buffer from
+//! many pool tasks. Rust's `&mut [T]` cannot express that sharing, so
+//! this wrapper erases the exclusivity at the slice level and re-imposes
+//! it per index: the caller's partitioning of indices across tasks is
+//! the safety argument (the same discipline as `ppm::shared::SharedCells`,
+//! but over a borrowed buffer instead of owned cells).
+
+use std::marker::PhantomData;
+
+/// A borrowed `&mut [T]` writable concurrently at disjoint indices.
+///
+/// # Safety contract
+/// Two tasks may never access the same index (or overlapping ranges)
+/// concurrently; every access must be in bounds. The borrow `'a` keeps
+/// the underlying buffer alive and exclusively reserved for the wrapper.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access discipline documented above; T: Send so values may be
+// written from worker threads.
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Overwrite index `i` (the previous value is dropped).
+    ///
+    /// # Safety
+    /// `i < len`, and no other task accesses index `i` concurrently.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = value;
+    }
+
+    /// Exclusive access to index `i`.
+    ///
+    /// # Safety
+    /// `i < len`, and no other task accesses index `i` concurrently.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// Exclusive access to the subrange `[lo, hi)`.
+    ///
+    /// # Safety
+    /// `lo <= hi <= len`, and no other task accesses any index in the
+    /// range concurrently.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_parallel_writes_land() {
+        let mut buf = vec![0u32; 64];
+        {
+            let shared = SharedSlice::new(&mut buf);
+            std::thread::scope(|s| {
+                for t in 0..4u32 {
+                    let shared = &shared;
+                    s.spawn(move || {
+                        for i in ((t as usize)..64).step_by(4) {
+                            // SAFETY: indices are disjoint across threads.
+                            unsafe { shared.write(i, i as u32 + 1) };
+                        }
+                    });
+                }
+            });
+        }
+        for (i, x) in buf.iter().enumerate() {
+            assert_eq!(*x, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn disjoint_subranges_sort_in_parallel() {
+        let mut buf: Vec<u32> = (0..100).rev().collect();
+        {
+            let shared = SharedSlice::new(&mut buf);
+            std::thread::scope(|s| {
+                for t in 0..4usize {
+                    let shared = &shared;
+                    s.spawn(move || {
+                        // SAFETY: [25t, 25t+25) ranges are disjoint.
+                        unsafe { shared.slice_mut(t * 25, t * 25 + 25) }.sort_unstable();
+                    });
+                }
+            });
+        }
+        for chunk in buf.chunks(25) {
+            assert!(chunk.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn get_mut_and_len() {
+        let mut buf = vec![5u64; 3];
+        let shared = SharedSlice::new(&mut buf);
+        assert_eq!(shared.len(), 3);
+        assert!(!shared.is_empty());
+        // SAFETY: single-threaded exclusive use.
+        unsafe { *shared.get_mut(1) += 1 };
+        assert_eq!(unsafe { *shared.get_mut(1) }, 6);
+    }
+}

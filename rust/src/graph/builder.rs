@@ -1,9 +1,59 @@
 //! Edge-list → CSR construction (counting sort by source).
+//!
+//! [`GraphBuilder::build`] is the serial reference;
+//! [`GraphBuilder::build_with_pool`] runs the same pipeline —
+//! per-chunk degree histograms → prefix sum → *stable* scatter →
+//! per-vertex adjacency sort — over a [`ThreadPool`], producing a
+//! bit-identical CSR (pinned by `tests/preprocess.rs`). Stability is
+//! what makes that possible: each edge's slot is `offsets[src] +
+//! (its rank among same-src edges in input order)`, which per-chunk
+//! histogram prefixes reproduce exactly regardless of thread count.
 
 use super::csr::{Csr, Graph};
 use super::Edge;
+use crate::exec::{SharedSlice, ThreadPool};
+use crate::util::div_ceil;
 use crate::util::sort::exclusive_prefix_sum;
 use crate::VertexId;
+
+/// Reborrow an optional pool so it can be threaded through several
+/// sequential parallel phases.
+fn reborrow<'a>(pool: &'a mut Option<&mut ThreadPool>) -> Option<&'a mut ThreadPool> {
+    pool.as_mut().map(|p| &mut **p)
+}
+
+/// Run `f(chunk)` for every chunk, on the pool when one with workers is
+/// available, inline otherwise.
+fn run_chunks<F: Fn(usize) + Sync>(pool: Option<&mut ThreadPool>, n_chunks: usize, f: F) {
+    match pool {
+        Some(p) if p.n_threads() > 1 => p.for_each_dynamic(n_chunks, 1, |c, _tid| f(c)),
+        _ => {
+            for c in 0..n_chunks {
+                f(c);
+            }
+        }
+    }
+}
+
+/// Like [`run_chunks`] but collecting owned per-chunk results in order.
+fn map_chunks<T: Send, F: Fn(usize) -> T + Sync>(
+    pool: Option<&mut ThreadPool>,
+    n_chunks: usize,
+    f: F,
+) -> Vec<T> {
+    match pool {
+        Some(p) if p.n_threads() > 1 => p.map_parts(n_chunks, f),
+        _ => (0..n_chunks).map(f).collect(),
+    }
+}
+
+/// Split `[0, n)` into `n_chunks` contiguous ranges (the trailing ones
+/// may be empty).
+fn chunk_ranges(n: usize, n_chunks: usize) -> Vec<std::ops::Range<usize>> {
+    let n_chunks = n_chunks.max(1);
+    let per = div_ceil(n, n_chunks).max(1);
+    (0..n_chunks).map(|c| (c * per).min(n)..((c + 1) * per).min(n)).collect()
+}
 
 /// Accumulates edges and finalizes into CSR with optional symmetrization,
 /// deduplication and self-loop removal.
@@ -71,75 +121,184 @@ impl GraphBuilder {
         self.edges.len()
     }
 
-    pub fn build(mut self) -> Graph {
+    /// Serial build.
+    pub fn build(self) -> Graph {
+        self.build_impl(None)
+    }
+
+    /// Parallel build over `pool` — every `O(E)` / `O(n)` pass (vertex
+    /// count, degree histogram, scatter, per-vertex sort, dedup) runs as
+    /// pool tasks. Bit-identical to [`build`] for any thread count.
+    pub fn build_with_pool(self, pool: &mut ThreadPool) -> Graph {
+        self.build_impl(Some(pool))
+    }
+
+    fn build_impl(mut self, mut pool: Option<&mut ThreadPool>) -> Graph {
         if self.drop_self_loops {
             self.edges.retain(|e| e.src != e.dst);
         }
         if self.symmetrize {
-            let rev: Vec<Edge> = self.edges.iter().map(|e| Edge::weighted(e.dst, e.src, e.weight)).collect();
+            let rev: Vec<Edge> =
+                self.edges.iter().map(|e| Edge::weighted(e.dst, e.src, e.weight)).collect();
             self.edges.extend(rev);
         }
-        let n = self
-            .edges
-            .iter()
-            .map(|e| e.src.max(e.dst) as usize + 1)
-            .max()
-            .unwrap_or(0)
-            .max(self.n);
-        // Counting sort by src.
+        let edges = std::mem::take(&mut self.edges);
+        let m = edges.len();
+        let n_chunks = match pool.as_ref() {
+            Some(p) if p.n_threads() > 1 => p.n_threads().min(m.max(1)),
+            _ => 1,
+        };
+        let e_ranges = chunk_ranges(m, n_chunks);
+
+        let n = map_chunks(reborrow(&mut pool), n_chunks, |c| {
+            edges[e_ranges[c].clone()]
+                .iter()
+                .map(|e| e.src.max(e.dst) as usize + 1)
+                .max()
+                .unwrap_or(0)
+        })
+        .into_iter()
+        .max()
+        .unwrap_or(0)
+        .max(self.n);
+
+        // Counting sort by src, phase 1: per-chunk degree histograms.
+        let mut hists: Vec<Vec<u32>> = map_chunks(reborrow(&mut pool), n_chunks, |c| {
+            let mut h = vec![0u32; n];
+            for e in &edges[e_ranges[c].clone()] {
+                h[e.src as usize] += 1;
+            }
+            h
+        });
+
+        // Phase 2 (serial, O(n_chunks * n)): turn each chunk's count
+        // into its stable start rank (edges of `v` in earlier chunks),
+        // and accumulate global offsets.
         let mut offsets = vec![0u64; n + 1];
-        for e in &self.edges {
-            offsets[e.src as usize] += 1;
+        for v in 0..n {
+            let mut run = 0u64;
+            for h in hists.iter_mut() {
+                let cnt = h[v] as u64;
+                // Hard assert: the disjoint-slot safety of the unsafe
+                // scatter below relies on these ranks not wrapping.
+                assert!(run <= u32::MAX as u64, "per-vertex degree exceeds u32");
+                h[v] = run as u32;
+                run += cnt;
+            }
+            offsets[v] = run;
         }
         let total = exclusive_prefix_sum(&mut offsets[..n]);
         offsets[n] = total;
-        let mut cursor = offsets[..n].to_vec();
-        let mut targets = vec![0 as VertexId; self.edges.len()];
-        let mut weights = if self.weighted { Some(vec![0f32; self.edges.len()]) } else { None };
-        for e in &self.edges {
-            let slot = cursor[e.src as usize] as usize;
-            targets[slot] = e.dst;
-            if let Some(w) = &mut weights {
-                w[slot] = e.weight;
-            }
-            cursor[e.src as usize] += 1;
-        }
-        // Sort each adjacency list (and optionally dedup).
-        let mut final_offsets = vec![0u64; n + 1];
-        if self.dedup {
-            let mut new_targets = Vec::with_capacity(targets.len());
-            let mut new_weights = weights.as_ref().map(|_| Vec::with_capacity(targets.len()));
-            for v in 0..n {
-                let lo = offsets[v] as usize;
-                let hi = offsets[v + 1] as usize;
-                let mut adj: Vec<(VertexId, f32)> = (lo..hi)
-                    .map(|i| (targets[i], weights.as_ref().map_or(1.0, |w| w[i])))
-                    .collect();
-                adj.sort_by_key(|&(t, _)| t);
-                adj.dedup_by_key(|&mut (t, _)| t);
-                final_offsets[v + 1] = final_offsets[v] + adj.len() as u64;
-                for (t, w) in adj {
-                    new_targets.push(t);
-                    if let Some(nw) = &mut new_weights {
-                        nw.push(w);
+        debug_assert_eq!(total as usize, m);
+
+        // Phase 3: stable parallel scatter — chunk `c` places its edges
+        // at offsets[src] + (rank before chunk c) + (rank within chunk),
+        // exactly the slot the serial input-order scatter assigns.
+        let mut targets = vec![0 as VertexId; m];
+        let mut weights = if self.weighted { Some(vec![0f32; m]) } else { None };
+        {
+            let t_slots = SharedSlice::new(&mut targets);
+            let w_slots = weights.as_mut().map(|w| SharedSlice::new(&mut w[..]));
+            let cursors = SharedSlice::new(&mut hists);
+            run_chunks(reborrow(&mut pool), n_chunks, |c| {
+                // SAFETY: chunk c exclusively owns hists[c]; edge slots
+                // are globally unique by the stable-rank construction.
+                let cur = unsafe { cursors.get_mut(c) };
+                for e in &edges[e_ranges[c].clone()] {
+                    let v = e.src as usize;
+                    let slot = (offsets[v] + cur[v] as u64) as usize;
+                    cur[v] += 1;
+                    unsafe {
+                        t_slots.write(slot, e.dst);
+                        if let Some(w) = &w_slots {
+                            w.write(slot, e.weight);
+                        }
                     }
                 }
+            });
+        }
+        drop(hists);
+        drop(edges);
+
+        // Per-vertex adjacency passes are chunked over vertices.
+        let v_ranges = chunk_ranges(n, n_chunks * 4);
+
+        if self.dedup {
+            // Each vertex chunk independently sorts + dedups its
+            // adjacency lists into an owned block, then blocks are
+            // concatenated in order (deterministic, == serial).
+            let blocks: Vec<(Vec<VertexId>, Vec<f32>, Vec<u32>)> =
+                map_chunks(reborrow(&mut pool), v_ranges.len(), |c| {
+                    let mut ts = Vec::new();
+                    let mut ws = Vec::new();
+                    let mut lens = Vec::with_capacity(v_ranges[c].len());
+                    for v in v_ranges[c].clone() {
+                        let lo = offsets[v] as usize;
+                        let hi = offsets[v + 1] as usize;
+                        let mut adj: Vec<(VertexId, f32)> = (lo..hi)
+                            .map(|i| (targets[i], weights.as_ref().map_or(1.0, |w| w[i])))
+                            .collect();
+                        adj.sort_by_key(|&(t, _)| t);
+                        adj.dedup_by_key(|&mut (t, _)| t);
+                        lens.push(adj.len() as u32);
+                        for (t, w) in adj {
+                            ts.push(t);
+                            if self.weighted {
+                                ws.push(w);
+                            }
+                        }
+                    }
+                    (ts, ws, lens)
+                });
+            let mut final_offsets = vec![0u64; n + 1];
+            let mut new_targets = Vec::with_capacity(m);
+            let mut new_weights = self.weighted.then(|| Vec::with_capacity(m));
+            let mut v = 0usize;
+            for (ts, ws, lens) in blocks {
+                for len in lens {
+                    final_offsets[v + 1] = final_offsets[v] + len as u64;
+                    v += 1;
+                }
+                new_targets.extend_from_slice(&ts);
+                if let Some(nw) = &mut new_weights {
+                    nw.extend_from_slice(&ws);
+                }
             }
+            debug_assert_eq!(v, n);
             return Graph::from_csr(Csr::new(n, final_offsets, new_targets, new_weights));
         }
-        for v in 0..n {
-            let lo = offsets[v] as usize;
-            let hi = offsets[v + 1] as usize;
-            if let Some(w) = &mut weights {
-                let mut adj: Vec<(VertexId, f32)> = (lo..hi).map(|i| (targets[i], w[i])).collect();
-                adj.sort_by_key(|&(t, _)| t);
-                for (k, (t, wt)) in adj.into_iter().enumerate() {
-                    targets[lo + k] = t;
-                    w[lo + k] = wt;
+
+        // Sort each adjacency list in place (disjoint slices per vertex).
+        {
+            let t_slots = SharedSlice::new(&mut targets);
+            let w_slots = weights.as_mut().map(|w| SharedSlice::new(&mut w[..]));
+            run_chunks(reborrow(&mut pool), v_ranges.len(), |c| {
+                for v in v_ranges[c].clone() {
+                    let lo = offsets[v] as usize;
+                    let hi = offsets[v + 1] as usize;
+                    if hi - lo <= 1 {
+                        continue;
+                    }
+                    // SAFETY: vertex ranges are disjoint across chunks,
+                    // and [lo, hi) slices are disjoint across vertices.
+                    unsafe {
+                        match &w_slots {
+                            Some(w) => {
+                                let tv = t_slots.slice_mut(lo, hi);
+                                let wv = w.slice_mut(lo, hi);
+                                let mut adj: Vec<(VertexId, f32)> =
+                                    tv.iter().copied().zip(wv.iter().copied()).collect();
+                                adj.sort_by_key(|&(t, _)| t);
+                                for (i, (t, wt)) in adj.into_iter().enumerate() {
+                                    tv[i] = t;
+                                    wv[i] = wt;
+                                }
+                            }
+                            None => t_slots.slice_mut(lo, hi).sort_unstable(),
+                        }
+                    }
                 }
-            } else {
-                targets[lo..hi].sort_unstable();
-            }
+            });
         }
         Graph::from_csr(Csr::new(n, offsets, targets, weights))
     }
@@ -217,5 +376,77 @@ mod tests {
         let g = GraphBuilder::new().with_n(5).build();
         assert_eq!(g.n(), 5);
         assert_eq!(g.m(), 0);
+    }
+
+    fn random_edges(seed: u64, n: usize, m: usize) -> Vec<Edge> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..m)
+            .map(|_| {
+                Edge::weighted(
+                    rng.below(n as u64) as VertexId,
+                    rng.below(n as u64) as VertexId,
+                    rng.next_f32(),
+                )
+            })
+            .collect()
+    }
+
+    fn assert_same_graph(a: &Graph, b: &Graph, ctx: &str) {
+        assert_eq!(a.n(), b.n(), "{ctx}: n");
+        assert_eq!(a.out().offsets(), b.out().offsets(), "{ctx}: offsets");
+        assert_eq!(a.out().targets(), b.out().targets(), "{ctx}: targets");
+        let (wa, wb) = (a.out().weights(), b.out().weights());
+        assert_eq!(wa.map(|w| w.iter().map(|x| x.to_bits()).collect::<Vec<_>>()),
+                   wb.map(|w| w.iter().map(|x| x.to_bits()).collect::<Vec<_>>()),
+                   "{ctx}: weights");
+    }
+
+    #[test]
+    fn parallel_build_bit_identical_to_serial() {
+        for t in [1usize, 2, 4] {
+            for (weighted, dedup, sym) in [
+                (false, false, false),
+                (true, false, false),
+                (true, true, false),
+                (false, true, true),
+            ] {
+                let edges = random_edges(0xBEEF + t as u64, 97, 900);
+                let make = || {
+                    let mut b = GraphBuilder::new().with_n(120);
+                    if weighted {
+                        b = b.weighted();
+                    }
+                    if dedup {
+                        b = b.dedup();
+                    }
+                    if sym {
+                        b = b.symmetrize().drop_self_loops();
+                    }
+                    b.extend(edges.iter().copied());
+                    b
+                };
+                let serial = make().build();
+                let mut pool = ThreadPool::new(t);
+                let par = make().build_with_pool(&mut pool);
+                assert_same_graph(
+                    &serial,
+                    &par,
+                    &format!("t={t} weighted={weighted} dedup={dedup} sym={sym}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_empty_and_tiny() {
+        let mut pool = ThreadPool::new(4);
+        let g = GraphBuilder::new().with_n(5).build_with_pool(&mut pool);
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 0);
+        let mut b = GraphBuilder::new();
+        b.add(0, 1);
+        let g = b.build_with_pool(&mut pool);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.out().neighbors(0), &[1]);
     }
 }

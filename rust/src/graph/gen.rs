@@ -9,8 +9,36 @@
 use super::builder::GraphBuilder;
 use super::csr::Graph;
 use super::Edge;
+use crate::exec::ThreadPool;
 use crate::util::rng::Rng;
 use crate::VertexId;
+
+/// Edges drawn per RNG chunk. The random generators draw chunk `c` from
+/// its own `Rng::stream(seed, c)`, so the edge list is identical whether
+/// chunks are generated serially or on a pool — and independent of the
+/// pool's thread count (pinned by `tests/preprocess.rs`).
+const GEN_CHUNK: usize = 1 << 16;
+
+/// Generate `m` edges in deterministic RNG chunks, optionally in
+/// parallel.
+fn gen_edges<F: Fn(&mut Rng) -> Edge + Sync>(
+    m: usize,
+    seed: u64,
+    pool: Option<&mut ThreadPool>,
+    f: F,
+) -> Vec<Vec<Edge>> {
+    let n_chunks = crate::util::div_ceil(m, GEN_CHUNK);
+    let gen_one = |c: usize| {
+        let lo = c * GEN_CHUNK;
+        let hi = (lo + GEN_CHUNK).min(m);
+        let mut rng = Rng::stream(seed, c as u64);
+        (lo..hi).map(|_| f(&mut rng)).collect::<Vec<Edge>>()
+    };
+    match pool {
+        Some(p) if p.n_threads() > 1 => p.map_parts(n_chunks, gen_one),
+        _ => (0..n_chunks).map(gen_one).collect(),
+    }
+}
 
 /// Graph500 RMAT parameters.
 #[derive(Clone, Copy, Debug)]
@@ -33,19 +61,37 @@ impl Default for RmatParams {
 /// and adjacency lists are sorted; parallel edges are kept (as Graph500
 /// does) unless `dedup`.
 pub fn rmat(scale: u32, params: RmatParams, dedup: bool) -> Graph {
+    rmat_impl(scale, params, dedup, None)
+}
+
+/// [`rmat`] with edge generation and CSR construction parallelized over
+/// `pool`; the resulting graph is identical to the serial one.
+pub fn rmat_par(scale: u32, params: RmatParams, dedup: bool, pool: &mut ThreadPool) -> Graph {
+    rmat_impl(scale, params, dedup, Some(pool))
+}
+
+fn rmat_impl(
+    scale: u32,
+    params: RmatParams,
+    dedup: bool,
+    mut pool: Option<&mut ThreadPool>,
+) -> Graph {
     let n = 1usize << scale;
     let m = n * params.edge_factor;
-    let mut rng = Rng::new(params.seed);
     let mut b = GraphBuilder::new().with_n(n).drop_self_loops();
     if dedup {
         b = b.dedup();
     }
-    let mut edges = Vec::with_capacity(m);
-    for _ in 0..m {
-        edges.push(rmat_edge(scale, &params, &mut rng));
+    let chunks = gen_edges(m, params.seed, pool.as_mut().map(|p| &mut **p), |rng| {
+        rmat_edge(scale, &params, rng)
+    });
+    for chunk in chunks {
+        b.extend(chunk);
     }
-    b.extend(edges);
-    b.build()
+    match pool {
+        Some(p) => b.build_with_pool(p),
+        None => b.build(),
+    }
 }
 
 fn rmat_edge(scale: u32, p: &RmatParams, rng: &mut Rng) -> Edge {
@@ -71,16 +117,30 @@ fn rmat_edge(scale: u32, p: &RmatParams, rng: &mut Rng) -> Edge {
 
 /// Erdős–Rényi G(n, m): m uniform random directed edges.
 pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Graph {
-    let mut rng = Rng::new(seed);
+    erdos_renyi_impl(n, m, seed, None)
+}
+
+/// [`erdos_renyi`] with edge generation and CSR construction
+/// parallelized over `pool`; the resulting graph is identical to the
+/// serial one.
+pub fn erdos_renyi_par(n: usize, m: usize, seed: u64, pool: &mut ThreadPool) -> Graph {
+    erdos_renyi_impl(n, m, seed, Some(pool))
+}
+
+fn erdos_renyi_impl(n: usize, m: usize, seed: u64, mut pool: Option<&mut ThreadPool>) -> Graph {
     let mut b = GraphBuilder::new().with_n(n).drop_self_loops();
-    let mut edges = Vec::with_capacity(m);
-    for _ in 0..m {
+    let chunks = gen_edges(m, seed, pool.as_mut().map(|p| &mut **p), |rng| {
         let s = rng.below(n as u64) as VertexId;
         let d = rng.below(n as u64) as VertexId;
-        edges.push(Edge::new(s, d));
+        Edge::new(s, d)
+    });
+    for chunk in chunks {
+        b.extend(chunk);
     }
-    b.extend(edges);
-    b.build()
+    match pool {
+        Some(p) => b.build_with_pool(p),
+        None => b.build(),
+    }
 }
 
 /// A directed chain 0 -> 1 -> ... -> n-1 (worst-case diameter; exercises
@@ -163,6 +223,21 @@ mod tests {
         // Self-loops dropped, so m <= n * 16.
         assert!(g.m() <= 1024 * 16);
         assert!(g.m() > 1024 * 12, "most RMAT edges should survive");
+    }
+
+    #[test]
+    fn parallel_generators_match_serial() {
+        for t in [1usize, 2, 4] {
+            let mut pool = ThreadPool::new(t);
+            let a = rmat(9, RmatParams::default(), false);
+            let b = rmat_par(9, RmatParams::default(), false, &mut pool);
+            assert_eq!(a.out().offsets(), b.out().offsets(), "rmat offsets, t={t}");
+            assert_eq!(a.out().targets(), b.out().targets(), "rmat targets, t={t}");
+            let a = erdos_renyi(700, 5000, 3);
+            let b = erdos_renyi_par(700, 5000, 3, &mut pool);
+            assert_eq!(a.out().offsets(), b.out().offsets(), "er offsets, t={t}");
+            assert_eq!(a.out().targets(), b.out().targets(), "er targets, t={t}");
+        }
     }
 
     #[test]

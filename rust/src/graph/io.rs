@@ -98,28 +98,76 @@ pub fn write_binary(g: &Graph, path: &Path) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Read a binary CSR, treating the file as *untrusted*: header counts
+/// are validated against the actual file size **before** any allocation
+/// (a truncated or corrupt header cannot demand a multi-GiB buffer),
+/// and the payload is structurally validated (monotone offsets ending
+/// at `m`, every target `< n`). Any violation is an
+/// [`std::io::ErrorKind::InvalidData`] error, never a panic or abort.
 pub fn read_binary(path: &Path) -> std::io::Result<Graph> {
-    let mut r = BufReader::new(File::open(path)?);
+    fn bad(msg: String) -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+    }
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+        return Err(bad("bad magic".into()));
     }
-    let n = read_u64(&mut r)? as usize;
-    let m = read_u64(&mut r)? as usize;
+    let n = read_u64(&mut r)?;
+    let m = read_u64(&mut r)?;
     let mut flag = [0u8; 1];
     r.read_exact(&mut flag)?;
+    if flag[0] > 1 {
+        return Err(bad(format!("weight flag must be 0 or 1 (got {})", flag[0])));
+    }
+    let weighted = flag[0] == 1;
+    if n > u32::MAX as u64 {
+        return Err(bad(format!("vertex count {n} exceeds the u32 id space")));
+    }
+    // Header + (n+1) u64 offsets + m u32 targets (+ m f32 weights).
+    let header = 8u64 + 8 + 8 + 1;
+    let per_edge = if weighted { 8u64 } else { 4 };
+    let expected = n
+        .checked_add(1)
+        .and_then(|x| x.checked_mul(8))
+        .and_then(|x| x.checked_add(header))
+        .and_then(|x| m.checked_mul(per_edge).and_then(|y| x.checked_add(y)))
+        .ok_or_else(|| bad(format!("header counts overflow (n={n}, m={m})")))?;
+    if expected != file_len {
+        return Err(bad(format!(
+            "file is {file_len} bytes but header (n={n}, m={m}, weighted={weighted}) \
+             implies {expected} — truncated or corrupt"
+        )));
+    }
+    let (n, m) = (n as usize, m as usize);
     let mut offsets = vec![0u64; n + 1];
-    for o in offsets.iter_mut() {
-        *o = read_u64(&mut r)?;
+    for (i, o) in offsets.iter_mut().enumerate() {
+        let v = read_u64(&mut r)?;
+        if i == 0 && v != 0 {
+            return Err(bad(format!("offsets[0] must be 0 (got {v})")));
+        }
+        *o = v;
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        return Err(bad("offsets are not monotone non-decreasing".into()));
+    }
+    if offsets[n] != m as u64 {
+        return Err(bad(format!("offsets[n] = {} but header says m = {m}", offsets[n])));
     }
     let mut targets = vec![0 as VertexId; m];
     for t in targets.iter_mut() {
         let mut b = [0u8; 4];
         r.read_exact(&mut b)?;
-        *t = u32::from_le_bytes(b);
+        let v = u32::from_le_bytes(b);
+        if v as u64 >= n as u64 {
+            return Err(bad(format!("edge target {v} out of range (n = {n})")));
+        }
+        *t = v;
     }
-    let weights = if flag[0] == 1 {
+    let weights = if weighted {
         let mut ws = vec![0f32; m];
         for x in ws.iter_mut() {
             let mut b = [0u8; 4];
@@ -209,5 +257,79 @@ mod tests {
         std::fs::write(&p, b"NOTMAGIC........").unwrap();
         assert!(read_binary(&p).is_err());
         std::fs::remove_file(&p).unwrap();
+    }
+
+    /// Write a valid file, apply `corrupt` to its bytes, and expect
+    /// `InvalidData` (not a panic, not an abort, not a giant alloc).
+    fn expect_invalid(name: &str, corrupt: impl FnOnce(&mut Vec<u8>)) {
+        let g = gen::erdos_renyi(60, 300, 13);
+        let p = tmp(name);
+        write_binary(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        corrupt(&mut bytes);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_binary(&p).expect_err(name);
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{name}: {err}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn binary_truncated_file_rejected() {
+        expect_invalid("trunc.bin", |b| {
+            let keep = b.len() - 10;
+            b.truncate(keep);
+        });
+    }
+
+    #[test]
+    fn binary_oversized_vertex_count_rejected() {
+        // A tiny file whose header demands a multi-GiB offsets array
+        // must be rejected BEFORE allocating (this aborted pre-fix).
+        expect_invalid("huge_n.bin", |b| {
+            b[8..16].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        });
+        // n beyond the u32 id space is invalid even if sizes matched.
+        expect_invalid("u32_overflow_n.bin", |b| {
+            b[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        });
+    }
+
+    #[test]
+    fn binary_non_monotone_offsets_rejected() {
+        // offsets start right after the 25-byte header; make the second
+        // entry larger than the third.
+        expect_invalid("nonmono.bin", |b| {
+            b[25 + 8..25 + 16].copy_from_slice(&u32::MAX.to_le_bytes().repeat(2));
+        });
+    }
+
+    #[test]
+    fn binary_out_of_range_target_rejected() {
+        expect_invalid("badtarget.bin", |b| {
+            let g_n = 60u64;
+            // First target lives after header + (n+1) offsets.
+            let pos = 25 + (g_n as usize + 1) * 8;
+            b[pos..pos + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        });
+    }
+
+    #[test]
+    fn binary_bad_weight_flag_rejected() {
+        expect_invalid("badflag.bin", |b| {
+            b[24] = 7;
+        });
+    }
+
+    #[test]
+    fn binary_mismatched_edge_total_rejected() {
+        // offsets[n] != m: grow the last offset while keeping monotone.
+        expect_invalid("edgetotal.bin", |b| {
+            let g_n = 60usize;
+            let pos = 25 + g_n * 8; // offsets[n]
+            let mut last = [0u8; 8];
+            last.copy_from_slice(&b[pos..pos + 8]);
+            let v = u64::from_le_bytes(last) + 1;
+            b[pos..pos + 8].copy_from_slice(&v.to_le_bytes());
+        });
     }
 }

@@ -102,8 +102,9 @@ pub enum Mode {
 
 /// The immutable, pre-processed half of one bin: the PNG segment and the
 /// pre-written DC destination stream. Shared read-only by every engine
-/// built from the same [`BinLayout`].
-#[derive(Clone, Debug, Default)]
+/// built from the same [`BinLayout`]. `PartialEq` exists so tests can
+/// pin parallel builds bit-identical to serial ones.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct StaticBin {
     /// Pre-written DC-mode destination id stream (MSB-delimited for
     /// unweighted graphs, flat per-edge for weighted).
@@ -208,7 +209,7 @@ impl<'a, M: Payload> Iterator for MessageIter<'a, M> {
 
 /// Static (pre-processed) per-partition totals used by the §3.3 cost
 /// model and the engine.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct PartMeta {
     /// Total out-edges of the partition (`E^p`).
     pub edges: u64,
@@ -222,6 +223,7 @@ pub struct PartMeta {
 /// CSR computes bin sizes, the PNG layout and `dc_bin` contents. `O(E)`
 /// work, done once per (graph, partitioning) and shared — via
 /// `Arc<BinLayout>` — by every engine a session checks out.
+#[derive(PartialEq)]
 pub struct BinLayout {
     k: usize,
     weighted: bool,
@@ -229,61 +231,94 @@ pub struct BinLayout {
     meta: Vec<PartMeta>,
 }
 
+/// Build partition `p`'s bin row and meta — the §4 scan restricted to
+/// one partition. Row `p` touches only `bins[p*k..(p+1)*k]` and
+/// `meta[p]`, which is what makes rows embarrassingly parallel: the
+/// serial [`BinLayout::build`] and parallel [`BinLayout::build_par`]
+/// both reduce to this pure function, so their outputs are identical by
+/// construction (and pinned bit-identical by `tests/preprocess.rs`).
+fn build_row(graph: &Graph, parts: &Partitioner, p: usize) -> (Vec<StaticBin>, PartMeta) {
+    let k = parts.k();
+    let weighted = graph.is_weighted();
+    let csr = graph.out();
+    let mut row: Vec<StaticBin> = vec![StaticBin::default(); k];
+    let mut m = PartMeta::default();
+    for v in parts.range(p as PartId) {
+        let adj = csr.neighbors(v);
+        let wts = csr.edge_weights(v);
+        let mut e = 0usize;
+        while e < adj.len() {
+            // Adjacency is sorted, so destinations in the same
+            // partition form a contiguous run.
+            let pj = parts.part_of(adj[e]) as usize;
+            let mut run_end = e + 1;
+            while run_end < adj.len() && parts.part_of(adj[run_end]) as usize == pj {
+                run_end += 1;
+            }
+            let bin = &mut row[pj];
+            if bin.n_edges == 0 {
+                m.neighbor_parts.push(pj as PartId);
+            }
+            let run = (run_end - e) as u32;
+            bin.n_edges += run;
+            if weighted {
+                bin.n_msgs += run;
+                bin.dc_srcs.push(v);
+                bin.dc_cnts.push(run);
+                for t in e..run_end {
+                    bin.dc_ids.push(adj[t]);
+                    bin.dc_wts.push(wts.unwrap()[t]);
+                }
+            } else {
+                bin.n_msgs += 1;
+                bin.dc_srcs.push(v);
+                bin.dc_ids.push(adj[e] | MSG_START);
+                for t in e + 1..run_end {
+                    bin.dc_ids.push(adj[t]);
+                }
+            }
+            e = run_end;
+        }
+        m.edges += adj.len() as u64;
+    }
+    m.msgs = row.iter().map(|b| b.n_msgs as u64).sum();
+    (row, m)
+}
+
 impl BinLayout {
-    /// Run the `O(E)` pre-processing scan. Increments the calling
-    /// thread's [`layout_builds`] counter so tests can assert
+    /// Run the `O(E)` pre-processing scan serially. Increments the
+    /// calling thread's [`layout_builds`] counter so tests can assert
     /// amortization.
     pub fn build(graph: &Graph, parts: &Partitioner) -> Self {
         LAYOUT_BUILDS.with(|c| c.set(c.get() + 1));
-        let k = parts.k();
-        let weighted = graph.is_weighted();
-        let csr = graph.out();
-        let mut bins: Vec<StaticBin> = vec![StaticBin::default(); k * k];
-        let mut meta = vec![PartMeta::default(); k];
+        let rows = (0..parts.k()).map(|p| build_row(graph, parts, p)).collect();
+        Self::assemble(graph, parts, rows)
+    }
 
-        for p in 0..k {
-            let m = &mut meta[p];
-            for v in parts.range(p as PartId) {
-                let adj = csr.neighbors(v);
-                let wts = csr.edge_weights(v);
-                let mut e = 0usize;
-                while e < adj.len() {
-                    // Adjacency is sorted, so destinations in the same
-                    // partition form a contiguous run.
-                    let pj = parts.part_of(adj[e]) as usize;
-                    let mut run_end = e + 1;
-                    while run_end < adj.len() && parts.part_of(adj[run_end]) as usize == pj {
-                        run_end += 1;
-                    }
-                    let bin = &mut bins[p * k + pj];
-                    if bin.n_edges == 0 {
-                        m.neighbor_parts.push(pj as PartId);
-                    }
-                    let run = (run_end - e) as u32;
-                    bin.n_edges += run;
-                    if weighted {
-                        bin.n_msgs += run;
-                        bin.dc_srcs.push(v);
-                        bin.dc_cnts.push(run);
-                        for t in e..run_end {
-                            bin.dc_ids.push(adj[t]);
-                            bin.dc_wts.push(wts.unwrap()[t]);
-                        }
-                    } else {
-                        bin.n_msgs += 1;
-                        bin.dc_srcs.push(v);
-                        bin.dc_ids.push(adj[e] | MSG_START);
-                        for t in e + 1..run_end {
-                            bin.dc_ids.push(adj[t]);
-                        }
-                    }
-                    e = run_end;
-                }
-                m.edges += adj.len() as u64;
-            }
-            m.msgs = (0..k).map(|j| bins[p * k + j].n_msgs as u64).sum();
+    /// Run the `O(E)` pre-processing scan in parallel over `pool`: one
+    /// dynamic task per partition row (rows are disjoint — see
+    /// [`build_row`]). Produces a layout bit-identical to [`build`].
+    /// Counts as one [`layout_builds`] on the calling thread.
+    pub fn build_par(
+        graph: &Graph,
+        parts: &Partitioner,
+        pool: &mut crate::exec::ThreadPool,
+    ) -> Self {
+        LAYOUT_BUILDS.with(|c| c.set(c.get() + 1));
+        let rows = pool.map_parts(parts.k(), |p| build_row(graph, parts, p));
+        Self::assemble(graph, parts, rows)
+    }
+
+    fn assemble(graph: &Graph, parts: &Partitioner, rows: Vec<(Vec<StaticBin>, PartMeta)>) -> Self {
+        let k = parts.k();
+        let mut bins = Vec::with_capacity(k * k);
+        let mut meta = Vec::with_capacity(k);
+        for (row, m) in rows {
+            debug_assert_eq!(row.len(), k);
+            bins.extend(row);
+            meta.push(m);
         }
-        Self { k, weighted, bins, meta }
+        Self { k, weighted: graph.is_weighted(), bins, meta }
     }
 
     #[inline]
@@ -578,6 +613,33 @@ mod tests {
         assert_eq!(dc_total, g.m() as u64);
         let meta_total: u64 = (0..8).map(|p| layout.meta(p).edges).sum();
         assert_eq!(meta_total, g.m() as u64);
+    }
+
+    #[test]
+    fn parallel_build_matches_serial_bit_for_bit() {
+        use crate::exec::ThreadPool;
+        for (g, k) in [
+            (gen::rmat(8, Default::default(), false), 8usize),
+            (gen::with_uniform_weights(&gen::erdos_renyi(300, 2400, 5), 1.0, 4.0, 7), 7),
+            (gen::chain(50), 3),
+        ] {
+            let parts = Partitioner::with_k(g.n(), k);
+            let serial = BinLayout::build(&g, &parts);
+            for t in [1usize, 2, 4] {
+                let mut pool = ThreadPool::new(t);
+                let par = BinLayout::build_par(&g, &parts, &mut pool);
+                assert!(par == serial, "parallel build (t={t}, k={k}) diverged from serial");
+            }
+        }
+    }
+
+    #[test]
+    fn build_par_counts_one_layout_build() {
+        let (g, parts) = small();
+        let mut pool = crate::exec::ThreadPool::new(4);
+        let before = layout_builds();
+        let _ = BinLayout::build_par(&g, &parts, &mut pool);
+        assert_eq!(layout_builds(), before + 1, "one build, counted on the calling thread");
     }
 
     #[test]

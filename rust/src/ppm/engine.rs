@@ -53,6 +53,33 @@ impl PpmConfig {
         Self { threads, ..Default::default() }
     }
 
+    /// Check the configuration for values that would otherwise surface
+    /// as assert backtraces deep in the pool or partitioner (e.g.
+    /// `--threads 0`, a zero dynamic-scheduling `chunk`). The CLI calls
+    /// this and reports the message as a usage error; the library
+    /// constructors call it and panic with the same message.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.threads == 0 {
+            return Err("threads must be >= 1 (the caller participates as thread 0)".into());
+        }
+        if self.chunk == 0 {
+            return Err("chunk must be >= 1 (dynamic scheduling grabs >= 1 partition)".into());
+        }
+        if self.bw_ratio.is_nan() || self.bw_ratio <= 0.0 {
+            return Err(format!("bw-ratio must be positive (got {})", self.bw_ratio));
+        }
+        if self.k == Some(0) {
+            return Err("k must be >= 1 (at least one partition)".into());
+        }
+        if self.cache_bytes == 0 {
+            return Err("cache-bytes must be >= 1".into());
+        }
+        if self.bytes_per_vertex == 0 {
+            return Err("bytes-per-vertex must be >= 1".into());
+        }
+        Ok(())
+    }
+
     /// The partitioning this configuration induces for an `n`-vertex
     /// graph: the explicit `k` override, or the paper §3.1 heuristic.
     /// Factored out so [`Engine`] and
@@ -62,6 +89,28 @@ impl PpmConfig {
             Some(k) => Partitioner::with_k(n, k),
             None => Partitioner::auto(n, self.threads, self.cache_bytes, self.bytes_per_vertex),
         }
+    }
+}
+
+/// Wall-clock breakdown of the one-time §4 pre-processing pipeline
+/// (partitioning + the `O(E)` [`BinLayout`] scan). Zero for engines
+/// built over a prebuilt layout ([`Engine::with_layout`]) — the cost was
+/// paid elsewhere, typically by the owning
+/// [`EngineSession`](crate::api::EngineSession).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildStats {
+    /// Seconds computing the §3.1 partitioning.
+    pub t_partition: f64,
+    /// Seconds in the `O(E)` layout scan (PNG + pre-written DC streams).
+    pub t_layout: f64,
+    /// Threads the layout build ran on.
+    pub threads: usize,
+}
+
+impl BuildStats {
+    /// Total pre-processing seconds (partition + layout build).
+    pub fn t_preprocess(&self) -> f64 {
+        self.t_partition + self.t_layout
     }
 }
 
@@ -128,18 +177,31 @@ pub struct Engine {
     pool: ThreadPool,
     config: PpmConfig,
     costs: Vec<PartCost>,
+    build: BuildStats,
     iter: usize,
 }
 
 impl Engine {
-    /// Build an engine, running the `O(E)` pre-processing scan. Accepts
-    /// either a `Graph` (moved, never cloned) or an `Arc<Graph>` (shared
-    /// with the caller).
+    /// Build an engine, running the `O(E)` pre-processing scan *on the
+    /// engine's own thread pool* (the scan is parallel over partition
+    /// rows — see [`BinLayout::build_par`]). Accepts either a `Graph`
+    /// (moved, never cloned) or an `Arc<Graph>` (shared with the
+    /// caller).
     pub fn new(graph: impl Into<Arc<Graph>>, config: PpmConfig) -> Self {
+        config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
         let graph = graph.into();
+        let t0 = Instant::now();
         let parts = config.partitioner(graph.n());
-        let layout = Arc::new(BinLayout::build(&graph, &parts));
-        Self::with_layout(graph, parts, layout, config)
+        let t_partition = t0.elapsed().as_secs_f64();
+        let mut pool = ThreadPool::new(config.threads);
+        let t1 = Instant::now();
+        let layout = Arc::new(BinLayout::build_par(&graph, &parts, &mut pool));
+        let build = BuildStats {
+            t_partition,
+            t_layout: t1.elapsed().as_secs_f64(),
+            threads: config.threads,
+        };
+        Self::from_parts(graph, parts, layout, config, pool, build)
     }
 
     /// Build an engine around a prebuilt partitioning + bin layout —
@@ -151,9 +213,25 @@ impl Engine {
         layout: Arc<BinLayout>,
         config: PpmConfig,
     ) -> Self {
-        assert!(config.threads >= 1);
-        assert!(config.bw_ratio > 0.0);
+        config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
+        let pool = ThreadPool::new(config.threads);
+        Self::from_parts(graph, parts, layout, config, pool, BuildStats::default())
+    }
+
+    /// Assemble an engine from fully prebuilt pieces, reusing `pool`
+    /// (e.g. the pool that just ran pre-processing) instead of spawning
+    /// a fresh worker team.
+    pub(crate) fn from_parts(
+        graph: Arc<Graph>,
+        parts: Partitioner,
+        layout: Arc<BinLayout>,
+        config: PpmConfig,
+        pool: ThreadPool,
+        build: BuildStats,
+    ) -> Self {
+        config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
         assert_eq!(parts.k(), layout.k(), "partitioner and layout disagree on k");
+        assert_eq!(pool.n_threads(), config.threads, "pool size must match config.threads");
         let grid = BinGrid::from_layout(layout);
         let k = parts.k();
         let costs = (0..k)
@@ -163,8 +241,7 @@ impl Engine {
             })
             .collect();
         let active = ActiveState::new(&parts);
-        let pool = ThreadPool::new(config.threads);
-        Self { graph, parts, grid, active, pool, config, costs, iter: 0 }
+        Self { graph, parts, grid, active, pool, config, costs, build, iter: 0 }
     }
 
     #[inline]
@@ -192,6 +269,13 @@ impl Engine {
     #[inline]
     pub fn config(&self) -> &PpmConfig {
         &self.config
+    }
+
+    /// Pre-processing cost paid by *this* engine (zero when built over a
+    /// shared layout — see [`BuildStats`]).
+    #[inline]
+    pub fn build_stats(&self) -> BuildStats {
+        self.build
     }
 
     pub fn set_mode_policy(&mut self, mode: ModePolicy) {
@@ -920,6 +1004,33 @@ mod tests {
         assert_eq!(s.sc_parts, 0);
         assert!(s.dc_parts >= 1);
         assert_eq!(s.frontier, 1);
+    }
+
+    #[test]
+    fn config_validate_rejects_degenerate_values() {
+        assert!(PpmConfig::default().validate().is_ok());
+        assert!(PpmConfig { threads: 0, ..Default::default() }.validate().is_err());
+        assert!(PpmConfig { chunk: 0, ..Default::default() }.validate().is_err());
+        assert!(PpmConfig { bw_ratio: 0.0, ..Default::default() }.validate().is_err());
+        assert!(PpmConfig { bw_ratio: f64::NAN, ..Default::default() }.validate().is_err());
+        assert!(PpmConfig { k: Some(0), ..Default::default() }.validate().is_err());
+        assert!(PpmConfig { cache_bytes: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn engine_new_records_parallel_build_stats() {
+        let g = gen::rmat(8, Default::default(), false);
+        let eng = Engine::new(g, PpmConfig { threads: 2, k: Some(8), ..Default::default() });
+        let b = eng.build_stats();
+        assert_eq!(b.threads, 2);
+        assert!(b.t_layout > 0.0);
+        // with_layout engines paid nothing.
+        let g2 = Arc::new(gen::chain(10));
+        let cfg = PpmConfig::default();
+        let parts = cfg.partitioner(g2.n());
+        let layout = Arc::new(BinLayout::build(&g2, &parts));
+        let cold = Engine::with_layout(g2, parts, layout, cfg);
+        assert_eq!(cold.build_stats().t_preprocess(), 0.0);
     }
 
     #[test]

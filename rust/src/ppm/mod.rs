@@ -28,4 +28,4 @@ pub use bins::{
     MSG_START,
 };
 pub use cost::ModePolicy;
-pub use engine::{Engine, IterStats, PpmConfig, RunStats};
+pub use engine::{BuildStats, Engine, IterStats, PpmConfig, RunStats};

@@ -1,0 +1,210 @@
+//! Property tests for the parallel §4 pre-processing pipeline: parallel
+//! builds must be *bit-identical* to serial ones (layout, CSR,
+//! generators), sessions must amortize exactly one build, and a
+//! panicking closure inside a pool region must propagate as a normal
+//! panic (no hang, no use-after-free).
+
+#[path = "prop_framework/mod.rs"]
+mod prop_framework;
+
+use std::sync::Arc;
+
+use gpop::api::{EngineSession, Runner};
+use gpop::apps;
+use gpop::exec::ThreadPool;
+use gpop::graph::{gen, Graph, GraphBuilder};
+use gpop::partition::Partitioner;
+use gpop::ppm::{layout_builds, BinLayout, PpmConfig};
+use gpop::VertexId;
+use prop_framework::property;
+
+/// Thread counts exercised by the bit-identity properties: always the
+/// full {2, 4, 8} spread (so every run covers multi-thread pools), plus
+/// CI's `GPOP_TEST_THREADS` matrix value when it adds a new count
+/// (t = 1 exercises the inline serial-pool edge).
+fn test_threads() -> Vec<usize> {
+    let mut ts = vec![2, 4, 8];
+    if let Ok(t) = std::env::var("GPOP_TEST_THREADS") {
+        if let Ok(t) = t.parse::<usize>() {
+            if t >= 1 && !ts.contains(&t) {
+                ts.push(t);
+            }
+        }
+    }
+    ts
+}
+
+fn weights_bits(g: &Graph) -> Option<Vec<u32>> {
+    g.out().weights().map(|w| w.iter().map(|x| x.to_bits()).collect())
+}
+
+fn same_graph(a: &Graph, b: &Graph) -> Result<(), String> {
+    prop_assert_eq!(a.n(), b.n(), "vertex count");
+    prop_assert_eq!(a.out().offsets(), b.out().offsets(), "offsets");
+    prop_assert_eq!(a.out().targets(), b.out().targets(), "targets");
+    prop_assert_eq!(weights_bits(a), weights_bits(b), "weight bits");
+    Ok(())
+}
+
+#[test]
+fn prop_parallel_layout_build_is_bit_identical() {
+    property("parallel BinLayout::build == serial", 25, |g| {
+        let graph = g.graph(500, 8);
+        let k = g.usize_in(1, graph.n().max(1));
+        let parts = Partitioner::with_k(graph.n(), k);
+        let serial = BinLayout::build(&graph, &parts);
+        for t in test_threads() {
+            let mut pool = ThreadPool::new(t);
+            let par = BinLayout::build_par(&graph, &parts, &mut pool);
+            prop_assert!(
+                par == serial,
+                "layout diverged: n={}, m={}, weighted={}, k={k}, t={t}",
+                graph.n(),
+                graph.m(),
+                graph.is_weighted()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_csr_build_is_bit_identical() {
+    property("GraphBuilder::build_with_pool == build", 25, |g| {
+        let n = g.sized(1, 400);
+        let m = g.usize_in(0, n * 8);
+        let weighted = g.bool();
+        let dedup = g.bool();
+        let sym = g.bool();
+        let loops = g.bool();
+        let edges: Vec<(VertexId, VertexId, f32)> = (0..m)
+            .map(|_| {
+                (
+                    g.rng.below(n as u64) as VertexId,
+                    g.rng.below(n as u64) as VertexId,
+                    0.5 + g.rng.next_f32() * 4.0,
+                )
+            })
+            .collect();
+        let make = || {
+            let mut b = GraphBuilder::new().with_n(n);
+            if dedup {
+                b = b.dedup();
+            }
+            if sym {
+                b = b.symmetrize();
+            }
+            if loops {
+                b = b.drop_self_loops();
+            }
+            for &(s, d, w) in &edges {
+                if weighted {
+                    b.add_weighted(s, d, w);
+                } else {
+                    b.add(s, d);
+                }
+            }
+            b
+        };
+        let serial = make().build();
+        for t in test_threads() {
+            let mut pool = ThreadPool::new(t);
+            let par = make().build_with_pool(&mut pool);
+            same_graph(&serial, &par).map_err(|e| {
+                format!("t={t} weighted={weighted} dedup={dedup} sym={sym} loops={loops}: {e}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_generators_are_bit_identical() {
+    property("rmat_par/erdos_renyi_par == serial", 6, |g| {
+        let scale = g.usize_in(6, 9) as u32;
+        let seed = g.rng.next_u64();
+        for t in test_threads() {
+            let mut pool = ThreadPool::new(t);
+            let params = gen::RmatParams { seed, ..Default::default() };
+            same_graph(
+                &gen::rmat(scale, params, false),
+                &gen::rmat_par(scale, params, false, &mut pool),
+            )
+            .map_err(|e| format!("rmat scale={scale} t={t}: {e}"))?;
+            let n = 1usize << scale;
+            same_graph(
+                &gen::erdos_renyi(n, n * 4, seed),
+                &gen::erdos_renyi_par(n, n * 4, seed, &mut pool),
+            )
+            .map_err(|e| format!("er n={n} t={t}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn session_amortizes_exactly_one_parallel_build() {
+    let g = Arc::new(gen::rmat(10, Default::default(), false));
+    let before = layout_builds();
+    let session =
+        EngineSession::new(g.clone(), PpmConfig { threads: 4, k: Some(16), ..Default::default() });
+    assert_eq!(layout_builds(), before + 1, "one parallel build, counted once");
+    for root in [0u32, 7, 99] {
+        let rep = Runner::on(&session).run(apps::Bfs::new(g.n(), root));
+        assert!(rep.converged);
+        assert!(
+            rep.t_preprocess >= session.build_stats().t_layout,
+            "queries surface the session's amortized pre-processing cost"
+        );
+    }
+    assert_eq!(layout_builds(), before + 1, "queries never re-run pre-processing");
+}
+
+#[test]
+fn parallel_and_serial_sessions_answer_identically() {
+    // End-to-end: the same queries through a 1-thread and a 4-thread
+    // session (parallel pre-processing AND parallel iterate) agree.
+    let base = gen::rmat(9, Default::default(), false);
+    let g = Arc::new(gen::with_uniform_weights(&base, 1.0, 4.0, 3));
+    let cfg = |threads| PpmConfig { threads, k: Some(12), ..Default::default() };
+    let s1 = EngineSession::new(g.clone(), cfg(1));
+    let s4 = EngineSession::new(g.clone(), cfg(4));
+    let d1 = Runner::on(&s1).run(apps::Sssp::new(g.n(), 0));
+    let d4 = Runner::on(&s4).run(apps::Sssp::new(g.n(), 0));
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&d1.output), bits(&d4.output), "SSSP distances must not depend on threads");
+}
+
+#[test]
+#[should_panic(expected = "preprocess region boom")]
+fn panicking_region_closure_propagates_not_hangs() {
+    let mut pool = ThreadPool::new(4);
+    // Regression: pre-fix this either deadlocked the caller (worker
+    // never decremented `remaining`) or freed the stack closure while
+    // workers still held a pointer to it.
+    pool.for_each_dynamic(64, 1, |i, _tid| {
+        if i == 17 {
+            panic!("preprocess region boom");
+        }
+    });
+}
+
+#[test]
+fn pool_survives_a_panicking_build_closure() {
+    let mut pool = ThreadPool::new(4);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.map_parts(32, |i| {
+            if i == 5 {
+                panic!("boom in row build");
+            }
+            i * 2
+        })
+    }));
+    assert!(r.is_err(), "panic must propagate out of the region");
+    // The team is intact: the very next parallel build works.
+    let g = gen::chain(100);
+    let parts = Partitioner::with_k(g.n(), 8);
+    let serial = BinLayout::build(&g, &parts);
+    let par = BinLayout::build_par(&g, &parts, &mut pool);
+    assert!(par == serial, "pool must stay consistent after a panic");
+}
