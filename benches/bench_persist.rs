@@ -1,0 +1,122 @@
+//! bench_persist — warm-restart economics, emitting `BENCH_pr4.json`.
+//!
+//! A server restart used to re-pay the `O(E)` §4 pre-processing scan;
+//! with layout persistence it pays a sequential file load (+ checksum,
+//! digest and structural validation) instead. This bench times the
+//! three legs — 4-thread `build_par`, `save`, `load` — on RMAT and
+//! Erdős–Rényi, unweighted and weighted, reports the layout file size,
+//! and writes medians to `$GPOP_BENCH_PERSIST_JSON` (default
+//! `BENCH_pr4.json`).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::bench::{bench, Table};
+use gpop::exec::ThreadPool;
+use gpop::graph::{gen, Graph};
+use gpop::ppm::{BinLayout, PpmConfig};
+use gpop::util::fmt;
+
+struct Sample {
+    dataset: String,
+    weighted: bool,
+    t_build: f64,
+    t_save: f64,
+    t_load: f64,
+    layout_bytes: u64,
+}
+
+impl Sample {
+    /// Restart speedup: scan time over load time.
+    fn build_over_load(&self) -> f64 {
+        self.t_build / self.t_load.max(1e-12)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"dataset\":\"{}\",\"weighted\":{},\"t_build_s\":{:.6},\"t_save_s\":{:.6},\
+             \"t_load_s\":{:.6},\"layout_bytes\":{},\"build_over_load\":{:.3}}}",
+            self.dataset,
+            self.weighted,
+            self.t_build,
+            self.t_save,
+            self.t_load,
+            self.layout_bytes,
+            self.build_over_load()
+        )
+    }
+}
+
+fn persist_samples(name: &str, g: &Graph, out: &mut Vec<Sample>) {
+    let config = common::bench_config();
+    let pcfg = PpmConfig { threads: 4, ..Default::default() };
+    let parts = pcfg.partitioner(g.n());
+    let mut pool = ThreadPool::new(pcfg.threads);
+    let build = bench(&format!("{name} build t=4"), config, || {
+        std::hint::black_box(BinLayout::build_par(g, &parts, &mut pool));
+    });
+    let layout = BinLayout::build_par(g, &parts, &mut pool);
+    let path = std::env::temp_dir()
+        .join(format!("gpop_bench_persist_{}_{name}.layout", std::process::id()));
+    let save = bench(&format!("{name} save"), config, || {
+        layout.save(&path, g, &parts, &pcfg).expect("save layout");
+    });
+    let layout_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let load = bench(&format!("{name} load"), config, || {
+        std::hint::black_box(BinLayout::load(&path, g, &parts, &pcfg).expect("load layout"));
+    });
+    std::fs::remove_file(&path).ok();
+    out.push(Sample {
+        dataset: name.to_string(),
+        weighted: g.is_weighted(),
+        t_build: build.median(),
+        t_save: save.median(),
+        t_load: load.median(),
+        layout_bytes,
+    });
+}
+
+fn main() {
+    let scale = common::base_scale();
+    let rmat = gen::rmat(scale, Default::default(), false);
+    let n_er = 1usize << (scale - 1);
+    let er = gen::erdos_renyi(n_er, n_er * 16, 99);
+    let rmat_w = gen::with_uniform_weights(&rmat, 1.0, 4.0, 5);
+    let er_w = gen::with_uniform_weights(&er, 1.0, 4.0, 5);
+
+    println!(
+        "bench_persist: rmat{scale} ({} edges), er{} ({} edges)",
+        fmt::si(rmat.m() as f64),
+        scale - 1,
+        fmt::si(er.m() as f64)
+    );
+
+    let mut samples: Vec<Sample> = Vec::new();
+    persist_samples(&format!("rmat{scale}"), &rmat, &mut samples);
+    persist_samples(&format!("er{}", scale - 1), &er, &mut samples);
+    persist_samples(&format!("rmat{scale}+w"), &rmat_w, &mut samples);
+    persist_samples(&format!("er{}+w", scale - 1), &er_w, &mut samples);
+
+    let mut table = Table::new(&["dataset", "build t=4", "save", "load", "file", "build/load"]);
+    for s in &samples {
+        // Dataset names already carry the "+w" marker for weighted runs.
+        table.row(&[
+            s.dataset.clone(),
+            fmt::secs(s.t_build),
+            fmt::secs(s.t_save),
+            fmt::secs(s.t_load),
+            fmt::si(s.layout_bytes as f64),
+            format!("{:.2}x", s.build_over_load()),
+        ]);
+    }
+    table.print();
+
+    let path =
+        std::env::var("GPOP_BENCH_PERSIST_JSON").unwrap_or_else(|_| "BENCH_pr4.json".to_string());
+    let body = samples.iter().map(Sample::json).collect::<Vec<_>>().join(",");
+    let json = format!(
+        "{{\"bench\":\"bench_persist\",\"pr\":4,\"scale\":{scale},\"samples\":[{body}]}}\n"
+    );
+    std::fs::write(&path, json).expect("write bench json");
+    println!("wrote {path}");
+}

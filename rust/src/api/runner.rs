@@ -22,7 +22,7 @@ use std::time::Instant;
 use super::algorithm::{Algorithm, FrontierInit};
 use super::convergence::{Convergence, Probe, Stop};
 use super::session::EngineSession;
-use crate::ppm::{Engine, IterStats, ModePolicy, RunStats};
+use crate::ppm::{Engine, IterStats, ModePolicy, PreprocessSource, RunStats};
 
 /// The uniform result of a [`Runner`] execution.
 #[derive(Clone, Debug)]
@@ -39,11 +39,18 @@ pub struct RunReport<O> {
     /// Wall-clock seconds from frontier load to output extraction.
     pub total_time: f64,
     /// One-time pre-processing seconds amortized behind this query: the
-    /// session's partition + parallel layout build (`0.0` for
+    /// session's partition + parallel layout build — or layout-file
+    /// load, see [`preprocess`](Self::preprocess) — (`0.0` for
     /// [`drive`] calls on a caller-prepared engine). Every query on a
     /// session reports the same value — the cost is paid once, not per
     /// run.
     pub t_preprocess: f64,
+    /// Which path produced the layout behind `t_preprocess`: a fresh
+    /// `O(E)` scan ([`PreprocessSource::Built`]) or a warm restart from
+    /// a persisted layout ([`PreprocessSource::Loaded`]). Previously the
+    /// two were conflated into one number; splitting them lets `gpop
+    /// run` (and serving dashboards) report which path actually ran.
+    pub preprocess: PreprocessSource,
 }
 
 impl<O> RunReport<O> {
@@ -79,6 +86,7 @@ impl<O> RunReport<O> {
             converged: self.converged,
             total_time: self.total_time,
             t_preprocess: self.t_preprocess,
+            preprocess: self.preprocess,
         }
     }
 }
@@ -123,6 +131,7 @@ pub fn drive<A: Algorithm>(
         converged: stop == Stop::Converged,
         total_time: t0.elapsed().as_secs_f64(),
         t_preprocess: 0.0,
+        preprocess: engine.build_stats().source,
     }
 }
 
@@ -170,7 +179,9 @@ impl<'s> Runner<'s> {
         engine.set_mode_policy(self.mode());
         let until = self.until_for(&alg);
         let mut report = drive(&mut engine, alg, &until);
-        report.t_preprocess = self.session.build_stats().t_preprocess();
+        let build = self.session.build_stats();
+        report.t_preprocess = build.t_preprocess();
+        report.preprocess = build.source;
         report
     }
 
@@ -184,12 +195,13 @@ impl<'s> Runner<'s> {
     ) -> Vec<RunReport<A::Output>> {
         let mut engine = self.session.checkout();
         engine.set_mode_policy(self.mode());
-        let t_preprocess = self.session.build_stats().t_preprocess();
+        let build = self.session.build_stats();
         algs.into_iter()
             .map(|alg| {
                 let until = self.until_for(&alg);
                 let mut report = drive(&mut engine, alg, &until);
-                report.t_preprocess = t_preprocess;
+                report.t_preprocess = build.t_preprocess();
+                report.preprocess = build.source;
                 report
             })
             .collect()

@@ -15,13 +15,14 @@
 //! for a `Vec::pop`).
 
 use std::ops::{Deref, DerefMut};
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::exec::ThreadPool;
 use crate::graph::Graph;
 use crate::partition::Partitioner;
-use crate::ppm::{BinLayout, BuildStats, Engine, PpmConfig};
+use crate::ppm::{BinLayout, BuildStats, Engine, PpmConfig, PreprocessSource};
 
 /// Idle engines kept per session. Each pooled engine holds its worker
 /// threads plus `O(k² + E/k)` bin scratch, so the pool is capped: a
@@ -61,6 +62,7 @@ impl EngineSession {
             t_partition,
             t_layout: t1.elapsed().as_secs_f64(),
             threads: config.threads,
+            source: PreprocessSource::Built,
         };
         let warm = Engine::from_parts(
             graph.clone(),
@@ -71,6 +73,59 @@ impl EngineSession {
             build,
         );
         Self { graph, parts, layout, config, build, pool: Mutex::new(vec![warm]) }
+    }
+
+    /// Restore a session from a layout persisted by [`save`](Self::save):
+    /// the warm-restart path. Pays sequential disk IO + validation
+    /// instead of the `O(E)` pre-processing scan; the loaded layout is
+    /// bit-identical to what [`new`](Self::new) would have built (the
+    /// file binds the graph digest, the config fingerprint and the exact
+    /// partitioning, and [`BinLayout::load`] treats the bytes as
+    /// untrusted). [`build_stats`](Self::build_stats) reports
+    /// [`PreprocessSource::Loaded`] and the load time in `t_layout`;
+    /// [`layout_builds`](crate::ppm::layout_builds) is not incremented.
+    ///
+    /// The graph itself is persisted separately (e.g. via
+    /// [`write_binary`](crate::graph::io::write_binary) /
+    /// [`read_binary`](crate::graph::io::read_binary)); together the two
+    /// files make the whole session restorable from disk.
+    pub fn restore(
+        graph: impl Into<Arc<Graph>>,
+        config: PpmConfig,
+        path: &Path,
+    ) -> std::io::Result<Self> {
+        config.validate().map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
+        let graph = graph.into();
+        let t0 = Instant::now();
+        let parts = config.partitioner(graph.n());
+        let t_partition = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let layout = Arc::new(BinLayout::load(path, &graph, &parts, &config)?);
+        let build = BuildStats {
+            t_partition,
+            t_layout: t1.elapsed().as_secs_f64(),
+            // The load is sequential IO on the calling thread — report
+            // that, not the worker count the engines will run with.
+            threads: 1,
+            source: PreprocessSource::Loaded,
+        };
+        let pool = ThreadPool::new(config.threads);
+        let warm = Engine::from_parts(
+            graph.clone(),
+            parts.clone(),
+            layout.clone(),
+            config.clone(),
+            pool,
+            build,
+        );
+        Ok(Self { graph, parts, layout, config, build, pool: Mutex::new(vec![warm]) })
+    }
+
+    /// Persist this session's pre-processed layout for
+    /// [`restore`](Self::restore) (versioned + checksummed; see
+    /// [`crate::ppm::persist`] for the format and invalidation rules).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        self.layout.save(path, &self.graph, &self.parts, &self.config)
     }
 
     #[inline]

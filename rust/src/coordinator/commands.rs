@@ -12,6 +12,7 @@ use crate::ppm::{ModePolicy, PpmConfig};
 use crate::util::cli::{Args, CliError};
 use crate::util::fmt;
 use std::path::Path;
+use std::sync::Arc;
 
 fn engine_config(args: &Args) -> Result<PpmConfig, CliError> {
     let threads = args
@@ -90,12 +91,25 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
         config.k.map(|k| k.to_string()).unwrap_or_else(|| "auto".into())
     );
     let verbose = args.flag("verbose");
-    let session = EngineSession::new(g, config);
+    // Warm restart: `--layout PATH` restores the persisted partitioned
+    // layout (sequential IO, validated) instead of re-running the O(E)
+    // scan; `--save-layout PATH` persists this session's layout for the
+    // next restart.
+    let session = match args.get("layout") {
+        Some(p) => EngineSession::restore(g, config, Path::new(p))
+            .map_err(|e| CliError(format!("load layout {p}: {e}")))?,
+        None => EngineSession::new(g, config),
+    };
+    if let Some(p) = args.get("save-layout") {
+        session.save(Path::new(p)).map_err(|e| CliError(format!("save layout {p}: {e}")))?;
+        println!("layout saved to {p}");
+    }
     let graph = session.graph().clone();
     let build = session.build_stats();
     println!(
-        "preprocessing: {} (partition {}, layout {} on {} threads, k = {})",
+        "preprocessing: {} ({}; partition {}, layout {} on {} threads, k = {})",
         fmt::secs(build.t_preprocess()),
+        build.source.describe(),
         fmt::secs(build.t_partition),
         fmt::secs(build.t_layout),
         build.threads,
@@ -232,6 +246,60 @@ pub fn cmd_gen(args: &Args) -> Result<i32, CliError> {
     res.map_err(|e| CliError(format!("write {out}: {e}")))?;
     println!("wrote {out}");
     Ok(0)
+}
+
+/// `gpop layout build|verify` — manage persisted partitioned layouts.
+///
+/// - `build`: run pre-processing once and write the layout to `--out`.
+/// - `verify`: load `--layout` (full untrusted-input validation), then
+///   rebuild from scratch and require bit-identity — a diagnostic for
+///   suspect files that deliberately pays the `O(E)` scan it exists to
+///   avoid.
+pub fn cmd_layout(args: &Args) -> Result<i32, CliError> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("");
+    match action {
+        "build" => {
+            let out = args.get("out").ok_or_else(|| CliError("--out PATH is required".into()))?;
+            let g = build_graph(args)?;
+            let config = engine_config(args)?;
+            let session = EngineSession::new(g, config);
+            let b = session.build_stats();
+            session
+                .save(Path::new(out))
+                .map_err(|e| CliError(format!("save layout {out}: {e}")))?;
+            println!(
+                "layout: k = {}, built in {} on {} threads, saved to {out}",
+                session.parts().k(),
+                fmt::secs(b.t_preprocess()),
+                b.threads
+            );
+            Ok(0)
+        }
+        "verify" => {
+            let path = args
+                .get("layout")
+                .ok_or_else(|| CliError("--layout PATH is required".into()))?;
+            let g = Arc::new(build_graph(args)?);
+            let config = engine_config(args)?;
+            let restored = EngineSession::restore(g.clone(), config.clone(), Path::new(path))
+                .map_err(|e| CliError(format!("load layout {path}: {e}")))?;
+            let fresh = EngineSession::new(g, config);
+            if **restored.layout() != **fresh.layout() {
+                return Err(CliError(format!(
+                    "layout {path} passed file validation but is NOT bit-identical to a \
+                     fresh build — rebuild it"
+                )));
+            }
+            println!(
+                "layout {path}: VERIFIED bit-identical to a fresh build \
+                 (load {} vs build {})",
+                fmt::secs(restored.build_stats().t_preprocess()),
+                fmt::secs(fresh.build_stats().t_preprocess())
+            );
+            Ok(0)
+        }
+        other => Err(CliError(format!("unknown layout action {other:?} (build|verify)"))),
+    }
 }
 
 pub fn cmd_cachesim(args: &Args) -> Result<i32, CliError> {
@@ -385,6 +453,86 @@ mod tests {
         let a2 = args(&["--app", "pr", "--graph", &spec, "--iters", "2"]);
         assert_eq!(cmd_run(&a2).unwrap(), 0);
         std::fs::remove_file(out).unwrap();
+    }
+
+    #[test]
+    fn layout_build_verify_and_warm_run() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let gpath = dir.join(format!("gpop_cmd_layout_{pid}.bin"));
+        let lpath = dir.join(format!("gpop_cmd_layout_{pid}.layout"));
+        let a = args(&["--graph", "er:300:1500", "--out", gpath.to_str().unwrap()]);
+        assert_eq!(cmd_gen(&a).unwrap(), 0);
+        let spec = format!("file:{}", gpath.display());
+        let lstr = lpath.to_str().unwrap();
+        let b = args(&["build", "--graph", &spec, "--out", lstr, "--k", "8", "--threads", "2"]);
+        assert_eq!(cmd_layout(&b).unwrap(), 0);
+        let v = args(&["verify", "--graph", &spec, "--layout", lstr, "--k", "8", "--threads", "2"]);
+        assert_eq!(cmd_layout(&v).unwrap(), 0);
+        // Warm restart: the persisted layout feeds a real run.
+        let r = args(&[
+            "--app",
+            "pr",
+            "--graph",
+            &spec,
+            "--layout",
+            lstr,
+            "--k",
+            "8",
+            "--threads",
+            "2",
+            "--iters",
+            "2",
+        ]);
+        assert_eq!(cmd_run(&r).unwrap(), 0);
+        // A layout built under a different k is rejected as a usage
+        // error (fingerprint mismatch), not applied silently.
+        let bad = args(&["--app", "pr", "--graph", &spec, "--layout", lstr, "--k", "9"]);
+        assert!(cmd_run(&bad).is_err());
+        std::fs::remove_file(&gpath).unwrap();
+        std::fs::remove_file(&lpath).unwrap();
+    }
+
+    #[test]
+    fn run_save_layout_then_restore() {
+        let pid = std::process::id();
+        let lpath = std::env::temp_dir().join(format!("gpop_cmd_save_{pid}.layout"));
+        let lstr = lpath.to_str().unwrap();
+        let save = args(&[
+            "--app",
+            "bfs",
+            "--graph",
+            "grid:10:10",
+            "--save-layout",
+            lstr,
+            "--k",
+            "4",
+            "--threads",
+            "2",
+        ]);
+        assert_eq!(cmd_run(&save).unwrap(), 0);
+        let warm = args(&[
+            "--app",
+            "cc",
+            "--graph",
+            "grid:10:10",
+            "--layout",
+            lstr,
+            "--k",
+            "4",
+            "--threads",
+            "2",
+        ]);
+        assert_eq!(cmd_run(&warm).unwrap(), 0);
+        std::fs::remove_file(&lpath).unwrap();
+    }
+
+    #[test]
+    fn layout_unknown_action_rejected() {
+        let a = args(&["frobnicate", "--graph", "chain:4"]);
+        assert!(cmd_layout(&a).is_err());
+        let missing_out = args(&["build", "--graph", "chain:4"]);
+        assert!(cmd_layout(&missing_out).is_err());
     }
 
     #[test]

@@ -20,8 +20,16 @@ COMMANDS:
              --graph SPEC [--threads N] [--mode hybrid|sc|dc]
              [--iters N] [--root V] [--seeds a,b,c] [--eps X]
              [--bw-ratio X] [--k N] [--chunk N] [--verbose]
+             [--layout PATH] [--save-layout PATH]
+             (--layout restores a persisted partitioned layout — warm
+              restart, no O(E) scan; --save-layout persists this one)
   gen        Generate a graph and write it to disk
              --graph SPEC --out PATH [--format bin|el]
+  layout     Manage persisted partitioned layouts
+             build  --graph SPEC --out PATH [engine options]
+             verify --graph SPEC --layout PATH [engine options]
+             (verify fully validates the file, then rebuilds and
+              requires bit-identity)
   cachesim   Simulated L2 misses per framework (Tables 4-6)
              --app pr|cc|sssp --graph SPEC [--iters N] [--threads N]
   membench   STREAM-style bandwidth probe (Table 2 calibration)
@@ -60,6 +68,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<i32, CliError> {
     match cmd.as_str() {
         "run" => commands::cmd_run(&args),
         "gen" => commands::cmd_gen(&args),
+        "layout" => commands::cmd_layout(&args),
         "cachesim" => commands::cmd_cachesim(&args),
         "membench" => commands::cmd_membench(&args),
         "pjrt" => commands::cmd_pjrt(&args),

@@ -16,6 +16,26 @@ pub struct Csr {
     weights: Option<Vec<Weight>>,
 }
 
+/// Equality is *bitwise*: weights compare by their bit patterns, not
+/// `f32` equality, so `write_binary → read_binary` roundtrips and
+/// layout-persistence checks stay exact even for files that carry NaN
+/// weights (both IO readers accept them).
+impl PartialEq for Csr {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.offsets == other.offsets
+            && self.targets == other.targets
+            && match (&self.weights, &other.weights) {
+                (None, None) => true,
+                (Some(a), Some(b)) => {
+                    a.len() == b.len()
+                        && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                }
+                _ => false,
+            }
+    }
+}
+
 impl Csr {
     pub fn new(n: usize, offsets: Vec<u64>, targets: Vec<VertexId>, weights: Option<Vec<Weight>>) -> Self {
         assert_eq!(offsets.len(), n + 1, "offsets must have n+1 entries");
@@ -121,6 +141,16 @@ impl Csr {
 pub struct Graph {
     csr: Csr,
     csc: Option<Csr>,
+}
+
+/// Equality compares the CSR (structure + weights) only: the lazily
+/// materialized CSC is a derived cache, not part of the graph's
+/// identity, so a graph that has computed its CSC still equals one that
+/// has not.
+impl PartialEq for Graph {
+    fn eq(&self, other: &Self) -> bool {
+        self.csr == other.csr
+    }
 }
 
 impl Graph {

@@ -234,9 +234,7 @@ mod tests {
         let p = tmp("g.bin");
         write_binary(&g, &p).unwrap();
         let g2 = read_binary(&p).unwrap();
-        assert_eq!(g2.n(), g.n());
-        assert_eq!(g2.out().offsets(), g.out().offsets());
-        assert_eq!(g2.out().targets(), g.out().targets());
+        assert_eq!(g2, g, "write_binary → read_binary must reproduce the graph exactly");
         std::fs::remove_file(&p).unwrap();
     }
 
@@ -247,8 +245,33 @@ mod tests {
         write_binary(&g, &p).unwrap();
         let g2 = read_binary(&p).unwrap();
         assert!(g2.is_weighted());
-        assert_eq!(g2.out().weights().unwrap(), g.out().weights().unwrap());
+        assert_eq!(g2, g, "weighted roundtrip must reproduce weights bit-for-bit");
         std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn binary_roundtrip_isolated_vertices_and_empty() {
+        // Zero-degree tails and the empty graph exercise the offsets
+        // edge cases of both writer and validator.
+        let mut b = crate::graph::GraphBuilder::new().with_n(10);
+        b.add(0, 9).add(3, 3);
+        let sparse = b.build();
+        let empty = crate::graph::builder::graph_from_edges(0, &[]);
+        for (g, name) in [(sparse, "sparse"), (empty, "empty")] {
+            let p = tmp(name);
+            write_binary(&g, &p).unwrap();
+            assert_eq!(read_binary(&p).unwrap(), g, "{name}");
+            std::fs::remove_file(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn graph_equality_ignores_the_csc_cache() {
+        let g = gen::erdos_renyi(50, 200, 3);
+        let mut with_csc = g.clone();
+        with_csc.ensure_csc();
+        assert_eq!(with_csc, g, "materializing the CSC must not change identity");
+        assert_ne!(g, gen::erdos_renyi(50, 200, 4));
     }
 
     #[test]

@@ -103,8 +103,10 @@ pub enum Mode {
 /// The immutable, pre-processed half of one bin: the PNG segment and the
 /// pre-written DC destination stream. Shared read-only by every engine
 /// built from the same [`BinLayout`]. `PartialEq` exists so tests can
-/// pin parallel builds bit-identical to serial ones.
-#[derive(Clone, Debug, Default, PartialEq)]
+/// pin parallel builds and persisted-layout loads bit-identical to
+/// serial builds; weights compare by bit pattern (see the manual impl)
+/// so the check stays exact even for graphs carrying NaN weights.
+#[derive(Clone, Debug, Default)]
 pub struct StaticBin {
     /// Pre-written DC-mode destination id stream (MSB-delimited for
     /// unweighted graphs, flat per-edge for weighted).
@@ -120,6 +122,21 @@ pub struct StaticBin {
     /// Total messages i -> j when fully active (= |dc_srcs| unweighted,
     /// = n_edges weighted).
     pub n_msgs: u32,
+}
+
+/// Bitwise equality: `dc_wts` compares by `f32` bit patterns, not float
+/// equality, so "bit-identical" really means the bits (NaN-carrying
+/// weight files included).
+impl PartialEq for StaticBin {
+    fn eq(&self, other: &Self) -> bool {
+        self.dc_ids == other.dc_ids
+            && self.dc_srcs == other.dc_srcs
+            && self.dc_cnts == other.dc_cnts
+            && self.n_edges == other.n_edges
+            && self.n_msgs == other.n_msgs
+            && self.dc_wts.len() == other.dc_wts.len()
+            && self.dc_wts.iter().zip(&other.dc_wts).all(|(a, b)| a.to_bits() == b.to_bits())
+    }
 }
 
 /// The mutable, per-iteration half of one bin.
@@ -350,6 +367,31 @@ impl BinLayout {
                 b.dc_ids.len() * 4 + b.dc_srcs.len() * 4 + b.dc_cnts.len() * 4 + b.dc_wts.len() * 4
             })
             .sum()
+    }
+
+    /// All static bins, row-major (`bin(i, j)` at `i * k + j`) — for the
+    /// persistence layer.
+    pub(crate) fn bins_raw(&self) -> &[StaticBin] {
+        &self.bins
+    }
+
+    /// All per-partition meta rows — for the persistence layer.
+    pub(crate) fn meta_raw(&self) -> &[PartMeta] {
+        &self.meta
+    }
+
+    /// Reassemble a layout from parts deserialized (and fully validated)
+    /// by [`load`](Self::load). Deliberately does NOT touch the
+    /// [`layout_builds`] counter: no `O(E)` scan ran.
+    pub(crate) fn from_raw(
+        k: usize,
+        weighted: bool,
+        bins: Vec<StaticBin>,
+        meta: Vec<PartMeta>,
+    ) -> Self {
+        debug_assert_eq!(bins.len(), k * k);
+        debug_assert_eq!(meta.len(), k);
+        Self { k, weighted, bins, meta }
     }
 }
 

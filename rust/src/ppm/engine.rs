@@ -92,23 +92,55 @@ impl PpmConfig {
     }
 }
 
+/// How a session/engine obtained its pre-processed [`BinLayout`]. Kept
+/// separate from the timings so reports never conflate "we ran the
+/// `O(E)` scan" with "we replayed it from disk" — the two paths have
+/// the same output (pinned bit-identical by `tests/persist.rs`) but
+/// very different costs, and `gpop run` prints which one ran.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PreprocessSource {
+    /// The `O(E)` scan ran in-process ([`BinLayout::build`] /
+    /// [`BinLayout::build_par`]).
+    #[default]
+    Built,
+    /// The layout was restored from a persisted file
+    /// ([`BinLayout::load`]): sequential disk IO + validation, no scan.
+    Loaded,
+}
+
+impl PreprocessSource {
+    /// Human-readable label for CLI reports.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            PreprocessSource::Built => "built",
+            PreprocessSource::Loaded => "loaded from disk",
+        }
+    }
+}
+
 /// Wall-clock breakdown of the one-time §4 pre-processing pipeline
-/// (partitioning + the `O(E)` [`BinLayout`] scan). Zero for engines
-/// built over a prebuilt layout ([`Engine::with_layout`]) — the cost was
-/// paid elsewhere, typically by the owning
+/// (partitioning + the `O(E)` [`BinLayout`] scan, or — for
+/// [`Loaded`](PreprocessSource::Loaded) sessions — the layout-file read
+/// and validation that replaced it). Zero for engines built over a
+/// prebuilt layout ([`Engine::with_layout`]) — the cost was paid
+/// elsewhere, typically by the owning
 /// [`EngineSession`](crate::api::EngineSession).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BuildStats {
     /// Seconds computing the §3.1 partitioning.
     pub t_partition: f64,
-    /// Seconds in the `O(E)` layout scan (PNG + pre-written DC streams).
+    /// Seconds obtaining the layout: the `O(E)` scan (PNG + pre-written
+    /// DC streams) when [`Built`](PreprocessSource::Built), the
+    /// sequential file load when [`Loaded`](PreprocessSource::Loaded).
     pub t_layout: f64,
-    /// Threads the layout build ran on.
+    /// Threads the layout build ran on (a load is single-threaded IO).
     pub threads: usize,
+    /// Which path produced the layout.
+    pub source: PreprocessSource,
 }
 
 impl BuildStats {
-    /// Total pre-processing seconds (partition + layout build).
+    /// Total pre-processing seconds (partition + layout build/load).
     pub fn t_preprocess(&self) -> f64 {
         self.t_partition + self.t_layout
     }
@@ -200,6 +232,7 @@ impl Engine {
             t_partition,
             t_layout: t1.elapsed().as_secs_f64(),
             threads: config.threads,
+            source: PreprocessSource::Built,
         };
         Self::from_parts(graph, parts, layout, config, pool, build)
     }

@@ -21,6 +21,7 @@ pub mod active;
 pub mod bins;
 pub mod cost;
 pub mod engine;
+pub mod persist;
 pub mod shared;
 
 pub use bins::{
@@ -28,4 +29,5 @@ pub use bins::{
     MSG_START,
 };
 pub use cost::ModePolicy;
-pub use engine::{BuildStats, Engine, IterStats, PpmConfig, RunStats};
+pub use engine::{BuildStats, Engine, IterStats, PpmConfig, PreprocessSource, RunStats};
+pub use persist::{config_fingerprint, graph_digest, LAYOUT_FORMAT_VERSION, LAYOUT_MAGIC};

@@ -1,0 +1,783 @@
+//! Layout persistence: a versioned, checksummed on-disk format for
+//! [`BinLayout`], so a server restart pays sequential disk IO instead of
+//! re-running the `O(E)` §4 pre-processing scan (PCPM treats the
+//! partitioned layout as a reusable artifact; GPOP's amortization
+//! argument extends across process lifetimes once the layout is
+//! persisted).
+//!
+//! ## File format (`GPOPLAYT`, version 1 — all little-endian)
+//!
+//! | offset | size      | field                                         |
+//! |-------:|----------:|-----------------------------------------------|
+//! |      0 |         8 | magic `"GPOPLAYT"`                            |
+//! |      8 |         4 | format version (`u32`, currently 1)           |
+//! |     12 |         8 | [`config_fingerprint`] of the build config    |
+//! |     20 |         8 | [`graph_digest`] of the CSR it was built from |
+//! |     28 |         8 | `n` (vertices, `u64`)                         |
+//! |     36 |         8 | `k` (partitions, `u64`)                       |
+//! |     44 |         8 | `q` (partition size, `u64`)                   |
+//! |     52 |         1 | weighted flag (0 or 1)                        |
+//! |     53 |      5×8 | totals: dc_ids, dc_srcs, dc_cnts, dc_wts, neighbor_parts (`u64` each) |
+//! |     93 | `k²`×24  | bin table: per bin `(dc_ids_len, dc_srcs_len, dc_cnts_len, dc_wts_len, n_edges, n_msgs)` as `u32`s |
+//! |      … |         … | bin payloads, row-major: `dc_ids`, `dc_srcs`, `dc_cnts` (`u32`s), `dc_wts` (`f32` bits) |
+//! |      … |   `k`×20 | meta table: per partition `(edges: u64, msgs: u64, neighbor_parts_len: u32)` |
+//! |      … |         … | neighbor-part ids (`u32`s, concatenated per partition) |
+//! |   last |         8 | checksum: [`Hash64`] of every preceding byte  |
+//!
+//! ## Untrusted-input contract
+//!
+//! [`BinLayout::load`] treats the file exactly like
+//! [`read_binary`](crate::graph::io::read_binary) treats a binary CSR:
+//! as attacker-controlled bytes. Every count in the header is validated
+//! against the *actual* file size with checked arithmetic **before** any
+//! count-derived allocation (a corrupt header cannot demand a multi-GiB
+//! buffer), the checksum is verified before the payload is interpreted,
+//! and the payload is structurally validated down to the invariants the
+//! engine's `unsafe` gather/scatter hot loops rely on (ids inside the
+//! destination partition's range, MSB message delimiters present and
+//! counted, PNG sources inside the source partition and in
+//! non-decreasing vertex order). Any violation is an
+//! [`std::io::ErrorKind::InvalidData`] error — never a panic, an abort,
+//! or undefined behavior downstream.
+//!
+//! A load never increments [`layout_builds`](super::layout_builds): the
+//! counter tracks `O(E)` scans, and the whole point of this module is
+//! that the load path does not run one.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::bins::{BinLayout, PartMeta, StaticBin, MSG_START};
+use super::engine::PpmConfig;
+use crate::graph::Graph;
+use crate::partition::Partitioner;
+use crate::PartId;
+
+/// Magic bytes opening every layout file.
+pub const LAYOUT_MAGIC: [u8; 8] = *b"GPOPLAYT";
+/// Current (and maximum readable) format version.
+pub const LAYOUT_FORMAT_VERSION: u32 = 1;
+
+/// Fixed-size header: magic + version + fingerprint + digest + n/k/q +
+/// weighted flag + five section totals.
+const HEADER_BYTES: u64 = 8 + 4 + 8 + 8 + 8 + 8 + 8 + 1 + 5 * 8;
+/// One bin-table row: six u32 counts.
+const BIN_ROW_BYTES: u64 = 6 * 4;
+/// One meta-table row: edges + msgs (u64) + neighbor_parts length (u32).
+const META_ROW_BYTES: u64 = 8 + 8 + 4;
+const CHECKSUM_BYTES: u64 = 8;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+// ---------------------------------------------------------------------
+// Hashing
+// ---------------------------------------------------------------------
+
+/// A fast 64-bit streaming hash (FNV-style xor-multiply over 8-byte
+/// chunks, length-appended, with a final avalanche). Used for the file
+/// checksum, the graph digest and the config fingerprint. Not
+/// cryptographic — it detects corruption and accidental mismatches, not
+/// adversaries (which is why [`BinLayout::load`] *also* structurally
+/// validates everything the engine's unsafe code relies on).
+#[derive(Clone, Copy)]
+pub struct Hash64 {
+    state: u64,
+    buf: [u8; 8],
+    buf_len: usize,
+    len: u64,
+}
+
+impl Hash64 {
+    pub fn new() -> Self {
+        Self { state: 0xcbf2_9ce4_8422_2325, buf: [0; 8], buf_len: 0, len: 0 }
+    }
+
+    #[inline]
+    fn mix(&mut self, chunk: u64) {
+        self.state = (self.state ^ chunk).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    /// Absorb bytes; split points do not affect the result.
+    pub fn update(&mut self, mut bytes: &[u8]) {
+        self.len = self.len.wrapping_add(bytes.len() as u64);
+        if self.buf_len > 0 {
+            let take = (8 - self.buf_len).min(bytes.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&bytes[..take]);
+            self.buf_len += take;
+            bytes = &bytes[take..];
+            if self.buf_len == 8 {
+                let chunk = u64::from_le_bytes(self.buf);
+                self.mix(chunk);
+                self.buf_len = 0;
+            } else {
+                return; // bytes exhausted before filling the buffer
+            }
+        }
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.mix(u64::from_le_bytes(c.try_into().expect("chunks_exact(8)")));
+        }
+        let rem = chunks.remainder();
+        self.buf[..rem.len()].copy_from_slice(rem);
+        self.buf_len = rem.len();
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, x: u64) {
+        self.update(&x.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, x: u32) {
+        self.update(&x.to_le_bytes());
+    }
+
+    /// Finish: absorb the zero-padded tail and total length, then
+    /// avalanche so single-bit input flips spread across the output.
+    pub fn finish(mut self) -> u64 {
+        if self.buf_len > 0 {
+            self.buf[self.buf_len..].fill(0);
+            let chunk = u64::from_le_bytes(self.buf);
+            self.mix(chunk);
+        }
+        let len = self.len;
+        self.mix(len);
+        let mut x = self.state;
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+        x ^= x >> 33;
+        x
+    }
+}
+
+impl Default for Hash64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Digest of the CSR a layout was built from: n, m, weight presence,
+/// offsets, targets and weight bits. One sequential streaming pass —
+/// cheap next to the random-access layout scan it lets a restart skip.
+/// Loading a layout against a graph with a different digest is rejected
+/// as [`InvalidData`](std::io::ErrorKind::InvalidData).
+pub fn graph_digest(graph: &Graph) -> u64 {
+    let csr = graph.out();
+    let mut h = Hash64::new();
+    h.write_u64(csr.n() as u64);
+    h.write_u64(csr.m() as u64);
+    h.write_u64(u64::from(csr.is_weighted()));
+    for &o in csr.offsets() {
+        h.write_u64(o);
+    }
+    for &t in csr.targets() {
+        h.write_u32(t);
+    }
+    if let Some(ws) = csr.weights() {
+        for &w in ws {
+            h.write_u32(w.to_bits());
+        }
+    }
+    h.finish()
+}
+
+/// Fingerprint of exactly the [`PpmConfig`] fields that determine the
+/// partitioned layout — the inputs [`PpmConfig::partitioner`] reads: an
+/// explicit `k` override, or the §3.1 auto-heuristic inputs (threads,
+/// cache budget, bytes per vertex). Runtime knobs (mode policy,
+/// bw-ratio, scheduling chunk) do not invalidate a persisted layout;
+/// with an explicit `k`, neither does the thread count.
+pub fn config_fingerprint(config: &PpmConfig) -> u64 {
+    let mut h = Hash64::new();
+    match config.k {
+        Some(k) => {
+            h.write_u64(1); // explicit-k tag
+            h.write_u64(k as u64);
+        }
+        None => {
+            h.write_u64(2); // auto-heuristic tag
+            h.write_u64(config.threads as u64);
+            h.write_u64(config.cache_bytes as u64);
+            h.write_u64(config.bytes_per_vertex as u64);
+        }
+    }
+    h.finish()
+}
+
+/// `Write` adapter that feeds every byte it forwards into a [`Hash64`],
+/// so [`BinLayout::save`] computes the checksum in the same streaming
+/// pass that writes the file.
+struct HashingWriter<W: Write> {
+    inner: W,
+    hash: Hash64,
+}
+
+impl<W: Write> Write for HashingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.hash.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Save
+// ---------------------------------------------------------------------
+
+fn write_u32<W: Write>(w: &mut W, x: u32) -> io::Result<()> {
+    w.write_all(&x.to_le_bytes())
+}
+
+fn write_u64<W: Write>(w: &mut W, x: u64) -> io::Result<()> {
+    w.write_all(&x.to_le_bytes())
+}
+
+fn stream_len(name: &str, len: usize) -> u32 {
+    u32::try_from(len).unwrap_or_else(|_| panic!("bin {name} stream exceeds the u32 space"))
+}
+
+impl BinLayout {
+    /// Persist this layout. The header binds the file to the graph (via
+    /// [`graph_digest`]), the build configuration (via
+    /// [`config_fingerprint`]) and the exact partitioning, so a stale or
+    /// mismatched file can never be silently applied; the trailing
+    /// checksum covers every byte. Graph bytes themselves are persisted
+    /// separately via [`write_binary`](crate::graph::io::write_binary) —
+    /// together the two files make a whole session restorable from disk
+    /// ([`EngineSession::restore`](crate::api::EngineSession::restore)).
+    pub fn save(
+        &self,
+        path: &Path,
+        graph: &Graph,
+        parts: &Partitioner,
+        config: &PpmConfig,
+    ) -> io::Result<()> {
+        assert_eq!(parts.k(), self.k(), "partitioner and layout disagree on k");
+        assert_eq!(parts.n(), graph.n(), "partitioner and graph disagree on n");
+        assert_eq!(
+            graph.is_weighted(),
+            self.weighted(),
+            "graph and layout disagree on weightedness"
+        );
+        let bins = self.bins_raw();
+        let meta = self.meta_raw();
+        let file = BufWriter::new(File::create(path)?);
+        let mut w = HashingWriter { inner: file, hash: Hash64::new() };
+        w.write_all(&LAYOUT_MAGIC)?;
+        write_u32(&mut w, LAYOUT_FORMAT_VERSION)?;
+        write_u64(&mut w, config_fingerprint(config))?;
+        write_u64(&mut w, graph_digest(graph))?;
+        write_u64(&mut w, parts.n() as u64)?;
+        write_u64(&mut w, parts.k() as u64)?;
+        write_u64(&mut w, parts.q() as u64)?;
+        w.write_all(&[u8::from(self.weighted())])?;
+        let total = |f: fn(&StaticBin) -> usize| bins.iter().map(f).sum::<usize>() as u64;
+        write_u64(&mut w, total(|b| b.dc_ids.len()))?;
+        write_u64(&mut w, total(|b| b.dc_srcs.len()))?;
+        write_u64(&mut w, total(|b| b.dc_cnts.len()))?;
+        write_u64(&mut w, total(|b| b.dc_wts.len()))?;
+        write_u64(&mut w, meta.iter().map(|m| m.neighbor_parts.len()).sum::<usize>() as u64)?;
+        for b in bins {
+            write_u32(&mut w, stream_len("dc_ids", b.dc_ids.len()))?;
+            write_u32(&mut w, stream_len("dc_srcs", b.dc_srcs.len()))?;
+            write_u32(&mut w, stream_len("dc_cnts", b.dc_cnts.len()))?;
+            write_u32(&mut w, stream_len("dc_wts", b.dc_wts.len()))?;
+            write_u32(&mut w, b.n_edges)?;
+            write_u32(&mut w, b.n_msgs)?;
+        }
+        for b in bins {
+            for &x in &b.dc_ids {
+                write_u32(&mut w, x)?;
+            }
+            for &x in &b.dc_srcs {
+                write_u32(&mut w, x)?;
+            }
+            for &x in &b.dc_cnts {
+                write_u32(&mut w, x)?;
+            }
+            for &x in &b.dc_wts {
+                write_u32(&mut w, x.to_bits())?;
+            }
+        }
+        for m in meta {
+            write_u64(&mut w, m.edges)?;
+            write_u64(&mut w, m.msgs)?;
+            write_u32(&mut w, stream_len("neighbor_parts", m.neighbor_parts.len()))?;
+        }
+        for m in meta {
+            for &p in &m.neighbor_parts {
+                write_u32(&mut w, p)?;
+            }
+        }
+        let HashingWriter { mut inner, hash } = w;
+        inner.write_all(&hash.finish().to_le_bytes())?;
+        inner.flush()
+    }
+
+    /// Load a layout persisted by [`save`](Self::save), validating it
+    /// against `graph`, the partitioning `parts` (what `config` induces
+    /// for `graph`) and `config` itself. See the module docs for the
+    /// untrusted-input contract; on success the result is bit-identical
+    /// (`PartialEq`) to a fresh [`build_par`](Self::build_par) over the
+    /// same inputs, and [`layout_builds`](super::layout_builds) is NOT
+    /// incremented.
+    pub fn load(
+        path: &Path,
+        graph: &Graph,
+        parts: &Partitioner,
+        config: &PpmConfig,
+    ) -> io::Result<Self> {
+        let mut file = File::open(path)?;
+        let file_len = file.metadata()?.len();
+        if file_len < HEADER_BYTES + CHECKSUM_BYTES {
+            return Err(bad(format!(
+                "file is {file_len} bytes — smaller than the {} byte header + checksum",
+                HEADER_BYTES + CHECKSUM_BYTES
+            )));
+        }
+        // The only allocation before size validation, and it is bounded
+        // by the *actual* file size — header counts cannot inflate it.
+        let mut buf = Vec::with_capacity(file_len as usize);
+        file.read_to_end(&mut buf)?;
+        if buf.len() as u64 != file_len {
+            return Err(bad("file changed size while being read".into()));
+        }
+        let mut c = Cur { buf: &buf, pos: 0 };
+
+        // --- header ---
+        if c.take(8)? != LAYOUT_MAGIC {
+            return Err(bad("bad magic (not a GPOP layout file)".into()));
+        }
+        let version = c.u32()?;
+        if version != LAYOUT_FORMAT_VERSION {
+            return Err(bad(format!(
+                "format version {version} not supported (this build reads {LAYOUT_FORMAT_VERSION})"
+            )));
+        }
+        let fp = c.u64()?;
+        let want_fp = config_fingerprint(config);
+        if fp != want_fp {
+            return Err(bad(format!(
+                "layout was built with a different engine configuration (config \
+                 fingerprint {fp:#018x}, expected {want_fp:#018x}) — rebuild it"
+            )));
+        }
+        let digest = c.u64()?;
+        let n = c.u64()?;
+        let k64 = c.u64()?;
+        let q64 = c.u64()?;
+        let flag = c.u8()?;
+        if flag > 1 {
+            return Err(bad(format!("weight flag must be 0 or 1 (got {flag})")));
+        }
+        let weighted = flag == 1;
+        if n != graph.n() as u64 {
+            return Err(bad(format!(
+                "layout is for an {n}-vertex graph but this graph has {} vertices",
+                graph.n()
+            )));
+        }
+        if weighted != graph.is_weighted() {
+            return Err(bad(format!(
+                "layout weightedness ({weighted}) does not match the graph ({})",
+                graph.is_weighted()
+            )));
+        }
+        if (n, k64, q64) != (parts.n() as u64, parts.k() as u64, parts.q() as u64) {
+            return Err(bad(format!(
+                "partitioning mismatch: file has (n={n}, k={k64}, q={q64}) but the \
+                 configuration induces (n={}, k={}, q={})",
+                parts.n(),
+                parts.k(),
+                parts.q()
+            )));
+        }
+        let t_ids = c.u64()?;
+        let t_srcs = c.u64()?;
+        let t_cnts = c.u64()?;
+        let t_wts = c.u64()?;
+        let t_np = c.u64()?;
+
+        // --- size validation: checked arithmetic BEFORE count-derived
+        //     allocations (u64::MAX totals overflow here, not in malloc).
+        let payload_bytes = t_ids
+            .checked_add(t_srcs)
+            .and_then(|x| x.checked_add(t_cnts))
+            .and_then(|x| x.checked_add(t_wts))
+            .and_then(|x| x.checked_add(t_np))
+            .and_then(|x| x.checked_mul(4));
+        let expected = k64
+            .checked_mul(k64)
+            .and_then(|kk| kk.checked_mul(BIN_ROW_BYTES))
+            .and_then(|x| x.checked_add(HEADER_BYTES))
+            .and_then(|x| payload_bytes.and_then(|b| x.checked_add(b)))
+            .and_then(|x| k64.checked_mul(META_ROW_BYTES).and_then(|m| x.checked_add(m)))
+            .and_then(|x| x.checked_add(CHECKSUM_BYTES))
+            .ok_or_else(|| bad(format!("header counts overflow (k={k64})")))?;
+        if expected != file_len {
+            return Err(bad(format!(
+                "file is {file_len} bytes but the header implies {expected} — \
+                 truncated or corrupt"
+            )));
+        }
+
+        // --- checksum over everything before the trailing 8 bytes ---
+        let body = &buf[..buf.len() - CHECKSUM_BYTES as usize];
+        let stored = u64::from_le_bytes(
+            buf[buf.len() - CHECKSUM_BYTES as usize..].try_into().expect("8 checksum bytes"),
+        );
+        let mut h = Hash64::new();
+        h.update(body);
+        if h.finish() != stored {
+            return Err(bad("checksum mismatch — the layout file is corrupt".into()));
+        }
+
+        // --- graph identity (the O(E) sequential digest pass) ---
+        if digest != graph_digest(graph) {
+            return Err(bad(
+                "layout was built for a different graph (digest mismatch) — rebuild it".into(),
+            ));
+        }
+
+        // --- structural parse + validation ---
+        // k, q, n now equal the in-memory partitioner's, so usize math
+        // below cannot overflow anything the process doesn't already hold.
+        let k = k64 as usize;
+        let kk = k * k;
+        struct BinHdr {
+            ids: usize,
+            srcs: usize,
+            cnts: usize,
+            wts: usize,
+            n_edges: u32,
+            n_msgs: u32,
+        }
+        let mut hdrs: Vec<BinHdr> = Vec::with_capacity(kk);
+        let (mut s_ids, mut s_srcs, mut s_cnts, mut s_wts) = (0u64, 0u64, 0u64, 0u64);
+        // Per source partition: Σ n_edges, Σ n_msgs, #bins with edges.
+        let mut row_edges = vec![0u64; k];
+        let mut row_msgs = vec![0u64; k];
+        let mut row_nonzero = vec![0u32; k];
+        for idx in 0..kk {
+            let ids = c.u32()? as usize;
+            let srcs = c.u32()? as usize;
+            let cnts = c.u32()? as usize;
+            let wts = c.u32()? as usize;
+            let n_edges = c.u32()?;
+            let n_msgs = c.u32()?;
+            if ids != n_edges as usize {
+                return Err(bad(format!("bin {idx}: dc_ids length {ids} != n_edges {n_edges}")));
+            }
+            if weighted {
+                if cnts != srcs || wts != ids || n_msgs != n_edges {
+                    return Err(bad(format!(
+                        "bin {idx}: weighted stream lengths inconsistent \
+                         (ids={ids}, srcs={srcs}, cnts={cnts}, wts={wts}, msgs={n_msgs})"
+                    )));
+                }
+            } else if cnts != 0 || wts != 0 || n_msgs as usize != srcs {
+                return Err(bad(format!(
+                    "bin {idx}: unweighted stream lengths inconsistent \
+                     (ids={ids}, srcs={srcs}, cnts={cnts}, wts={wts}, msgs={n_msgs})"
+                )));
+            }
+            if n_edges == 0 && srcs != 0 {
+                return Err(bad(format!("bin {idx}: sources without edges")));
+            }
+            s_ids += ids as u64;
+            s_srcs += srcs as u64;
+            s_cnts += cnts as u64;
+            s_wts += wts as u64;
+            row_edges[idx / k] += n_edges as u64;
+            row_msgs[idx / k] += n_msgs as u64;
+            if n_edges > 0 {
+                row_nonzero[idx / k] += 1;
+            }
+            hdrs.push(BinHdr { ids, srcs, cnts, wts, n_edges, n_msgs });
+        }
+        if (s_ids, s_srcs, s_cnts, s_wts) != (t_ids, t_srcs, t_cnts, t_wts) {
+            return Err(bad("per-bin stream lengths do not sum to the header totals".into()));
+        }
+        let mut bins: Vec<StaticBin> = Vec::with_capacity(kk);
+        for (idx, hdr) in hdrs.iter().enumerate() {
+            let (i, j) = ((idx / k) as PartId, (idx % k) as PartId);
+            let dst = parts.range(j);
+            let src = parts.range(i);
+            let dc_ids = c.u32_vec(hdr.ids)?;
+            let dc_srcs = c.u32_vec(hdr.srcs)?;
+            let dc_cnts = c.u32_vec(hdr.cnts)?;
+            let dc_wts: Vec<f32> = c.u32_vec(hdr.wts)?.into_iter().map(f32::from_bits).collect();
+            // Destination ids must land inside partition j: the gather
+            // hot loop indexes partition-local structures by `id - base`
+            // without bounds checks.
+            if weighted {
+                if let Some(&x) = dc_ids.iter().find(|&&x| !dst.contains(&x)) {
+                    return Err(bad(format!(
+                        "bin ({i},{j}): destination {x} outside partition {j}'s range"
+                    )));
+                }
+                // Run counts partition the edge stream into ≥1-edge runs.
+                let mut covered = 0u64;
+                for &cnt in &dc_cnts {
+                    if cnt == 0 {
+                        return Err(bad(format!("bin ({i},{j}): zero-length source run")));
+                    }
+                    covered += cnt as u64;
+                }
+                if covered != hdr.n_edges as u64 {
+                    return Err(bad(format!(
+                        "bin ({i},{j}): run counts cover {covered} edges, header says {}",
+                        hdr.n_edges
+                    )));
+                }
+            } else {
+                // MSB-delimited stream: gather advances its unchecked
+                // value cursor once per flagged id, so the flags must
+                // open the stream and count exactly n_msgs messages.
+                let starts = dc_ids.iter().filter(|&&x| x & MSG_START != 0).count();
+                if starts != hdr.n_msgs as usize {
+                    return Err(bad(format!(
+                        "bin ({i},{j}): {starts} message starts but header says {}",
+                        hdr.n_msgs
+                    )));
+                }
+                if let Some(&first) = dc_ids.first() {
+                    if first & MSG_START == 0 {
+                        return Err(bad(format!(
+                            "bin ({i},{j}): id stream does not open with a message start"
+                        )));
+                    }
+                }
+                if let Some(&x) = dc_ids.iter().find(|&&x| !dst.contains(&(x & !MSG_START))) {
+                    return Err(bad(format!(
+                        "bin ({i},{j}): destination {} outside partition {j}'s range",
+                        x & !MSG_START
+                    )));
+                }
+            }
+            // PNG sources: vertices of partition i in scan order (DC
+            // scatter indexes its per-partition scratch by `src - base`).
+            if let Some(&x) = dc_srcs.iter().find(|&&x| !src.contains(&x)) {
+                return Err(bad(format!(
+                    "bin ({i},{j}): source {x} outside partition {i}'s range"
+                )));
+            }
+            // Non-decreasing, not strictly: a CSR with unsorted
+            // adjacency (legal through `read_binary`) can emit several
+            // runs of the same source into one bin, but sources are
+            // always grouped by the ascending vertex scan.
+            if dc_srcs.windows(2).any(|w| w[0] > w[1]) {
+                return Err(bad(format!("bin ({i},{j}): PNG sources are not in vertex order")));
+            }
+            bins.push(StaticBin {
+                dc_ids,
+                dc_srcs,
+                dc_cnts,
+                dc_wts,
+                n_edges: hdr.n_edges,
+                n_msgs: hdr.n_msgs,
+            });
+        }
+        let mut meta: Vec<PartMeta> = Vec::with_capacity(k);
+        let mut np_lens: Vec<usize> = Vec::with_capacity(k);
+        let mut s_np = 0u64;
+        for p in 0..k {
+            let edges = c.u64()?;
+            let msgs = c.u64()?;
+            let np_len = c.u32()? as usize;
+            if edges != row_edges[p] || msgs != row_msgs[p] {
+                return Err(bad(format!(
+                    "partition {p}: meta totals (edges={edges}, msgs={msgs}) do not match \
+                     its bin row (edges={}, msgs={})",
+                    row_edges[p], row_msgs[p]
+                )));
+            }
+            if np_len as u32 != row_nonzero[p] {
+                return Err(bad(format!(
+                    "partition {p}: {np_len} neighbor partitions listed but {} bins have edges",
+                    row_nonzero[p]
+                )));
+            }
+            s_np += np_len as u64;
+            np_lens.push(np_len);
+            meta.push(PartMeta { edges, msgs, neighbor_parts: Vec::new() });
+        }
+        if s_np != t_np {
+            return Err(bad("neighbor-part lengths do not sum to the header total".into()));
+        }
+        let mut seen = vec![false; k];
+        for p in 0..k {
+            let np = c.u32_vec(np_lens[p])?;
+            seen.fill(false);
+            for &j in &np {
+                if j as usize >= k {
+                    return Err(bad(format!("partition {p}: neighbor partition {j} >= k")));
+                }
+                if std::mem::replace(&mut seen[j as usize], true) {
+                    return Err(bad(format!("partition {p}: duplicate neighbor partition {j}")));
+                }
+                if bins[p * k + j as usize].n_edges == 0 {
+                    return Err(bad(format!(
+                        "partition {p}: neighbor partition {j} has no edges in its bin"
+                    )));
+                }
+            }
+            meta[p].neighbor_parts = np;
+        }
+        if c.pos != body.len() {
+            return Err(bad("trailing bytes after the meta section".into()));
+        }
+        Ok(BinLayout::from_raw(k, weighted, bins, meta))
+    }
+}
+
+/// Bounds-checked cursor over the loaded file bytes. Every `take` is
+/// validated against the real buffer, so even if a size-validation bug
+/// slipped through, reads degrade to `InvalidData` — never past the end.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| bad("truncated layout file".into()))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Read `len` little-endian u32s. `len` is always a u32-bounded
+    /// count already reconciled with the file size, so the allocation is
+    /// bounded by bytes actually present.
+    fn u32_vec(&mut self, len: usize) -> io::Result<Vec<u32>> {
+        let bytes = self.take(len.checked_mul(4).ok_or_else(|| bad("count overflow".into()))?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::ppm::layout_builds;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gpop_persist_unit_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn hash64_split_points_do_not_matter() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let mut whole = Hash64::new();
+        whole.update(&data);
+        for split in [0usize, 1, 7, 8, 9, 500, 999, 1000] {
+            let mut parts = Hash64::new();
+            parts.update(&data[..split]);
+            parts.update(&data[split..]);
+            assert_eq!(parts.finish(), whole.finish(), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn hash64_distinguishes_length_and_content() {
+        let h = |bytes: &[u8]| {
+            let mut h = Hash64::new();
+            h.update(bytes);
+            h.finish()
+        };
+        assert_ne!(h(b""), h(b"\0"));
+        assert_ne!(h(b"\0"), h(b"\0\0"));
+        assert_ne!(h(b"abcdefgh"), h(b"abcdefgi"));
+    }
+
+    #[test]
+    fn config_fingerprint_tracks_layout_inputs_only() {
+        let base = PpmConfig { k: Some(8), ..Default::default() };
+        let mut runtime = base.clone();
+        runtime.bw_ratio = 9.0;
+        runtime.chunk = 3;
+        runtime.threads = 16; // irrelevant under an explicit k
+        assert_eq!(config_fingerprint(&base), config_fingerprint(&runtime));
+        let other_k = PpmConfig { k: Some(9), ..Default::default() };
+        assert_ne!(config_fingerprint(&base), config_fingerprint(&other_k));
+        let auto_a = PpmConfig { threads: 2, ..Default::default() };
+        let auto_b = PpmConfig { threads: 4, ..Default::default() };
+        assert_ne!(
+            config_fingerprint(&auto_a),
+            config_fingerprint(&auto_b),
+            "auto partitioning consults the thread count"
+        );
+    }
+
+    #[test]
+    fn graph_digest_sees_structure_and_weights() {
+        let a = gen::chain(50);
+        let b = gen::chain(51);
+        assert_ne!(graph_digest(&a), graph_digest(&b));
+        let w1 = gen::with_uniform_weights(&a, 1.0, 2.0, 5);
+        let w2 = gen::with_uniform_weights(&a, 1.0, 2.0, 6);
+        assert_ne!(graph_digest(&a), graph_digest(&w1));
+        assert_ne!(graph_digest(&w1), graph_digest(&w2));
+    }
+
+    #[test]
+    fn save_load_roundtrip_small() {
+        for (g, name) in [
+            (gen::rmat(7, Default::default(), false), "rmat"),
+            (gen::with_uniform_weights(&gen::chain(40), 1.0, 4.0, 3), "chainw"),
+        ] {
+            let config = PpmConfig { k: Some(5), ..Default::default() };
+            let parts = config.partitioner(g.n());
+            let layout = BinLayout::build(&g, &parts);
+            let p = tmp(name);
+            layout.save(&p, &g, &parts, &config).unwrap();
+            let before = layout_builds();
+            let loaded = BinLayout::load(&p, &g, &parts, &config).unwrap();
+            assert_eq!(layout_builds(), before, "load must not count as a build");
+            assert!(loaded == layout, "loaded layout diverged ({name})");
+            std::fs::remove_file(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_graph_roundtrip() {
+        let g = crate::graph::builder::graph_from_edges(0, &[]);
+        let config = PpmConfig::default();
+        let parts = config.partitioner(g.n());
+        let layout = BinLayout::build(&g, &parts);
+        let p = tmp("empty");
+        layout.save(&p, &g, &parts, &config).unwrap();
+        let loaded = BinLayout::load(&p, &g, &parts, &config).unwrap();
+        assert!(loaded == layout);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,315 @@
+//! Layout persistence tests: save→load bit-identity against fresh
+//! `build_par` layouts (property-tested across random graphs, k and
+//! payload widths), warm-restarted sessions answering queries
+//! bit-identical to fresh ones without re-running the `O(E)` scan, and
+//! an adversarial corrupt-file suite mirroring the `read_binary` one —
+//! every corrupted fixture must surface as `InvalidData` before any
+//! count-derived allocation, never as a panic.
+
+#[path = "prop_framework/mod.rs"]
+mod prop_framework;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use gpop::api::{EngineSession, Runner};
+use gpop::apps;
+use gpop::exec::ThreadPool;
+use gpop::graph::{gen, io, Graph};
+use gpop::ppm::{layout_builds, BinLayout, PpmConfig, PreprocessSource};
+use prop_framework::property;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("gpop_persist_{}_{name}", std::process::id()));
+    p
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------
+// Roundtrip bit-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_save_load_is_bit_identical_to_build_par() {
+    property("BinLayout::load == build_par", 12, |g| {
+        let graph = g.graph(400, 8);
+        let k = *g.pick(&[4usize, 16, 64]);
+        let threads = *g.pick(&[1usize, 2, 4]);
+        let config = PpmConfig { k: Some(k), ..Default::default() };
+        let parts = config.partitioner(graph.n());
+        let mut pool = ThreadPool::new(threads);
+        let fresh = BinLayout::build_par(&graph, &parts, &mut pool);
+        let path = tmp(&format!("prop_{}", g.rng.next_u64()));
+        fresh.save(&path, &graph, &parts, &config).map_err(|e| e.to_string())?;
+        let before = layout_builds();
+        let loaded = BinLayout::load(&path, &graph, &parts, &config).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        prop_assert_eq!(layout_builds(), before, "load must not run the O(E) scan");
+        prop_assert!(
+            loaded == fresh,
+            "loaded layout diverged (n={}, m={}, weighted={}, k={k}, t={threads})",
+            graph.n(),
+            graph.m(),
+            graph.is_weighted()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn named_dataset_roundtrips_across_k() {
+    let rmat_w = gen::with_uniform_weights(&gen::rmat(8, Default::default(), false), 1.0, 4.0, 3);
+    for (graph, name) in [
+        (gen::rmat(9, Default::default(), false), "rmat9"),
+        (gen::erdos_renyi(600, 4800, 5), "er600"),
+        (rmat_w, "rmat8+w"),
+    ] {
+        for k in [4usize, 16, 64] {
+            let config = PpmConfig { k: Some(k), ..Default::default() };
+            let parts = config.partitioner(graph.n());
+            let fresh = BinLayout::build(&graph, &parts);
+            let path = tmp(&format!("named_{name}_{k}"));
+            fresh.save(&path, &graph, &parts, &config).unwrap();
+            let loaded = BinLayout::load(&path, &graph, &parts, &config).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert!(loaded == fresh, "{name} k={k}: loaded layout diverged");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Warm-restarted sessions
+// ---------------------------------------------------------------------
+
+#[test]
+fn restored_session_matches_fresh_session_bitwise() {
+    // threads = 1 makes gather order deterministic, so whole outputs can
+    // be compared bit-for-bit across 1-lane (PageRank f32, BFS i32) and
+    // 2-lane (SsspParents (f32, u32)) programs.
+    let base = gen::rmat(9, Default::default(), false);
+    let weighted = gen::with_uniform_weights(&base, 1.0, 4.0, 7);
+    for (graph, wname) in [(base, "unweighted"), (weighted, "weighted")] {
+        let g = Arc::new(graph);
+        let config = PpmConfig { threads: 1, k: Some(16), ..Default::default() };
+        let fresh = EngineSession::new(g.clone(), config.clone());
+        let path = tmp(&format!("sess_{wname}"));
+        fresh.save(&path).unwrap();
+        let warm = EngineSession::restore(g.clone(), config, &path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(warm.build_stats().source, PreprocessSource::Loaded);
+        assert!(**warm.layout() == **fresh.layout(), "{wname}: restored layout diverged");
+
+        let pr_a = Runner::on(&fresh).run(apps::PageRank::new(&g, 0.85));
+        let pr_b = Runner::on(&warm).run(apps::PageRank::new(&g, 0.85));
+        assert_eq!(bits(&pr_a.output), bits(&pr_b.output), "{wname}: PageRank diverged");
+        assert_eq!(pr_a.preprocess, PreprocessSource::Built);
+        assert_eq!(pr_b.preprocess, PreprocessSource::Loaded);
+
+        let bfs_a = Runner::on(&fresh).run(apps::Bfs::new(g.n(), 0));
+        let bfs_b = Runner::on(&warm).run(apps::Bfs::new(g.n(), 0));
+        assert_eq!(bfs_a.output, bfs_b.output, "{wname}: BFS parents diverged");
+
+        if g.is_weighted() {
+            let sp_a = Runner::on(&fresh).run(apps::SsspParents::new(g.n(), 0));
+            let sp_b = Runner::on(&warm).run(apps::SsspParents::new(g.n(), 0));
+            assert_eq!(
+                bits(&sp_a.output.distance),
+                bits(&sp_b.output.distance),
+                "{wname}: 2-lane distances diverged"
+            );
+            assert_eq!(sp_a.output.parent, sp_b.output.parent, "{wname}: parents diverged");
+        }
+    }
+}
+
+#[test]
+fn restored_session_answers_match_at_higher_thread_counts() {
+    // At t = 4 gather interleavings are nondeterministic, but f32
+    // min-combining is order-independent, so SSSP distances must still
+    // agree bit-for-bit between a fresh and a restored session.
+    let g = Arc::new(gen::with_uniform_weights(&gen::erdos_renyi(500, 4000, 11), 1.0, 4.0, 5));
+    let config = PpmConfig { threads: 4, k: Some(16), ..Default::default() };
+    let fresh = EngineSession::new(g.clone(), config.clone());
+    let path = tmp("t4");
+    fresh.save(&path).unwrap();
+    let warm = EngineSession::restore(g.clone(), config, &path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let a = Runner::on(&fresh).run(apps::Sssp::new(g.n(), 0));
+    let b = Runner::on(&warm).run(apps::Sssp::new(g.n(), 0));
+    assert_eq!(bits(&a.output), bits(&b.output), "SSSP distances diverged at t=4");
+}
+
+#[test]
+fn restore_skips_the_scan_and_amortizes_queries() {
+    let g = Arc::new(gen::erdos_renyi(400, 3200, 9));
+    let config = PpmConfig { threads: 2, k: Some(8), ..Default::default() };
+    let path = tmp("amort");
+    EngineSession::new(g.clone(), config.clone()).save(&path).unwrap();
+    let before = layout_builds();
+    let warm = EngineSession::restore(g.clone(), config, &path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(layout_builds(), before, "restore must not run the O(E) scan");
+    assert_eq!(warm.build_stats().source, PreprocessSource::Loaded);
+    assert!(warm.build_stats().t_layout > 0.0, "the load is still timed");
+    for root in [0u32, 5, 17] {
+        let rep = Runner::on(&warm).run(apps::Bfs::new(g.n(), root));
+        assert!(rep.converged);
+        assert_eq!(rep.preprocess, PreprocessSource::Loaded, "reports must name the warm path");
+        assert!(rep.t_preprocess > 0.0, "amortized load cost is surfaced per query");
+    }
+    assert_eq!(layout_builds(), before, "queries on a restored session never rebuild");
+}
+
+#[test]
+fn whole_session_restores_from_disk() {
+    // The full serving flow: graph (write_binary) + layout (save) both
+    // persisted; a restart restores the session from the two files.
+    let g = gen::with_uniform_weights(&gen::erdos_renyi(300, 2000, 21), 1.0, 4.0, 9);
+    let gpath = tmp("whole.bin");
+    let lpath = tmp("whole.layout");
+    io::write_binary(&g, &gpath).unwrap();
+    let config = PpmConfig { threads: 2, k: Some(8), ..Default::default() };
+    let fresh = EngineSession::new(g, config.clone());
+    fresh.save(&lpath).unwrap();
+    drop(fresh);
+    let g2 = io::read_binary(&gpath).unwrap();
+    let warm = EngineSession::restore(g2, config, &lpath).unwrap();
+    let rep = Runner::on(&warm).run(apps::Sssp::new(warm.graph().n(), 0));
+    assert!(rep.converged);
+    assert_eq!(rep.preprocess, PreprocessSource::Loaded);
+    std::fs::remove_file(&gpath).unwrap();
+    std::fs::remove_file(&lpath).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Corrupt / mismatched files: always InvalidData, never a panic
+// ---------------------------------------------------------------------
+
+// Header byte offsets (see ppm::persist module docs): magic 0..8,
+// version 8..12, fingerprint 12..20, digest 20..28, n 28..36, k 36..44,
+// q 44..52, weighted 52, section totals 53..93.
+
+fn fixture() -> (Arc<Graph>, PpmConfig, Vec<u8>) {
+    // Tests run concurrently in one process: every fixture gets its own
+    // scratch file.
+    static FIXTURE_ID: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let id = FIXTURE_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let g = Arc::new(gen::erdos_renyi(120, 600, 13));
+    let config = PpmConfig { k: Some(6), ..Default::default() };
+    let parts = config.partitioner(g.n());
+    let layout = BinLayout::build(&g, &parts);
+    let path = tmp(&format!("fixture_{id}"));
+    layout.save(&path, &g, &parts, &config).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    (g, config, bytes)
+}
+
+/// Corrupt the fixture bytes and expect `InvalidData` (not a panic, not
+/// an abort, not a count-driven giant allocation).
+fn expect_invalid(name: &str, corrupt: impl FnOnce(&mut Vec<u8>)) {
+    let (g, config, mut bytes) = fixture();
+    corrupt(&mut bytes);
+    let path = tmp(name);
+    std::fs::write(&path, &bytes).unwrap();
+    let parts = config.partitioner(g.n());
+    let err = BinLayout::load(&path, &g, &parts, &config).expect_err(name);
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{name}: {err}");
+}
+
+#[test]
+fn corrupt_truncated_file_rejected() {
+    expect_invalid("trunc", |b| {
+        let keep = b.len() - 10;
+        b.truncate(keep);
+    });
+    // Shorter than even the fixed header.
+    expect_invalid("trunc_header", |b| b.truncate(40));
+}
+
+#[test]
+fn corrupt_wrong_magic_rejected() {
+    expect_invalid("magic", |b| b[..8].copy_from_slice(b"NOTALAYT"));
+}
+
+#[test]
+fn corrupt_future_format_version_rejected() {
+    expect_invalid("version", |b| b[8..12].copy_from_slice(&99u32.to_le_bytes()));
+}
+
+#[test]
+fn corrupt_checksum_mismatch_rejected() {
+    // Flip one payload byte: the structure still parses sizes cleanly,
+    // so only the checksum can catch it — and it must, before the
+    // payload is interpreted.
+    expect_invalid("checksum", |b| {
+        let mid = b.len() / 2;
+        b[mid] ^= 0xFF;
+    });
+}
+
+#[test]
+fn corrupt_count_overflow_rejected_before_allocating() {
+    // u64::MAX section totals overflow the checked size arithmetic —
+    // pre-validation this would have been a multi-EiB allocation demand.
+    expect_invalid("overflow_ids", |b| b[53..61].copy_from_slice(&u64::MAX.to_le_bytes()));
+    expect_invalid("overflow_np", |b| b[85..93].copy_from_slice(&u64::MAX.to_le_bytes()));
+}
+
+#[test]
+fn corrupt_partitioning_and_flag_fields_rejected() {
+    // Tampered k: disagrees with what the config induces.
+    expect_invalid("bad_k", |b| b[36..44].copy_from_slice(&(1u64 << 40).to_le_bytes()));
+    // Weight flag out of {0, 1}.
+    expect_invalid("bad_flag", |b| b[52] = 7);
+    // Weightedness flipped against the graph.
+    expect_invalid("flipped_weighted", |b| b[52] = 1);
+}
+
+#[test]
+fn mismatched_config_rejected() {
+    let (g, _config, bytes) = fixture();
+    let path = tmp("cfgmismatch");
+    std::fs::write(&path, &bytes).unwrap();
+    // Built under k = 6; loading under k = 7 must be refused up front.
+    let other = PpmConfig { k: Some(7), ..Default::default() };
+    let parts = other.partitioner(g.n());
+    let err = BinLayout::load(&path, &g, &parts, &other).expect_err("config mismatch");
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains("configuration"), "got: {err}");
+}
+
+#[test]
+fn mismatched_graph_rejected() {
+    let (_g, config, bytes) = fixture();
+    let path = tmp("graphmismatch");
+    std::fs::write(&path, &bytes).unwrap();
+    // Same n (so the partitioning agrees) but different edges: only the
+    // digest can tell them apart, and it must.
+    let other = gen::erdos_renyi(120, 600, 14);
+    let parts = config.partitioner(other.n());
+    let err = BinLayout::load(&path, &other, &parts, &config).expect_err("graph mismatch");
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains("different graph"), "got: {err}");
+}
+
+#[test]
+fn session_restore_surfaces_invalid_files_as_errors() {
+    // The session-level wrapper must pass InvalidData through (no panic,
+    // no partial session).
+    let (g, config, mut bytes) = fixture();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    let path = tmp("sess_invalid");
+    std::fs::write(&path, &bytes).unwrap();
+    let err = EngineSession::restore(g, config, &path).expect_err("corrupt layout");
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+}
