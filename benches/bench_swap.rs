@@ -1,0 +1,169 @@
+//! bench_swap — hot-swap + delta-ingestion economics, emitting
+//! `BENCH_pr5.json`.
+//!
+//! The delta path exists to beat the `O(E)` rebuild: for a small edge
+//! batch only the dirty partition rows are re-scanned
+//! (`BinLayout::apply_delta`), so patch time should track `E_dirty`,
+//! not `E`. This bench times the three legs of an ingest — 4-thread
+//! `build_par` (the cost a naive restart pays), the CSR merge, and
+//! `apply_delta` — on RMAT and Erdős–Rényi, unweighted and weighted,
+//! and writes medians to `$GPOP_BENCH_SWAP_JSON` (default
+//! `BENCH_pr5.json`).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::bench::{bench, Table};
+use gpop::exec::ThreadPool;
+use gpop::graph::{merge_delta, Graph, GraphDelta};
+use gpop::ppm::{BinLayout, PpmConfig};
+use gpop::util::fmt;
+use gpop::util::rng::Rng;
+use gpop::VertexId;
+
+/// Edge updates per delta batch (half inserts, half deletes).
+const DELTA_EDGES: usize = 64;
+
+struct Sample {
+    dataset: String,
+    weighted: bool,
+    k: usize,
+    delta_edges: usize,
+    dirty_rows: usize,
+    t_full_build: f64,
+    t_merge: f64,
+    t_apply_delta: f64,
+}
+
+impl Sample {
+    /// Ingestion speedup: full rebuild over patch (merge + apply).
+    fn full_over_delta(&self) -> f64 {
+        self.t_full_build / (self.t_merge + self.t_apply_delta).max(1e-12)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"dataset\":\"{}\",\"weighted\":{},\"k\":{},\"delta_edges\":{},\
+             \"dirty_rows\":{},\"t_full_build_s\":{:.6},\"t_merge_s\":{:.6},\
+             \"t_apply_delta_s\":{:.6},\"full_over_delta\":{:.3}}}",
+            self.dataset,
+            self.weighted,
+            self.k,
+            self.delta_edges,
+            self.dirty_rows,
+            self.t_full_build,
+            self.t_merge,
+            self.t_apply_delta,
+            self.full_over_delta()
+        )
+    }
+}
+
+/// A deterministic delta: half random inserts, half deletes aimed at
+/// real edges.
+fn make_delta(g: &Graph, seed: u64) -> GraphDelta {
+    let mut rng = Rng::new(seed);
+    let n = g.n() as u64;
+    let mut delta = GraphDelta::new();
+    for _ in 0..DELTA_EDGES / 2 {
+        let s = rng.below(n) as VertexId;
+        let d = rng.below(n) as VertexId;
+        if g.is_weighted() {
+            delta.insert_weighted(s, d, 0.5 + rng.next_f32() * 4.0);
+        } else {
+            delta.insert(s, d);
+        }
+    }
+    for _ in 0..DELTA_EDGES / 2 {
+        let s = rng.below(n) as VertexId;
+        let adj = g.out().neighbors(s);
+        let d = if adj.is_empty() {
+            rng.below(n) as VertexId
+        } else {
+            adj[rng.below(adj.len() as u64) as usize]
+        };
+        delta.delete(s, d);
+    }
+    delta
+}
+
+fn swap_samples(name: &str, g: &Graph, out: &mut Vec<Sample>) {
+    let config = common::bench_config();
+    let pcfg = PpmConfig { threads: 4, ..Default::default() };
+    let parts = pcfg.partitioner(g.n());
+    let mut pool = ThreadPool::new(pcfg.threads);
+    let full = bench(&format!("{name} full build t=4"), config, || {
+        std::hint::black_box(BinLayout::build_par(g, &parts, &mut pool));
+    });
+    let base = BinLayout::build_par(g, &parts, &mut pool);
+    let delta = make_delta(g, 0xD17A);
+    let merge = bench(&format!("{name} merge"), config, || {
+        std::hint::black_box(merge_delta(g, &delta).expect("merge delta"));
+    });
+    let merged = merge_delta(g, &delta).expect("merge delta");
+    let dirty = delta.dirty_parts(&parts);
+    let apply = bench(&format!("{name} apply_delta"), config, || {
+        std::hint::black_box(base.apply_delta(&merged, &parts, &dirty, &mut pool));
+    });
+    // Sanity: the patched layout must match a from-scratch build.
+    let patched = base.apply_delta(&merged, &parts, &dirty, &mut pool);
+    assert!(
+        patched == BinLayout::build_par(&merged, &parts, &mut pool),
+        "{name}: apply_delta diverged from a full rebuild"
+    );
+    out.push(Sample {
+        dataset: name.to_string(),
+        weighted: g.is_weighted(),
+        k: parts.k(),
+        delta_edges: delta.len(),
+        dirty_rows: dirty.len(),
+        t_full_build: full.median(),
+        t_merge: merge.median(),
+        t_apply_delta: apply.median(),
+    });
+}
+
+fn main() {
+    let scale = common::base_scale();
+    let rmat = gpop::graph::gen::rmat(scale, Default::default(), false);
+    let n_er = 1usize << (scale - 1);
+    let er = gpop::graph::gen::erdos_renyi(n_er, n_er * 16, 99);
+    let rmat_w = gpop::graph::gen::with_uniform_weights(&rmat, 1.0, 4.0, 5);
+    let er_w = gpop::graph::gen::with_uniform_weights(&er, 1.0, 4.0, 5);
+
+    println!(
+        "bench_swap: rmat{scale} ({} edges), er{} ({} edges), {DELTA_EDGES}-edge deltas",
+        fmt::si(rmat.m() as f64),
+        scale - 1,
+        fmt::si(er.m() as f64)
+    );
+
+    let mut samples: Vec<Sample> = Vec::new();
+    swap_samples(&format!("rmat{scale}"), &rmat, &mut samples);
+    swap_samples(&format!("er{}", scale - 1), &er, &mut samples);
+    swap_samples(&format!("rmat{scale}+w"), &rmat_w, &mut samples);
+    swap_samples(&format!("er{}+w", scale - 1), &er_w, &mut samples);
+
+    let mut table =
+        Table::new(&["dataset", "k", "dirty", "full build t=4", "merge", "apply", "full/delta"]);
+    for s in &samples {
+        table.row(&[
+            s.dataset.clone(),
+            s.k.to_string(),
+            format!("{}/{}", s.dirty_rows, s.k),
+            fmt::secs(s.t_full_build),
+            fmt::secs(s.t_merge),
+            fmt::secs(s.t_apply_delta),
+            format!("{:.2}x", s.full_over_delta()),
+        ]);
+    }
+    table.print();
+
+    let path =
+        std::env::var("GPOP_BENCH_SWAP_JSON").unwrap_or_else(|_| "BENCH_pr5.json".to_string());
+    let body = samples.iter().map(Sample::json).collect::<Vec<_>>().join(",");
+    let json =
+        format!("{{\"bench\":\"bench_swap\",\"pr\":5,\"scale\":{scale},\"samples\":[{body}]}}\n");
+    std::fs::write(&path, json).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -1,0 +1,497 @@
+//! bench_compare — the CI bench-regression gate.
+//!
+//! Reads the checked-in baseline (`benches/baselines/BENCH_baseline.json`)
+//! and one or more freshly produced `BENCH_*.json` artifacts, and FAILS
+//! (exit 1) when any tracked median regresses more than the baseline's
+//! `regression_pct` (default 25%) over its baseline value, or when a
+//! tracked metric disappears from the current artifacts. Improvements
+//! are reported too, with a hint to refresh the baseline so the gate
+//! tightens over time.
+//!
+//! Metric addressing: `<bench>/<entry>/<field>`, where `<bench>` is the
+//! artifact's top-level `"bench"` name, `<entry>` is the sample's
+//! `"app"` or `"dataset"` (suffixed `/t<threads>` when the sample
+//! carries a `"threads"` field), and `<field>` is any numeric field of
+//! the sample — e.g. `bench_smoke/pagerank/median_time_s` or
+//! `bench_preprocess/rmat12/t4/t_par_s`.
+//!
+//! Baseline refresh (documented in the README): run the bench suite at
+//! the pinned scale, then rewrite the tracked values in place:
+//!
+//! ```text
+//! GPOP_BENCH_SCALE=12 cargo bench --bench bench_smoke    # ... etc
+//! cargo run --release --bin bench_compare -- \
+//!     --baseline benches/baselines/BENCH_baseline.json --update \
+//!     BENCH_pr2.json BENCH_pr3.json BENCH_pr4.json BENCH_pr5.json
+//! ```
+//!
+//! No external dependencies: a ~100-line recursive-descent JSON parser
+//! below covers the flat artifact shapes our benches emit.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+// ---------------------------------------------------------------------
+// Minimal JSON
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(text: &'a str) -> Self {
+        Self { b: text.as_bytes(), i: 0 }
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.i)
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected {lit:?}")))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        // Collect raw bytes and decode once, so multi-byte UTF-8 content
+        // (dataset names, baseline comments) survives intact instead of
+        // being mangled byte-by-byte into Latin-1.
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let c = *self.b.get(self.i).ok_or_else(|| self.err("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => {
+                    return String::from_utf8(out).map_err(|_| self.err("invalid UTF-8 string"))
+                }
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' => out.push(e),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        // Our artifacts never emit \b, \f or \uXXXX.
+                        _ => return Err(self.err("unsupported escape")),
+                    }
+                }
+                _ => out.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.ws();
+        let start = self.i;
+        while self
+            .b
+            .get(self.i)
+            .is_some_and(|&c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| self.err("bad number"))
+    }
+
+    fn parse(text: &'a str) -> Result<Json, String> {
+        let mut p = Parser::new(text);
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(p.err("trailing bytes"));
+        }
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metric extraction
+// ---------------------------------------------------------------------
+
+/// Flatten one bench artifact into `<bench>/<entry>/<field>` -> value.
+fn metrics_of(doc: &Json, file: &str) -> Result<BTreeMap<String, f64>, String> {
+    let bench = doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("{file}: no top-level \"bench\" name"))?;
+    let samples = doc
+        .get("samples")
+        .or_else(|| doc.get("apps"))
+        .ok_or_else(|| format!("{file}: no \"samples\"/\"apps\" array"))?;
+    let Json::Arr(samples) = samples else {
+        return Err(format!("{file}: \"samples\" is not an array"));
+    };
+    let mut out = BTreeMap::new();
+    for (idx, s) in samples.iter().enumerate() {
+        let name = s
+            .get("app")
+            .or_else(|| s.get("dataset"))
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{file}: sample {idx} has no \"app\"/\"dataset\" name"))?;
+        let entry = match s.get("threads").and_then(Json::as_num) {
+            Some(t) => format!("{name}/t{t}"),
+            None => name.to_string(),
+        };
+        let Json::Obj(fields) = s else {
+            return Err(format!("{file}: sample {idx} is not an object"));
+        };
+        for (key, value) in fields {
+            if let Some(x) = value.as_num() {
+                out.insert(format!("{bench}/{entry}/{key}"), x);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn read_json(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    Parser::parse(&text).map_err(|e| format!("parse {path}: {e}"))
+}
+
+// ---------------------------------------------------------------------
+// Compare / update
+// ---------------------------------------------------------------------
+
+struct Baseline {
+    scale: f64,
+    regression_pct: f64,
+    metrics: BTreeMap<String, f64>,
+}
+
+fn read_baseline(path: &str) -> Result<Baseline, String> {
+    let doc = read_json(path)?;
+    let metrics = match doc.get("metrics") {
+        Some(Json::Obj(fields)) => fields
+            .iter()
+            .map(|(k, v)| {
+                v.as_num()
+                    .map(|x| (k.clone(), x))
+                    .ok_or_else(|| format!("{path}: metric {k:?} is not a number"))
+            })
+            .collect::<Result<BTreeMap<_, _>, _>>()?,
+        _ => return Err(format!("{path}: no \"metrics\" object")),
+    };
+    Ok(Baseline {
+        scale: doc.get("scale").and_then(Json::as_num).unwrap_or(0.0),
+        regression_pct: doc.get("regression_pct").and_then(Json::as_num).unwrap_or(25.0),
+        metrics,
+    })
+}
+
+fn write_baseline(path: &str, base: &Baseline) -> Result<(), String> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(
+        "  \"comment\": \"Tracked bench medians at GPOP_BENCH_SCALE below. Refresh: run the \
+         bench suite, then `cargo run --release --bin bench_compare -- --baseline <this file> \
+         --update BENCH_*.json` (see README, 'Bench-regression gate').\",\n",
+    );
+    out.push_str(&format!("  \"scale\": {},\n", base.scale));
+    out.push_str(&format!("  \"regression_pct\": {},\n", base.regression_pct));
+    out.push_str("  \"metrics\": {\n");
+    let n = base.metrics.len();
+    for (i, (k, v)) in base.metrics.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{k}\": {v:.6}{}\n",
+            if i + 1 < n { "," } else { "" }
+        ));
+    }
+    out.push_str("  }\n}\n");
+    std::fs::write(path, out).map_err(|e| format!("write {path}: {e}"))
+}
+
+fn run() -> Result<bool, String> {
+    let mut baseline_path: Option<String> = None;
+    let mut update = false;
+    let mut current_files: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--baseline" => {
+                baseline_path = Some(args.next().ok_or("--baseline needs a path")?);
+            }
+            "--update" => update = true,
+            other if other.starts_with("--") => {
+                return Err(format!("unknown option {other:?}"));
+            }
+            other => current_files.push(other.to_string()),
+        }
+    }
+    let baseline_path = baseline_path.ok_or("--baseline FILE is required")?;
+    if current_files.is_empty() {
+        return Err("no current BENCH_*.json files given".into());
+    }
+    let mut base = read_baseline(&baseline_path)?;
+    let mut current: BTreeMap<String, f64> = BTreeMap::new();
+    let mut current_scale: Option<f64> = None;
+    for f in &current_files {
+        let doc = read_json(f)?;
+        // Medians are only comparable at one workload size: artifacts
+        // that carry a "scale" (bench_preprocess/persist/swap) must all
+        // agree, and — below — must match the baseline's.
+        if let Some(s) = doc.get("scale").and_then(Json::as_num) {
+            match current_scale {
+                Some(prev) if prev != s => {
+                    return Err(format!(
+                        "{f}: bench scale {s} disagrees with other artifacts ({prev})"
+                    ));
+                }
+                _ => current_scale = Some(s),
+            }
+        }
+        current.extend(metrics_of(&doc, f)?);
+    }
+    if !update {
+        if let Some(s) = current_scale {
+            if base.scale > 0.0 && s != base.scale {
+                return Err(format!(
+                    "artifacts were produced at GPOP_BENCH_SCALE={s} but the baseline holds \
+                     scale-{} medians — rerun at the baseline scale or refresh with --update",
+                    base.scale
+                ));
+            }
+        }
+    }
+
+    if update {
+        if let Some(s) = current_scale {
+            base.scale = s;
+        }
+        let mut missing = Vec::new();
+        for (k, v) in base.metrics.iter_mut() {
+            match current.get(k) {
+                Some(&x) => *v = x,
+                None => missing.push(k.clone()),
+            }
+        }
+        if !missing.is_empty() {
+            return Err(format!("--update: tracked metrics missing from inputs: {missing:?}"));
+        }
+        write_baseline(&baseline_path, &base)?;
+        println!("baseline refreshed: {} metrics written to {baseline_path}", base.metrics.len());
+        return Ok(true);
+    }
+
+    let allowed = 1.0 + base.regression_pct / 100.0;
+    let mut failures: Vec<String> = Vec::new();
+    let mut improvements = 0usize;
+    println!(
+        "bench_compare: {} tracked metrics, fail threshold +{}% (baseline scale {})",
+        base.metrics.len(),
+        base.regression_pct,
+        base.scale
+    );
+    for (key, &b) in &base.metrics {
+        match current.get(key) {
+            None => failures.push(format!("{key}: tracked metric missing from current artifacts")),
+            Some(&c) => {
+                let ratio = c / b.max(1e-12);
+                let verdict = if ratio > allowed {
+                    failures.push(format!(
+                        "{key}: {c:.6}s vs baseline {b:.6}s ({:+.1}% > +{}% allowed)",
+                        (ratio - 1.0) * 100.0,
+                        base.regression_pct
+                    ));
+                    "REGRESSION"
+                } else if ratio < 1.0 / allowed {
+                    improvements += 1;
+                    "improved"
+                } else {
+                    "ok"
+                };
+                println!("  {key}: {c:.6}s vs {b:.6}s ({ratio:.2}x) {verdict}");
+            }
+        }
+    }
+    if improvements > 0 {
+        println!(
+            "{improvements} metric(s) improved well past the threshold — consider refreshing \
+             the baseline (--update) to tighten the gate"
+        );
+    }
+    if failures.is_empty() {
+        println!("bench-regression gate: PASS");
+        Ok(true)
+    } else {
+        eprintln!("bench-regression gate: FAIL");
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        Ok(false)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench_compare: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parser_handles_artifact_shapes() {
+        let doc = Parser::parse(
+            "{\"bench\":\"bench_x\",\"scale\":12,\"samples\":[\
+             {\"app\":\"pr\",\"median_time_s\":0.5,\"iters\":5},\
+             {\"dataset\":\"rmat12\",\"threads\":4,\"t_par_s\":1.5e-3,\"weighted\":false}]}",
+        )
+        .unwrap();
+        let m = metrics_of(&doc, "x").unwrap();
+        assert_eq!(m["bench_x/pr/median_time_s"], 0.5);
+        assert_eq!(m["bench_x/pr/iters"], 5.0);
+        assert_eq!(m["bench_x/rmat12/t4/t_par_s"], 1.5e-3);
+        assert!(!m.contains_key("bench_x/rmat12/t4/weighted"), "bools are not metrics");
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(Parser::parse("{\"a\":}").is_err());
+        assert!(Parser::parse("[1, 2").is_err());
+        assert!(Parser::parse("{} trailing").is_err());
+        assert!(Parser::parse("{\"a\": 1e}").is_err());
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("gpop_bench_compare_{}.json", std::process::id()));
+        let path = p.to_str().unwrap().to_string();
+        let mut metrics = BTreeMap::new();
+        metrics.insert("bench_x/pr/median_time_s".to_string(), 0.25);
+        write_baseline(&path, &Baseline { scale: 12.0, regression_pct: 25.0, metrics }).unwrap();
+        let back = read_baseline(&path).unwrap();
+        assert_eq!(back.scale, 12.0);
+        assert_eq!(back.regression_pct, 25.0);
+        assert_eq!(back.metrics["bench_x/pr/median_time_s"], 0.25);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

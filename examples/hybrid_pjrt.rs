@@ -60,7 +60,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let session = EngineSession::new(graph, PpmConfig { threads: 4, ..Default::default() });
     let native = Runner::on(&session)
         .until(Convergence::MaxIters(m.iters))
-        .run(PageRank::new(session.graph(), 0.85));
+        .run(PageRank::new(&session.graph(), 0.85));
 
     let err = |a: &[f32], b: &[f32]| {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)

@@ -29,7 +29,7 @@ fn main() {
     // --- PageRank: run to a numeric tolerance (bounded at 50 iters).
     let pr = Runner::on(&session)
         .until(Convergence::L1Norm(1e-7).or_max_iters(50))
-        .run(PageRank::new(session.graph(), 0.85));
+        .run(PageRank::new(&session.graph(), 0.85));
     let mut top: Vec<(usize, f32)> = pr.output.iter().copied().enumerate().collect();
     top.sort_by(|a, b| b.1.total_cmp(&a.1));
     println!("\ntop-5 PageRank ({} iters, converged: {}):", pr.n_iters(), pr.converged);
@@ -60,7 +60,7 @@ fn main() {
     // --- One-pass SSSP with parents on a weighted session: the message
     // is (candidate distance, proposing parent) — two lanes traveling
     // together, so the shortest-path tree needs no second sweep.
-    let wgraph = gen::with_uniform_weights(session.graph(), 1.0, 4.0, 7);
+    let wgraph = gen::with_uniform_weights(&session.graph(), 1.0, 4.0, 7);
     let wsession = EngineSession::new(wgraph, PpmConfig { threads: 4, ..Default::default() });
     let sp = Runner::on(&wsession).run(SsspParents::new(n, 0));
     let tree_edges =

@@ -6,7 +6,7 @@
 //! let report = Runner::on(&session)
 //!     .policy(ModePolicy::Hybrid)
 //!     .until(Convergence::L1Norm(1e-7).or_max_iters(100))
-//!     .run(PageRank::new(session.graph(), 0.85));
+//!     .run(PageRank::new(&session.graph(), 0.85));
 //! println!("{} iters, ranks: {:?}", report.n_iters(), report.output);
 //! ```
 //!

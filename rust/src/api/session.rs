@@ -1,18 +1,44 @@
 //! [`EngineSession`] — the shared-graph, amortized-preprocessing entry
-//! point for multi-query serving.
+//! point for multi-query serving, now with hot graph swap and streaming
+//! delta ingestion.
 //!
 //! `Engine::new` pays an `O(E)` pre-processing scan (partitioning, PNG
 //! layout, DC id streams). PCPM showed that cost is worth amortizing
-//! across runs; a session does exactly that: it owns `Arc<Graph>` + the
-//! cached [`Partitioner`] + [`BinLayout`] and checks out engines that
-//! share all three, allocating only interior-mutable frontier/bin
-//! scratch. Checked-in engines are pooled and reused, so a steady-state
-//! query stream allocates nothing.
+//! across runs; a session does exactly that: it owns an immutable
+//! *snapshot* — `Arc<Graph>` + the cached [`Partitioner`] +
+//! [`BinLayout`] — and checks out engines that share all three,
+//! allocating only interior-mutable frontier/bin scratch. Checked-in
+//! engines are pooled and reused, so a steady-state query stream
+//! allocates nothing.
 //!
 //! Sessions are `Sync`: many threads can `checkout()` concurrently, each
-//! getting an exclusive engine over the same immutable layout (lock-free
-//! on the data path, per the paper — the only lock is the pool's, held
-//! for a `Vec::pop`).
+//! getting an exclusive engine over the same immutable snapshot
+//! (lock-free on the data path, per the paper — the only locks are the
+//! snapshot pointer's and the engine pool's, each held for a pointer
+//! swap or a `Vec::pop`).
+//!
+//! ## Hot swap & delta ingestion
+//!
+//! A serving deployment must not tear the session down to change the
+//! graph. Two mutation paths, both `&self`:
+//!
+//! - [`swap_graph`](EngineSession::swap_graph) replaces the graph
+//!   wholesale: the new partitioning + layout are built in the
+//!   background on a fresh worker team (checkouts keep being answered
+//!   from the current snapshot the whole time), then the snapshot `Arc`
+//!   is flipped atomically.
+//! - [`ingest`](EngineSession::ingest) applies a [`GraphDelta`] of edge
+//!   inserts/deletes: the CSR is merged and only the *dirty* partition
+//!   rows of the layout are re-scanned
+//!   ([`BinLayout::apply_delta`]) — bit-identical to a from-scratch
+//!   build on the mutated graph, at a fraction of the cost.
+//!
+//! Every flip bumps the session [`generation`](EngineSession::generation).
+//! In-flight engines finish on the snapshot they checked out (their
+//! `Arc`s keep it alive); new checkouts see the new one, and a checkout
+//! can never observe a torn graph/layout pair because the whole snapshot
+//! lives behind one `Arc`. Pooled engines are tagged with their
+//! generation and lazily retired once stale.
 
 use std::ops::{Deref, DerefMut};
 use std::path::Path;
@@ -20,7 +46,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::exec::ThreadPool;
-use crate::graph::Graph;
+use crate::graph::{merge_delta, Graph, GraphDelta};
 use crate::partition::Partitioner;
 use crate::ppm::{BinLayout, BuildStats, Engine, PpmConfig, PreprocessSource};
 
@@ -31,15 +57,33 @@ use crate::ppm::{BinLayout, BuildStats, Engine, PpmConfig, PreprocessSource};
 /// instead of being retained forever.
 const MAX_POOLED_ENGINES: usize = 4;
 
-/// A shared, reusable graph-processing context: one graph, one
-/// partitioning, one pre-processed bin layout, many queries.
-pub struct EngineSession {
+/// One immutable (graph, partitioning, layout) generation. Everything a
+/// query depends on lives behind a single `Arc`, which is what makes a
+/// swap atomic: a checkout clones the `Arc` once and can never see
+/// graph A paired with layout B.
+struct SessionState {
     graph: Arc<Graph>,
     parts: Partitioner,
     layout: Arc<BinLayout>,
-    config: PpmConfig,
     build: BuildStats,
-    pool: Mutex<Vec<Engine>>,
+    generation: u64,
+}
+
+/// A shared, reusable graph-processing context: one graph, one
+/// partitioning, one pre-processed bin layout, many queries — and, since
+/// PR 5, hot-swappable between graph generations without draining.
+pub struct EngineSession {
+    config: PpmConfig,
+    /// Current snapshot; the lock is held only to clone or replace the
+    /// `Arc` (never across a build or a query).
+    state: Mutex<Arc<SessionState>>,
+    /// Idle engines, tagged with the generation they were built for.
+    pool: Mutex<Vec<(u64, Engine)>>,
+    /// Serializes writers ([`swap_graph`](Self::swap_graph) /
+    /// [`ingest`](Self::ingest)): the expensive rebuild runs under this
+    /// lock but *outside* the `state` lock, so readers are never blocked
+    /// behind an `O(E)` scan.
+    update: Mutex<()>,
 }
 
 impl EngineSession {
@@ -51,28 +95,13 @@ impl EngineSession {
     /// `Graph` (moved) or an `Arc<Graph>` (shared with the caller).
     pub fn new(graph: impl Into<Arc<Graph>>, config: PpmConfig) -> Self {
         config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
-        let graph = graph.into();
-        let t0 = Instant::now();
-        let parts = config.partitioner(graph.n());
-        let t_partition = t0.elapsed().as_secs_f64();
-        let mut pool = ThreadPool::new(config.threads);
-        let t1 = Instant::now();
-        let layout = Arc::new(BinLayout::build_par(&graph, &parts, &mut pool));
-        let build = BuildStats {
-            t_partition,
-            t_layout: t1.elapsed().as_secs_f64(),
-            threads: config.threads,
-            source: PreprocessSource::Built,
-        };
-        let warm = Engine::from_parts(
-            graph.clone(),
-            parts.clone(),
-            layout.clone(),
-            config.clone(),
-            pool,
-            build,
-        );
-        Self { graph, parts, layout, config, build, pool: Mutex::new(vec![warm]) }
+        let (state, warm) = preprocess(graph.into(), &config, 1);
+        Self {
+            config,
+            state: Mutex::new(Arc::new(state)),
+            pool: Mutex::new(vec![(1, warm)]),
+            update: Mutex::new(()),
+        }
     }
 
     /// Restore a session from a layout persisted by [`save`](Self::save):
@@ -118,29 +147,142 @@ impl EngineSession {
             pool,
             build,
         );
-        Ok(Self { graph, parts, layout, config, build, pool: Mutex::new(vec![warm]) })
+        let state = SessionState { graph, parts, layout, build, generation: 1 };
+        Ok(Self {
+            config,
+            state: Mutex::new(Arc::new(state)),
+            pool: Mutex::new(vec![(1, warm)]),
+            update: Mutex::new(()),
+        })
     }
 
-    /// Persist this session's pre-processed layout for
+    /// Persist the current snapshot's pre-processed layout for
     /// [`restore`](Self::restore) (versioned + checksummed; see
     /// [`crate::ppm::persist`] for the format and invalidation rules).
+    /// After a [`swap_graph`](Self::swap_graph) or
+    /// [`ingest`](Self::ingest) this writes the *new* generation's
+    /// layout, bound to a fresh digest of the mutated graph.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        self.layout.save(path, &self.graph, &self.parts, &self.config)
+        let snap = self.snapshot();
+        snap.layout.save(path, &snap.graph, &snap.parts, &self.config)
+    }
+
+    /// Replace the served graph wholesale. The new partitioning and
+    /// [`BinLayout`] are built with [`BinLayout::build_par`] on a fresh
+    /// `config.threads`-worker team while concurrent checkouts keep
+    /// being answered from the current snapshot; the snapshot `Arc` is
+    /// then flipped atomically. In-flight engines finish on the old
+    /// snapshot (their `Arc`s keep it alive), new checkouts see the new
+    /// graph, every stale pooled engine is retired, and the worker team
+    /// that ran the build is pre-warmed into the pool as the new
+    /// generation's first engine.
+    ///
+    /// Bumps [`generation`](Self::generation) by one and returns the new
+    /// layout's [`BuildStats`]. Concurrent writers (`swap_graph` /
+    /// [`ingest`](Self::ingest)) serialize against each other; readers
+    /// never wait on a build.
+    pub fn swap_graph(&self, graph: impl Into<Arc<Graph>>) -> BuildStats {
+        let graph = graph.into();
+        let _writer = self.update.lock().unwrap();
+        let next_gen = self.generation() + 1;
+        let (state, warm) = preprocess(graph, &self.config, next_gen);
+        let build = state.build;
+        self.install(state, warm);
+        build
+    }
+
+    /// Apply a batch of streaming edge updates to the served graph. The
+    /// CSR is merged ([`merge_delta`]) and the layout is *patched*: only
+    /// the partition rows whose sources the delta touched are re-scanned
+    /// ([`BinLayout::apply_delta`]), on a fresh worker team, while
+    /// concurrent checkouts keep being answered from the current
+    /// snapshot. The result is bit-identical to rebuilding from scratch
+    /// on the mutated graph (pinned by `tests/swap.rs`).
+    ///
+    /// Bumps [`generation`](Self::generation) by one and returns
+    /// [`BuildStats`] with [`PreprocessSource::Patched`]
+    /// (`t_partition` = CSR-merge seconds, `t_layout` = row-patch
+    /// seconds). Fails with [`InvalidInput`](std::io::ErrorKind) — and
+    /// leaves the session untouched — when the delta names a vertex
+    /// outside the graph (deltas never grow `n`; use
+    /// [`swap_graph`](Self::swap_graph) for that).
+    pub fn ingest(&self, delta: &GraphDelta) -> std::io::Result<BuildStats> {
+        let _writer = self.update.lock().unwrap();
+        let snap = self.snapshot();
+        let t0 = Instant::now();
+        let merged = Arc::new(
+            merge_delta(&snap.graph, delta)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?,
+        );
+        let t_partition = t0.elapsed().as_secs_f64();
+        // n is unchanged (merge_delta enforces it), so the partitioning
+        // — and therefore the persisted config fingerprint — carries
+        // over to the new generation untouched.
+        let parts = snap.parts.clone();
+        let dirty = delta.dirty_parts(&parts);
+        let mut pool = ThreadPool::new(self.config.threads);
+        let t1 = Instant::now();
+        let layout = Arc::new(snap.layout.apply_delta(&merged, &parts, &dirty, &mut pool));
+        let build = BuildStats {
+            t_partition,
+            t_layout: t1.elapsed().as_secs_f64(),
+            threads: self.config.threads,
+            source: PreprocessSource::Patched,
+        };
+        let generation = snap.generation + 1;
+        let warm = Engine::from_parts(
+            merged.clone(),
+            parts.clone(),
+            layout.clone(),
+            self.config.clone(),
+            pool,
+            build,
+        );
+        self.install(SessionState { graph: merged, parts, layout, build, generation }, warm);
+        Ok(build)
+    }
+
+    /// Flip the session to `state`: publish the new snapshot, retire
+    /// every pooled engine of older generations and pre-warm the pool
+    /// with `warm` (the engine wrapping the worker team that built the
+    /// new layout). Old engines join their worker threads outside both
+    /// locks.
+    fn install(&self, state: SessionState, warm: Engine) {
+        let generation = state.generation;
+        *self.state.lock().unwrap() = Arc::new(state);
+        let retired: Vec<(u64, Engine)> = {
+            let mut pool = self.pool.lock().unwrap();
+            let retired = std::mem::take(&mut *pool);
+            pool.push((generation, warm));
+            retired
+        };
+        drop(retired);
     }
 
     #[inline]
-    pub fn graph(&self) -> &Arc<Graph> {
-        &self.graph
+    fn snapshot(&self) -> Arc<SessionState> {
+        self.state.lock().unwrap().clone()
     }
 
+    /// The current snapshot's graph. A concurrent
+    /// [`swap_graph`](Self::swap_graph)/[`ingest`](Self::ingest) may
+    /// supersede it immediately after; pair with
+    /// [`generation`](Self::generation) when that matters.
     #[inline]
-    pub fn parts(&self) -> &Partitioner {
-        &self.parts
+    pub fn graph(&self) -> Arc<Graph> {
+        self.snapshot().graph.clone()
     }
 
+    /// The current snapshot's partitioning.
     #[inline]
-    pub fn layout(&self) -> &Arc<BinLayout> {
-        &self.layout
+    pub fn parts(&self) -> Partitioner {
+        self.snapshot().parts.clone()
+    }
+
+    /// The current snapshot's pre-processed bin layout.
+    #[inline]
+    pub fn layout(&self) -> Arc<BinLayout> {
+        self.snapshot().layout.clone()
     }
 
     #[inline]
@@ -148,45 +290,115 @@ impl EngineSession {
         &self.config
     }
 
-    /// Wall-clock cost of this session's one-time pre-processing
-    /// (partitioning + parallel layout build).
+    /// Wall-clock cost of the current snapshot's pre-processing
+    /// (partitioning + parallel layout build, file load, or delta
+    /// patch — see [`BuildStats::source`]).
     #[inline]
     pub fn build_stats(&self) -> BuildStats {
-        self.build
+        self.snapshot().build
     }
 
-    /// Engines currently idle in the pool.
+    /// Monotone snapshot counter: `1` after construction, `+1` per
+    /// [`swap_graph`](Self::swap_graph)/[`ingest`](Self::ingest). An
+    /// engine's [`SessionEngine::generation`] names the snapshot it was
+    /// checked out against.
+    pub fn generation(&self) -> u64 {
+        self.state.lock().unwrap().generation
+    }
+
+    /// Engines currently idle in the pool (stale generations included
+    /// until a checkout retires them).
     pub fn pooled_engines(&self) -> usize {
         self.pool.lock().unwrap().len()
     }
 
-    /// Check out an engine for exclusive use. Reuses a pooled engine if
-    /// one is idle; otherwise allocates fresh scratch over the shared
+    /// Check out an engine for exclusive use. Reuses a pooled engine of
+    /// the current generation if one is idle — retiring any stale ones
+    /// it finds — otherwise allocates fresh scratch over the shared
     /// layout (never re-partitions, never re-scans the graph). The
     /// engine returns to the pool when the guard drops.
     pub fn checkout(&self) -> SessionEngine<'_> {
-        let pooled = self.pool.lock().unwrap().pop();
-        let mut engine = match pooled {
-            Some(e) => e,
-            None => Engine::with_layout(
-                self.graph.clone(),
-                self.parts.clone(),
-                self.layout.clone(),
-                self.config.clone(),
-            ),
+        let snap = self.snapshot();
+        let mut stale: Vec<Engine> = Vec::new();
+        let reused = {
+            let mut pool = self.pool.lock().unwrap();
+            loop {
+                match pool.pop() {
+                    Some((generation, engine)) if generation == snap.generation => {
+                        break Some(engine)
+                    }
+                    Some((generation, engine)) if generation > snap.generation => {
+                        // A swap won the race since our snapshot; leave
+                        // the newer generation's engine for its callers.
+                        pool.push((generation, engine));
+                        break None;
+                    }
+                    Some((_, engine)) => stale.push(engine),
+                    None => break None,
+                }
+            }
         };
+        // Stale worker teams join their threads outside the pool lock.
+        drop(stale);
+        let mut engine = reused.unwrap_or_else(|| {
+            Engine::with_layout(
+                snap.graph.clone(),
+                snap.parts.clone(),
+                snap.layout.clone(),
+                self.config.clone(),
+            )
+        });
         // A previous borrower may have overridden the mode policy
         // (Runner::policy); hand every checkout the session's own.
         engine.set_mode_policy(self.config.mode);
-        SessionEngine { session: self, engine: Some(engine) }
+        SessionEngine { session: self, generation: snap.generation, engine: Some(engine) }
     }
 }
 
+/// Run the one-time pre-processing for `graph` (partition + parallel
+/// layout build) and wrap the worker team into a warm engine — the
+/// shared path behind [`EngineSession::new`] and
+/// [`EngineSession::swap_graph`].
+fn preprocess(graph: Arc<Graph>, config: &PpmConfig, generation: u64) -> (SessionState, Engine) {
+    let t0 = Instant::now();
+    let parts = config.partitioner(graph.n());
+    let t_partition = t0.elapsed().as_secs_f64();
+    let mut pool = ThreadPool::new(config.threads);
+    let t1 = Instant::now();
+    let layout = Arc::new(BinLayout::build_par(&graph, &parts, &mut pool));
+    let build = BuildStats {
+        t_partition,
+        t_layout: t1.elapsed().as_secs_f64(),
+        threads: config.threads,
+        source: PreprocessSource::Built,
+    };
+    let warm = Engine::from_parts(
+        graph.clone(),
+        parts.clone(),
+        layout.clone(),
+        config.clone(),
+        pool,
+        build,
+    );
+    (SessionState { graph, parts, layout, build, generation }, warm)
+}
+
 /// RAII guard over a checked-out [`Engine`]; derefs to the engine and
-/// returns it to the session pool on drop.
+/// returns it to the session pool on drop (unless the session has moved
+/// on to a newer generation, in which case the engine is retired).
 pub struct SessionEngine<'s> {
     session: &'s EngineSession,
+    generation: u64,
     engine: Option<Engine>,
+}
+
+impl SessionEngine<'_> {
+    /// The session generation this engine was checked out against. The
+    /// engine keeps answering on that snapshot even if the session swaps
+    /// underneath it.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
 }
 
 impl Deref for SessionEngine<'_> {
@@ -207,12 +419,20 @@ impl DerefMut for SessionEngine<'_> {
 impl Drop for SessionEngine<'_> {
     fn drop(&mut self) {
         if let Some(engine) = self.engine.take() {
-            let mut pool = self.session.pool.lock().unwrap();
-            if pool.len() < MAX_POOLED_ENGINES {
-                pool.push(engine);
+            if self.generation == self.session.generation() {
+                let mut pool = self.session.pool.lock().unwrap();
+                if pool.len() < MAX_POOLED_ENGINES {
+                    // A swap racing this push at worst pools a
+                    // stale-tagged engine, which the next checkout
+                    // retires.
+                    pool.push((self.generation, engine));
+                    return;
+                }
             }
-            // Else: drop the engine here (joining its worker threads)
-            // rather than growing the pool without bound.
+            // Stale or over the cap: drop the engine here (joining its
+            // worker threads) rather than growing the pool without
+            // bound.
+            drop(engine);
         }
     }
 }
@@ -294,8 +514,8 @@ mod tests {
         let session = EngineSession::new(g.clone(), PpmConfig::default());
         // Session + caller + no hidden clones.
         let e = session.checkout();
-        assert!(Arc::ptr_eq(session.graph(), e.graph_arc()));
-        assert!(Arc::ptr_eq(session.graph(), &g));
+        assert!(Arc::ptr_eq(&session.graph(), e.graph_arc()));
+        assert!(Arc::ptr_eq(&session.graph(), &g));
     }
 
     #[test]
@@ -323,5 +543,68 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_retires_the_pool() {
+        let a = Arc::new(gen::chain(30));
+        let b = Arc::new(gen::erdos_renyi(80, 400, 3));
+        let session = EngineSession::new(a.clone(), PpmConfig { k: Some(4), ..Default::default() });
+        assert_eq!(session.generation(), 1);
+        let stats = session.swap_graph(b.clone());
+        assert_eq!(stats.source, PreprocessSource::Built);
+        assert_eq!(session.generation(), 2);
+        // The old pool entry is gone; the build team is the new warm engine.
+        assert_eq!(session.pooled_engines(), 1);
+        let e = session.checkout();
+        assert_eq!(e.generation(), 2);
+        assert!(Arc::ptr_eq(e.graph_arc(), &b));
+        assert_eq!(session.build_stats().source, PreprocessSource::Built);
+    }
+
+    #[test]
+    fn in_flight_engine_finishes_on_the_old_snapshot() {
+        let a = Arc::new(gen::chain(40));
+        let b = Arc::new(gen::chain(60));
+        let session = EngineSession::new(a.clone(), PpmConfig { k: Some(4), ..Default::default() });
+        let mut old = session.checkout();
+        session.swap_graph(b.clone());
+        // The checked-out engine still serves generation 1.
+        assert_eq!(old.generation(), 1);
+        assert!(Arc::ptr_eq(old.graph_arc(), &a));
+        old.load_frontier(&[39]);
+        assert_eq!(old.frontier_size(), 1);
+        drop(old); // stale: retired, not pooled
+        assert_eq!(session.pooled_engines(), 1, "only the new generation's warm engine");
+        let fresh = session.checkout();
+        assert!(Arc::ptr_eq(fresh.graph_arc(), &b));
+    }
+
+    #[test]
+    fn ingest_patches_in_place_and_reports_patched() {
+        let g = gen::chain(50);
+        let session = EngineSession::new(g, PpmConfig { k: Some(4), ..Default::default() });
+        let before = layout_builds();
+        let mut delta = GraphDelta::new();
+        delta.insert(0, 49).delete(10, 11);
+        let stats = session.ingest(&delta).unwrap();
+        assert_eq!(layout_builds(), before, "a delta patch is not an O(E) scan");
+        assert_eq!(stats.source, PreprocessSource::Patched);
+        assert_eq!(session.generation(), 2);
+        let g2 = session.graph();
+        assert_eq!(g2.out().neighbors(0), &[1, 49]);
+        assert_eq!(g2.out().neighbors(10), &[] as &[u32]);
+    }
+
+    #[test]
+    fn ingest_rejects_vertex_growth_and_leaves_session_untouched() {
+        let session =
+            EngineSession::new(gen::chain(10), PpmConfig { k: Some(2), ..Default::default() });
+        let mut delta = GraphDelta::new();
+        delta.insert(0, 10); // n = 10: out of range
+        let err = session.ingest(&delta).expect_err("growing delta");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert_eq!(session.generation(), 1);
+        assert_eq!(session.graph().m(), 9);
     }
 }

@@ -10,7 +10,7 @@
 //! ```ignore
 //! let report = Runner::on(&session)
 //!     .until(Convergence::L1Norm(1e-7).or_max_iters(100))
-//!     .run(PageRank::new(session.graph(), 0.85));
+//!     .run(PageRank::new(&session.graph(), 0.85));
 //! ```
 //! [`PageRank::post_iteration`] reports the L1 rank change, so the
 //! `L1Norm` policy converges on numerics instead of a fixed count.

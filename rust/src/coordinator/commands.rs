@@ -80,17 +80,21 @@ fn print_report<O>(report: &RunReport<O>, verbose: bool) {
     }
 }
 
-pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
-    let app = args.get_or("app", "pr").to_string();
-    let g = build_graph(args)?;
-    let config = engine_config(args)?;
+/// Print the engine configuration line shared by the session commands.
+fn print_engine(config: &PpmConfig) {
     println!(
         "engine: {} threads, mode {:?}, k = {}",
         config.threads,
         config.mode,
         config.k.map(|k| k.to_string()).unwrap_or_else(|| "auto".into())
     );
-    let verbose = args.flag("verbose");
+}
+
+pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
+    let app = args.get_or("app", "pr").to_string();
+    let g = build_graph(args)?;
+    let config = engine_config(args)?;
+    print_engine(&config);
     // Warm restart: `--layout PATH` restores the persisted partitioned
     // layout (sequential IO, validated) instead of re-running the O(E)
     // scan; `--save-layout PATH` persists this session's layout for the
@@ -104,7 +108,6 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
         session.save(Path::new(p)).map_err(|e| CliError(format!("save layout {p}: {e}")))?;
         println!("layout saved to {p}");
     }
-    let graph = session.graph().clone();
     let build = session.build_stats();
     println!(
         "preprocessing: {} ({}; partition {}, layout {} on {} threads, k = {})",
@@ -115,12 +118,22 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
         build.threads,
         session.parts().k()
     );
-    let runner = Runner::on(&session);
+    run_app(&session, &app, args)?;
+    Ok(0)
+}
+
+/// Run one application query against a live session — the dispatch
+/// shared by `gpop run`, `gpop swap` and `gpop ingest` (the latter two
+/// call it once per graph generation).
+fn run_app(session: &EngineSession, app: &str, args: &Args) -> Result<(), CliError> {
+    let verbose = args.flag("verbose");
+    let graph = session.graph();
+    let runner = Runner::on(session);
     let root = args.get_parsed_or::<u32>("root", 0)?;
     let iters = args.get_parsed_or::<usize>("iters", 10)?;
     let seeds = args.get_list::<u32>("seeds")?.unwrap_or_else(|| vec![root]);
     let eps = args.get_parsed_or::<f32>("eps", 1e-6)?;
-    match app.as_str() {
+    match app {
         "bfs" => {
             let res = runner.run(apps::Bfs::new(graph.n(), root));
             print_report(&res, verbose);
@@ -231,20 +244,123 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
         }
         other => return Err(CliError(format!("unknown app {other:?}"))),
     }
-    Ok(0)
+    Ok(())
+}
+
+/// Write `g` to `out` in the format the `--format` option (or the file
+/// extension) selects — shared by `gpop gen` and `gpop ingest --out`.
+fn write_graph(g: &crate::graph::Graph, out: &str, args: &Args) -> Result<(), CliError> {
+    let format = args.get_or("format", if out.ends_with(".bin") { "bin" } else { "el" });
+    let res = match format {
+        "bin" => io::write_binary(g, Path::new(out)),
+        "el" => io::write_edge_list(g, Path::new(out)),
+        other => return Err(CliError(format!("unknown format {other:?}"))),
+    };
+    res.map_err(|e| CliError(format!("write {out}: {e}")))
 }
 
 pub fn cmd_gen(args: &Args) -> Result<i32, CliError> {
     let g = build_graph(args)?;
     let out = args.get("out").ok_or_else(|| CliError("--out PATH required".into()))?;
-    let format = args.get_or("format", if out.ends_with(".bin") { "bin" } else { "el" });
-    let res = match format {
-        "bin" => io::write_binary(&g, Path::new(out)),
-        "el" => io::write_edge_list(&g, Path::new(out)),
-        other => return Err(CliError(format!("unknown format {other:?}"))),
-    };
-    res.map_err(|e| CliError(format!("write {out}: {e}")))?;
+    write_graph(&g, out, args)?;
     println!("wrote {out}");
+    Ok(0)
+}
+
+/// `gpop swap` — serve queries across a hot graph swap. Builds a session
+/// on `--graph`, answers one `--app` query, then swaps to `--swap-to`
+/// via [`EngineSession::swap_graph`] (the replacement layout is built
+/// while the session stays live) and answers the same query on the new
+/// graph. The log reports the generation after every flip.
+pub fn cmd_swap(args: &Args) -> Result<i32, CliError> {
+    let app = args.get_or("app", "pr").to_string();
+    let to_spec = args
+        .get("swap-to")
+        .ok_or_else(|| CliError("--swap-to SPEC is required".into()))?
+        .to_string();
+    let spec = GraphSpec::parse(&to_spec).map_err(CliError)?;
+    let g = build_graph(args)?;
+    let config = engine_config(args)?;
+    print_engine(&config);
+    let session = EngineSession::new(g, config);
+    let b = session.build_stats();
+    println!(
+        "generation: {} ({}; preprocessing {} on {} threads, k = {})",
+        session.generation(),
+        b.source.describe(),
+        fmt::secs(b.t_preprocess()),
+        b.threads,
+        session.parts().k()
+    );
+    run_app(&session, &app, args)?;
+    let g2 = spec.build().map_err(CliError)?;
+    println!(
+        "swapping to: {} — {} vertices, {} edges{}",
+        spec.describe(),
+        fmt::si(g2.n() as f64),
+        fmt::si(g2.m() as f64),
+        if g2.is_weighted() { ", weighted" } else { "" }
+    );
+    let b2 = session.swap_graph(g2);
+    println!(
+        "generation: {} ({}; rebuilt in {} on {} threads, k = {})",
+        session.generation(),
+        b2.source.describe(),
+        fmt::secs(b2.t_preprocess()),
+        b2.threads,
+        session.parts().k()
+    );
+    run_app(&session, &app, args)?;
+    Ok(0)
+}
+
+/// `gpop ingest` — apply a streaming edge-delta file (`--delta`, see
+/// [`io::read_delta`] for the format) to a live session: answer one
+/// `--app` query, patch the graph + layout in place (only dirty
+/// partition rows re-scanned), and answer it again on the mutated
+/// graph. `--out` persists the mutated graph and `--save-layout` the
+/// patched layout (fresh digest), so `gpop layout verify` and warm
+/// restarts work on the patched pair.
+pub fn cmd_ingest(args: &Args) -> Result<i32, CliError> {
+    let app = args.get_or("app", "pr").to_string();
+    let dpath = args.get("delta").ok_or_else(|| CliError("--delta FILE is required".into()))?;
+    let delta = io::read_delta(Path::new(dpath))
+        .map_err(|e| CliError(format!("read delta {dpath}: {e}")))?;
+    let g = build_graph(args)?;
+    let config = engine_config(args)?;
+    print_engine(&config);
+    let session = EngineSession::new(g, config);
+    let k = session.parts().k();
+    println!(
+        "generation: {} ({}; preprocessing {}, k = {k})",
+        session.generation(),
+        session.build_stats().source.describe(),
+        fmt::secs(session.build_stats().t_preprocess()),
+    );
+    run_app(&session, &app, args)?;
+    let stats = session.ingest(&delta).map_err(|e| CliError(format!("ingest {dpath}: {e}")))?;
+    // Endpoints are validated by the successful ingest, so the dirty-row
+    // accounting below cannot index out of range.
+    let dirty = delta.dirty_parts(&session.parts());
+    println!(
+        "ingest: {} inserts, {} deletes — {}/{k} partition rows rebuilt \
+         (merge {}, patch {})",
+        delta.inserts().len(),
+        delta.deletes().len(),
+        dirty.len(),
+        fmt::secs(stats.t_partition),
+        fmt::secs(stats.t_layout)
+    );
+    println!("generation: {} ({})", session.generation(), stats.source.describe());
+    run_app(&session, &app, args)?;
+    if let Some(out) = args.get("out") {
+        write_graph(&session.graph(), out, args)?;
+        println!("wrote mutated graph to {out}");
+    }
+    if let Some(p) = args.get("save-layout") {
+        session.save(Path::new(p)).map_err(|e| CliError(format!("save layout {p}: {e}")))?;
+        println!("patched layout saved to {p}");
+    }
     Ok(0)
 }
 
@@ -284,7 +400,7 @@ pub fn cmd_layout(args: &Args) -> Result<i32, CliError> {
             let restored = EngineSession::restore(g.clone(), config.clone(), Path::new(path))
                 .map_err(|e| CliError(format!("load layout {path}: {e}")))?;
             let fresh = EngineSession::new(g, config);
-            if **restored.layout() != **fresh.layout() {
+            if *restored.layout() != *fresh.layout() {
                 return Err(CliError(format!(
                     "layout {path} passed file validation but is NOT bit-identical to a \
                      fresh build — rebuild it"
@@ -381,7 +497,7 @@ pub fn cmd_pjrt(args: &Args) -> Result<i32, CliError> {
         let session = EngineSession::new(g, PpmConfig::with_threads(2));
         let native = Runner::on(&session)
             .until(Convergence::MaxIters(m.iters))
-            .run(apps::PageRank::new(session.graph(), 0.85));
+            .run(apps::PageRank::new(&session.graph(), 0.85));
         let max_err = rank
             .iter()
             .zip(&native.output)
@@ -533,6 +649,93 @@ mod tests {
         assert!(cmd_layout(&a).is_err());
         let missing_out = args(&["build", "--graph", "chain:4"]);
         assert!(cmd_layout(&missing_out).is_err());
+    }
+
+    #[test]
+    fn swap_runs_across_generations() {
+        let a = args(&[
+            "--app",
+            "bfs",
+            "--graph",
+            "er:200:1000",
+            "--swap-to",
+            "er:300:2000",
+            "--threads",
+            "2",
+            "--k",
+            "8",
+        ]);
+        assert_eq!(cmd_swap(&a).unwrap(), 0);
+    }
+
+    #[test]
+    fn swap_requires_target_spec() {
+        let a = args(&["--app", "bfs", "--graph", "chain:10"]);
+        assert!(cmd_swap(&a).unwrap_err().0.contains("swap-to"));
+    }
+
+    #[test]
+    fn ingest_patches_and_persists_verifiable_artifacts() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let dpath = dir.join(format!("gpop_cmd_ingest_{pid}.delta"));
+        let gpath = dir.join(format!("gpop_cmd_ingest_{pid}.bin"));
+        let lpath = dir.join(format!("gpop_cmd_ingest_{pid}.layout"));
+        std::fs::write(&dpath, "+ 0 7\n+ 7 0\n- 0 1\n").unwrap();
+        let a = args(&[
+            "--app",
+            "cc",
+            "--graph",
+            "grid:10:10",
+            "--delta",
+            dpath.to_str().unwrap(),
+            "--out",
+            gpath.to_str().unwrap(),
+            "--save-layout",
+            lpath.to_str().unwrap(),
+            "--k",
+            "4",
+            "--threads",
+            "2",
+        ]);
+        assert_eq!(cmd_ingest(&a).unwrap(), 0);
+        // The persisted pair must pass the paranoid bit-identity check.
+        let spec = format!("file:{}", gpath.display());
+        let v = args(&[
+            "verify",
+            "--graph",
+            &spec,
+            "--layout",
+            lpath.to_str().unwrap(),
+            "--k",
+            "4",
+            "--threads",
+            "2",
+        ]);
+        assert_eq!(cmd_layout(&v).unwrap(), 0);
+        std::fs::remove_file(&dpath).unwrap();
+        std::fs::remove_file(&gpath).unwrap();
+        std::fs::remove_file(&lpath).unwrap();
+    }
+
+    #[test]
+    fn ingest_rejects_growing_delta_as_usage_error() {
+        let pid = std::process::id();
+        let dpath = std::env::temp_dir().join(format!("gpop_cmd_ingest_bad_{pid}.delta"));
+        std::fs::write(&dpath, "+ 0 999\n").unwrap();
+        let a = args(&[
+            "--app",
+            "bfs",
+            "--graph",
+            "chain:10",
+            "--delta",
+            dpath.to_str().unwrap(),
+            "--k",
+            "2",
+        ]);
+        let err = cmd_ingest(&a).unwrap_err();
+        assert!(err.0.contains("graph swap"), "got: {}", err.0);
+        std::fs::remove_file(&dpath).unwrap();
     }
 
     #[test]

@@ -25,6 +25,18 @@ COMMANDS:
               restart, no O(E) scan; --save-layout persists this one)
   gen        Generate a graph and write it to disk
              --graph SPEC --out PATH [--format bin|el]
+  swap       Hot-swap the served graph mid-session (no teardown)
+             --graph SPEC --swap-to SPEC [--app APP] [engine options]
+             (runs APP, rebuilds the layout in the background, flips the
+              session to the new graph — generation += 1 — and runs APP
+              again)
+  ingest     Apply a streaming edge-delta file to a live session
+             --graph SPEC --delta FILE [--app APP] [--out PATH]
+             [--save-layout PATH] [engine options]
+             (delta lines: '+ src dst [w]' insert, '- src dst' delete;
+              only dirty partition rows are re-scanned, bit-identical to
+              a full rebuild; --out/--save-layout persist the patched
+              graph + layout for warm restarts)
   layout     Manage persisted partitioned layouts
              build  --graph SPEC --out PATH [engine options]
              verify --graph SPEC --layout PATH [engine options]
@@ -68,6 +80,8 @@ pub fn dispatch(argv: Vec<String>) -> Result<i32, CliError> {
     match cmd.as_str() {
         "run" => commands::cmd_run(&args),
         "gen" => commands::cmd_gen(&args),
+        "swap" => commands::cmd_swap(&args),
+        "ingest" => commands::cmd_ingest(&args),
         "layout" => commands::cmd_layout(&args),
         "cachesim" => commands::cmd_cachesim(&args),
         "membench" => commands::cmd_membench(&args),

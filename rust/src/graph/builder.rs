@@ -1,4 +1,5 @@
-//! Edge-list → CSR construction (counting sort by source).
+//! Edge-list → CSR construction (counting sort by source) and streaming
+//! CSR deltas.
 //!
 //! [`GraphBuilder::build`] is the serial reference;
 //! [`GraphBuilder::build_with_pool`] runs the same pipeline —
@@ -8,13 +9,21 @@
 //! what makes that possible: each edge's slot is `offsets[src] +
 //! (its rank among same-src edges in input order)`, which per-chunk
 //! histogram prefixes reproduce exactly regardless of thread count.
+//!
+//! [`GraphDelta`] + [`merge_delta`] are the streaming-update path: a
+//! batch of edge inserts/deletes is merged into an existing CSR without
+//! replaying the whole counting sort, and the merge defines the
+//! *canonical* mutated graph that
+//! [`BinLayout::apply_delta`](crate::ppm::BinLayout::apply_delta) must
+//! reproduce bit-identically against a from-scratch build.
 
 use super::csr::{Csr, Graph};
 use super::Edge;
 use crate::exec::{SharedSlice, ThreadPool};
+use crate::partition::Partitioner;
 use crate::util::div_ceil;
 use crate::util::sort::exclusive_prefix_sum;
-use crate::VertexId;
+use crate::{PartId, VertexId};
 
 /// Reborrow an optional pool so it can be threaded through several
 /// sequential parallel phases.
@@ -313,6 +322,178 @@ pub fn graph_from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Graph {
     b.build()
 }
 
+/// A batch of streaming edge updates against an existing graph.
+///
+/// Batch semantics (what [`merge_delta`] implements):
+///
+/// - Endpoints must name *existing* vertices (`< n`): deltas never grow
+///   the vertex set — that changes the partitioning and needs a full
+///   [`swap_graph`](crate::api::EngineSession::swap_graph).
+/// - A delete removes **every** parallel `src -> dst` edge; deleting an
+///   absent edge is a no-op (streams may replay safely).
+/// - Deletes apply to the pre-delta adjacency first, then inserts are
+///   added — an edge both deleted and inserted in one batch ends up
+///   present, carrying the inserted weight.
+/// - Weight handling follows the graph: inserts into a weighted graph
+///   carry their [`Edge::weight`]; into an unweighted graph the weight
+///   is ignored.
+#[derive(Clone, Debug, Default)]
+pub struct GraphDelta {
+    inserts: Vec<Edge>,
+    deletes: Vec<(VertexId, VertexId)>,
+}
+
+impl GraphDelta {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue an unweighted edge insert.
+    pub fn insert(&mut self, src: VertexId, dst: VertexId) -> &mut Self {
+        self.inserts.push(Edge::new(src, dst));
+        self
+    }
+
+    /// Queue a weighted edge insert (the weight is ignored when the
+    /// delta is merged into an unweighted graph).
+    pub fn insert_weighted(&mut self, src: VertexId, dst: VertexId, w: f32) -> &mut Self {
+        self.inserts.push(Edge::weighted(src, dst, w));
+        self
+    }
+
+    /// Queue a delete of every parallel `src -> dst` edge (a no-op if
+    /// none exist).
+    pub fn delete(&mut self, src: VertexId, dst: VertexId) -> &mut Self {
+        self.deletes.push((src, dst));
+        self
+    }
+
+    pub fn inserts(&self) -> &[Edge] {
+        &self.inserts
+    }
+
+    pub fn deletes(&self) -> &[(VertexId, VertexId)] {
+        &self.deletes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inserts.is_empty() && self.deletes.is_empty()
+    }
+
+    /// Queued updates (inserts + deletes).
+    pub fn len(&self) -> usize {
+        self.inserts.len() + self.deletes.len()
+    }
+
+    /// Source partitions whose bin rows this delta invalidates, sorted
+    /// and deduplicated — the rows
+    /// [`BinLayout::apply_delta`](crate::ppm::BinLayout::apply_delta)
+    /// recomputes. A bin row depends only on the out-edges of its own
+    /// partition's vertices, so `part_of(src)` for every insert and
+    /// delete is exactly the invalidation set. Endpoints must already be
+    /// validated against the graph (see [`merge_delta`]).
+    pub fn dirty_parts(&self, parts: &Partitioner) -> Vec<PartId> {
+        let mut dirty: Vec<PartId> = self
+            .inserts
+            .iter()
+            .map(|e| parts.part_of(e.src))
+            .chain(self.deletes.iter().map(|&(s, _)| parts.part_of(s)))
+            .collect();
+        dirty.sort_unstable();
+        dirty.dedup();
+        dirty
+    }
+}
+
+/// Apply `delta` to `graph`, producing the canonical mutated CSR (the
+/// graph [`BinLayout::apply_delta`](crate::ppm::BinLayout::apply_delta)
+/// is bit-identical to a from-scratch build over). See [`GraphDelta`]
+/// for the batch semantics.
+///
+/// Untouched vertices keep their adjacency byte-for-byte (including any
+/// unsorted order a `read_binary` file may carry); a touched vertex's
+/// surviving + inserted edges are stably re-sorted by target, so
+/// existing edges keep their relative order and inserted edges follow
+/// them (in batch order) among equal targets.
+///
+/// `O(E + |delta| log |delta|)` — one sequential pass over the CSR; the
+/// savings of the delta path are on the layout side, where only dirty
+/// partition rows are re-scanned.
+pub fn merge_delta(graph: &Graph, delta: &GraphDelta) -> Result<Graph, String> {
+    let n = graph.n();
+    for e in delta.inserts() {
+        if e.src as usize >= n || e.dst as usize >= n {
+            return Err(format!(
+                "delta insert {}->{} names a vertex outside the graph (n = {n}); growing \
+                 the vertex set needs a full graph swap, not a delta",
+                e.src, e.dst
+            ));
+        }
+    }
+    for &(s, d) in delta.deletes() {
+        if s as usize >= n || d as usize >= n {
+            return Err(format!(
+                "delta delete {s}->{d} names a vertex outside the graph (n = {n})"
+            ));
+        }
+    }
+    let csr = graph.out();
+    let weighted = graph.is_weighted();
+    // Group inserts by source; the sort is stable, so each vertex's
+    // inserts stay in batch order.
+    let mut ins: Vec<Edge> = delta.inserts().to_vec();
+    ins.sort_by_key(|e| e.src);
+    let del: std::collections::HashSet<(VertexId, VertexId)> =
+        delta.deletes().iter().copied().collect();
+    // Gate the per-edge delete probes on a per-vertex membership test, so
+    // a small delta costs O(n) source checks + probes on actual delete
+    // sources — not O(E) hash lookups across the whole copy-through.
+    let del_srcs: std::collections::HashSet<VertexId> =
+        delta.deletes().iter().map(|&(s, _)| s).collect();
+
+    let mut offsets = vec![0u64; n + 1];
+    let mut targets: Vec<VertexId> = Vec::with_capacity(csr.m() + ins.len());
+    let mut weights: Option<Vec<f32>> =
+        if weighted { Some(Vec::with_capacity(csr.m() + ins.len())) } else { None };
+    let mut ins_cursor = 0usize;
+    for v in 0..n as VertexId {
+        let adj = csr.neighbors(v);
+        let wts = csr.edge_weights(v);
+        let ins_lo = ins_cursor;
+        while ins_cursor < ins.len() && ins[ins_cursor].src == v {
+            ins_cursor += 1;
+        }
+        let v_ins = &ins[ins_lo..ins_cursor];
+        let touched = !v_ins.is_empty()
+            || (del_srcs.contains(&v) && adj.iter().any(|&u| del.contains(&(v, u))));
+        if touched {
+            let mut merged: Vec<(VertexId, f32)> = Vec::with_capacity(adj.len() + v_ins.len());
+            for (i, &u) in adj.iter().enumerate() {
+                if !del.contains(&(v, u)) {
+                    merged.push((u, wts.map_or(1.0, |ws| ws[i])));
+                }
+            }
+            for e in v_ins {
+                merged.push((e.dst, e.weight));
+            }
+            merged.sort_by_key(|&(u, _)| u);
+            for (u, w) in merged {
+                targets.push(u);
+                if let Some(ws) = &mut weights {
+                    ws.push(w);
+                }
+            }
+        } else {
+            targets.extend_from_slice(adj);
+            if let (Some(ws), Some(vw)) = (&mut weights, wts) {
+                ws.extend_from_slice(vw);
+            }
+        }
+        offsets[v as usize + 1] = targets.len() as u64;
+    }
+    Ok(Graph::from_csr(Csr::new(n, offsets, targets, weights)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,6 +616,85 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn merge_delta_inserts_sorted_and_deletes_all_parallel() {
+        // 0 -> {1, 2, 2}, 1 -> {0}
+        let mut b = GraphBuilder::new().with_n(4);
+        b.add(0, 1).add(0, 2).add(0, 2).add(1, 0);
+        let g = b.build();
+        let mut d = GraphDelta::new();
+        d.insert(0, 3).insert(2, 0).delete(0, 2).delete(3, 1); // 3->1 absent: no-op
+        let m = merge_delta(&g, &d).unwrap();
+        assert_eq!(m.out().neighbors(0), &[1, 3], "both parallel 0->2 edges removed");
+        assert_eq!(m.out().neighbors(1), &[0]);
+        assert_eq!(m.out().neighbors(2), &[0]);
+        assert_eq!(m.m(), 4);
+    }
+
+    #[test]
+    fn merge_delta_empty_is_identity() {
+        let g = graph_from_edges(5, &[(0, 1), (2, 4), (4, 0)]);
+        let m = merge_delta(&g, &GraphDelta::new()).unwrap();
+        assert_eq!(m, g);
+    }
+
+    #[test]
+    fn merge_delta_delete_then_insert_same_edge_keeps_it() {
+        let mut b = GraphBuilder::new();
+        b.add_weighted(0, 1, 2.0).add_weighted(0, 2, 3.0);
+        let g = b.build();
+        let mut d = GraphDelta::new();
+        d.delete(0, 1);
+        d.insert_weighted(0, 1, 9.0);
+        let m = merge_delta(&g, &d).unwrap();
+        assert_eq!(m.out().neighbors(0), &[1, 2]);
+        assert_eq!(m.out().edge_weights(0).unwrap(), &[9.0, 3.0], "inserted weight wins");
+    }
+
+    #[test]
+    fn merge_delta_weighted_keeps_existing_before_inserted() {
+        // Equal targets: the surviving existing edge precedes the insert.
+        let mut b = GraphBuilder::new();
+        b.add_weighted(0, 1, 1.0);
+        let g = b.build();
+        let mut d = GraphDelta::new();
+        d.insert_weighted(0, 1, 7.0);
+        let m = merge_delta(&g, &d).unwrap();
+        assert_eq!(m.out().neighbors(0), &[1, 1]);
+        assert_eq!(m.out().edge_weights(0).unwrap(), &[1.0, 7.0]);
+    }
+
+    #[test]
+    fn merge_delta_insert_weight_ignored_on_unweighted_graph() {
+        let g = graph_from_edges(3, &[(0, 1)]);
+        let mut d = GraphDelta::new();
+        d.insert_weighted(1, 2, 5.0);
+        let m = merge_delta(&g, &d).unwrap();
+        assert!(!m.is_weighted());
+        assert_eq!(m.out().neighbors(1), &[2]);
+    }
+
+    #[test]
+    fn merge_delta_rejects_out_of_range_endpoints() {
+        let g = graph_from_edges(3, &[(0, 1)]);
+        let mut grow = GraphDelta::new();
+        grow.insert(0, 3);
+        assert!(merge_delta(&g, &grow).unwrap_err().contains("graph swap"));
+        let mut bad_del = GraphDelta::new();
+        bad_del.delete(9, 0);
+        assert!(merge_delta(&g, &bad_del).is_err());
+    }
+
+    #[test]
+    fn dirty_parts_sorted_dedup_sources_only() {
+        let parts = Partitioner::with_k(100, 10); // q = 10
+        let mut d = GraphDelta::new();
+        d.insert(55, 3).insert(51, 99).delete(12, 80).delete(58, 0);
+        assert_eq!(d.dirty_parts(&parts), vec![1, 5], "only source partitions are dirty");
+        assert_eq!(d.len(), 4);
+        assert!(!d.is_empty());
     }
 
     #[test]

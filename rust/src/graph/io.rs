@@ -1,7 +1,8 @@
-//! Graph IO: whitespace edge-list text (optionally weighted) and a
-//! compact binary CSR format for fast reloads.
+//! Graph IO: whitespace edge-list text (optionally weighted), a compact
+//! binary CSR format for fast reloads, and edge-delta files for
+//! streaming ingestion (`gpop ingest`).
 
-use super::builder::GraphBuilder;
+use super::builder::{GraphBuilder, GraphDelta};
 use super::csr::{Csr, Graph};
 use crate::VertexId;
 use std::fs::File;
@@ -71,6 +72,95 @@ pub fn write_edge_list(g: &Graph, path: &Path) -> std::io::Result<()> {
                 None => writeln!(w, "{v} {u}")?,
             }
         }
+    }
+    Ok(())
+}
+
+/// Parse an edge-delta text file for streaming ingestion. One update
+/// per line:
+///
+/// - `+ src dst [weight]` — insert (bare `src dst [weight]` lines are
+///   inserts too, so a plain edge list is a valid all-insert delta)
+/// - `- src dst` — delete every parallel `src -> dst` edge
+///
+/// `#`/`%`-prefixed lines are comments. Endpoint validation against a
+/// concrete graph happens at merge time
+/// ([`merge_delta`](super::builder::merge_delta)), not here.
+pub fn read_delta(path: &Path) -> std::io::Result<GraphDelta> {
+    let f = File::open(path)?;
+    let mut delta = GraphDelta::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let (op, rest) = match t.strip_prefix('+') {
+            Some(r) => ('+', r),
+            None => match t.strip_prefix('-') {
+                Some(r) => ('-', r),
+                None => ('+', t),
+            },
+        };
+        let mut it = rest.split_whitespace();
+        fn missing(lineno: usize, what: &str) -> std::io::Error {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {}: missing {what}", lineno + 1),
+            )
+        }
+        let src: VertexId = it
+            .next()
+            .ok_or_else(|| missing(lineno, "src"))?
+            .parse()
+            .map_err(bad_data(lineno))?;
+        let dst: VertexId = it
+            .next()
+            .ok_or_else(|| missing(lineno, "dst"))?
+            .parse()
+            .map_err(bad_data(lineno))?;
+        match (op, it.next()) {
+            ('-', Some(extra)) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("line {}: delete lines take no weight (got {extra:?})", lineno + 1),
+                ));
+            }
+            ('-', None) => {
+                delta.delete(src, dst);
+            }
+            (_, Some(w)) => {
+                delta.insert_weighted(src, dst, w.parse().map_err(bad_data(lineno))?);
+                if let Some(extra) = it.next() {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!(
+                            "line {}: trailing tokens after the weight (got {extra:?})",
+                            lineno + 1
+                        ),
+                    ));
+                }
+            }
+            (_, None) => {
+                delta.insert(src, dst);
+            }
+        }
+    }
+    Ok(delta)
+}
+
+/// Write an edge-delta file readable by [`read_delta`].
+pub fn write_delta(delta: &GraphDelta, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for e in delta.inserts() {
+        if e.weight == 1.0 {
+            writeln!(w, "+ {} {}", e.src, e.dst)?;
+        } else {
+            writeln!(w, "+ {} {} {}", e.src, e.dst, e.weight)?;
+        }
+    }
+    for &(s, d) in delta.deletes() {
+        writeln!(w, "- {s} {d}")?;
     }
     Ok(())
 }
@@ -226,6 +316,40 @@ mod tests {
         std::fs::write(&p, "0 notanumber\n").unwrap();
         assert!(read_edge_list(&p).is_err());
         std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn delta_file_roundtrip_and_bare_lines() {
+        let p = tmp("delta.el");
+        std::fs::write(&p, "# adds\n+ 0 1\n7 8 2.5\n- 3 4\n% done\n").unwrap();
+        let d = read_delta(&p).unwrap();
+        assert_eq!(d.inserts().len(), 2, "bare lines are inserts");
+        assert_eq!((d.inserts()[0].src, d.inserts()[0].dst), (0, 1));
+        assert_eq!(d.inserts()[1].weight, 2.5);
+        assert_eq!(d.deletes(), &[(3, 4)]);
+        write_delta(&d, &p).unwrap();
+        let d2 = read_delta(&p).unwrap();
+        assert_eq!(d2.inserts().len(), 2);
+        assert_eq!(d2.inserts()[1].weight, 2.5);
+        assert_eq!(d2.deletes(), &[(3, 4)]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn delta_file_bad_lines_rejected() {
+        for (name, body) in [
+            ("d1", "+ 0\n"),
+            ("d2", "- 1 2 3.5\n"),
+            ("d3", "+ x 1\n"),
+            ("d4", "0 1 notaw\n"),
+            ("d5", "+ 0 1 2 3\n"),
+        ] {
+            let p = tmp(&format!("delta_{name}"));
+            std::fs::write(&p, body).unwrap();
+            let err = read_delta(&p).expect_err(name);
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{name}");
+            std::fs::remove_file(&p).unwrap();
+        }
     }
 
     #[test]

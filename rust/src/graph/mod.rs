@@ -6,7 +6,7 @@ pub mod csr;
 pub mod gen;
 pub mod io;
 
-pub use builder::GraphBuilder;
+pub use builder::{merge_delta, GraphBuilder, GraphDelta};
 pub use csr::{Csr, Graph};
 
 use crate::VertexId;

@@ -21,7 +21,7 @@
 //! let pr = Runner::on(&session)
 //!     .policy(ModePolicy::Hybrid)
 //!     .until(Convergence::L1Norm(1e-7).or_max_iters(100))
-//!     .run(PageRank::new(session.graph(), 0.85));
+//!     .run(PageRank::new(&session.graph(), 0.85));
 //! let n = session.graph().n();
 //! let sweeps = Runner::on(&session)
 //!     .run_batch((0..16).map(|r| Bfs::new(n, r)));   // one engine, 16 queries

@@ -326,6 +326,56 @@ impl BinLayout {
         Self::assemble(graph, parts, rows)
     }
 
+    /// Patch this layout for a graph delta: rebuild ONLY the partition
+    /// rows in `dirty` (from
+    /// [`GraphDelta::dirty_parts`](crate::graph::GraphDelta::dirty_parts)),
+    /// cloning every other row. `new_graph` must be the canonical merged
+    /// graph ([`merge_delta`](crate::graph::merge_delta)) and `parts`
+    /// the unchanged partitioning (deltas never change `n`).
+    ///
+    /// Bit-identical to a from-scratch [`build_par`](Self::build_par)
+    /// over `new_graph` by construction: [`build_row`] reads nothing
+    /// outside its own partition's out-edges, so a row whose partition
+    /// sourced no delta edge is unchanged, and dirty rows are rebuilt by
+    /// the very same function (pinned by `tests/swap.rs`). Deliberately
+    /// does NOT count as a [`layout_builds`]: the point of the delta
+    /// path is replacing the `O(E)` scan with an `O(E_dirty)` one.
+    /// (Clean rows are still deep-*copied* into the new layout — a
+    /// sequential memcpy, not a re-scan; sharing rows behind `Arc`s to
+    /// drop that copy too is a possible follow-up representation
+    /// change.)
+    pub fn apply_delta(
+        &self,
+        new_graph: &Graph,
+        parts: &Partitioner,
+        dirty: &[PartId],
+        pool: &mut crate::exec::ThreadPool,
+    ) -> Self {
+        assert_eq!(parts.k(), self.k, "partitioner and layout disagree on k");
+        assert_eq!(parts.n(), new_graph.n(), "delta changed n — use a full rebuild");
+        assert_eq!(
+            new_graph.is_weighted(),
+            self.weighted,
+            "delta changed weightedness — use a full rebuild"
+        );
+        assert!(
+            dirty.iter().all(|&p| (p as usize) < self.k),
+            "dirty partition out of range"
+        );
+        let rebuilt =
+            pool.map_parts(dirty.len(), |i| build_row(new_graph, parts, dirty[i] as usize));
+        let mut bins = self.bins.clone();
+        let mut meta = self.meta.clone();
+        for (&p, (row, m)) in dirty.iter().zip(rebuilt) {
+            let p = p as usize;
+            for (slot, b) in bins[p * self.k..(p + 1) * self.k].iter_mut().zip(row) {
+                *slot = b;
+            }
+            meta[p] = m;
+        }
+        Self { k: self.k, weighted: self.weighted, bins, meta }
+    }
+
     fn assemble(graph: &Graph, parts: &Partitioner, rows: Vec<(Vec<StaticBin>, PartMeta)>) -> Self {
         let k = parts.k();
         let mut bins = Vec::with_capacity(k * k);
@@ -682,6 +732,39 @@ mod tests {
         let before = layout_builds();
         let _ = BinLayout::build_par(&g, &parts, &mut pool);
         assert_eq!(layout_builds(), before + 1, "one build, counted on the calling thread");
+    }
+
+    #[test]
+    fn apply_delta_rebuilds_only_dirty_rows() {
+        use crate::exec::ThreadPool;
+        use crate::graph::{merge_delta, GraphDelta};
+        let (g, parts) = small();
+        let layout = BinLayout::build(&g, &parts);
+        // Insert 4->2 (source partition 2) and delete 0->5 (partition 0):
+        // partitions {0, 2} are dirty, partition 1 is not.
+        let mut delta = GraphDelta::new();
+        delta.insert(4, 2).delete(0, 5);
+        let merged = merge_delta(&g, &delta).unwrap();
+        let dirty = delta.dirty_parts(&parts);
+        assert_eq!(dirty, vec![0, 2]);
+        let mut pool = ThreadPool::new(2);
+        let before = layout_builds();
+        let patched = layout.apply_delta(&merged, &parts, &dirty, &mut pool);
+        assert_eq!(layout_builds(), before, "apply_delta must not count as an O(E) scan");
+        let fresh = BinLayout::build(&merged, &parts);
+        assert!(patched == fresh, "patched layout diverged from a from-scratch build");
+        assert_eq!(patched.stat(0, 2).n_edges, 0, "0->5 gone");
+        assert_eq!(patched.stat(2, 1).n_edges, 1, "4->2 present");
+    }
+
+    #[test]
+    fn apply_delta_empty_dirty_set_is_identity() {
+        use crate::exec::ThreadPool;
+        let (g, parts) = small();
+        let layout = BinLayout::build(&g, &parts);
+        let mut pool = ThreadPool::new(1);
+        let same = layout.apply_delta(&g, &parts, &[], &mut pool);
+        assert!(same == layout);
     }
 
     #[test]

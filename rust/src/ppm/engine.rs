@@ -106,6 +106,14 @@ pub enum PreprocessSource {
     /// The layout was restored from a persisted file
     /// ([`BinLayout::load`]): sequential disk IO + validation, no scan.
     Loaded,
+    /// The layout was patched in place from the previous generation by a
+    /// streaming edge delta ([`BinLayout::apply_delta`] via
+    /// [`EngineSession::ingest`](crate::api::EngineSession::ingest)):
+    /// only the dirty partition rows were re-scanned. For this source,
+    /// [`BuildStats::t_partition`] holds the CSR-merge time (the
+    /// partitioning itself is unchanged — deltas never change `n`) and
+    /// [`BuildStats::t_layout`] the row-patching time.
+    Patched,
 }
 
 impl PreprocessSource {
@@ -114,6 +122,7 @@ impl PreprocessSource {
         match self {
             PreprocessSource::Built => "built",
             PreprocessSource::Loaded => "loaded from disk",
+            PreprocessSource::Patched => "delta-patched",
         }
     }
 }

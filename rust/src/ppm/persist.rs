@@ -43,6 +43,16 @@
 //! A load never increments [`layout_builds`](super::layout_builds): the
 //! counter tracks `O(E)` scans, and the whole point of this module is
 //! that the load path does not run one.
+//!
+//! Hot-swapped and delta-patched session generations (PR 5:
+//! [`EngineSession::swap_graph`](crate::api::EngineSession::swap_graph)
+//! / [`ingest`](crate::api::EngineSession::ingest)) persist under this
+//! same format with no special casing:
+//! [`EngineSession::save`](crate::api::EngineSession::save) writes the
+//! *current* snapshot, so the header's [`graph_digest`] is recomputed
+//! over the mutated CSR and a restore binds to exactly the patched
+//! graph — restoring a patched layout against the pre-delta graph fails
+//! the digest check (pinned by `tests/swap.rs`).
 
 use std::fs::File;
 use std::io::{self, BufWriter, Read, Write};

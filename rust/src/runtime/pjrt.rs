@@ -322,7 +322,7 @@ mod tests {
         );
         let native = crate::api::Runner::on(&session)
             .until(crate::api::Convergence::MaxIters(1))
-            .run(crate::apps::PageRank::new(session.graph(), 0.85));
+            .run(crate::apps::PageRank::new(&session.graph(), 0.85));
         for v in 0..m.n {
             assert!(
                 (pjrt_rank[v] - native.output[v]).abs() < 1e-5,

@@ -77,7 +77,7 @@ fn empty_graph_runs_everything() {
     let session = EngineSession::new(g, PpmConfig::default());
     let pr = Runner::on(&session)
         .until(Convergence::MaxIters(3))
-        .run(apps::PageRank::new(session.graph(), 0.85));
+        .run(apps::PageRank::new(&session.graph(), 0.85));
     assert!(pr.output.is_empty());
     let cc = Runner::on(&session)
         .until(Convergence::FrontierEmpty.or_max_iters(10))
@@ -94,7 +94,7 @@ fn single_vertex_no_edges() {
     assert!(res.converged);
     let pr = Runner::on(&session)
         .until(Convergence::MaxIters(2))
-        .run(apps::PageRank::new(session.graph(), 0.85));
+        .run(apps::PageRank::new(&session.graph(), 0.85));
     // Isolated vertex: rank = teleport mass only.
     assert!((pr.output[0] - 0.15).abs() < 1e-6);
 }
@@ -108,7 +108,7 @@ fn self_loops_and_parallel_edges() {
     // PageRank with self loops must still be bounded.
     let pr = Runner::on(&session)
         .until(Convergence::MaxIters(10))
-        .run(apps::PageRank::new(session.graph(), 0.85));
+        .run(apps::PageRank::new(&session.graph(), 0.85));
     let mass: f64 = pr.output.iter().map(|&x| x as f64).sum();
     assert!(mass <= 1.0 + 1e-5 && mass > 0.0);
 }

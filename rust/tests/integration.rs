@@ -239,7 +239,7 @@ fn pjrt_artifacts_integration_when_built() {
     let session = EngineSession::new(g, PpmConfig::with_threads(2));
     let native = Runner::on(&session)
         .until(Convergence::MaxIters(m.iters))
-        .run(apps::PageRank::new(session.graph(), 0.85));
+        .run(apps::PageRank::new(&session.graph(), 0.85));
     for v in 0..m.n {
         assert!((fused[v] - stepped[v]).abs() < 1e-6);
         assert!((fused[v] - native.output[v]).abs() < 1e-4);

@@ -101,7 +101,7 @@ fn restored_session_matches_fresh_session_bitwise() {
         let warm = EngineSession::restore(g.clone(), config, &path).unwrap();
         std::fs::remove_file(&path).unwrap();
         assert_eq!(warm.build_stats().source, PreprocessSource::Loaded);
-        assert!(**warm.layout() == **fresh.layout(), "{wname}: restored layout diverged");
+        assert!(*warm.layout() == *fresh.layout(), "{wname}: restored layout diverged");
 
         let pr_a = Runner::on(&fresh).run(apps::PageRank::new(&g, 0.85));
         let pr_b = Runner::on(&warm).run(apps::PageRank::new(&g, 0.85));

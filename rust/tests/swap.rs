@@ -1,0 +1,307 @@
+//! Hot graph swap + streaming delta ingestion tests: `apply_delta`
+//! layout bit-identity against from-scratch builds (property-tested
+//! across random graphs, deltas, k and thread counts), torn-pair
+//! freedom for checkouts racing `swap_graph`, post-swap/post-ingest
+//! query bit-identity against fresh sessions, and persistence of
+//! patched generations under the PR 4 format.
+
+#[path = "prop_framework/mod.rs"]
+mod prop_framework;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use gpop::api::{EngineSession, Runner};
+use gpop::apps;
+use gpop::exec::ThreadPool;
+use gpop::graph::{gen, merge_delta, Graph, GraphDelta};
+use gpop::ppm::{layout_builds, BinLayout, PpmConfig, PreprocessSource};
+use gpop::VertexId;
+use prop_framework::{property, Gen};
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A random delta against `g`: inserts (weighted iff the graph is),
+/// deletes of real edges, and deletes of likely-absent edges (no-ops).
+fn random_delta(g: &mut Gen, graph: &Graph) -> GraphDelta {
+    let n = graph.n();
+    let mut delta = GraphDelta::new();
+    for _ in 0..g.usize_in(0, 12) {
+        let s = g.rng.below(n as u64) as VertexId;
+        let d = g.rng.below(n as u64) as VertexId;
+        if graph.is_weighted() {
+            delta.insert_weighted(s, d, 0.5 + g.rng.next_f32() * 4.0);
+        } else {
+            delta.insert(s, d);
+        }
+    }
+    for _ in 0..g.usize_in(0, 8) {
+        // Aim at a real edge: random vertex, random neighbor (falls back
+        // to an arbitrary — likely absent — pair on isolated vertices).
+        let s = g.rng.below(n as u64) as VertexId;
+        let adj = graph.out().neighbors(s);
+        let d = if adj.is_empty() {
+            g.rng.below(n as u64) as VertexId
+        } else {
+            adj[g.rng.below(adj.len() as u64) as usize]
+        };
+        delta.delete(s, d);
+    }
+    delta
+}
+
+// ---------------------------------------------------------------------
+// apply_delta bit-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_apply_delta_is_bit_identical_to_build_par() {
+    property("BinLayout::apply_delta == build_par(merged)", 14, |g| {
+        let graph = g.graph(400, 8);
+        let k = *g.pick(&[4usize, 16, 64]);
+        let threads = *g.pick(&[1usize, 4]);
+        let delta = random_delta(g, &graph);
+        let config = PpmConfig { k: Some(k), ..Default::default() };
+        let parts = config.partitioner(graph.n());
+        let mut pool = ThreadPool::new(threads);
+        let base = BinLayout::build_par(&graph, &parts, &mut pool);
+        let merged = merge_delta(&graph, &delta).map_err(|e| e.to_string())?;
+        let dirty = delta.dirty_parts(&parts);
+        let before = layout_builds();
+        let patched = base.apply_delta(&merged, &parts, &dirty, &mut pool);
+        prop_assert_eq!(layout_builds(), before, "apply_delta must not count as an O(E) scan");
+        let fresh = BinLayout::build_par(&merged, &parts, &mut pool);
+        prop_assert!(
+            patched == fresh,
+            "patched layout diverged (n={}, m={} -> {}, weighted={}, k={k}, t={threads}, \
+             +{} -{} dirty={})",
+            graph.n(),
+            graph.m(),
+            merged.m(),
+            graph.is_weighted(),
+            delta.inserts().len(),
+            delta.deletes().len(),
+            dirty.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn apply_delta_named_datasets_across_k_and_threads() {
+    let rmat_w = gen::with_uniform_weights(&gen::rmat(8, Default::default(), false), 1.0, 4.0, 3);
+    for (graph, name) in [
+        (gen::rmat(9, Default::default(), false), "rmat9"),
+        (gen::erdos_renyi(600, 4800, 5), "er600"),
+        (rmat_w, "rmat8+w"),
+    ] {
+        let mut delta = GraphDelta::new();
+        let n = graph.n() as VertexId;
+        if graph.is_weighted() {
+            delta.insert_weighted(0, n - 1, 2.5).insert_weighted(n / 2, 0, 1.5);
+        } else {
+            delta.insert(0, n - 1).insert(n / 2, 0);
+        }
+        // Delete the first real edge plus an absent one (no-op replay).
+        if let Some(&d0) = graph.out().neighbors(0).first() {
+            delta.delete(0, d0);
+        }
+        delta.delete(n - 1, n - 1);
+        let merged = merge_delta(&graph, &delta).unwrap();
+        for k in [4usize, 16, 64] {
+            let config = PpmConfig { k: Some(k), ..Default::default() };
+            let parts = config.partitioner(graph.n());
+            for threads in [1usize, 4] {
+                let mut pool = ThreadPool::new(threads);
+                let base = BinLayout::build_par(&graph, &parts, &mut pool);
+                let patched =
+                    base.apply_delta(&merged, &parts, &delta.dirty_parts(&parts), &mut pool);
+                let fresh = BinLayout::build_par(&merged, &parts, &mut pool);
+                assert!(patched == fresh, "{name} k={k} t={threads}: patched diverged");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hot swap: generations, pools, racing checkouts
+// ---------------------------------------------------------------------
+
+#[test]
+fn post_swap_queries_match_a_fresh_session_bitwise() {
+    // threads = 1 makes gather order deterministic, so PageRank ranks
+    // compare bit-for-bit across the swapped and the fresh session.
+    let a = Arc::new(gen::rmat(9, Default::default(), false));
+    let b = Arc::new(gen::erdos_renyi(700, 5600, 17));
+    let config = PpmConfig { threads: 1, k: Some(16), ..Default::default() };
+    let swapped = EngineSession::new(a.clone(), config.clone());
+    let pre = Runner::on(&swapped).run(apps::PageRank::new(&a, 0.85));
+    let stats = swapped.swap_graph(b.clone());
+    assert_eq!(stats.source, PreprocessSource::Built);
+    assert_eq!(swapped.generation(), 2);
+    let fresh = EngineSession::new(b.clone(), config);
+    assert!(*swapped.layout() == *fresh.layout(), "swapped layout diverged from fresh");
+    let pr_a = Runner::on(&swapped).run(apps::PageRank::new(&b, 0.85));
+    let pr_b = Runner::on(&fresh).run(apps::PageRank::new(&b, 0.85));
+    assert_eq!(bits(&pr_a.output), bits(&pr_b.output), "post-swap PageRank diverged");
+    assert_ne!(bits(&pr_a.output), bits(&pre.output), "swap visibly changed the answer");
+    let bfs_a = Runner::on(&swapped).run(apps::Bfs::new(b.n(), 0));
+    let bfs_b = Runner::on(&fresh).run(apps::Bfs::new(b.n(), 0));
+    assert_eq!(bfs_a.output, bfs_b.output, "post-swap BFS diverged");
+}
+
+#[test]
+fn post_swap_sssp_matches_fresh_at_four_threads() {
+    // f32 min-combining is gather-order-independent, so distances agree
+    // bit-for-bit even with nondeterministic t = 4 interleavings.
+    let a = Arc::new(gen::with_uniform_weights(&gen::chain(300), 1.0, 4.0, 2));
+    let b = Arc::new(gen::with_uniform_weights(&gen::erdos_renyi(500, 4000, 11), 1.0, 4.0, 5));
+    let config = PpmConfig { threads: 4, k: Some(16), ..Default::default() };
+    let swapped = EngineSession::new(a, config.clone());
+    swapped.swap_graph(b.clone());
+    let fresh = EngineSession::new(b.clone(), config);
+    let d_a = Runner::on(&swapped).run(apps::Sssp::new(b.n(), 0));
+    let d_b = Runner::on(&fresh).run(apps::Sssp::new(b.n(), 0));
+    assert_eq!(bits(&d_a.output), bits(&d_b.output), "post-swap SSSP diverged at t=4");
+}
+
+#[test]
+fn concurrent_checkouts_never_observe_a_torn_snapshot() {
+    // Graphs with different (n, m): a torn graph/layout pair would break
+    // the Σ meta.edges == m invariant the readers assert on every
+    // checkout while the writer flips generations under them.
+    let a = Arc::new(gen::erdos_renyi(300, 2400, 7));
+    let b = Arc::new(gen::erdos_renyi(500, 1500, 8));
+    let session = Arc::new(EngineSession::new(
+        a.clone(),
+        PpmConfig { threads: 1, k: Some(8), ..Default::default() },
+    ));
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let session = Arc::clone(&session);
+            let stop = &stop;
+            s.spawn(move || {
+                let mut last_gen = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let mut e = session.checkout();
+                    let layout = e.layout().clone();
+                    let graph = e.graph_arc().clone();
+                    assert_eq!(layout.k(), e.parts().k(), "layout/partitioner torn");
+                    let meta_edges: u64 =
+                        (0..layout.k()).map(|p| layout.meta(p as u32).edges).sum();
+                    assert_eq!(meta_edges, graph.m() as u64, "graph/layout torn");
+                    let generation = e.generation();
+                    assert!(generation >= last_gen, "generation went backwards");
+                    last_gen = generation;
+                    e.load_frontier(&[0]);
+                    assert_eq!(e.frontier_size(), 1);
+                }
+            });
+        }
+        for i in 0..10 {
+            let next: Arc<Graph> = if i % 2 == 0 { b.clone() } else { a.clone() };
+            session.swap_graph(next);
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert_eq!(session.generation(), 11, "ten swaps after the initial build");
+}
+
+// ---------------------------------------------------------------------
+// Ingestion: sessions, persistence
+// ---------------------------------------------------------------------
+
+#[test]
+fn post_ingest_queries_match_a_fresh_session_on_the_merged_graph() {
+    let base =
+        Arc::new(gen::with_uniform_weights(&gen::rmat(9, Default::default(), false), 1.0, 4.0, 7));
+    let mut delta = GraphDelta::new();
+    let n = base.n() as VertexId;
+    delta.insert_weighted(0, n - 1, 1.25).insert_weighted(n - 1, 0, 0.75);
+    if let Some(&d0) = base.out().neighbors(0).first() {
+        delta.delete(0, d0);
+    }
+    let config = PpmConfig { threads: 1, k: Some(16), ..Default::default() };
+    let patched = EngineSession::new(base.clone(), config.clone());
+    let stats = patched.ingest(&delta).unwrap();
+    assert_eq!(stats.source, PreprocessSource::Patched);
+    assert_eq!(patched.generation(), 2);
+    assert_eq!(patched.build_stats().source, PreprocessSource::Patched);
+    let merged = Arc::new(merge_delta(&base, &delta).unwrap());
+    assert_eq!(*patched.graph(), *merged, "session serves the canonical merged graph");
+    let fresh = EngineSession::new(merged.clone(), config);
+    assert!(*patched.layout() == *fresh.layout(), "patched layout diverged from fresh");
+    let pr_a = Runner::on(&patched).run(apps::PageRank::new(&merged, 0.85));
+    let pr_b = Runner::on(&fresh).run(apps::PageRank::new(&merged, 0.85));
+    assert_eq!(bits(&pr_a.output), bits(&pr_b.output), "post-ingest PageRank diverged");
+    assert_eq!(pr_a.preprocess, PreprocessSource::Patched, "reports name the delta path");
+    let sp_a = Runner::on(&patched).run(apps::SsspParents::new(merged.n(), 0));
+    let sp_b = Runner::on(&fresh).run(apps::SsspParents::new(merged.n(), 0));
+    assert_eq!(bits(&sp_a.output.distance), bits(&sp_b.output.distance));
+    assert_eq!(sp_a.output.parent, sp_b.output.parent, "post-ingest parents diverged");
+}
+
+#[test]
+fn patched_layout_persists_with_a_fresh_digest() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("gpop_swap_persist_{}.layout", std::process::id()));
+    let base = Arc::new(gen::erdos_renyi(400, 3200, 9));
+    let config = PpmConfig { threads: 2, k: Some(8), ..Default::default() };
+    let session = EngineSession::new(base.clone(), config.clone());
+    let mut delta = GraphDelta::new();
+    delta.insert(1, 399);
+    if let Some(&d0) = base.out().neighbors(0).first() {
+        delta.delete(0, d0);
+    }
+    session.ingest(&delta).unwrap();
+    session.save(&path).unwrap();
+    // Restoring against the merged graph works and is bit-identical...
+    let merged = Arc::new(merge_delta(&base, &delta).unwrap());
+    let warm = EngineSession::restore(merged.clone(), config.clone(), &path).unwrap();
+    assert!(*warm.layout() == *session.layout(), "restored patched layout diverged");
+    let rep = Runner::on(&warm).run(apps::Bfs::new(merged.n(), 0));
+    assert!(rep.converged);
+    // ...while the PRE-delta graph is refused: the save bound a fresh
+    // digest of the mutated CSR.
+    let err = EngineSession::restore(base, config, &path).expect_err("stale graph");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains("different graph"), "got: {err}");
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn ingest_amortizes_like_a_restore() {
+    // The whole point: a small delta must not re-run the O(E) scan, and
+    // queries on the patched session keep amortizing.
+    let g = Arc::new(gen::erdos_renyi(500, 4000, 13));
+    let session = EngineSession::new(g.clone(), PpmConfig { k: Some(16), ..Default::default() });
+    let before = layout_builds();
+    let mut delta = GraphDelta::new();
+    delta.insert(3, 4).insert(400, 2);
+    session.ingest(&delta).unwrap();
+    for root in [0u32, 5, 17] {
+        let rep = Runner::on(&session).run(apps::Bfs::new(g.n(), root));
+        assert!(rep.converged);
+        assert_eq!(rep.preprocess, PreprocessSource::Patched);
+    }
+    assert_eq!(layout_builds(), before, "ingest + queries never re-ran the O(E) scan");
+}
+
+#[test]
+fn batch_runs_span_generations_cleanly() {
+    // run_batch checks out ONE engine: it finishes its whole batch on
+    // the generation it started on, even if a swap lands mid-batch.
+    let a = Arc::new(gen::erdos_renyi(200, 1600, 3));
+    let b = Arc::new(gen::chain(50));
+    let session = EngineSession::new(a.clone(), PpmConfig { k: Some(8), ..Default::default() });
+    let runner = Runner::on(&session);
+    let reports = runner.run_batch((0..4u32).map(|r| apps::Bfs::new(a.n(), r)));
+    assert_eq!(reports.len(), 4);
+    session.swap_graph(b.clone());
+    // A new batch sees the new graph (outputs sized to the new n).
+    let reports = runner.run_batch((0..2u32).map(|r| apps::Bfs::new(b.n(), r)));
+    assert!(reports.iter().all(|r| r.output.len() == b.n()));
+}
