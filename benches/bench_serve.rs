@@ -1,0 +1,211 @@
+//! bench_serve — serving latency/throughput economics, emitting
+//! `BENCH_pr6.json`.
+//!
+//! Two load shapes against one in-process `ServeLoop` (no socket, so
+//! the numbers isolate admission + coalescing + engine time). The
+//! closed loop runs 4 clients back-to-back for the saturation
+//! throughput; the open loop paces submissions at fixed offered rates
+//! for the latency/shed curve a front-end actually sees. Latency is
+//! the server-side `t_wait + t_query` from each answer, histogrammed
+//! to p50/p90/p99; results go to `$GPOP_BENCH_SERVE_JSON` (default
+//! `BENCH_pr6.json`) for the bench-regression gate.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gpop::api::EngineSession;
+use gpop::bench::Table;
+use gpop::ppm::PpmConfig;
+use gpop::serve::{Hist, Query, Response, ServeConfig, ServeLoop, SubmitError};
+use gpop::util::fmt;
+
+const CLIENTS: usize = 4;
+const QUERIES_PER_CLIENT: usize = 40;
+const OPEN_RATES: [f64; 3] = [50.0, 200.0, 800.0];
+const OPEN_WINDOW_SECS: f64 = 1.5;
+
+struct Sample {
+    name: String,
+    /// 0 for the closed loop (clients submit as fast as answers drain).
+    offered_qps: f64,
+    qps: f64,
+    shed_frac: f64,
+    hist: Hist,
+    batch_size_p50: usize,
+    batch_size_max: usize,
+}
+
+impl Sample {
+    fn json(&self) -> String {
+        format!(
+            "{{\"dataset\":\"{}\",\"offered_qps\":{:.1},\"qps\":{:.1},\"shed_frac\":{:.4},\
+             \"answered\":{},\"p50_s\":{:.6},\"p90_s\":{:.6},\"p99_s\":{:.6},\"mean_s\":{:.6},\
+             \"batch_size_p50\":{},\"batch_size_max\":{}}}",
+            self.name,
+            self.offered_qps,
+            self.qps,
+            self.shed_frac,
+            self.hist.count(),
+            self.hist.p50(),
+            self.hist.p90(),
+            self.hist.p99(),
+            self.hist.mean(),
+            self.batch_size_p50,
+            self.batch_size_max
+        )
+    }
+}
+
+/// 3:1 BFS-to-PageRank mix with rotating roots: enough same-key
+/// adjacency for coalescing to engage without making every batch
+/// identical.
+fn query_mix(i: usize, n: usize) -> Query {
+    if i % 4 == 3 {
+        Query::PageRank { damping: 0.85, max_iters: 5 }
+    } else {
+        Query::Bfs { root: (i * 17 % n) as u32 }
+    }
+}
+
+fn serving(session: &Arc<EngineSession>) -> ServeLoop {
+    ServeLoop::started(
+        Arc::clone(session),
+        ServeConfig { queue_cap: 256, batch_max: 16, workers: 4 },
+    )
+}
+
+fn closed_loop(session: &Arc<EngineSession>) -> Sample {
+    let mut sloop = serving(session);
+    let n = session.graph().n();
+    let handle = sloop.handle();
+    let t0 = Instant::now();
+    let hist = std::thread::scope(|s| {
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let handle = handle.clone();
+                s.spawn(move || {
+                    let mut hist = Hist::new();
+                    for i in 0..QUERIES_PER_CLIENT {
+                        match handle.submit_wait(query_mix(c * QUERIES_PER_CLIENT + i, n)) {
+                            Response::Ok(ok) => hist.record(ok.t_wait + ok.t_query),
+                            other => panic!("closed-loop query failed: {other:?}"),
+                        }
+                    }
+                    hist
+                })
+            })
+            .collect();
+        let mut merged = Hist::new();
+        for client in clients {
+            merged.merge(&client.join().unwrap());
+        }
+        merged
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = sloop.stats();
+    sloop.shutdown();
+    Sample {
+        name: format!("closed/c{CLIENTS}"),
+        offered_qps: 0.0,
+        qps: (CLIENTS * QUERIES_PER_CLIENT) as f64 / elapsed.max(1e-12),
+        shed_frac: 0.0,
+        hist,
+        batch_size_p50: stats.batch_size_p50,
+        batch_size_max: stats.batch_size_max,
+    }
+}
+
+fn open_loop(session: &Arc<EngineSession>, rate: f64) -> Sample {
+    let mut sloop = serving(session);
+    let n = session.graph().n();
+    let handle = sloop.handle();
+    let window = Duration::from_secs_f64(OPEN_WINDOW_SECS);
+    let mut rxs = Vec::new();
+    let mut offered = 0u64;
+    let mut shed = 0u64;
+    let t0 = Instant::now();
+    loop {
+        // Deadline pacing: submission i is due at i/rate, independent of
+        // how long earlier submissions took (open-loop, not closed-loop).
+        let due = Duration::from_secs_f64(offered as f64 / rate);
+        if due >= window {
+            break;
+        }
+        let now = t0.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        offered += 1;
+        match handle.submit(query_mix(offered as usize, n)) {
+            Ok(rx) => rxs.push(rx),
+            Err(SubmitError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("open-loop submit failed: {e:?}"),
+        }
+    }
+    let mut hist = Hist::new();
+    for rx in rxs {
+        match rx.recv().expect("accepted query answered") {
+            Response::Ok(ok) => hist.record(ok.t_wait + ok.t_query),
+            other => panic!("open-loop query failed: {other:?}"),
+        }
+    }
+    let stats = sloop.stats();
+    sloop.shutdown();
+    Sample {
+        name: format!("open/q{}", rate as u64),
+        offered_qps: rate,
+        qps: hist.count() as f64 / OPEN_WINDOW_SECS,
+        shed_frac: shed as f64 / offered.max(1) as f64,
+        hist,
+        batch_size_p50: stats.batch_size_p50,
+        batch_size_max: stats.batch_size_max,
+    }
+}
+
+fn main() {
+    let scale = common::base_scale();
+    let graph = Arc::new(gpop::graph::gen::rmat(scale, Default::default(), false));
+    let config = PpmConfig { threads: 1, pool_cap: 4, ..Default::default() };
+    let session = Arc::new(EngineSession::new(graph.clone(), config));
+    println!(
+        "bench_serve: rmat{scale} ({} edges), {CLIENTS} closed-loop clients, open rates {:?}",
+        fmt::si(graph.m() as f64),
+        OPEN_RATES
+    );
+
+    let mut samples = vec![closed_loop(&session)];
+    for &rate in &OPEN_RATES {
+        samples.push(open_loop(&session, rate));
+    }
+    assert_eq!(session.transient_checkouts(), 0, "serving must stay on pooled engines");
+
+    let mut table = Table::new(&["load", "offered", "qps", "shed", "p50", "p99", "batch p50/max"]);
+    for s in &samples {
+        let offered = if s.offered_qps > 0.0 {
+            format!("{:.0}/s", s.offered_qps)
+        } else {
+            "max".to_string()
+        };
+        table.row(&[
+            s.name.clone(),
+            offered,
+            format!("{:.0}", s.qps),
+            format!("{:.1}%", s.shed_frac * 100.0),
+            fmt::secs(s.hist.p50()),
+            fmt::secs(s.hist.p99()),
+            format!("{}/{}", s.batch_size_p50, s.batch_size_max),
+        ]);
+    }
+    table.print();
+
+    let path =
+        std::env::var("GPOP_BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_pr6.json".to_string());
+    let body = samples.iter().map(Sample::json).collect::<Vec<_>>().join(",");
+    let json =
+        format!("{{\"bench\":\"bench_serve\",\"pr\":6,\"scale\":{scale},\"samples\":[{body}]}}\n");
+    std::fs::write(&path, json).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -26,6 +26,6 @@ pub mod vertex_data;
 pub use algorithm::{Algorithm, FrontierInit};
 pub use convergence::{Convergence, Probe, Stop};
 pub use program::{Lane, Payload, Program};
-pub use runner::{drive, RunReport, Runner};
+pub use runner::{drive, BatchReport, RunReport, Runner};
 pub use session::{EngineSession, SessionEngine};
 pub use vertex_data::VertexData;

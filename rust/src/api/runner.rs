@@ -91,6 +91,54 @@ impl<O> RunReport<O> {
     }
 }
 
+/// The result of one [`Runner::run_batch`] call: per-query
+/// [`RunReport`]s (each with its **own** `total_time`, so a serving
+/// layer's latency histograms never attribute the whole batch's wall
+/// clock to every member) plus the batch-level facts that are paid or
+/// observed once — the engine checkout and the session generation the
+/// entire batch ran on (one checkout = one snapshot; a batch can never
+/// straddle a [`swap_graph`](EngineSession::swap_graph)).
+///
+/// Derefs to the report slice and iterates like the `Vec<RunReport>` it
+/// replaced, so positional callers (`reports[3]`, `.iter()`, `for r in
+/// &reports`) keep working unchanged.
+#[derive(Clone, Debug)]
+pub struct BatchReport<O> {
+    /// One report per query, in submission order.
+    pub reports: Vec<RunReport<O>>,
+    /// The session generation the whole batch executed on.
+    pub generation: u64,
+    /// Seconds to check the engine out of the session pool — the
+    /// batch-level overhead, reported once instead of being smeared
+    /// into every member's `total_time`.
+    pub t_checkout: f64,
+    /// Wall-clock seconds for the whole batch (checkout included).
+    pub t_total: f64,
+}
+
+impl<O> std::ops::Deref for BatchReport<O> {
+    type Target = [RunReport<O>];
+    fn deref(&self) -> &[RunReport<O>] {
+        &self.reports
+    }
+}
+
+impl<O> IntoIterator for BatchReport<O> {
+    type Item = RunReport<O>;
+    type IntoIter = std::vec::IntoIter<RunReport<O>>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.reports.into_iter()
+    }
+}
+
+impl<'a, O> IntoIterator for &'a BatchReport<O> {
+    type Item = &'a RunReport<O>;
+    type IntoIter = std::slice::Iter<'a, RunReport<O>>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.reports.iter()
+    }
+}
+
 /// Drive `alg` on an already-prepared engine until `until` (or the
 /// algorithm's own `converged` hook) says stop.
 ///
@@ -188,15 +236,21 @@ impl<'s> Runner<'s> {
     /// Run a batch of same-algorithm queries against ONE checked-out
     /// engine: partition metadata, bins and the worker pool are shared
     /// across the whole batch (e.g. 16 BFS roots re-partition exactly
-    /// zero times beyond the session's one-time build).
+    /// zero times beyond the session's one-time build). The returned
+    /// [`BatchReport`] carries per-query timing plus the one generation
+    /// the whole batch observed.
     pub fn run_batch<A: Algorithm>(
         &self,
         algs: impl IntoIterator<Item = A>,
-    ) -> Vec<RunReport<A::Output>> {
+    ) -> BatchReport<A::Output> {
+        let t0 = Instant::now();
         let mut engine = self.session.checkout();
+        let t_checkout = t0.elapsed().as_secs_f64();
+        let generation = engine.generation();
         engine.set_mode_policy(self.mode());
         let build = self.session.build_stats();
-        algs.into_iter()
+        let reports = algs
+            .into_iter()
             .map(|alg| {
                 let until = self.until_for(&alg);
                 let mut report = drive(&mut engine, alg, &until);
@@ -204,6 +258,7 @@ impl<'s> Runner<'s> {
                 report.preprocess = build.source;
                 report
             })
-            .collect()
+            .collect();
+        BatchReport { reports, generation, t_checkout, t_total: t0.elapsed().as_secs_f64() }
     }
 }

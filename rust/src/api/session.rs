@@ -42,6 +42,7 @@
 
 use std::ops::{Deref, DerefMut};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -49,13 +50,6 @@ use crate::exec::ThreadPool;
 use crate::graph::{merge_delta, Graph, GraphDelta};
 use crate::partition::Partitioner;
 use crate::ppm::{BinLayout, BuildStats, Engine, PpmConfig, PreprocessSource};
-
-/// Idle engines kept per session. Each pooled engine holds its worker
-/// threads plus `O(k² + E/k)` bin scratch, so the pool is capped: a
-/// burst of concurrent queries beyond the cap allocates transient
-/// engines that are dropped (worker threads joined) on check-in
-/// instead of being retained forever.
-const MAX_POOLED_ENGINES: usize = 4;
 
 /// One immutable (graph, partitioning, layout) generation. Everything a
 /// query depends on lives behind a single `Arc`, which is what makes a
@@ -84,6 +78,12 @@ pub struct EngineSession {
     /// lock but *outside* the `state` lock, so readers are never blocked
     /// behind an `O(E)` scan.
     update: Mutex<()>,
+    /// Engines currently checked out (not yet dropped).
+    outstanding: AtomicUsize,
+    /// Checkouts that allocated a transient engine because the pool was
+    /// both empty and already at `config.pool_cap` concurrent borrowers
+    /// — see [`transient_checkouts`](Self::transient_checkouts).
+    transient: AtomicU64,
 }
 
 impl EngineSession {
@@ -101,6 +101,8 @@ impl EngineSession {
             state: Mutex::new(Arc::new(state)),
             pool: Mutex::new(vec![(1, warm)]),
             update: Mutex::new(()),
+            outstanding: AtomicUsize::new(0),
+            transient: AtomicU64::new(0),
         }
     }
 
@@ -153,6 +155,8 @@ impl EngineSession {
             state: Mutex::new(Arc::new(state)),
             pool: Mutex::new(vec![(1, warm)]),
             update: Mutex::new(()),
+            outstanding: AtomicUsize::new(0),
+            transient: AtomicU64::new(0),
         })
     }
 
@@ -182,12 +186,31 @@ impl EngineSession {
     /// [`ingest`](Self::ingest)) serialize against each other; readers
     /// never wait on a build.
     pub fn swap_graph(&self, graph: impl Into<Arc<Graph>>) -> BuildStats {
+        self.swap_graph_quiesced(graph, || ())
+    }
+
+    /// [`swap_graph`](Self::swap_graph) with a drain hook: `quiesce` runs
+    /// after the expensive new-generation build but *before* the snapshot
+    /// flip, and whatever it returns is dropped right *after* the flip.
+    /// A serving layer passes a closure that acquires "all in-flight
+    /// work has finished" (e.g. every `AdmissionGate` permit, see
+    /// [`crate::serve`]) so the flip happens in a quiesced window and no
+    /// batch admitted before it can still be running on the old
+    /// generation when the new one is published — while checkouts during
+    /// the build itself keep being answered from the current snapshot.
+    pub fn swap_graph_quiesced<Q>(
+        &self,
+        graph: impl Into<Arc<Graph>>,
+        quiesce: impl FnOnce() -> Q,
+    ) -> BuildStats {
         let graph = graph.into();
         let _writer = self.update.lock().unwrap();
         let next_gen = self.generation() + 1;
         let (state, warm) = preprocess(graph, &self.config, next_gen);
         let build = state.build;
+        let drained = quiesce();
         self.install(state, warm);
+        drop(drained);
         build
     }
 
@@ -207,6 +230,18 @@ impl EngineSession {
     /// outside the graph (deltas never grow `n`; use
     /// [`swap_graph`](Self::swap_graph) for that).
     pub fn ingest(&self, delta: &GraphDelta) -> std::io::Result<BuildStats> {
+        self.ingest_quiesced(delta, || ())
+    }
+
+    /// [`ingest`](Self::ingest) with a drain hook — the delta-patch
+    /// analogue of [`swap_graph_quiesced`](Self::swap_graph_quiesced):
+    /// `quiesce` runs after the merge + row patch, immediately before
+    /// the snapshot flip, and its return value is dropped after it.
+    pub fn ingest_quiesced<Q>(
+        &self,
+        delta: &GraphDelta,
+        quiesce: impl FnOnce() -> Q,
+    ) -> std::io::Result<BuildStats> {
         let _writer = self.update.lock().unwrap();
         let snap = self.snapshot();
         let t0 = Instant::now();
@@ -238,7 +273,9 @@ impl EngineSession {
             pool,
             build,
         );
+        let drained = quiesce();
         self.install(SessionState { graph: merged, parts, layout, build, generation }, warm);
+        drop(drained);
         Ok(build)
     }
 
@@ -312,6 +349,24 @@ impl EngineSession {
         self.pool.lock().unwrap().len()
     }
 
+    /// Engines currently checked out (guards not yet dropped).
+    pub fn outstanding_checkouts(&self) -> usize {
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    /// How many checkouts allocated a *transient* engine: the pool was
+    /// empty while `config.pool_cap` engines were already out, so the
+    /// burst paid a full scratch allocation + thread spawn that is
+    /// thrown away on check-in. Steady-state serving should keep this at
+    /// zero — the serve layer's admission gate bounds concurrent
+    /// checkouts to the pool cap precisely so it never grows (asserted
+    /// by the CI serve smoke). A nonzero value under direct session use
+    /// is not a leak, just a visible cost signal: raise
+    /// [`PpmConfig::pool_cap`] or bound concurrency upstream.
+    pub fn transient_checkouts(&self) -> u64 {
+        self.transient.load(Ordering::Relaxed)
+    }
+
     /// Check out an engine for exclusive use. Reuses a pooled engine of
     /// the current generation if one is idle — retiring any stale ones
     /// it finds — otherwise allocates fresh scratch over the shared
@@ -340,6 +395,14 @@ impl EngineSession {
         };
         // Stale worker teams join their threads outside the pool lock.
         drop(stale);
+        let prior = self.outstanding.fetch_add(1, Ordering::Relaxed);
+        if reused.is_none() && prior >= self.config.pool_cap {
+            // The pool can never satisfy this borrower even at steady
+            // state: pool_cap engines are already out, so this scratch
+            // is allocated and thrown away. Count it — the serve layer
+            // gates admissions to keep this at zero.
+            self.transient.fetch_add(1, Ordering::Relaxed);
+        }
         let mut engine = reused.unwrap_or_else(|| {
             Engine::with_layout(
                 snap.graph.clone(),
@@ -418,10 +481,11 @@ impl DerefMut for SessionEngine<'_> {
 
 impl Drop for SessionEngine<'_> {
     fn drop(&mut self) {
+        self.session.outstanding.fetch_sub(1, Ordering::Relaxed);
         if let Some(engine) = self.engine.take() {
             if self.generation == self.session.generation() {
                 let mut pool = self.session.pool.lock().unwrap();
-                if pool.len() < MAX_POOLED_ENGINES {
+                if pool.len() < self.session.config.pool_cap {
                     // A swap racing this push at worst pools a
                     // stale-tagged engine, which the next checkout
                     // retires.
@@ -474,13 +538,47 @@ mod tests {
     }
 
     #[test]
-    fn pool_is_capped() {
-        let session =
-            EngineSession::new(gen::chain(20), PpmConfig { k: Some(2), ..Default::default() });
+    fn pool_is_capped_at_the_configured_cap() {
+        let cap = 3;
+        let session = EngineSession::new(
+            gen::chain(20),
+            PpmConfig { k: Some(2), pool_cap: cap, ..Default::default() },
+        );
         {
-            let _guards: Vec<_> = (0..MAX_POOLED_ENGINES + 2).map(|_| session.checkout()).collect();
+            let guards: Vec<_> = (0..cap + 2).map(|_| session.checkout()).collect();
+            assert_eq!(session.outstanding_checkouts(), cap + 2);
+            drop(guards);
         }
-        assert_eq!(session.pooled_engines(), MAX_POOLED_ENGINES);
+        assert_eq!(session.pooled_engines(), cap);
+        assert_eq!(session.outstanding_checkouts(), 0);
+    }
+
+    #[test]
+    fn checkouts_past_the_pool_cap_are_counted_as_transient() {
+        let session = EngineSession::new(
+            gen::chain(20),
+            PpmConfig { k: Some(2), pool_cap: 2, ..Default::default() },
+        );
+        assert_eq!(session.transient_checkouts(), 0);
+        let a = session.checkout(); // warm engine, prior = 0
+        let b = session.checkout(); // fresh, prior = 1 < cap
+        assert_eq!(session.transient_checkouts(), 0, "within the cap: no transient engines");
+        let c = session.checkout(); // fresh, prior = 2 >= cap: transient
+        assert_eq!(session.transient_checkouts(), 1);
+        drop((a, b, c));
+        // Back at steady state the pool satisfies cap-bounded bursts and
+        // the counter stays put.
+        {
+            let _a = session.checkout();
+            let _b = session.checkout();
+        }
+        assert_eq!(session.transient_checkouts(), 1);
+    }
+
+    #[test]
+    fn zero_pool_cap_is_rejected_like_zero_threads() {
+        let err = PpmConfig { pool_cap: 0, ..Default::default() }.validate().unwrap_err();
+        assert!(err.contains("pool-cap"), "got: {err}");
     }
 
     #[test]
@@ -560,6 +658,21 @@ mod tests {
         assert_eq!(e.generation(), 2);
         assert!(Arc::ptr_eq(e.graph_arc(), &b));
         assert_eq!(session.build_stats().source, PreprocessSource::Built);
+    }
+
+    #[test]
+    fn quiesce_hooks_run_before_the_flip_and_release_after() {
+        let session =
+            EngineSession::new(gen::chain(30), PpmConfig { k: Some(4), ..Default::default() });
+        let mut gen_at_quiesce = 0;
+        session.swap_graph_quiesced(gen::chain(40), || gen_at_quiesce = session.generation());
+        assert_eq!(gen_at_quiesce, 1, "hook must run before generation 2 is published");
+        assert_eq!(session.generation(), 2);
+        let mut delta = GraphDelta::new();
+        delta.insert(0, 39);
+        session.ingest_quiesced(&delta, || gen_at_quiesce = session.generation()).unwrap();
+        assert_eq!(gen_at_quiesce, 2, "ingest hook also precedes its flip");
+        assert_eq!(session.generation(), 3);
     }
 
     #[test]

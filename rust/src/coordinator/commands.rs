@@ -9,6 +9,7 @@ use crate::exec::ThreadPool;
 use crate::graph::io;
 use crate::metrics;
 use crate::ppm::{ModePolicy, PpmConfig};
+use crate::serve::{self, Endpoint, ServeConfig, ServeLoop, Server, ServerSocket};
 use crate::util::cli::{Args, CliError};
 use crate::util::fmt;
 use std::path::Path;
@@ -27,6 +28,7 @@ fn engine_config(args: &Args) -> Result<PpmConfig, CliError> {
         k: args.get_parsed("k")?,
         cache_bytes: args.get_parsed_or("cache-kb", 256usize)? * 1024,
         chunk: args.get_parsed_or("chunk", 1usize)?,
+        pool_cap: args.get_parsed_or("pool-cap", PpmConfig::default().pool_cap)?,
         ..Default::default()
     };
     // Reject nonsense (e.g. `--threads 0`, `--chunk 0`) as a usage
@@ -512,6 +514,101 @@ pub fn cmd_pjrt(args: &Args) -> Result<i32, CliError> {
     Ok(0)
 }
 
+/// `gpop serve` — serve queries over a long-lived session through a
+/// line-protocol socket (see [`crate::serve`]), or, as `gpop serve
+/// send`, act as the matching client: send request lines, print one
+/// response line each.
+pub fn cmd_serve(args: &Args) -> Result<i32, CliError> {
+    if args.positional.first().map(String::as_str) == Some("send") {
+        return serve_send(args);
+    }
+    let g = build_graph(args)?;
+    let config = engine_config(args)?;
+    print_engine(&config);
+    let serve_config = ServeConfig {
+        queue_cap: args.get_parsed_or("queue-cap", ServeConfig::default().queue_cap)?,
+        batch_max: args.get_parsed_or("batch-max", ServeConfig::default().batch_max)?,
+        workers: args.get_parsed_or("workers", 0usize)?,
+    };
+    serve_config.validate().map_err(|e| CliError(format!("invalid serve configuration: {e}")))?;
+    let socket = bind_socket(args)?;
+    let session = EngineSession::new(g, config);
+    println!(
+        "preprocessing: {} (k = {}, pool cap {})",
+        fmt::secs(session.build_stats().t_preprocess()),
+        session.parts().k(),
+        session.config().pool_cap
+    );
+    let mut sloop = ServeLoop::started(Arc::new(session), serve_config);
+    let server = Server::new(socket, sloop.handle());
+    println!("serving on {}", server.socket().describe());
+    // SIGTERM/SIGINT latch into a clean drain-and-exit — CLI path only,
+    // so library users and tests keep their own signal handling.
+    serve::signals::install();
+    server.run().map_err(|e| CliError(format!("serve: {e}")))?;
+    sloop.shutdown();
+    println!("{}", sloop.stats().render_json());
+    println!("shutdown complete");
+    Ok(0)
+}
+
+fn serve_send(args: &Args) -> Result<i32, CliError> {
+    let requests: Vec<String> = args.positional[1..].to_vec();
+    if requests.is_empty() {
+        return Err(CliError("serve send needs at least one request line".into()));
+    }
+    let endpoint = serve_endpoint(args)?;
+    let responses = serve::send_lines(&endpoint, &requests)
+        .map_err(|e| CliError(format!("serve send: {e}")))?;
+    for line in &responses {
+        println!("{line}");
+    }
+    // Fewer responses than requests means the server went away mid-way
+    // (expected only after a `shutdown` request, which is answered
+    // before the server stops).
+    Ok(if responses.len() == requests.len() { 0 } else { 1 })
+}
+
+fn bind_socket(args: &Args) -> Result<ServerSocket, CliError> {
+    if let Some(path) = args.get("socket") {
+        return bind_unix_socket(path);
+    }
+    if let Some(addr) = args.get("tcp") {
+        return ServerSocket::bind_tcp(addr).map_err(|e| CliError(format!("bind tcp {addr}: {e}")));
+    }
+    Err(CliError("serve needs --socket PATH or --tcp ADDR".into()))
+}
+
+#[cfg(unix)]
+fn bind_unix_socket(path: &str) -> Result<ServerSocket, CliError> {
+    ServerSocket::bind_unix(path).map_err(|e| CliError(format!("bind unix socket {path}: {e}")))
+}
+
+#[cfg(not(unix))]
+fn bind_unix_socket(_path: &str) -> Result<ServerSocket, CliError> {
+    Err(CliError("--socket PATH requires a Unix platform; use --tcp ADDR".into()))
+}
+
+fn serve_endpoint(args: &Args) -> Result<Endpoint, CliError> {
+    if let Some(path) = args.get("socket") {
+        return unix_endpoint(path);
+    }
+    if let Some(addr) = args.get("tcp") {
+        return Ok(Endpoint::Tcp(addr.to_string()));
+    }
+    Err(CliError("serve send needs --socket PATH or --tcp ADDR".into()))
+}
+
+#[cfg(unix)]
+fn unix_endpoint(path: &str) -> Result<Endpoint, CliError> {
+    Ok(Endpoint::Unix(path.into()))
+}
+
+#[cfg(not(unix))]
+fn unix_endpoint(_path: &str) -> Result<Endpoint, CliError> {
+    Err(CliError("--socket PATH requires a Unix platform; use --tcp ADDR".into()))
+}
+
 pub fn cmd_info(_args: &Args) -> Result<i32, CliError> {
     println!("gpop {} — GPOP (PPoPP'19) reproduction", env!("CARGO_PKG_VERSION"));
     println!("hardware threads: {}", ThreadPool::available_parallelism());
@@ -753,6 +850,56 @@ mod tests {
     fn unknown_app_rejected() {
         let a = args(&["--app", "wat", "--graph", "chain:4"]);
         assert!(cmd_run(&a).is_err());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn serve_cli_serves_and_send_probes_it() {
+        let pid = std::process::id();
+        let sock = std::env::temp_dir().join(format!("gpop_cmd_serve_{pid}.sock"));
+        let sockstr = sock.to_str().unwrap().to_string();
+        let server_sock = sockstr.clone();
+        let server = std::thread::spawn(move || {
+            let a = args(&[
+                "--graph",
+                "er:300:1500",
+                "--socket",
+                &server_sock,
+                "--threads",
+                "2",
+                "--k",
+                "8",
+                "--pool-cap",
+                "2",
+            ]);
+            cmd_serve(&a)
+        });
+        for _ in 0..200 {
+            if sock.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        assert!(sock.exists(), "server did not come up");
+        let c = args(&["send", "--socket", &sockstr, "bfs 0", "pr 0.85 3", "stats", "shutdown"]);
+        assert_eq!(cmd_serve(&c).unwrap(), 0);
+        assert_eq!(server.join().unwrap().unwrap(), 0);
+        assert!(!sock.exists(), "socket file must be removed on shutdown");
+    }
+
+    #[test]
+    fn serve_requires_an_endpoint_and_send_requires_requests() {
+        let a = args(&["--graph", "chain:10"]);
+        assert!(cmd_serve(&a).unwrap_err().0.contains("--socket"));
+        let s = args(&["send"]);
+        assert!(cmd_serve(&s).unwrap_err().0.contains("request"));
+    }
+
+    #[test]
+    fn zero_pool_cap_is_a_usage_error() {
+        let a = args(&["--app", "bfs", "--graph", "chain:4", "--pool-cap", "0"]);
+        let err = cmd_run(&a).unwrap_err();
+        assert!(err.0.contains("pool-cap"), "got: {}", err.0);
     }
 
     #[test]

@@ -37,6 +37,18 @@ COMMANDS:
               only dirty partition rows are re-scanned, bit-identical to
               a full rebuild; --out/--save-layout persist the patched
               graph + layout for warm restarts)
+  serve      Serve queries over a long-lived session (line protocol)
+             --graph SPEC (--socket PATH | --tcp ADDR)
+             [--pool-cap N] [--queue-cap N] [--batch-max N] [--workers N]
+             [engine options]
+             (admission-gated batching: same-algorithm queries coalesce
+              into one pooled engine checkout; a full queue answers
+              'err overloaded' instead of buffering; SIGTERM/SIGINT or
+              the 'shutdown' verb drain admitted work, then exit.
+              verbs: 'bfs R' | 'sssp R' | 'pr [DAMPING] [ITERS]' |
+              'stats' | 'shutdown')
+             serve send (--socket PATH | --tcp ADDR) REQUEST...
+             (client: send request lines, print one response line each)
   layout     Manage persisted partitioned layouts
              build  --graph SPEC --out PATH [engine options]
              verify --graph SPEC --layout PATH [engine options]
@@ -82,6 +94,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<i32, CliError> {
         "gen" => commands::cmd_gen(&args),
         "swap" => commands::cmd_swap(&args),
         "ingest" => commands::cmd_ingest(&args),
+        "serve" => commands::cmd_serve(&args),
         "layout" => commands::cmd_layout(&args),
         "cachesim" => commands::cmd_cachesim(&args),
         "membench" => commands::cmd_membench(&args),

@@ -65,6 +65,11 @@
 //!   `--features pjrt`.
 //! - [`bench`] — a micro-benchmark harness (criterion is unavailable in
 //!   this offline environment).
+//! - [`serve`] — the `gpop serve` front-end: bounded admission queue,
+//!   same-algorithm query coalescing into `run_batch`, an admission
+//!   gate capped at the engine pool (typed `Overloaded` backpressure),
+//!   drain-and-flip around `swap_graph`/`ingest`, latency histograms,
+//!   and a line-protocol Unix/TCP socket server.
 //! - [`coordinator`] — the CLI launcher and config system.
 //!
 //! ## Migrating from the pre-session API
@@ -85,6 +90,7 @@ pub mod metrics;
 pub mod partition;
 pub mod ppm;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Vertex identifier. The paper uses 4-byte indices (`d_i = 4`).

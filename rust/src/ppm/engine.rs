@@ -32,6 +32,12 @@ pub struct PpmConfig {
     pub k: Option<usize>,
     /// Dynamic-scheduling chunk (partitions per grab).
     pub chunk: usize,
+    /// Idle engines an [`EngineSession`](crate::api::EngineSession)
+    /// retains. Each pooled engine holds its worker threads plus
+    /// `O(k² + E/k)` bin scratch, so the pool is capped; checkouts past
+    /// the cap allocate transient engines, counted by
+    /// [`transient_checkouts`](crate::api::EngineSession::transient_checkouts).
+    pub pool_cap: usize,
 }
 
 impl Default for PpmConfig {
@@ -44,6 +50,7 @@ impl Default for PpmConfig {
             bytes_per_vertex: DEFAULT_BYTES_PER_VERTEX,
             k: None,
             chunk: 1,
+            pool_cap: 4,
         }
     }
 }
@@ -76,6 +83,9 @@ impl PpmConfig {
         }
         if self.bytes_per_vertex == 0 {
             return Err("bytes-per-vertex must be >= 1".into());
+        }
+        if self.pool_cap == 0 {
+            return Err("pool-cap must be >= 1 (a session keeps at least one warm engine)".into());
         }
         Ok(())
     }
@@ -1057,6 +1067,7 @@ mod tests {
         assert!(PpmConfig { bw_ratio: f64::NAN, ..Default::default() }.validate().is_err());
         assert!(PpmConfig { k: Some(0), ..Default::default() }.validate().is_err());
         assert!(PpmConfig { cache_bytes: 0, ..Default::default() }.validate().is_err());
+        assert!(PpmConfig { pool_cap: 0, ..Default::default() }.validate().is_err());
     }
 
     #[test]

@@ -30,4 +30,4 @@ pub use bins::{
 };
 pub use cost::ModePolicy;
 pub use engine::{BuildStats, Engine, IterStats, PpmConfig, PreprocessSource, RunStats};
-pub use persist::{config_fingerprint, graph_digest, LAYOUT_FORMAT_VERSION, LAYOUT_MAGIC};
+pub use persist::{config_fingerprint, graph_digest, Hash64, LAYOUT_FORMAT_VERSION, LAYOUT_MAGIC};

@@ -1,0 +1,189 @@
+//! [`AdmissionGate`] — a counting semaphore that bounds in-flight
+//! batches to the session's engine-pool cap.
+//!
+//! Without it a burst of concurrent batches checks out more engines
+//! than [`PpmConfig::pool_cap`](crate::ppm::PpmConfig::pool_cap) and
+//! every extra one is a *transient* allocation (full bin scratch + a
+//! worker-team spawn, thrown away on check-in — the leak
+//! [`transient_checkouts`](crate::api::EngineSession::transient_checkouts)
+//! counts). Gating admissions at the cap keeps that counter at zero by
+//! construction.
+//!
+//! The gate doubles as the quiesce mechanism for drain-and-flip:
+//! [`drain`](AdmissionGate::drain) takes *all* permits at once, which
+//! (a) waits out every in-flight batch and (b) holds new ones at
+//! `acquire` until the guard drops — exactly the window in which
+//! `EngineSession::swap_graph_quiesced` flips the snapshot, so no
+//! batch admitted before the flip is still running when the new
+//! generation is published. A pending drain has priority over new
+//! acquires (no writer starvation).
+
+use std::sync::{Condvar, Mutex};
+
+struct GateState {
+    available: usize,
+    draining: bool,
+}
+
+/// Counting semaphore with an all-permits drain mode. Permits are RAII.
+pub struct AdmissionGate {
+    state: Mutex<GateState>,
+    changed: Condvar,
+    cap: usize,
+}
+
+impl AdmissionGate {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "admission gate needs at least one permit");
+        Self {
+            state: Mutex::new(GateState { available: cap, draining: false }),
+            changed: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Permits not currently held (0 while fully loaded or drained).
+    pub fn available(&self) -> usize {
+        self.state.lock().unwrap().available
+    }
+
+    /// Block until a permit is free *and* no drain is pending, then
+    /// take it.
+    pub fn acquire(&self) -> GatePermit<'_> {
+        let mut st = self.state.lock().unwrap();
+        while st.available == 0 || st.draining {
+            st = self.changed.wait(st).unwrap();
+        }
+        st.available -= 1;
+        GatePermit { gate: self }
+    }
+
+    /// Take a permit only if one is free right now (no drain pending).
+    pub fn try_acquire(&self) -> Option<GatePermit<'_>> {
+        let mut st = self.state.lock().unwrap();
+        if st.available == 0 || st.draining {
+            return None;
+        }
+        st.available -= 1;
+        Some(GatePermit { gate: self })
+    }
+
+    /// Quiesce: wait for every outstanding permit to return, holding
+    /// new `acquire`s off in the meantime, and keep all `cap` permits
+    /// until the guard drops. Concurrent drains serialize.
+    pub fn drain(&self) -> DrainGuard<'_> {
+        let mut st = self.state.lock().unwrap();
+        while st.draining {
+            st = self.changed.wait(st).unwrap();
+        }
+        st.draining = true;
+        while st.available < self.cap {
+            st = self.changed.wait(st).unwrap();
+        }
+        st.available = 0;
+        DrainGuard { gate: self }
+    }
+}
+
+/// One unit of admitted concurrency; returning it wakes waiters.
+pub struct GatePermit<'g> {
+    gate: &'g AdmissionGate,
+}
+
+impl Drop for GatePermit<'_> {
+    fn drop(&mut self) {
+        let mut st = self.gate.state.lock().unwrap();
+        st.available += 1;
+        drop(st);
+        self.gate.changed.notify_all();
+    }
+}
+
+/// Exclusive ownership of every permit (the quiesced window); dropping
+/// it reopens the gate.
+pub struct DrainGuard<'g> {
+    gate: &'g AdmissionGate,
+}
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.gate.state.lock().unwrap();
+        st.available = self.gate.cap;
+        st.draining = false;
+        drop(st);
+        self.gate.changed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn permits_are_bounded_and_raii() {
+        let gate = AdmissionGate::new(2);
+        let a = gate.acquire();
+        let b = gate.acquire();
+        assert_eq!(gate.available(), 0);
+        assert!(gate.try_acquire().is_none());
+        drop(a);
+        assert_eq!(gate.available(), 1);
+        let c = gate.try_acquire().expect("permit back");
+        drop((b, c));
+        assert_eq!(gate.available(), 2);
+    }
+
+    #[test]
+    fn concurrency_never_exceeds_the_cap() {
+        let cap = 3;
+        let gate = Arc::new(AdmissionGate::new(cap));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..12 {
+            let (gate, in_flight, peak) =
+                (Arc::clone(&gate), Arc::clone(&in_flight), Arc::clone(&peak));
+            handles.push(std::thread::spawn(move || {
+                let _permit = gate.acquire();
+                let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= cap, "gate admitted past its cap");
+        assert_eq!(gate.available(), cap);
+    }
+
+    #[test]
+    fn drain_waits_for_in_flight_permits_and_blocks_new_ones() {
+        let gate = Arc::new(AdmissionGate::new(2));
+        let order = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+        let permit = gate.acquire();
+        let (g2, o2) = (Arc::clone(&gate), Arc::clone(&order));
+        let drainer = std::thread::spawn(move || {
+            let guard = g2.drain();
+            o2.lock().unwrap().push("drained");
+            drop(guard);
+        });
+        // The drainer cannot finish while our permit is out.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        order.lock().unwrap().push("releasing");
+        drop(permit);
+        drainer.join().unwrap();
+        let order = order.lock().unwrap();
+        assert_eq!(*order, vec!["releasing", "drained"]);
+        // Gate is fully reopened after the drain guard dropped.
+        assert_eq!(gate.available(), 2);
+        let _a = gate.acquire();
+    }
+}

@@ -1,0 +1,215 @@
+//! [`Hist`] — a fixed log-bucket latency histogram.
+//!
+//! Serving latencies span five orders of magnitude (a warm BFS on a
+//! small graph is microseconds; a PageRank batch behind a queue is
+//! tens of milliseconds), so linear buckets are useless and exact
+//! reservoirs allocate. `Hist` uses a *fixed* geometric bucketing — 4
+//! sub-buckets per octave from 100 ns up to ~100 s — so `record` is
+//! two flops and an increment, memory is a constant ~1 KB, `merge` is
+//! element-wise addition, and any quantile is recoverable to within
+//! one bucket ratio (2^(1/4) ≈ ±9%), which is plenty for p50/p90/p99
+//! tail reporting.
+
+/// Smallest resolvable latency: everything below lands in bucket 0.
+const FLOOR_SECS: f64 = 1e-7;
+/// Sub-buckets per doubling; the relative quantile error is bounded by
+/// 2^(1/SUB_PER_OCTAVE).
+const SUB_PER_OCTAVE: usize = 4;
+/// Doublings covered above the floor (1e-7 s · 2^30 ≈ 107 s).
+const OCTAVES: usize = 30;
+/// Bucket 0 is the underflow bucket `[0, FLOOR_SECS)`.
+const BUCKETS: usize = 1 + OCTAVES * SUB_PER_OCTAVE;
+
+/// Fixed log-bucket histogram over seconds. `Default` is empty.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: Vec<u64>,
+    total: u64,
+    sum_secs: f64,
+    max_secs: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], total: 0, sum_secs: 0.0, max_secs: 0.0 }
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        // NaN and negatives fall into the underflow bucket rather than
+        // panicking the serve loop over one bad clock reading.
+        if secs.is_nan() || secs < FLOOR_SECS {
+            return 0;
+        }
+        let idx = 1 + ((secs / FLOOR_SECS).log2() * SUB_PER_OCTAVE as f64).floor() as usize;
+        idx.min(BUCKETS - 1)
+    }
+
+    /// Geometric lower edge of bucket `i` (`0.0` for the underflow
+    /// bucket).
+    fn bucket_lo(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            FLOOR_SECS * 2f64.powf((i - 1) as f64 / SUB_PER_OCTAVE as f64)
+        }
+    }
+
+    fn bucket_hi(i: usize) -> f64 {
+        FLOOR_SECS * 2f64.powf(i as f64 / SUB_PER_OCTAVE as f64)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::bucket_of(secs)] += 1;
+        self.total += 1;
+        self.sum_secs += secs.max(0.0);
+        if secs > self.max_secs {
+            self.max_secs = secs;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_secs / self.total as f64
+        }
+    }
+
+    /// Exact maximum recorded value (not bucket-quantized).
+    pub fn max(&self) -> f64 {
+        self.max_secs
+    }
+
+    /// Element-wise accumulation — two `Hist`s always share the fixed
+    /// bucket edges, so merging worker-local histograms is lossless.
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_secs += other.sum_secs;
+        if other.max_secs > self.max_secs {
+            self.max_secs = other.max_secs;
+        }
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`) estimated as the geometric
+    /// midpoint of the bucket holding the rank-`⌈q·n⌉` sample, clamped
+    /// to the exact observed maximum. Returns `0.0` when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let est = if i == 0 {
+                    FLOOR_SECS / 2.0
+                } else {
+                    (Self::bucket_lo(i) * Self::bucket_hi(i)).sqrt()
+                };
+                return est.min(self.max_secs);
+            }
+        }
+        self.max_secs
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist_reports_zeros() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_within_one_bucket_ratio() {
+        // 1..=1000 µs uniformly: p50 ≈ 500 µs, p99 ≈ 990 µs.
+        let mut h = Hist::new();
+        for us in 1..=1000 {
+            h.record(us as f64 * 1e-6);
+        }
+        let tol = 2f64.powf(1.0 / SUB_PER_OCTAVE as f64); // one bucket ratio
+        for (q, want) in [(0.5, 500e-6), (0.9, 900e-6), (0.99, 990e-6)] {
+            let got = h.quantile(q);
+            assert!(
+                got >= want / tol && got <= want * tol,
+                "q={q}: got {got:.2e}, want {want:.2e} within x{tol:.3}"
+            );
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 500.5e-6).abs() < 1e-8);
+        assert_eq!(h.max(), 1000e-6);
+    }
+
+    #[test]
+    fn single_sample_quantiles_return_it() {
+        let mut h = Hist::new();
+        h.record(3.2e-3);
+        // Clamped to the exact max, so even p99 of one sample is exact.
+        assert_eq!(h.p50(), 3.2e-3);
+        assert_eq!(h.p99(), 3.2e-3);
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut both = Hist::new();
+        for i in 0..200 {
+            let x = (i as f64 + 1.0) * 17e-6;
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            both.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.p50(), both.p50());
+        assert_eq!(a.p99(), both.p99());
+        assert_eq!(a.max(), both.max());
+    }
+
+    #[test]
+    fn out_of_range_and_garbage_samples_do_not_panic() {
+        let mut h = Hist::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(1e9); // clamps to the top bucket
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile(1.0) <= 1e9);
+    }
+}

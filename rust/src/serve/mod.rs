@@ -1,0 +1,49 @@
+//! `gpop serve` — a serving front-end with admission control, query
+//! batching, and backpressure over one long-lived
+//! [`EngineSession`](crate::api::EngineSession).
+//!
+//! The offline pipeline answers "run this algorithm once"; this module
+//! answers "keep answering queries while the graph changes underneath".
+//! The pieces, bottom-up:
+//!
+//! - [`hist`] — fixed log-bucket latency histograms (p50/p90/p99).
+//! - [`queue`] — the bounded MPMC admission queue: non-blocking
+//!   rejecting producers (backpressure at the front door) and the
+//!   key-matching drain that powers coalescing.
+//! - [`gate`] — a counting semaphore bounding in-flight batches to the
+//!   engine-pool cap (`transient_checkouts() == 0` by construction),
+//!   whose all-permits [`drain`](AdmissionGate::drain) doubles as the
+//!   quiesce step for drain-and-flip graph swaps.
+//! - [`protocol`] — the line protocol: request grammar, batch keys,
+//!   response rendering, output digests.
+//! - [`serve_loop`] — [`ServeLoop`]: worker threads pop the queue,
+//!   coalesce same-key queries (BFS/SSSP across roots, PageRank within
+//!   a `(damping, max_iters)` param-group) into single
+//!   [`Runner::run_batch`](crate::api::Runner::run_batch) calls, and
+//!   answer each submitter with per-query timing.
+//! - [`server`] — the Unix/TCP socket front door plus the
+//!   SIGTERM/SIGINT latch used by the CLI.
+//!
+//! Lifecycle guarantees: a full queue returns a typed
+//! [`SubmitError::Overloaded`] (never a panic, never a silent drop);
+//! [`ServeLoop::swap_graph`]/[`ServeLoop::ingest`] build the new layout
+//! concurrently with serving and flip only inside the gate's drained
+//! window, so no batch ever observes two generations; shutdown drains
+//! every admitted query before the workers exit.
+
+pub mod gate;
+pub mod hist;
+pub mod protocol;
+pub mod queue;
+pub mod serve_loop;
+pub mod server;
+
+pub use gate::{AdmissionGate, DrainGuard, GatePermit};
+pub use hist::Hist;
+pub use protocol::{
+    output_digest_f32s, output_digest_i32s, parse_request, BatchKey, DEFAULT_PR_DAMPING,
+    DEFAULT_PR_ITERS, PR_EPS, Query, QueryOk, Request, Response,
+};
+pub use queue::{BoundedQueue, PushError};
+pub use serve_loop::{ServeConfig, ServeHandle, ServeLoop, ServeStats, SubmitError};
+pub use server::{send_lines, signals, Endpoint, Server, ServerSocket};

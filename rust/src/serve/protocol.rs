@@ -1,0 +1,299 @@
+//! The `gpop serve` wire protocol: line-delimited requests and
+//! responses, plus the batch-coalescing key.
+//!
+//! One request per line, one response line per request, always in
+//! order — trivially scriptable (`printf 'bfs 0\n' | nc -U sock`) and
+//! trivially testable. Grammar:
+//!
+//! ```text
+//! request  := "bfs" ROOT
+//!           | "sssp" ROOT
+//!           | "pr" [DAMPING] [MAX_ITERS]
+//!           | "stats"
+//!           | "shutdown"
+//! response := "ok" key=value...        (query answered; see QueryOk)
+//!           | "err overloaded" ...     (queue full — backpressure)
+//!           | "err" MESSAGE            (bad request / failed query)
+//!           | one JSON object line     (answer to "stats")
+//! ```
+//!
+//! Responses carry a 64-bit digest of the full typed output (bit
+//! pattern, not text formatting), so clients — and the swap tests —
+//! can check result identity without shipping megabytes of ranks over
+//! the socket.
+
+use crate::ppm::Hash64;
+
+/// Default PageRank damping when the request omits it.
+pub const DEFAULT_PR_DAMPING: f32 = 0.85;
+/// Default PageRank iteration budget when the request omits it.
+pub const DEFAULT_PR_ITERS: usize = 20;
+/// L1 tolerance paired with the iteration budget for served PageRank.
+pub const PR_EPS: f64 = 1e-6;
+
+/// One executable query.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Query {
+    Bfs { root: u32 },
+    Sssp { root: u32 },
+    PageRank { damping: f32, max_iters: usize },
+}
+
+/// What a query coalesces with: same-key queries run in one
+/// [`Runner::run_batch`](crate::api::Runner::run_batch) engine
+/// checkout. BFS/SSSP coalesce across roots; PageRank only within an
+/// identical `(damping, max_iters)` param-group (the damping is keyed
+/// by bit pattern so `Eq`/`Hash` are exact).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BatchKey {
+    Bfs,
+    Sssp,
+    PageRank { damping_bits: u32, max_iters: usize },
+}
+
+impl Query {
+    pub fn key(&self) -> BatchKey {
+        match *self {
+            Query::Bfs { .. } => BatchKey::Bfs,
+            Query::Sssp { .. } => BatchKey::Sssp,
+            Query::PageRank { damping, max_iters } => {
+                BatchKey::PageRank { damping_bits: damping.to_bits(), max_iters }
+            }
+        }
+    }
+
+    /// Protocol name, also the per-algorithm histogram label.
+    pub fn algo(&self) -> &'static str {
+        match self {
+            Query::Bfs { .. } => "bfs",
+            Query::Sssp { .. } => "sssp",
+            Query::PageRank { .. } => "pr",
+        }
+    }
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Query(Query),
+    Stats,
+    Shutdown,
+}
+
+/// Parse one request line (the error string becomes an `err` response).
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let mut words = line.split_whitespace();
+    let verb = words.next().ok_or("empty request")?;
+    let req = match verb {
+        "bfs" | "sssp" => {
+            let root = words
+                .next()
+                .ok_or_else(|| format!("{verb} needs a root vertex"))?
+                .parse::<u32>()
+                .map_err(|e| format!("{verb} root: {e}"))?;
+            match verb {
+                "bfs" => Request::Query(Query::Bfs { root }),
+                _ => Request::Query(Query::Sssp { root }),
+            }
+        }
+        "pr" => {
+            let damping = match words.next() {
+                None => DEFAULT_PR_DAMPING,
+                Some(s) => s.parse::<f32>().map_err(|e| format!("pr damping: {e}"))?,
+            };
+            if !(damping > 0.0 && damping < 1.0) {
+                return Err(format!("pr damping must be in (0, 1), got {damping}"));
+            }
+            let max_iters = match words.next() {
+                None => DEFAULT_PR_ITERS,
+                Some(s) => s.parse::<usize>().map_err(|e| format!("pr max-iters: {e}"))?,
+            };
+            if max_iters == 0 {
+                return Err("pr max-iters must be >= 1".into());
+            }
+            Request::Query(Query::PageRank { damping, max_iters })
+        }
+        "stats" => Request::Stats,
+        "shutdown" => Request::Shutdown,
+        other => return Err(format!("unknown verb {other:?} (bfs|sssp|pr|stats|shutdown)")),
+    };
+    if let Some(extra) = words.next() {
+        return Err(format!("trailing argument {extra:?}"));
+    }
+    Ok(req)
+}
+
+/// A successfully answered query, rendered as one `ok` line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryOk {
+    pub algo: &'static str,
+    /// Session generation the whole batch ran on.
+    pub generation: u64,
+    /// Monotone batch sequence number (assigned under the admission
+    /// gate, so seq order == flip order).
+    pub batch_seq: u64,
+    /// Queries coalesced into this batch (>= 1).
+    pub batch_size: usize,
+    pub iters: usize,
+    pub converged: bool,
+    /// [`output_digest_*`](output_digest_f32s) of the typed output.
+    pub digest: u64,
+    /// Per-algorithm scalar summary (reached count / settled mass).
+    pub summary: f64,
+    /// Seconds this query itself executed (its own `drive` time).
+    pub t_query: f64,
+    /// Seconds from submission to this query starting (queueing + gate
+    /// wait + its predecessors in the batch).
+    pub t_wait: f64,
+}
+
+/// One response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Ok(QueryOk),
+    /// The admission queue was full: the request was shed, not queued.
+    Overloaded { capacity: usize },
+    Error(String),
+    /// Pre-rendered JSON line answering `stats`.
+    Stats(String),
+}
+
+impl Response {
+    /// Render as exactly one protocol line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            Response::Ok(ok) => format!(
+                "ok app={} gen={} seq={} batch={} iters={} converged={} summary={:.4} \
+                 digest={:016x} t_query_us={} t_wait_us={}",
+                ok.algo,
+                ok.generation,
+                ok.batch_seq,
+                ok.batch_size,
+                ok.iters,
+                ok.converged,
+                ok.summary,
+                ok.digest,
+                (ok.t_query * 1e6).round() as u64,
+                (ok.t_wait * 1e6).round() as u64,
+            ),
+            Response::Overloaded { capacity } => {
+                format!("err overloaded queue_cap={capacity} (retry with backoff)")
+            }
+            Response::Error(msg) => format!("err {}", msg.replace(['\n', '\r'], " ")),
+            Response::Stats(json) => json.clone(),
+        }
+    }
+}
+
+/// Order-sensitive 64-bit digest of an `f32` output vector (ranks,
+/// distances) by bit pattern — `NaN`/`inf` safe, no float formatting.
+pub fn output_digest_f32s(xs: &[f32]) -> u64 {
+    let mut h = Hash64::new();
+    h.write_u64(xs.len() as u64);
+    for x in xs {
+        h.write_u32(x.to_bits());
+    }
+    h.finish()
+}
+
+/// Digest of an `i32` output vector (BFS parents).
+pub fn output_digest_i32s(xs: &[i32]) -> u64 {
+    let mut h = Hash64::new();
+    h.write_u64(xs.len() as u64);
+    for &x in xs {
+        h.write_u32(x as u32);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_grammar() {
+        assert_eq!(parse_request("bfs 7"), Ok(Request::Query(Query::Bfs { root: 7 })));
+        assert_eq!(parse_request("  sssp 0 "), Ok(Request::Query(Query::Sssp { root: 0 })));
+        assert_eq!(
+            parse_request("pr"),
+            Ok(Request::Query(Query::PageRank {
+                damping: DEFAULT_PR_DAMPING,
+                max_iters: DEFAULT_PR_ITERS
+            }))
+        );
+        assert_eq!(
+            parse_request("pr 0.9 30"),
+            Ok(Request::Query(Query::PageRank { damping: 0.9, max_iters: 30 }))
+        );
+        assert_eq!(parse_request("stats"), Ok(Request::Stats));
+        assert_eq!(parse_request("shutdown"), Ok(Request::Shutdown));
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for bad in [
+            "",
+            "bfs",
+            "bfs x",
+            "bfs 1 2",
+            "pr 1.5",
+            "pr 0",
+            "pr 0.85 0",
+            "walk 3",
+            "stats now",
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn pagerank_param_groups_key_separately() {
+        let a = Query::PageRank { damping: 0.85, max_iters: 20 };
+        let b = Query::PageRank { damping: 0.85, max_iters: 20 };
+        let c = Query::PageRank { damping: 0.9, max_iters: 20 };
+        let d = Query::PageRank { damping: 0.85, max_iters: 10 };
+        assert_eq!(a.key(), b.key());
+        assert_ne!(a.key(), c.key());
+        assert_ne!(a.key(), d.key());
+        assert_ne!(Query::Bfs { root: 0 }.key(), Query::Sssp { root: 0 }.key());
+        assert_eq!(Query::Bfs { root: 0 }.key(), Query::Bfs { root: 9 }.key());
+    }
+
+    #[test]
+    fn responses_render_one_line_each() {
+        let ok = Response::Ok(QueryOk {
+            algo: "bfs",
+            generation: 2,
+            batch_seq: 7,
+            batch_size: 3,
+            iters: 9,
+            converged: true,
+            digest: 0xDEAD_BEEF,
+            summary: 4096.0,
+            t_query: 1.234e-3,
+            t_wait: 5.6e-5,
+        });
+        let line = ok.render();
+        assert!(line.starts_with("ok app=bfs gen=2 seq=7 batch=3 iters=9 converged=true"));
+        assert!(line.contains("digest=00000000deadbeef"));
+        assert!(line.contains("t_query_us=1234"));
+        assert!(line.contains("t_wait_us=56"));
+        assert!(!line.contains('\n'));
+        let over = Response::Overloaded { capacity: 64 }.render();
+        assert!(over.starts_with("err overloaded"), "{over}");
+        assert!(over.contains("queue_cap=64"));
+        let err = Response::Error("bad\nthing".into()).render();
+        assert_eq!(err, "err bad thing");
+    }
+
+    #[test]
+    fn digests_detect_any_bit_difference() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let mut b = a.clone();
+        assert_eq!(output_digest_f32s(&a), output_digest_f32s(&b));
+        b[1] = 2.0000002;
+        assert_ne!(output_digest_f32s(&a), output_digest_f32s(&b));
+        assert_ne!(output_digest_i32s(&[0, 1]), output_digest_i32s(&[1, 0]));
+        assert_ne!(output_digest_f32s(&[]), output_digest_f32s(&[0.0]));
+    }
+}

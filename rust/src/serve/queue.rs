@@ -1,0 +1,189 @@
+//! [`BoundedQueue`] — the MPMC admission queue behind the serve loop.
+//!
+//! Producers never block: [`try_push`](BoundedQueue::try_push) fails
+//! fast when the queue is at capacity, which is what turns overload
+//! into a typed `Overloaded` response instead of unbounded buffering
+//! (backpressure at the front door, not OOM an hour later). Consumers
+//! block on a condvar and additionally get
+//! [`drain_matching`](BoundedQueue::drain_matching) — the coalescing
+//! primitive: after popping the FIFO head, a worker sweeps the queue
+//! for more requests with the same batch key and runs them as one
+//! engine checkout.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The queue is at capacity — shed the request (backpressure). The
+    /// item is handed back so the caller can answer its submitter.
+    Full(T),
+    /// [`close`](BoundedQueue::close) was called; no new work is
+    /// admitted (shutdown drain in progress).
+    Closed(T),
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A capacity-bounded MPMC queue: non-blocking rejecting producers,
+/// blocking consumers, and key-based mid-queue extraction for request
+/// coalescing.
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// `cap` must be >= 1 (a zero-capacity admission queue would shed
+    /// everything).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        Self {
+            state: Mutex::new(QueueState { items: VecDeque::with_capacity(cap), closed: false }),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append without blocking; `Err(Full)` at capacity, `Err(Closed)`
+    /// after [`close`](Self::close). Both hand the item back.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available or the queue is closed *and*
+    /// drained — pending items are always delivered before the `None`
+    /// that tells a worker to exit, so shutdown never silently drops
+    /// admitted work.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Remove up to `max` queued items satisfying `matches`, preserving
+    /// the relative order of everything else. Non-blocking; scans from
+    /// the front so coalescing stays FIFO-fair *within* a key while
+    /// non-matching requests keep their queue positions (no
+    /// starvation: the next worker still pops the true head).
+    pub fn drain_matching(&self, max: usize, mut matches: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut kept = VecDeque::with_capacity(st.items.len());
+        while let Some(item) = st.items.pop_front() {
+            if out.len() < max && matches(&item) {
+                out.push(item);
+            } else {
+                kept.push_back(item);
+            }
+        }
+        st.items = kept;
+        out
+    }
+
+    /// Stop admitting work and wake every blocked consumer. Pending
+    /// items remain poppable (drain-then-exit shutdown).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn full_queue_rejects_with_the_item() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(q.len(), 2, "a shed push must not grow the queue");
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_pops() {
+        let q = BoundedQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8), Err(PushError::Closed(8)));
+        assert_eq!(q.pop(), Some(7), "admitted work survives close");
+        assert_eq!(q.pop(), None, "then consumers are told to exit");
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn drain_matching_extracts_in_order_and_keeps_the_rest() {
+        let q = BoundedQueue::new(8);
+        for x in [1, 10, 2, 11, 3, 12] {
+            q.try_push(x).unwrap();
+        }
+        let tens = q.drain_matching(2, |&x| x >= 10);
+        assert_eq!(tens, vec![10, 11], "capped at max, front first");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(12), "unmatched beyond max keeps its relative order");
+    }
+}

@@ -1,0 +1,700 @@
+//! [`ServeLoop`] — the serving core: worker threads drain the bounded
+//! admission queue, coalesce same-key queries into single
+//! [`Runner::run_batch`] engine checkouts, and answer each submitter
+//! through its own response channel.
+//!
+//! Three invariants, each enforced structurally rather than checked:
+//!
+//! 1. **No transient engines.** Workers acquire an [`AdmissionGate`]
+//!    permit (cap = [`PpmConfig::pool_cap`](crate::ppm::PpmConfig::pool_cap))
+//!    before checking out, so concurrent checkouts never exceed the
+//!    pool and [`EngineSession::transient_checkouts`] stays 0.
+//! 2. **Backpressure, not buffering.** The queue is bounded; a full
+//!    queue rejects with [`SubmitError::Overloaded`] at submit time.
+//! 3. **No batch straddles a flip.** A batch holds its gate permit for
+//!    its whole run, and [`ServeLoop::swap_graph`]/[`ServeLoop::ingest`]
+//!    flip inside `EngineSession::*_quiesced` with all permits drained
+//!    — so batch sequence numbers (assigned under the permit) are
+//!    monotone in generation and every member of a batch reports the
+//!    same generation.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::gate::AdmissionGate;
+use super::hist::Hist;
+use super::protocol::{
+    output_digest_f32s, output_digest_i32s, BatchKey, PR_EPS, Query, QueryOk, Response,
+};
+use super::queue::{BoundedQueue, PushError};
+use crate::api::{Algorithm, Convergence, EngineSession, Runner};
+use crate::apps;
+use crate::graph::{Graph, GraphDelta};
+use crate::ppm::BuildStats;
+
+/// Serve-loop tuning; `Default` suits the CLI.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Admission-queue capacity; submits past it are `Overloaded`.
+    pub queue_cap: usize,
+    /// Most queries coalesced into one batch (engine checkout).
+    pub batch_max: usize,
+    /// Worker threads draining the queue; `0` means "the engine-pool
+    /// cap" (more would only queue on the gate).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { queue_cap: 256, batch_max: 32, workers: 0 }
+    }
+}
+
+impl ServeConfig {
+    /// Usage-error validation, mirroring [`crate::ppm::PpmConfig::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        if self.queue_cap == 0 {
+            return Err("queue-cap must be >= 1 (a zero queue sheds everything)".into());
+        }
+        if self.batch_max == 0 {
+            return Err("batch-max must be >= 1 (a batch contains its trigger query)".into());
+        }
+        Ok(())
+    }
+}
+
+/// Why [`ServeHandle::submit`] refused a query.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is at capacity — the typed backpressure
+    /// signal. Retry with backoff or shed.
+    Overloaded { capacity: usize },
+    /// The loop is shutting down; no new work is admitted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { capacity } => {
+                write!(f, "overloaded: admission queue full ({capacity})")
+            }
+            SubmitError::ShuttingDown => write!(f, "shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl SubmitError {
+    /// The protocol line this error answers with.
+    pub fn to_response(&self) -> Response {
+        match *self {
+            SubmitError::Overloaded { capacity } => Response::Overloaded { capacity },
+            SubmitError::ShuttingDown => Response::Error("shutting down".into()),
+        }
+    }
+}
+
+/// One admitted query awaiting execution.
+struct Job {
+    query: Query,
+    submitted: Instant,
+    tx: mpsc::Sender<Response>,
+}
+
+/// Mutex-guarded accumulators (locked once per batch, not per query).
+struct StatsInner {
+    /// Per-algorithm end-to-end latency (wait + query) histograms.
+    algos: BTreeMap<&'static str, Hist>,
+    batches: u64,
+    /// `batch_sizes[s]` = batches that coalesced exactly `s` queries.
+    batch_sizes: Vec<u64>,
+    batch_size_max: usize,
+}
+
+struct Shared {
+    session: Arc<EngineSession>,
+    queue: BoundedQueue<Job>,
+    gate: AdmissionGate,
+    batch_max: usize,
+    batch_seq: AtomicU64,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    stats: Mutex<StatsInner>,
+}
+
+/// A point-in-time stats snapshot (the `stats` verb, bench reporting).
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub generation: u64,
+    pub queue_len: usize,
+    pub queue_cap: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub transient_checkouts: u64,
+    pub batches: u64,
+    pub batch_size_p50: usize,
+    pub batch_size_max: usize,
+    /// Per-algorithm latency histograms, keyed by protocol name.
+    pub algos: Vec<(&'static str, Hist)>,
+}
+
+impl ServeStats {
+    /// Render as the one-line JSON object the `stats` verb returns.
+    pub fn render_json(&self) -> String {
+        let us = |s: f64| (s * 1e6).round() as u64;
+        let algos = self
+            .algos
+            .iter()
+            .map(|(name, h)| {
+                format!(
+                    "\"{name}\":{{\"count\":{},\"p50_us\":{},\"p90_us\":{},\"p99_us\":{},\
+                     \"max_us\":{},\"mean_us\":{}}}",
+                    h.count(),
+                    us(h.p50()),
+                    us(h.p90()),
+                    us(h.p99()),
+                    us(h.max()),
+                    us(h.mean()),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"generation\":{},\"queue_len\":{},\"queue_cap\":{},\"submitted\":{},\
+             \"completed\":{},\"rejected\":{},\"transient_checkouts\":{},\"batches\":{},\
+             \"batch_size_p50\":{},\"batch_size_max\":{},\"algos\":{{{algos}}}}}",
+            self.generation,
+            self.queue_len,
+            self.queue_cap,
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.transient_checkouts,
+            self.batches,
+            self.batch_size_p50,
+            self.batch_size_max,
+        )
+    }
+}
+
+/// Cloneable submit/stats front door to a running [`ServeLoop`] —
+/// what socket connection handlers (and tests) hold.
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServeHandle {
+    /// Admit one query. Returns the channel its [`Response`] arrives
+    /// on, or the typed rejection — never blocks, never drops silently.
+    pub fn submit(&self, query: Query) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job { query, submitted: Instant::now(), tx };
+        match self.shared.queue.try_push(job) {
+            Ok(()) => {
+                self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(PushError::Full(_)) => {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Overloaded { capacity: self.shared.queue.capacity() })
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Submit and block for the response (connection-handler path).
+    pub fn submit_wait(&self, query: Query) -> Response {
+        match self.submit(query) {
+            Ok(rx) => rx.recv().unwrap_or_else(|_| {
+                Response::Error("serve worker terminated before answering".into())
+            }),
+            Err(e) => e.to_response(),
+        }
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let st = self.shared.stats.lock().unwrap();
+        let half = (st.batches + 1) / 2;
+        let mut batch_size_p50 = 0;
+        let mut cum = 0u64;
+        for (size, &c) in st.batch_sizes.iter().enumerate() {
+            cum += c;
+            if c > 0 && cum >= half {
+                batch_size_p50 = size;
+                break;
+            }
+        }
+        ServeStats {
+            generation: self.shared.session.generation(),
+            queue_len: self.shared.queue.len(),
+            queue_cap: self.shared.queue.capacity(),
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            transient_checkouts: self.shared.session.transient_checkouts(),
+            batches: st.batches,
+            batch_size_p50,
+            batch_size_max: st.batch_size_max,
+            algos: st.algos.iter().map(|(k, v)| (*k, v.clone())).collect(),
+        }
+    }
+
+    pub fn session(&self) -> &Arc<EngineSession> {
+        &self.shared.session
+    }
+}
+
+/// The serving front-end: owns the queue, the gate and the worker
+/// threads over one [`EngineSession`].
+pub struct ServeLoop {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl ServeLoop {
+    /// Build the loop *without* spawning workers — submissions are
+    /// accepted (they queue) but nothing executes until
+    /// [`start`](Self::start). Tests use the gap to pre-fill the queue
+    /// and observe deterministic coalescing; the CLI calls
+    /// [`started`](Self::started).
+    ///
+    /// Panics on an invalid `config`, like [`EngineSession::new`].
+    pub fn new(session: Arc<EngineSession>, config: ServeConfig) -> Self {
+        config.validate().unwrap_or_else(|e| panic!("invalid ServeConfig: {e}"));
+        let pool_cap = session.config().pool_cap;
+        let n_workers = if config.workers == 0 { pool_cap } else { config.workers };
+        let shared = Arc::new(Shared {
+            session,
+            queue: BoundedQueue::new(config.queue_cap),
+            gate: AdmissionGate::new(pool_cap),
+            batch_max: config.batch_max,
+            batch_seq: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            stats: Mutex::new(StatsInner {
+                algos: BTreeMap::new(),
+                batches: 0,
+                batch_sizes: vec![0; config.batch_max + 1],
+                batch_size_max: 0,
+            }),
+        });
+        Self { shared, workers: Vec::new(), n_workers }
+    }
+
+    /// [`new`](Self::new) + [`start`](Self::start).
+    pub fn started(session: Arc<EngineSession>, config: ServeConfig) -> Self {
+        let mut sl = Self::new(session, config);
+        sl.start();
+        sl
+    }
+
+    /// Spawn the worker threads (idempotent).
+    pub fn start(&mut self) {
+        if !self.workers.is_empty() {
+            return;
+        }
+        for i in 0..self.n_workers {
+            let shared = Arc::clone(&self.shared);
+            let worker = std::thread::Builder::new()
+                .name(format!("gpop-serve-{i}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawn serve worker");
+            self.workers.push(worker);
+        }
+    }
+
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    pub fn session(&self) -> &Arc<EngineSession> {
+        &self.shared.session
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.handle().stats()
+    }
+
+    /// Hot-swap the served graph with drain-and-flip: the replacement
+    /// layout builds *while queries keep flowing*, then the admission
+    /// gate is drained (in-flight batches finish on the old snapshot,
+    /// new ones hold at the gate), the snapshot flips, and the gate
+    /// reopens — so no batch ever observes two generations and batch
+    /// sequence numbers are monotone in generation.
+    pub fn swap_graph(&self, graph: impl Into<Arc<Graph>>) -> BuildStats {
+        self.shared.session.swap_graph_quiesced(graph, || self.shared.gate.drain())
+    }
+
+    /// Streaming-delta analogue of [`swap_graph`](Self::swap_graph):
+    /// merge + dirty-row patch concurrent with serving, drain, flip.
+    pub fn ingest(&self, delta: &GraphDelta) -> std::io::Result<BuildStats> {
+        self.shared.session.ingest_quiesced(delta, || self.shared.gate.drain())
+    }
+
+    /// Stop admitting, drain every queued job (each still gets its
+    /// response), and join the workers. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shared.queue.close();
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+impl Drop for ServeLoop {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    // `pop` returns None only when the queue is closed AND empty, so a
+    // shutdown drains admitted work before the workers exit.
+    while let Some(first) = shared.queue.pop() {
+        let key = first.query.key();
+        // Permit first, then coalesce: whatever queued up while we
+        // waited at the gate joins this batch. Holding the permit for
+        // the whole run is what excludes snapshot flips mid-batch.
+        let permit = shared.gate.acquire();
+        let mut jobs = vec![first];
+        jobs.extend(shared.queue.drain_matching(shared.batch_max - 1, |j| j.query.key() == key));
+        // Assigned under the permit: seq order is flip-consistent.
+        let seq = shared.batch_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        run_batch_group(shared, key, jobs, seq);
+        drop(permit);
+    }
+}
+
+fn run_batch_group(shared: &Shared, key: BatchKey, jobs: Vec<Job>, seq: u64) {
+    match key {
+        BatchKey::Bfs => run_typed(
+            shared,
+            jobs,
+            seq,
+            None,
+            |q, g| match *q {
+                Query::Bfs { root } if (root as usize) < g.n() => Ok(apps::Bfs::new(g.n(), root)),
+                Query::Bfs { root } => Err(format!("bfs root {root} out of range (n = {})", g.n())),
+                _ => Err("internal: non-bfs query in a bfs batch".into()),
+            },
+            |parents| {
+                (output_digest_i32s(parents), apps::bfs::n_reached(parents) as f64)
+            },
+        ),
+        BatchKey::Sssp => run_typed(
+            shared,
+            jobs,
+            seq,
+            None,
+            |q, g| {
+                if !g.is_weighted() {
+                    return Err("sssp needs a weighted graph (gen with '+w:1:4')".into());
+                }
+                match *q {
+                    Query::Sssp { root } if (root as usize) < g.n() => {
+                        Ok(apps::Sssp::new(g.n(), root))
+                    }
+                    Query::Sssp { root } => {
+                        Err(format!("sssp root {root} out of range (n = {})", g.n()))
+                    }
+                    _ => Err("internal: non-sssp query in a sssp batch".into()),
+                }
+            },
+            |dist| {
+                let reached = dist.iter().filter(|d| d.is_finite()).count();
+                (output_digest_f32s(dist), reached as f64)
+            },
+        ),
+        BatchKey::PageRank { max_iters, .. } => run_typed(
+            shared,
+            jobs,
+            seq,
+            Some(Convergence::L1Norm(PR_EPS).or_max_iters(max_iters)),
+            |q, g| match *q {
+                Query::PageRank { damping, .. } => Ok(apps::PageRank::new(g, damping)),
+                _ => Err("internal: non-pr query in a pr batch".into()),
+            },
+            |ranks| {
+                let mass: f64 = ranks.iter().map(|&x| x as f64).sum();
+                (output_digest_f32s(ranks), mass)
+            },
+        ),
+    }
+}
+
+/// Execute one coalesced batch: validate each member against the
+/// current snapshot (failures answer individually and never poison the
+/// batch), run the survivors through ONE `run_batch` checkout, then
+/// answer each member with its own timing — `t_query` is the member's
+/// own drive time and `t_wait` its queueing + gate + in-batch
+/// predecessor time, so histograms never attribute the whole batch's
+/// wall clock to every member.
+fn run_typed<A: Algorithm>(
+    shared: &Shared,
+    jobs: Vec<Job>,
+    seq: u64,
+    until: Option<Convergence>,
+    build: impl Fn(&Query, &Graph) -> Result<A, String>,
+    finish: impl Fn(&A::Output) -> (u64, f64),
+) {
+    // The snapshot is pinned for the batch: the gate permit held by our
+    // caller excludes drain-and-flip writers, so `graph()` here and
+    // `run_batch`'s checkout observe the same generation.
+    let graph = shared.session.graph();
+    let mut algs = Vec::with_capacity(jobs.len());
+    let mut valid = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        match build(&job.query, &graph) {
+            Ok(alg) => {
+                algs.push(alg);
+                valid.push(job);
+            }
+            Err(msg) => {
+                // Count before sending: a submitter that has its answer
+                // must already see itself in `completed`.
+                shared.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = job.tx.send(Response::Error(msg));
+            }
+        }
+    }
+    let batch_size = valid.len();
+    if batch_size == 0 {
+        return;
+    }
+    let algo = valid[0].query.algo();
+    let mut runner = Runner::on(&shared.session);
+    if let Some(until) = until {
+        runner = runner.until(until);
+    }
+    let t_exec = Instant::now();
+    let batch = runner.run_batch(algs);
+    let generation = batch.generation;
+    // Member i's wait ends when ITS query starts: checkout plus the
+    // members executed before it within the batch.
+    let mut before_me = batch.t_checkout;
+    let mut replies = Vec::with_capacity(batch_size);
+    for (job, report) in valid.into_iter().zip(batch.reports) {
+        let t_query = report.total_time;
+        let t_wait = t_exec.saturating_duration_since(job.submitted).as_secs_f64() + before_me;
+        before_me += t_query;
+        let (digest, summary) = finish(&report.output);
+        let reply = Response::Ok(QueryOk {
+            algo,
+            generation,
+            batch_seq: seq,
+            batch_size,
+            iters: report.n_iters(),
+            converged: report.converged,
+            digest,
+            summary,
+            t_query,
+            t_wait,
+        });
+        replies.push((job, t_wait + t_query, reply));
+    }
+    // Book-keep BEFORE answering: a submitter holding its response must
+    // already see that response reflected in the stats snapshot.
+    {
+        let mut stats = shared.stats.lock().unwrap();
+        stats.batches += 1;
+        let slot = batch_size.min(stats.batch_sizes.len() - 1);
+        stats.batch_sizes[slot] += 1;
+        if batch_size > stats.batch_size_max {
+            stats.batch_size_max = batch_size;
+        }
+        let hist = stats.algos.entry(algo).or_default();
+        for (_, latency, _) in &replies {
+            hist.record(*latency);
+        }
+    }
+    shared.completed.fetch_add(batch_size as u64, Ordering::Relaxed);
+    for (job, _, reply) in replies {
+        let _ = job.tx.send(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::ppm::PpmConfig;
+
+    fn session(n: usize) -> Arc<EngineSession> {
+        Arc::new(EngineSession::new(
+            gen::erdos_renyi(n, n * 8, 42),
+            PpmConfig { threads: 1, k: Some(8), ..Default::default() },
+        ))
+    }
+
+    #[test]
+    fn paused_loop_queues_then_coalesces_on_start() {
+        let mut sl = ServeLoop::new(
+            session(300),
+            ServeConfig { queue_cap: 16, batch_max: 8, workers: 1 },
+        );
+        let h = sl.handle();
+        // Pre-fill while paused: 3 bfs + 1 pr + 1 bfs. The single
+        // worker must coalesce ALL bfs queries (including the one
+        // behind the pr) into batch seq 1, then run pr alone as seq 2.
+        let mut rxs = Vec::new();
+        for q in [
+            Query::Bfs { root: 0 },
+            Query::Bfs { root: 1 },
+            Query::Bfs { root: 2 },
+            Query::PageRank { damping: 0.85, max_iters: 5 },
+            Query::Bfs { root: 3 },
+        ] {
+            rxs.push(h.submit(q).unwrap());
+        }
+        sl.start();
+        let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let ok = |r: &Response| match r {
+            Response::Ok(ok) => ok.clone(),
+            other => panic!("expected ok, got {other:?}"),
+        };
+        for (i, r) in responses.iter().enumerate().filter(|(i, _)| *i != 3) {
+            let r = ok(r);
+            assert_eq!(r.algo, "bfs", "response {i}");
+            assert_eq!(r.batch_seq, 1, "all bfs coalesce into the first batch");
+            assert_eq!(r.batch_size, 4);
+        }
+        let pr = ok(&responses[3]);
+        assert_eq!(pr.algo, "pr");
+        assert_eq!(pr.batch_seq, 2);
+        assert_eq!(pr.batch_size, 1);
+        let stats = sl.stats();
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.batch_size_max, 4);
+        assert_eq!(stats.completed, 5);
+        assert_eq!(stats.transient_checkouts, 0);
+    }
+
+    #[test]
+    fn full_queue_returns_typed_overloaded() {
+        let sl = ServeLoop::new(
+            session(100),
+            ServeConfig { queue_cap: 2, batch_max: 4, workers: 1 },
+        );
+        let h = sl.handle();
+        h.submit(Query::Bfs { root: 0 }).unwrap();
+        h.submit(Query::Bfs { root: 1 }).unwrap();
+        let err = h.submit(Query::Bfs { root: 2 }).expect_err("queue is full");
+        assert_eq!(err, SubmitError::Overloaded { capacity: 2 });
+        assert_eq!(err.to_response(), Response::Overloaded { capacity: 2 });
+        assert_eq!(h.stats().rejected, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_work_and_rejects_new() {
+        let mut sl = ServeLoop::new(
+            session(200),
+            ServeConfig { queue_cap: 8, batch_max: 4, workers: 2 },
+        );
+        let h = sl.handle();
+        let rxs: Vec<_> = (0..6).map(|r| h.submit(Query::Bfs { root: r }).unwrap()).collect();
+        sl.start();
+        sl.shutdown();
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Response::Ok(_) => {}
+                other => panic!("admitted work must be answered, got {other:?}"),
+            }
+        }
+        let err = h.submit(Query::Bfs { root: 0 }).expect_err("closed after shutdown");
+        assert_eq!(err, SubmitError::ShuttingDown);
+    }
+
+    #[test]
+    fn per_query_wait_excludes_other_members_query_time() {
+        // One batch of several PageRank queries: the FIRST member's
+        // end-to-end latency must not include its successors' drive
+        // time (the old aggregate-report bug).
+        let mut sl = ServeLoop::new(
+            session(400),
+            ServeConfig { queue_cap: 16, batch_max: 8, workers: 1 },
+        );
+        let h = sl.handle();
+        let q = Query::PageRank { damping: 0.85, max_iters: 8 };
+        let rxs: Vec<_> = (0..4).map(|_| h.submit(q.clone()).unwrap()).collect();
+        sl.start();
+        let oks: Vec<QueryOk> = rxs
+            .into_iter()
+            .map(|rx| match rx.recv().unwrap() {
+                Response::Ok(ok) => ok,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert!(oks.iter().all(|o| o.batch_seq == oks[0].batch_seq), "one batch");
+        // Waits are strictly ordered by batch position: member i+1
+        // waited at least member i's query time longer.
+        for w in oks.windows(2) {
+            assert!(
+                w[1].t_wait >= w[0].t_wait + w[0].t_query,
+                "successor wait {} must include predecessor query {}",
+                w[1].t_wait,
+                w[0].t_query
+            );
+        }
+        // Identical queries in one batch on one engine: same digest.
+        assert!(oks.iter().all(|o| o.digest == oks[0].digest));
+    }
+
+    #[test]
+    fn stats_json_is_one_line_and_names_the_fields() {
+        let mut sl = ServeLoop::new(session(100), ServeConfig::default());
+        let h = sl.handle();
+        let rx = h.submit(Query::Bfs { root: 0 }).unwrap();
+        sl.start();
+        rx.recv().unwrap();
+        let line = h.stats().render_json();
+        assert!(!line.contains('\n'));
+        for field in [
+            "\"generation\":",
+            "\"queue_cap\":",
+            "\"submitted\":1",
+            "\"completed\":1",
+            "\"rejected\":0",
+            "\"transient_checkouts\":0",
+            "\"batches\":1",
+            "\"bfs\":{\"count\":1",
+            "\"p99_us\":",
+        ] {
+            assert!(line.contains(field), "missing {field} in {line}");
+        }
+    }
+
+    #[test]
+    fn invalid_members_answer_individually_without_poisoning_the_batch() {
+        let mut sl = ServeLoop::new(
+            session(50),
+            ServeConfig { queue_cap: 8, batch_max: 8, workers: 1 },
+        );
+        let h = sl.handle();
+        let good = h.submit(Query::Bfs { root: 0 }).unwrap();
+        let bad = h.submit(Query::Bfs { root: 9999 }).unwrap();
+        let sssp = h.submit(Query::Sssp { root: 0 }).unwrap(); // unweighted graph
+        sl.start();
+        match good.recv().unwrap() {
+            Response::Ok(ok) => assert_eq!(ok.algo, "bfs"),
+            other => panic!("{other:?}"),
+        }
+        match bad.recv().unwrap() {
+            Response::Error(msg) => assert!(msg.contains("out of range"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        match sssp.recv().unwrap() {
+            Response::Error(msg) => assert!(msg.contains("weighted"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

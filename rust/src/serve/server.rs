@@ -1,0 +1,390 @@
+//! Socket front-end for the serve loop: a line-delimited
+//! request/response server over a Unix or TCP socket, plus the client
+//! side used by `gpop serve send` and the CI smoke probe.
+//!
+//! The accept loop polls non-blocking so it can notice shutdown — a
+//! local stop flag (the `shutdown` verb) or a delivered
+//! SIGTERM/SIGINT ([`signals`]) — within one poll interval; connection
+//! threads poll their reads the same way. Shutdown is drain-then-exit:
+//! the caller stops this server first (no new requests), then
+//! [`ServeLoop::shutdown`](super::ServeLoop::shutdown) answers
+//! everything already admitted.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::protocol::{parse_request, Request, Response};
+use super::serve_loop::ServeHandle;
+
+/// Accept-loop poll interval (shutdown latency bound).
+const ACCEPT_POLL_MS: u64 = 25;
+/// Per-connection read poll (how fast an idle connection notices stop).
+const READ_POLL_MS: u64 = 250;
+/// Client-side read timeout — a CLI probe fails rather than hangs.
+const CLIENT_TIMEOUT_MS: u64 = 30_000;
+
+/// Object-safe view over the two stream types.
+trait Conn: std::io::Read + std::io::Write + Send {
+    fn set_read_timeout_ms(&self, ms: u64) -> std::io::Result<()>;
+}
+
+#[cfg(unix)]
+impl Conn for UnixStream {
+    fn set_read_timeout_ms(&self, ms: u64) -> std::io::Result<()> {
+        self.set_read_timeout(Some(Duration::from_millis(ms)))
+    }
+}
+
+impl Conn for TcpStream {
+    fn set_read_timeout_ms(&self, ms: u64) -> std::io::Result<()> {
+        self.set_read_timeout(Some(Duration::from_millis(ms)))
+    }
+}
+
+/// A bound, non-blocking listening socket. Binding a Unix path removes
+/// a stale socket file first and removes its own on drop.
+pub enum ServerSocket {
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+    Tcp(TcpListener),
+}
+
+impl ServerSocket {
+    #[cfg(unix)]
+    pub fn bind_unix(path: impl Into<PathBuf>) -> std::io::Result<Self> {
+        let path = path.into();
+        if path.exists() {
+            std::fs::remove_file(&path)?;
+        }
+        let listener = UnixListener::bind(&path)?;
+        listener.set_nonblocking(true)?;
+        Ok(ServerSocket::Unix(listener, path))
+    }
+
+    pub fn bind_tcp(addr: &str) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(ServerSocket::Tcp(listener))
+    }
+
+    /// Human-readable bound address (`unix:/path` or `tcp:host:port`).
+    pub fn describe(&self) -> String {
+        match self {
+            #[cfg(unix)]
+            ServerSocket::Unix(_, path) => format!("unix:{}", path.display()),
+            ServerSocket::Tcp(listener) => match listener.local_addr() {
+                Ok(addr) => format!("tcp:{addr}"),
+                Err(_) => "tcp:?".into(),
+            },
+        }
+    }
+
+    /// The concrete TCP address (for `bind_tcp("127.0.0.1:0")` tests).
+    pub fn tcp_addr(&self) -> Option<std::net::SocketAddr> {
+        match self {
+            #[cfg(unix)]
+            ServerSocket::Unix(..) => None,
+            ServerSocket::Tcp(listener) => listener.local_addr().ok(),
+        }
+    }
+
+    fn try_accept(&self) -> std::io::Result<Option<Box<dyn Conn>>> {
+        match self {
+            #[cfg(unix)]
+            ServerSocket::Unix(listener, _) => match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    Ok(Some(Box::new(stream)))
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+            ServerSocket::Tcp(listener) => match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    Ok(Some(Box::new(stream)))
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+        }
+    }
+}
+
+impl Drop for ServerSocket {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let ServerSocket::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Where `gpop serve send` connects.
+pub enum Endpoint {
+    #[cfg(unix)]
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+/// Client side: connect, send each request as one line, collect one
+/// response line per request. Tolerates the server closing the
+/// connection after answering a `shutdown` request (remaining requests
+/// get no lines). Reads time out rather than hang.
+pub fn send_lines(endpoint: &Endpoint, requests: &[String]) -> std::io::Result<Vec<String>> {
+    let stream: Box<dyn Conn> = match endpoint {
+        #[cfg(unix)]
+        Endpoint::Unix(path) => Box::new(UnixStream::connect(path)?),
+        Endpoint::Tcp(addr) => Box::new(TcpStream::connect(addr)?),
+    };
+    stream.set_read_timeout_ms(CLIENT_TIMEOUT_MS)?;
+    let mut reader = BufReader::new(stream);
+    let mut responses = Vec::with_capacity(requests.len());
+    for request in requests {
+        writeln!(reader.get_mut(), "{request}")?;
+        reader.get_mut().flush()?;
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        responses.push(line.trim_end().to_string());
+    }
+    Ok(responses)
+}
+
+/// The accept loop: one thread per connection, all answered through
+/// one shared [`ServeHandle`].
+pub struct Server {
+    socket: ServerSocket,
+    handle: ServeHandle,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(socket: ServerSocket, handle: ServeHandle) -> Self {
+        Self { socket, handle, stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Shared flag that stops [`run`](Self::run) (and every connection
+    /// thread) within one poll interval when set.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    pub fn socket(&self) -> &ServerSocket {
+        &self.socket
+    }
+
+    /// Serve until the stop flag is set — by the `shutdown` verb, by
+    /// [`stop_flag`](Self::stop_flag), or by a signal after
+    /// [`signals::install`]. Joins every connection thread before
+    /// returning, so the caller may safely shut the serve loop down
+    /// next.
+    pub fn run(self) -> std::io::Result<()> {
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) && !signals::requested() {
+            match self.socket.try_accept() {
+                Ok(Some(stream)) => {
+                    let handle = self.handle.clone();
+                    let stop = Arc::clone(&self.stop);
+                    conns.push(std::thread::spawn(move || {
+                        serve_connection(stream, &handle, &stop);
+                    }));
+                }
+                Ok(None) => std::thread::sleep(Duration::from_millis(ACCEPT_POLL_MS)),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == ErrorKind::ConnectionAborted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        // Signal-initiated stop: make sure connection threads see it too.
+        self.stop.store(true, Ordering::SeqCst);
+        for conn in conns {
+            let _ = conn.join();
+        }
+        Ok(())
+    }
+}
+
+/// Per-connection loop: read one request line (polling so a stop is
+/// noticed), answer it, repeat until EOF, error, or stop.
+fn serve_connection(stream: Box<dyn Conn>, handle: &ServeHandle, stop: &AtomicBool) {
+    if stream.set_read_timeout_ms(READ_POLL_MS).is_err() {
+        return;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) || signals::requested() {
+            return;
+        }
+        match reader.read_line(&mut buf) {
+            Ok(0) => {
+                // EOF; a final unterminated line still gets its answer.
+                let line = buf.trim().to_string();
+                if !line.is_empty() {
+                    let (response, shutdown) = answer(&line, handle);
+                    let _ = write_line(reader.get_mut(), &response);
+                    if shutdown {
+                        stop.store(true, Ordering::SeqCst);
+                    }
+                }
+                return;
+            }
+            Ok(_) => {
+                if !buf.ends_with('\n') {
+                    continue; // partial line, EOF will follow
+                }
+                let line = buf.trim().to_string();
+                buf.clear();
+                if line.is_empty() {
+                    continue;
+                }
+                let (response, shutdown) = answer(&line, handle);
+                if write_line(reader.get_mut(), &response).is_err() {
+                    return;
+                }
+                if shutdown {
+                    stop.store(true, Ordering::SeqCst);
+                    return;
+                }
+            }
+            // A timed-out poll keeps any partial bytes in `buf` and
+            // retries; the next read appends the rest of the line.
+            Err(e) if is_poll_timeout(&e) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Map one request line to (response line, initiate-shutdown).
+fn answer(line: &str, handle: &ServeHandle) -> (String, bool) {
+    match parse_request(line) {
+        Ok(Request::Query(query)) => (handle.submit_wait(query).render(), false),
+        Ok(Request::Stats) => (Response::Stats(handle.stats().render_json()).render(), false),
+        Ok(Request::Shutdown) => ("ok shutting down".into(), true),
+        Err(msg) => (Response::Error(msg).render(), false),
+    }
+}
+
+/// Read errors that mean "poll again", not "connection broken".
+fn is_poll_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted)
+}
+
+fn write_line(w: &mut impl Write, line: &str) -> std::io::Result<()> {
+    writeln!(w, "{line}")?;
+    w.flush()
+}
+
+/// Process-global SIGTERM/SIGINT latch. [`install`](signals::install)
+/// is called ONLY by the `gpop serve` CLI path — tests and library
+/// users drive [`Server::stop_flag`] instead, so a test runner's
+/// signal handling is never disturbed.
+#[cfg(unix)]
+pub mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_signum: i32) {
+        // An atomic store is async-signal-safe.
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    /// Latch SIGTERM and SIGINT into a clean-shutdown request. The std
+    /// runtime already links `signal(2)`; no new dependency.
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+pub mod signals {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EngineSession;
+    use crate::graph::gen;
+    use crate::ppm::PpmConfig;
+    use crate::serve::{ServeConfig, ServeLoop};
+
+    fn serving() -> ServeLoop {
+        let session = Arc::new(EngineSession::new(
+            gen::erdos_renyi(400, 3200, 7),
+            PpmConfig { threads: 1, k: Some(8), ..Default::default() },
+        ));
+        ServeLoop::started(session, ServeConfig::default())
+    }
+
+    #[test]
+    fn tcp_round_trip_bfs_stats_shutdown() {
+        let mut sloop = serving();
+        let socket = ServerSocket::bind_tcp("127.0.0.1:0").unwrap();
+        let addr = socket.tcp_addr().unwrap().to_string();
+        let server = Server::new(socket, sloop.handle());
+        let runner = std::thread::spawn(move || server.run());
+        let requests: Vec<String> = ["bfs 0", "pr 0.85 3", "nonsense", "stats", "shutdown"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let responses = send_lines(&Endpoint::Tcp(addr), &requests).unwrap();
+        assert_eq!(responses.len(), 5);
+        assert!(responses[0].starts_with("ok app=bfs "), "{}", responses[0]);
+        assert!(responses[1].starts_with("ok app=pr "), "{}", responses[1]);
+        assert!(responses[2].starts_with("err "), "{}", responses[2]);
+        assert!(responses[3].starts_with("{\"generation\":"), "{}", responses[3]);
+        assert_eq!(responses[4], "ok shutting down");
+        // The shutdown verb stops the accept loop; run() returns clean.
+        runner.join().unwrap().unwrap();
+        sloop.shutdown();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_round_trip_and_stale_file_cleanup() {
+        let path = std::env::temp_dir().join(format!("gpop-serve-ut-{}.sock", std::process::id()));
+        std::fs::write(&path, b"stale").unwrap(); // bind must replace it
+        let mut sloop = serving();
+        let socket = ServerSocket::bind_unix(&path).unwrap();
+        assert_eq!(socket.describe(), format!("unix:{}", path.display()));
+        let server = Server::new(socket, sloop.handle());
+        let stop = server.stop_flag();
+        let runner = std::thread::spawn(move || server.run());
+        let requests: Vec<String> = vec!["bfs 1".into(), "stats".into()];
+        let responses = send_lines(&Endpoint::Unix(path.clone()), &requests).unwrap();
+        assert!(responses[0].starts_with("ok app=bfs "), "{}", responses[0]);
+        assert!(responses[1].contains("\"completed\":1"), "{}", responses[1]);
+        // Stop via the flag (the signal path minus the signal itself).
+        stop.store(true, Ordering::SeqCst);
+        runner.join().unwrap().unwrap();
+        assert!(!path.exists(), "socket file must be removed on shutdown");
+        sloop.shutdown();
+    }
+}

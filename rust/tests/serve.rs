@@ -1,0 +1,146 @@
+//! `gpop serve` integration tests: typed backpressure at saturation,
+//! the admission gate keeping every batch on a pooled engine, served
+//! answers bit-identical to direct `Runner` runs, and the socket front
+//! door end to end (connect, query, stats, shutdown, cleanup).
+
+use std::sync::Arc;
+
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps;
+use gpop::graph::gen;
+use gpop::ppm::PpmConfig;
+use gpop::serve::{
+    output_digest_f32s, output_digest_i32s, PR_EPS, Query, QueryOk, Response, ServeConfig,
+    ServeLoop, SubmitError,
+};
+
+fn session(n: usize, threads: usize) -> Arc<EngineSession> {
+    Arc::new(EngineSession::new(
+        gen::erdos_renyi(n, n * 8, 33),
+        PpmConfig { threads, k: Some(8), ..Default::default() },
+    ))
+}
+
+fn ok(response: Response) -> QueryOk {
+    match response {
+        Response::Ok(ok) => ok,
+        other => panic!("expected ok response, got {other:?}"),
+    }
+}
+
+#[test]
+fn saturation_returns_overloaded_then_recovers() {
+    // Workers stay paused so the queue genuinely fills: submits 5..8
+    // must shed with the typed error, not block, panic, or vanish.
+    let mut sloop = ServeLoop::new(
+        session(200, 1),
+        ServeConfig { queue_cap: 4, batch_max: 4, workers: 1 },
+    );
+    let h = sloop.handle();
+    let rxs: Vec<_> = (0..4u32).map(|r| h.submit(Query::Bfs { root: r }).unwrap()).collect();
+    for _ in 0..3 {
+        match h.submit(Query::Bfs { root: 0 }) {
+            Err(SubmitError::Overloaded { capacity }) => assert_eq!(capacity, 4),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+    assert_eq!(h.stats().rejected, 3);
+    sloop.start();
+    for rx in rxs {
+        assert!(matches!(rx.recv().unwrap(), Response::Ok(_)));
+    }
+    // The queue drained: admission works again without a restart.
+    let rx = h.submit(Query::Bfs { root: 1 }).expect("admission recovered after drain");
+    assert!(matches!(rx.recv().unwrap(), Response::Ok(_)));
+}
+
+#[test]
+fn gated_load_keeps_transient_checkouts_at_zero() {
+    // Four workers race over a pool of two engines. Without the
+    // admission gate this load would spill into transient allocations;
+    // with it, every batch reuses a pooled engine.
+    let s = Arc::new(EngineSession::new(
+        gen::erdos_renyi(400, 3200, 9),
+        PpmConfig { threads: 1, k: Some(8), pool_cap: 2, ..Default::default() },
+    ));
+    let mut sloop = ServeLoop::started(
+        Arc::clone(&s),
+        ServeConfig { queue_cap: 256, batch_max: 4, workers: 4 },
+    );
+    let h = sloop.handle();
+    let rxs: Vec<_> = (0..64u32)
+        .map(|i| {
+            let query = if i % 2 == 0 {
+                Query::Bfs { root: i % 50 }
+            } else {
+                Query::PageRank { damping: 0.85, max_iters: 3 }
+            };
+            h.submit(query).expect("queue_cap 256 never fills here")
+        })
+        .collect();
+    for rx in rxs {
+        assert!(matches!(rx.recv().unwrap(), Response::Ok(_)));
+    }
+    assert_eq!(s.transient_checkouts(), 0, "admission gate must bound checkouts to the pool");
+    assert_eq!(h.stats().completed, 64);
+    sloop.shutdown();
+}
+
+#[test]
+fn served_answers_match_direct_runner_bitwise() {
+    let s = session(300, 1);
+    let graph = s.graph();
+    let mut sloop = ServeLoop::started(Arc::clone(&s), ServeConfig::default());
+    let h = sloop.handle();
+    let bfs = ok(h.submit_wait(Query::Bfs { root: 3 }));
+    assert_eq!(bfs.algo, "bfs");
+    let pr = ok(h.submit_wait(Query::PageRank { damping: 0.9, max_iters: 5 }));
+    assert_eq!(pr.algo, "pr");
+    sloop.shutdown();
+    let direct_bfs = Runner::on(&s).run(apps::Bfs::new(graph.n(), 3));
+    assert_eq!(bfs.digest, output_digest_i32s(&direct_bfs.output));
+    assert_eq!(bfs.summary as usize, apps::bfs::n_reached(&direct_bfs.output));
+    let direct_pr = Runner::on(&s)
+        .until(Convergence::L1Norm(PR_EPS).or_max_iters(5))
+        .run(apps::PageRank::new(&graph, 0.9));
+    assert_eq!(pr.digest, output_digest_f32s(&direct_pr.output));
+    assert_eq!(pr.iters, direct_pr.n_iters());
+}
+
+#[test]
+fn sssp_serves_weighted_graphs_bitwise() {
+    let wg = gen::with_uniform_weights(&gen::erdos_renyi(200, 1600, 4), 1.0, 4.0, 6);
+    let s = Arc::new(EngineSession::new(
+        wg,
+        PpmConfig { threads: 1, k: Some(8), ..Default::default() },
+    ));
+    let mut sloop = ServeLoop::started(Arc::clone(&s), ServeConfig::default());
+    let sssp = ok(sloop.handle().submit_wait(Query::Sssp { root: 0 }));
+    assert_eq!(sssp.algo, "sssp");
+    sloop.shutdown();
+    let direct = Runner::on(&s).run(apps::Sssp::new(s.graph().n(), 0));
+    assert_eq!(sssp.digest, output_digest_f32s(&direct.output));
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_end_to_end_bfs_pr_stats_shutdown() {
+    use gpop::serve::{send_lines, Endpoint, Server, ServerSocket};
+    let path = std::env::temp_dir().join(format!("gpop-serve-it-{}.sock", std::process::id()));
+    let mut sloop = ServeLoop::started(session(300, 1), ServeConfig::default());
+    let server = Server::new(ServerSocket::bind_unix(&path).unwrap(), sloop.handle());
+    let runner = std::thread::spawn(move || server.run());
+    let requests: Vec<String> = ["bfs 0", "pr", "stats", "shutdown"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let responses = send_lines(&Endpoint::Unix(path.clone()), &requests).unwrap();
+    assert_eq!(responses.len(), 4);
+    assert!(responses[0].starts_with("ok app=bfs "), "got: {}", responses[0]);
+    assert!(responses[1].starts_with("ok app=pr "), "got: {}", responses[1]);
+    assert!(responses[2].contains("\"transient_checkouts\":0"), "got: {}", responses[2]);
+    assert_eq!(responses[3], "ok shutting down");
+    runner.join().unwrap().unwrap();
+    sloop.shutdown();
+    assert!(!path.exists(), "server drop removes the socket file");
+}

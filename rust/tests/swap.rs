@@ -2,8 +2,10 @@
 //! layout bit-identity against from-scratch builds (property-tested
 //! across random graphs, deltas, k and thread counts), torn-pair
 //! freedom for checkouts racing `swap_graph`, post-swap/post-ingest
-//! query bit-identity against fresh sessions, and persistence of
-//! patched generations under the PR 4 format.
+//! query bit-identity against fresh sessions, persistence of patched
+//! generations under the PR 4 format, and the serve loop's
+//! drain-and-flip guarantees while `swap_graph`/`ingest` land under
+//! live client load.
 
 #[path = "prop_framework/mod.rs"]
 mod prop_framework;
@@ -11,11 +13,15 @@ mod prop_framework;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use gpop::api::{EngineSession, Runner};
+use gpop::api::{Convergence, EngineSession, Runner};
 use gpop::apps;
 use gpop::exec::ThreadPool;
 use gpop::graph::{gen, merge_delta, Graph, GraphDelta};
 use gpop::ppm::{layout_builds, BinLayout, PpmConfig, PreprocessSource};
+use gpop::serve::{
+    output_digest_f32s, output_digest_i32s, PR_EPS, Query, Response, ServeConfig, ServeLoop,
+    SubmitError,
+};
 use gpop::VertexId;
 use prop_framework::{property, Gen};
 
@@ -304,4 +310,106 @@ fn batch_runs_span_generations_cleanly() {
     // A new batch sees the new graph (outputs sized to the new n).
     let reports = runner.run_batch((0..2u32).map(|r| apps::Bfs::new(b.n(), r)));
     assert!(reports.iter().all(|r| r.output.len() == b.n()));
+}
+
+#[test]
+fn serve_loop_flips_generations_without_straddling_batches() {
+    // Client threads hammer mixed BFS/PageRank while the main thread
+    // lands swap_graph and ingest flips. Every accepted query is
+    // answered, no batch observes two generations, generations are
+    // monotone in batch order, and a saturated queue surfaces as typed
+    // Overloaded backpressure — never a panic or a silent drop.
+    let a = Arc::new(gen::erdos_renyi(300, 2400, 21));
+    let b = Arc::new(gen::erdos_renyi(350, 2100, 22));
+    let config = PpmConfig { threads: 1, k: Some(8), pool_cap: 2, ..Default::default() };
+    let session = Arc::new(EngineSession::new(a.clone(), config.clone()));
+    let sloop = ServeLoop::started(
+        Arc::clone(&session),
+        ServeConfig { queue_cap: 64, batch_max: 8, workers: 2 },
+    );
+    let handle = sloop.handle();
+    let stop = AtomicBool::new(false);
+    let mut delta = GraphDelta::new();
+    delta.insert(0, 1);
+    let (mut answered, total_shed) = std::thread::scope(|s| {
+        let clients: Vec<_> = (0..4u32)
+            .map(|c| {
+                let handle = handle.clone();
+                let stop = &stop;
+                s.spawn(move || {
+                    let mut oks: Vec<(u64, u64)> = Vec::new();
+                    let mut shed = 0u64;
+                    let mut i = 0u32;
+                    while !stop.load(Ordering::Relaxed) {
+                        let query = if (i + c) % 2 == 0 {
+                            Query::Bfs { root: i % 100 }
+                        } else {
+                            Query::PageRank { damping: 0.85, max_iters: 3 }
+                        };
+                        i += 1;
+                        match handle.submit(query) {
+                            Ok(rx) => match rx.recv().expect("accepted query answered") {
+                                Response::Ok(ok) => oks.push((ok.batch_seq, ok.generation)),
+                                other => panic!("unexpected response: {other:?}"),
+                            },
+                            Err(SubmitError::Overloaded { capacity }) => {
+                                assert_eq!(capacity, 64);
+                                shed += 1;
+                            }
+                            Err(e) => panic!("unexpected submit error: {e:?}"),
+                        }
+                    }
+                    (oks, shed)
+                })
+            })
+            .collect();
+        for flip in 0..4 {
+            let next = if flip % 2 == 0 { b.clone() } else { a.clone() };
+            sloop.swap_graph(next);
+        }
+        sloop.ingest(&delta).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        let mut answered: Vec<(u64, u64)> = Vec::new();
+        let mut total_shed = 0u64;
+        for client in clients {
+            let (oks, shed) = client.join().unwrap();
+            answered.extend(oks);
+            total_shed += shed;
+        }
+        (answered, total_shed)
+    });
+    assert_eq!(session.generation(), 6, "four swaps + one ingest from generation 1");
+    assert!(!answered.is_empty(), "clients got answers while flips landed");
+    let stats = handle.stats();
+    assert_eq!(stats.rejected, total_shed, "every shed submit was counted");
+    assert_eq!(stats.completed, answered.len() as u64, "every accepted submit was answered");
+    assert_eq!(session.transient_checkouts(), 0, "serving never left the engine pool");
+    // Sorted by (batch_seq, generation): members of one batch must agree
+    // on the generation, and generations never regress across batches.
+    answered.sort_unstable();
+    for w in answered.windows(2) {
+        if w[0].0 == w[1].0 {
+            assert_eq!(w[0].1, w[1].1, "batch {} observed two generations", w[0].0);
+        } else {
+            assert!(w[1].1 >= w[0].1, "generation regressed at batch {}", w[1].0);
+        }
+    }
+    // The session now sits on merge(a, delta): served answers must be
+    // bit-identical to a fresh single-thread session on the merged graph.
+    let merged = Arc::new(merge_delta(&a, &delta).unwrap());
+    let served_bfs = match handle.submit_wait(Query::Bfs { root: 0 }) {
+        Response::Ok(ok) => ok,
+        other => panic!("unexpected response: {other:?}"),
+    };
+    let served_pr = match handle.submit_wait(Query::PageRank { damping: 0.85, max_iters: 3 }) {
+        Response::Ok(ok) => ok,
+        other => panic!("unexpected response: {other:?}"),
+    };
+    let fresh = EngineSession::new(merged.clone(), config);
+    let fresh_bfs = Runner::on(&fresh).run(apps::Bfs::new(merged.n(), 0));
+    assert_eq!(served_bfs.digest, output_digest_i32s(&fresh_bfs.output), "served BFS diverged");
+    let fresh_pr = Runner::on(&fresh)
+        .until(Convergence::L1Norm(PR_EPS).or_max_iters(3))
+        .run(apps::PageRank::new(&merged, 0.85));
+    assert_eq!(served_pr.digest, output_digest_f32s(&fresh_pr.output), "served PR diverged");
 }
