@@ -1,0 +1,129 @@
+//! bench_ooc — out-of-core paging cost, emitting `BENCH_pr7.json`.
+//!
+//! Times 5-iteration PageRank on one graph four ways: fully in memory,
+//! then paged through [`gpop::ooc::PartitionCache`] under budgets of
+//! ½, ¼ and ⅛ of the pageable row bytes. The paged legs report the
+//! cache counters alongside the median, so the JSON captures both the
+//! slowdown *and* the fault/eviction traffic that bought the bounded
+//! resident set. Medians land in `$GPOP_BENCH_OOC_JSON` (default
+//! `BENCH_pr7.json`) for the CI regression gate.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::PageRank;
+use gpop::bench::{bench, Table};
+use gpop::graph::{gen, io::write_binary};
+use gpop::ooc::PartitionStore;
+use gpop::ppm::PpmConfig;
+use gpop::util::fmt;
+
+const PR_ITERS: usize = 5;
+
+struct Sample {
+    dataset: String,
+    mode: String,
+    budget_bytes: u64,
+    median_time_s: f64,
+    faults: u64,
+    evictions: u64,
+}
+
+impl Sample {
+    fn json(&self) -> String {
+        // The mode is folded into the dataset name so each leg gets its
+        // own `bench_ooc/<dataset>-<mode>/<field>` key in the
+        // regression gate (plain "rmat12" would collide across legs).
+        format!(
+            "{{\"dataset\":\"{}-{}\",\"budget_bytes\":{},\
+             \"median_time_s\":{:.6},\"faults\":{},\"evictions\":{}}}",
+            self.dataset, self.mode, self.budget_bytes, self.median_time_s, self.faults,
+            self.evictions
+        )
+    }
+}
+
+fn pagerank(session: &EngineSession) {
+    let out = Runner::on(session)
+        .until(Convergence::MaxIters(PR_ITERS))
+        .run(PageRank::new(&session.graph(), 0.85))
+        .output;
+    std::hint::black_box(out);
+}
+
+fn main() {
+    let scale =
+        common::env_usize("GPOP_BENCH_SCALE_OOC", common::env_usize("GPOP_BENCH_SCALE", 12)) as u32;
+    let threads = common::env_usize("GPOP_BENCH_OOC_THREADS", 2);
+    let g = gen::rmat(scale, Default::default(), false);
+    let dataset = format!("rmat{scale}");
+    let config = PpmConfig { threads, ..Default::default() };
+    println!(
+        "bench_ooc: {dataset} ({} edges), {PR_ITERS}-iter pagerank on {threads} threads",
+        fmt::si(g.m() as f64)
+    );
+
+    let bcfg = common::bench_config();
+    let mut samples: Vec<Sample> = Vec::new();
+
+    let mem = EngineSession::new(g.clone(), config.clone());
+    let r = bench(&format!("{dataset} in-memory"), bcfg, || pagerank(&mem));
+    samples.push(Sample {
+        dataset: dataset.clone(),
+        mode: "mem".into(),
+        budget_bytes: 0,
+        median_time_s: r.median(),
+        faults: 0,
+        evictions: 0,
+    });
+
+    let pid = std::process::id();
+    let gp = std::env::temp_dir().join(format!("gpop_bench_ooc_{pid}.bin"));
+    let lp = std::env::temp_dir().join(format!("gpop_bench_ooc_{pid}.layout"));
+    write_binary(&g, &gp).expect("write graph");
+    mem.save(&lp).expect("save layout");
+    let total = PartitionStore::open(&gp, &lp, &config)
+        .expect("open store")
+        .total_row_bytes();
+    println!("pageable rows: {} bytes", fmt::si(total as f64));
+
+    for div in [2u64, 4, 8] {
+        let budget = total / div;
+        let ooc_config = PpmConfig { mem_budget: Some(budget), ..config.clone() };
+        let paged = EngineSession::open_paged(&gp, &lp, ooc_config).expect("open paged");
+        let r = bench(&format!("{dataset} budget 1/{div}"), bcfg, || pagerank(&paged));
+        let stats = paged.ooc_stats().expect("paged stats");
+        samples.push(Sample {
+            dataset: dataset.clone(),
+            mode: format!("b{div}"),
+            budget_bytes: budget,
+            median_time_s: r.median(),
+            faults: stats.faults,
+            evictions: stats.evictions,
+        });
+    }
+    std::fs::remove_file(&gp).ok();
+    std::fs::remove_file(&lp).ok();
+
+    let mem_median = samples[0].median_time_s;
+    let mut table = Table::new(&["mode", "budget", "median", "vs mem", "faults", "evictions"]);
+    for s in &samples {
+        table.row(&[
+            s.mode.clone(),
+            if s.budget_bytes == 0 { "-".into() } else { fmt::si(s.budget_bytes as f64) },
+            fmt::secs(s.median_time_s),
+            format!("{:.2}x", s.median_time_s / mem_median.max(1e-12)),
+            s.faults.to_string(),
+            s.evictions.to_string(),
+        ]);
+    }
+    table.print();
+
+    let path = std::env::var("GPOP_BENCH_OOC_JSON").unwrap_or_else(|_| "BENCH_pr7.json".to_string());
+    let body = samples.iter().map(Sample::json).collect::<Vec<_>>().join(",");
+    let json =
+        format!("{{\"bench\":\"bench_ooc\",\"pr\":7,\"scale\":{scale},\"samples\":[{body}]}}\n");
+    std::fs::write(&path, json).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -48,6 +48,7 @@ use std::time::Instant;
 
 use crate::exec::ThreadPool;
 use crate::graph::{merge_delta, Graph, GraphDelta};
+use crate::ooc::{OocStats, PartitionCache, PartitionStore};
 use crate::partition::Partitioner;
 use crate::ppm::{BinLayout, BuildStats, Engine, PpmConfig, PreprocessSource};
 
@@ -61,6 +62,11 @@ struct SessionState {
     layout: Arc<BinLayout>,
     build: BuildStats,
     generation: u64,
+    /// `Some` iff this snapshot pages its adjacency from disk
+    /// ([`EngineSession::open_paged`]): `graph`/`layout` are then the
+    /// store's skeletons and every checkout routes row access through
+    /// the shared [`PartitionCache`].
+    paging: Option<Arc<PartitionCache>>,
 }
 
 /// A shared, reusable graph-processing context: one graph, one
@@ -149,7 +155,66 @@ impl EngineSession {
             pool,
             build,
         );
-        let state = SessionState { graph, parts, layout, build, generation: 1 };
+        let state = SessionState { graph, parts, layout, build, generation: 1, paging: None };
+        Ok(Self {
+            config,
+            state: Mutex::new(Arc::new(state)),
+            pool: Mutex::new(vec![(1, warm)]),
+            update: Mutex::new(()),
+            outstanding: AtomicUsize::new(0),
+            transient: AtomicU64::new(0),
+        })
+    }
+
+    /// Open a session that *pages* the graph from disk instead of
+    /// loading it: the out-of-core entry point (`gpop run --mem-budget`).
+    /// Both artifacts — the binary graph
+    /// ([`write_binary`](crate::graph::io::write_binary)) and the
+    /// persisted layout ([`save`](Self::save)) — are memory-mapped and
+    /// validated by [`PartitionStore::open`]; only the skeleton (CSR
+    /// offsets, bin counts, partition meta) becomes resident. Adjacency
+    /// and DC streams are then served on demand through a shared
+    /// [`PartitionCache`] bounded by `config.mem_budget` (unbounded when
+    /// `None`), so checkouts run scatter/gather over rows that fault in,
+    /// get pinned for the task that uses them, and are evicted under
+    /// pressure — never OOM-aborting.
+    ///
+    /// Paged sessions serve queries only: [`save`](Self::save),
+    /// [`ingest`](Self::ingest) and pull-based apps (which need a
+    /// resident transpose) are rejected. [`swap_graph`](Self::swap_graph)
+    /// with a resident graph converts the session back to in-memory
+    /// serving.
+    pub fn open_paged(
+        graph_path: &Path,
+        layout_path: &Path,
+        config: PpmConfig,
+    ) -> std::io::Result<Self> {
+        config.validate().map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
+        let t0 = Instant::now();
+        let store = Arc::new(PartitionStore::open(graph_path, layout_path, &config)?);
+        let cache = Arc::new(PartitionCache::new(store.clone(), config.mem_budget));
+        let build = BuildStats {
+            t_partition: 0.0,
+            // mmap + validation of both files, on the calling thread.
+            t_layout: t0.elapsed().as_secs_f64(),
+            threads: 1,
+            source: PreprocessSource::Paged,
+        };
+        let graph = store.graph().clone();
+        let parts = store.partitioner().clone();
+        let layout = store.layout().clone();
+        let pool = ThreadPool::new(config.threads);
+        let warm = Engine::from_parts_paged(
+            graph.clone(),
+            parts.clone(),
+            layout.clone(),
+            config.clone(),
+            pool,
+            build,
+            cache.clone(),
+        );
+        let state =
+            SessionState { graph, parts, layout, build, generation: 1, paging: Some(cache) };
         Ok(Self {
             config,
             state: Mutex::new(Arc::new(state)),
@@ -168,6 +233,14 @@ impl EngineSession {
     /// layout, bound to a fresh digest of the mutated graph.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let snap = self.snapshot();
+        if snap.paging.is_some() {
+            // The snapshot holds skeletons; the real layout already
+            // lives on disk — the very file this session pages from.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "paged sessions cannot persist: the layout is already on disk",
+            ));
+        }
         snap.layout.save(path, &snap.graph, &snap.parts, &self.config)
     }
 
@@ -244,6 +317,15 @@ impl EngineSession {
     ) -> std::io::Result<BuildStats> {
         let _writer = self.update.lock().unwrap();
         let snap = self.snapshot();
+        if snap.paging.is_some() {
+            // The skeleton CSR holds no targets to merge into, and the
+            // patched layout could not be written back anyway.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "paged sessions cannot ingest deltas: the adjacency is not resident \
+                 (use swap_graph with a resident graph first)",
+            ));
+        }
         let t0 = Instant::now();
         let merged = Arc::new(
             merge_delta(&snap.graph, delta)
@@ -274,7 +356,10 @@ impl EngineSession {
             build,
         );
         let drained = quiesce();
-        self.install(SessionState { graph: merged, parts, layout, build, generation }, warm);
+        self.install(
+            SessionState { graph: merged, parts, layout, build, generation, paging: None },
+            warm,
+        );
         drop(drained);
         Ok(build)
     }
@@ -333,6 +418,14 @@ impl EngineSession {
     #[inline]
     pub fn build_stats(&self) -> BuildStats {
         self.snapshot().build
+    }
+
+    /// Partition-cache counters for a paged session
+    /// ([`open_paged`](Self::open_paged)); `None` when the current
+    /// snapshot serves a resident graph. Cumulative across every engine
+    /// checked out against the snapshot — they all share one cache.
+    pub fn ooc_stats(&self) -> Option<OocStats> {
+        self.snapshot().paging.as_ref().map(|cache| cache.stats())
     }
 
     /// Monotone snapshot counter: `1` after construction, `+1` per
@@ -403,13 +496,20 @@ impl EngineSession {
             // gates admissions to keep this at zero.
             self.transient.fetch_add(1, Ordering::Relaxed);
         }
-        let mut engine = reused.unwrap_or_else(|| {
-            Engine::with_layout(
+        let mut engine = reused.unwrap_or_else(|| match &snap.paging {
+            Some(cache) => Engine::with_layout_paged(
                 snap.graph.clone(),
                 snap.parts.clone(),
                 snap.layout.clone(),
                 self.config.clone(),
-            )
+                cache.clone(),
+            ),
+            None => Engine::with_layout(
+                snap.graph.clone(),
+                snap.parts.clone(),
+                snap.layout.clone(),
+                self.config.clone(),
+            ),
         });
         // A previous borrower may have overridden the mode policy
         // (Runner::policy); hand every checkout the session's own.
@@ -443,7 +543,7 @@ fn preprocess(graph: Arc<Graph>, config: &PpmConfig, generation: u64) -> (Sessio
         pool,
         build,
     );
-    (SessionState { graph, parts, layout, build, generation }, warm)
+    (SessionState { graph, parts, layout, build, generation, paging: None }, warm)
 }
 
 /// RAII guard over a checked-out [`Engine`]; derefs to the engine and
@@ -707,6 +807,41 @@ mod tests {
         let g2 = session.graph();
         assert_eq!(g2.out().neighbors(0), &[1, 49]);
         assert_eq!(g2.out().neighbors(10), &[] as &[u32]);
+    }
+
+    #[test]
+    fn paged_sessions_serve_checkouts_but_refuse_persist_and_ingest() {
+        let g = gen::erdos_renyi(300, 2400, 17);
+        let config = PpmConfig { k: Some(8), ..Default::default() };
+        let (gp, lp) = crate::ooc::store::tests::write_artifacts(&g, &config, "session_paged");
+        let session = EngineSession::open_paged(&gp, &lp, config).unwrap();
+        std::fs::remove_file(&gp).unwrap();
+        std::fs::remove_file(&lp).unwrap();
+        assert_eq!(session.build_stats().source, PreprocessSource::Paged);
+        let stats = session.ooc_stats().expect("paged sessions expose cache stats");
+        assert_eq!(stats.faults, 0, "nothing paged before the first query");
+        assert!(stats.fixed_bytes > 0);
+        {
+            // Warm engine + a cold checkout: both must route through the
+            // shared cache (the skeleton holds no adjacency to fall back
+            // on — a non-paged engine would index out of bounds).
+            let _warm = session.checkout();
+            let mut cold = session.checkout();
+            cold.load_frontier(&[0]);
+            assert_eq!(cold.frontier_size(), 1);
+        }
+        let err = session.save(Path::new("/tmp/never_written.layout")).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        let mut delta = GraphDelta::new();
+        delta.insert(0, 1);
+        let err = session.ingest(&delta).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert_eq!(session.generation(), 1, "rejected mutations must not flip");
+        // A wholesale swap with a resident graph converts the session
+        // back to in-memory serving.
+        session.swap_graph(gen::chain(40));
+        assert!(session.ooc_stats().is_none());
+        assert_eq!(session.generation(), 2);
     }
 
     #[test]

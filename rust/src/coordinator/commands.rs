@@ -8,7 +8,7 @@ use crate::cachesim::CacheConfig;
 use crate::exec::ThreadPool;
 use crate::graph::io;
 use crate::metrics;
-use crate::ppm::{ModePolicy, PpmConfig};
+use crate::ppm::{Hash64, ModePolicy, PpmConfig};
 use crate::serve::{self, Endpoint, ServeConfig, ServeLoop, Server, ServerSocket};
 use crate::util::cli::{Args, CliError};
 use crate::util::fmt;
@@ -29,6 +29,7 @@ fn engine_config(args: &Args) -> Result<PpmConfig, CliError> {
         cache_bytes: args.get_parsed_or("cache-kb", 256usize)? * 1024,
         chunk: args.get_parsed_or("chunk", 1usize)?,
         pool_cap: args.get_parsed_or("pool-cap", PpmConfig::default().pool_cap)?,
+        mem_budget: args.get_parsed("mem-budget")?,
         ..Default::default()
     };
     // Reject nonsense (e.g. `--threads 0`, `--chunk 0`) as a usage
@@ -82,6 +83,17 @@ fn print_report<O>(report: &RunReport<O>, verbose: bool) {
     }
 }
 
+/// Print a `result digest:` line — [`Hash64`] over the output's exact
+/// bit patterns. The CI out-of-core smoke compares this line between an
+/// in-memory and a paged run of the same query to pin bit-identity.
+fn print_digest(words: impl Iterator<Item = u32>) {
+    let mut h = Hash64::new();
+    for w in words {
+        h.write_u32(w);
+    }
+    println!("result digest: {:016x}", h.finish());
+}
+
 /// Print the engine configuration line shared by the session commands.
 fn print_engine(config: &PpmConfig) {
     println!(
@@ -94,8 +106,13 @@ fn print_engine(config: &PpmConfig) {
 
 pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
     let app = args.get_or("app", "pr").to_string();
-    let g = build_graph(args)?;
     let config = engine_config(args)?;
+    // Out-of-core: `--mem-budget BYTES` pages the graph from disk
+    // through a bounded partition cache instead of loading it.
+    if config.mem_budget.is_some() {
+        return run_paged(&app, config, args);
+    }
+    let g = build_graph(args)?;
     print_engine(&config);
     // Warm restart: `--layout PATH` restores the persisted partitioned
     // layout (sequential IO, validated) instead of re-running the O(E)
@@ -124,6 +141,66 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
     Ok(0)
 }
 
+/// Apps that run out-of-core: push-based programs whose constructors
+/// need only vertex count and degrees (both resident in the skeleton
+/// CSR). Pull/degree-walking apps (kcore, nibble, …) need resident
+/// adjacency and stay in-memory-only.
+const OOC_APPS: &[&str] = &["bfs", "pr", "pagerank", "cc", "sssp", "ssspp", "sssp-parents"];
+
+/// `gpop run --mem-budget BYTES` — serve the query from an
+/// [`EngineSession::open_paged`] session: both on-disk artifacts (the
+/// binary graph and the prebuilt layout) are memory-mapped and paged
+/// per partition under the byte budget, so the run degrades to more
+/// faults/evictions when the graph exceeds RAM — never to an OOM abort.
+fn run_paged(app: &str, config: PpmConfig, args: &Args) -> Result<i32, CliError> {
+    let spec = args.get("graph").ok_or_else(|| CliError("--graph SPEC is required".into()))?;
+    let gpath = spec.strip_prefix("file:").ok_or_else(|| {
+        CliError(format!(
+            "--mem-budget pages the graph from disk: --graph must be file:PATH \
+             (got {spec:?}; write the graph first with `gpop gen --format bin`)"
+        ))
+    })?;
+    let lpath = args.get("layout").ok_or_else(|| {
+        CliError(
+            "--mem-budget needs --layout PATH (build one with `gpop layout build --out PATH`)"
+                .into(),
+        )
+    })?;
+    if !OOC_APPS.contains(&app) {
+        return Err(CliError(format!(
+            "app {app:?} is not available out-of-core (supported: {})",
+            OOC_APPS.join(", ")
+        )));
+    }
+    print_engine(&config);
+    let budget = config.mem_budget.expect("run_paged is the mem_budget branch");
+    let session = EngineSession::open_paged(Path::new(gpath), Path::new(lpath), config)
+        .map_err(|e| CliError(format!("open paged session ({gpath} + {lpath}): {e}")))?;
+    let g = session.graph();
+    println!(
+        "graph: file:{gpath} (paged) — {} vertices, {} edges{}",
+        fmt::si(g.n() as f64),
+        fmt::si(g.m() as f64),
+        if g.is_weighted() { ", weighted" } else { "" }
+    );
+    let build = session.build_stats();
+    println!(
+        "preprocessing: {} ({}; partition {}, layout {} on {} threads, k = {})",
+        fmt::secs(build.t_preprocess()),
+        build.source.describe(),
+        fmt::secs(build.t_partition),
+        fmt::secs(build.t_layout),
+        build.threads,
+        session.parts().k()
+    );
+    println!("mem budget: {budget} bytes for paged rows ({})", fmt::si(budget as f64));
+    run_app(&session, app, args)?;
+    if let Some(stats) = session.ooc_stats() {
+        println!("ooc stats: {stats}");
+    }
+    Ok(0)
+}
+
 /// Run one application query against a live session — the dispatch
 /// shared by `gpop run`, `gpop swap` and `gpop ingest` (the latter two
 /// call it once per graph generation).
@@ -143,6 +220,7 @@ fn run_app(session: &EngineSession, app: &str, args: &Args) -> Result<(), CliErr
                 "reached: {} vertices from root {root}",
                 fmt::si(apps::bfs::n_reached(&res.output) as f64)
             );
+            print_digest(res.output.iter().map(|&p| p as u32));
         }
         "pr" | "pagerank" => {
             let res = runner
@@ -165,6 +243,7 @@ fn run_app(session: &EngineSession, app: &str, args: &Args) -> Result<(), CliErr
                     println!("  rank[{v}] = {r:.6}");
                 }
             }
+            print_digest(res.output.iter().map(|r| r.to_bits()));
         }
         "cc" => {
             let res = runner
@@ -175,6 +254,7 @@ fn run_app(session: &EngineSession, app: &str, args: &Args) -> Result<(), CliErr
                 "components (label fixpoint classes): {}",
                 apps::cc::n_components(&res.output)
             );
+            print_digest(res.output.iter().copied());
         }
         "sssp" => {
             if !graph.is_weighted() {
@@ -186,6 +266,7 @@ fn run_app(session: &EngineSession, app: &str, args: &Args) -> Result<(), CliErr
             print_report(&res, verbose);
             let reached = res.output.iter().filter(|d| d.is_finite()).count();
             println!("reached: {} vertices", fmt::si(reached as f64));
+            print_digest(res.output.iter().map(|d| d.to_bits()));
         }
         "ssspp" | "sssp-parents" => {
             if !graph.is_weighted() {
@@ -208,6 +289,13 @@ fn run_app(session: &EngineSession, app: &str, args: &Args) -> Result<(), CliErr
                     println!("  sample shortest path: {path:?}");
                 }
             }
+            print_digest(
+                res.output
+                    .distance
+                    .iter()
+                    .map(|d| d.to_bits())
+                    .chain(res.output.parent.iter().copied()),
+            );
         }
         "kcore" => {
             let res = runner.run(apps::KCore::new(&graph));
@@ -833,6 +921,64 @@ mod tests {
         let err = cmd_ingest(&a).unwrap_err();
         assert!(err.0.contains("graph swap"), "got: {}", err.0);
         std::fs::remove_file(&dpath).unwrap();
+    }
+
+    #[test]
+    fn run_paged_serves_ooc_apps_and_rejects_the_rest() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let gpath = dir.join(format!("gpop_cmd_ooc_{pid}.bin"));
+        let lpath = dir.join(format!("gpop_cmd_ooc_{pid}.layout"));
+        let a = args(&["--graph", "er:400:3000+w:1:4", "--out", gpath.to_str().unwrap()]);
+        assert_eq!(cmd_gen(&a).unwrap(), 0);
+        let spec = format!("file:{}", gpath.display());
+        let lstr = lpath.to_str().unwrap();
+        let b = args(&["build", "--graph", &spec, "--out", lstr, "--k", "8", "--threads", "2"]);
+        assert_eq!(cmd_layout(&b).unwrap(), 0);
+        for app in ["bfs", "pr", "cc", "sssp", "ssspp"] {
+            let r = args(&[
+                "--app",
+                app,
+                "--graph",
+                &spec,
+                "--layout",
+                lstr,
+                "--k",
+                "8",
+                "--threads",
+                "2",
+                "--iters",
+                "3",
+                "--mem-budget",
+                "65536",
+            ]);
+            assert_eq!(cmd_run(&r).unwrap(), 0, "paged app {app}");
+        }
+        // Degree-walking apps need resident adjacency.
+        let r = args(&[
+            "--app",
+            "kcore",
+            "--graph",
+            &spec,
+            "--layout",
+            lstr,
+            "--k",
+            "8",
+            "--mem-budget",
+            "65536",
+        ]);
+        assert!(cmd_run(&r).unwrap_err().0.contains("out-of-core"));
+        // The budget implies paging, which needs a file-backed graph and
+        // a prebuilt layout.
+        let r = args(&["--app", "pr", "--graph", "chain:10", "--mem-budget", "65536"]);
+        assert!(cmd_run(&r).unwrap_err().0.contains("file:PATH"));
+        let r = args(&["--app", "pr", "--graph", &spec, "--mem-budget", "65536"]);
+        assert!(cmd_run(&r).unwrap_err().0.contains("--layout"));
+        // A zero budget is a usage error, not a hang.
+        let r = args(&["--app", "pr", "--graph", &spec, "--layout", lstr, "--mem-budget", "0"]);
+        assert!(cmd_run(&r).unwrap_err().0.contains("mem-budget"));
+        std::fs::remove_file(&gpath).unwrap();
+        std::fs::remove_file(&lpath).unwrap();
     }
 
     #[test]

@@ -20,9 +20,13 @@ COMMANDS:
              --graph SPEC [--threads N] [--mode hybrid|sc|dc]
              [--iters N] [--root V] [--seeds a,b,c] [--eps X]
              [--bw-ratio X] [--k N] [--chunk N] [--verbose]
-             [--layout PATH] [--save-layout PATH]
+             [--layout PATH] [--save-layout PATH] [--mem-budget BYTES]
              (--layout restores a persisted partitioned layout — warm
-              restart, no O(E) scan; --save-layout persists this one)
+              restart, no O(E) scan; --save-layout persists this one;
+              --mem-budget runs out-of-core: the graph pages from disk
+              through a partition cache capped at BYTES — needs
+              --graph file:PATH and --layout PATH, apps bfs|pr|cc|
+              sssp|ssspp)
   gen        Generate a graph and write it to disk
              --graph SPEC --out PATH [--format bin|el]
   swap       Hot-swap the served graph mid-session (no teardown)

@@ -55,10 +55,32 @@ impl Csr {
         self.n
     }
 
-    /// Number of edges.
+    /// Offsets-only skeleton for the out-of-core path
+    /// ([`crate::ooc::PartitionStore`]): degrees and edge bases resolve,
+    /// adjacency does not — it pages in through the partition cache.
+    /// `weights` presence is tracked (empty) so [`Self::is_weighted`]
+    /// answers correctly.
+    pub(crate) fn skeleton(n: usize, offsets: Vec<u64>, weighted: bool) -> Self {
+        assert_eq!(offsets.len(), n + 1, "offsets must have n+1 entries");
+        assert_eq!(offsets[0], 0);
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "offsets must be monotone");
+        Self { n, offsets, targets: Vec::new(), weights: weighted.then(Vec::new) }
+    }
+
+    /// Whether this CSR carries only offsets (an out-of-core skeleton):
+    /// its edge count comes from the offsets, not a resident adjacency
+    /// array.
+    pub(crate) fn is_skeleton(&self) -> bool {
+        self.targets.len() as u64 != *self.offsets.last().unwrap()
+    }
+
+    /// Number of edges. Derived from the offsets so skeletons (which
+    /// hold no targets) report the true count; identical to
+    /// `targets.len()` for fully resident CSRs (asserted in
+    /// [`Self::new`]).
     #[inline]
     pub fn m(&self) -> usize {
-        self.targets.len()
+        *self.offsets.last().unwrap() as usize
     }
 
     #[inline]
@@ -105,6 +127,11 @@ impl Csr {
 
     /// Build the transposed view (CSC from CSR or vice versa).
     pub fn transpose(&self) -> Csr {
+        assert!(
+            !self.is_skeleton(),
+            "cannot transpose an out-of-core skeleton CSR: its adjacency is not resident \
+             (pull-based apps need the in-memory path)"
+        );
         let n = self.n;
         let mut counts = vec![0u64; n + 1];
         for &t in &self.targets {
@@ -282,5 +309,22 @@ mod tests {
     #[should_panic]
     fn bad_offsets_rejected() {
         let _ = Csr::new(2, vec![0, 1], vec![0], None); // needs 3 offsets
+    }
+
+    #[test]
+    fn skeleton_reports_degrees_without_adjacency() {
+        let s = Csr::skeleton(3, vec![0, 2, 3, 4], true);
+        assert!(s.is_skeleton());
+        assert_eq!(s.m(), 4);
+        assert_eq!(s.degree(0), 2);
+        assert_eq!(s.degree(2), 1);
+        assert!(s.is_weighted());
+        assert!(!diamond().is_skeleton());
+    }
+
+    #[test]
+    #[should_panic(expected = "skeleton")]
+    fn skeleton_transpose_rejected() {
+        let _ = Csr::skeleton(3, vec![0, 2, 3, 4], false).transpose();
     }
 }

@@ -194,6 +194,12 @@ pub fn write_binary(g: &Graph, path: &Path) -> std::io::Result<()> {
 /// and the payload is structurally validated (monotone offsets ending
 /// at `m`, every target `< n`). Any violation is an
 /// [`std::io::ErrorKind::InvalidData`] error, never a panic or abort.
+///
+/// Peak memory is the output arrays plus one fixed
+/// [`DECODE_CHUNK_BYTES`] scratch buffer: each section streams through
+/// it in bounded chunks ([`read_section`]), so the transient overhead
+/// is constant regardless of file size — what the out-of-core path
+/// ([`crate::ooc`]) needs from its only full-file fallback reader.
 pub fn read_binary(path: &Path) -> std::io::Result<Graph> {
     fn bad(msg: String) -> std::io::Error {
         std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
@@ -234,12 +240,9 @@ pub fn read_binary(path: &Path) -> std::io::Result<Graph> {
     }
     let (n, m) = (n as usize, m as usize);
     let mut offsets = vec![0u64; n + 1];
-    for (i, o) in offsets.iter_mut().enumerate() {
-        let v = read_u64(&mut r)?;
-        if i == 0 && v != 0 {
-            return Err(bad(format!("offsets[0] must be 0 (got {v})")));
-        }
-        *o = v;
+    read_section(&mut r, &mut offsets, |b| Ok(u64::from_le_bytes(b)))?;
+    if offsets[0] != 0 {
+        return Err(bad(format!("offsets[0] must be 0 (got {})", offsets[0])));
     }
     if offsets.windows(2).any(|w| w[0] > w[1]) {
         return Err(bad("offsets are not monotone non-decreasing".into()));
@@ -248,27 +251,54 @@ pub fn read_binary(path: &Path) -> std::io::Result<Graph> {
         return Err(bad(format!("offsets[n] = {} but header says m = {m}", offsets[n])));
     }
     let mut targets = vec![0 as VertexId; m];
-    for t in targets.iter_mut() {
-        let mut b = [0u8; 4];
-        r.read_exact(&mut b)?;
+    read_section(&mut r, &mut targets, |b| {
         let v = u32::from_le_bytes(b);
         if v as u64 >= n as u64 {
             return Err(bad(format!("edge target {v} out of range (n = {n})")));
         }
-        *t = v;
-    }
+        Ok(v)
+    })?;
     let weights = if weighted {
         let mut ws = vec![0f32; m];
-        for x in ws.iter_mut() {
-            let mut b = [0u8; 4];
-            r.read_exact(&mut b)?;
-            *x = f32::from_le_bytes(b);
-        }
+        read_section(&mut r, &mut ws, |b| Ok(f32::from_le_bytes(b)))?;
         Some(ws)
     } else {
         None
     };
     Ok(Graph::from_csr(Csr::new(n, offsets, targets, weights)))
+}
+
+/// Scratch size for [`read_section`]: large enough to amortize the
+/// per-chunk decode loop, small enough that [`read_binary`]'s transient
+/// memory is a rounding error next to the arrays it fills.
+const DECODE_CHUNK_BYTES: usize = 64 * 1024;
+
+/// Fill `out` with `W`-byte little-endian elements streamed from `r`
+/// through a bounded scratch buffer, applying `decode` to each — the
+/// chunked alternative to one `read_exact` call per element. `decode`
+/// may reject a value (e.g. an out-of-range edge target), failing the
+/// whole read.
+fn read_section<R: Read, T, const W: usize>(
+    r: &mut R,
+    out: &mut [T],
+    mut decode: impl FnMut([u8; W]) -> std::io::Result<T>,
+) -> std::io::Result<()> {
+    debug_assert!(W > 0 && DECODE_CHUNK_BYTES % W == 0, "chunk must hold whole elements");
+    let mut scratch = vec![0u8; DECODE_CHUNK_BYTES.min(out.len() * W)];
+    let mut rest = out;
+    while !rest.is_empty() {
+        let take = rest.len().min(scratch.len() / W);
+        let buf = &mut scratch[..take * W];
+        r.read_exact(buf)?;
+        let (head, tail) = rest.split_at_mut(take);
+        for (slot, chunk) in head.iter_mut().zip(buf.chunks_exact(W)) {
+            let mut b = [0u8; W];
+            b.copy_from_slice(chunk);
+            *slot = decode(b)?;
+        }
+        rest = tail;
+    }
+    Ok(())
 }
 
 fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
@@ -387,6 +417,20 @@ mod tests {
             assert_eq!(read_binary(&p).unwrap(), g, "{name}");
             std::fs::remove_file(&p).unwrap();
         }
+    }
+
+    #[test]
+    fn binary_roundtrip_spans_many_decode_chunks() {
+        // (n+1)*8 and m*4 both exceed DECODE_CHUNK_BYTES, so every
+        // section takes the multi-chunk path of read_section, including
+        // a final partial chunk.
+        let g = gen::with_uniform_weights(&gen::erdos_renyi(20_000, 50_000, 23), 0.5, 2.0, 9);
+        assert!((g.n() + 1) * 8 > DECODE_CHUNK_BYTES);
+        assert!(g.m() * 4 > DECODE_CHUNK_BYTES);
+        let p = tmp("chunks.bin");
+        write_binary(&g, &p).unwrap();
+        assert_eq!(read_binary(&p).unwrap(), g);
+        std::fs::remove_file(&p).unwrap();
     }
 
     #[test]

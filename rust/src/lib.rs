@@ -60,6 +60,11 @@
 //! - [`cachesim`] — a set-associative L2 cache simulator driven by each
 //!   engine's memory access trace, reproducing the paper's Tables 4–6.
 //! - [`metrics`] — timers, DRAM-traffic estimation, iteration logs.
+//! - [`ooc`] — out-of-core partition paging: the persisted graph +
+//!   layout files memory-mapped behind a budget-bounded
+//!   [`ooc::PartitionCache`] with a dedicated IO thread, cost-model-
+//!   tiered LRU eviction and schedule-driven prefetch, so graphs 4–10×
+//!   RAM run through the same engine (`gpop run --mem-budget BYTES`).
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); stubbed unless built with
 //!   `--features pjrt`.
@@ -87,6 +92,7 @@ pub mod coordinator;
 pub mod exec;
 pub mod graph;
 pub mod metrics;
+pub mod ooc;
 pub mod partition;
 pub mod ppm;
 pub mod runtime;

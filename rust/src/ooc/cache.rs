@@ -1,0 +1,465 @@
+//! The `PartitionCache`: bounded resident set of partition rows over a
+//! [`PartitionStore`], in the GraphCached shape — checkout (request),
+//! a dedicated IO thread that materializes rows (ready), and guard drop
+//! (release).
+//!
+//! ## Concurrency model
+//!
+//! One mutex guards the whole cache state (slot map, resident counter,
+//! both request queues); two condvars signal it: `ready` wakes checkout
+//! waiters when a row lands, `work` wakes the IO thread when a request
+//! arrives. Engine threads never touch the files — they enqueue and
+//! wait; the IO thread decodes *outside* the lock, so a long
+//! materialization never blocks hits on resident rows.
+//!
+//! ## Replacement policy
+//!
+//! LRU with a cost-model tier: rows of partitions the Eq. 1 model marks
+//! DC-bound ("hot" — they re-stream every dense iteration) are evicted
+//! only after every cold candidate is gone. Pinned rows (live guards)
+//! and in-flight loads are never evicted. When nothing is evictable the
+//! cache runs temporarily over budget and counts it
+//! ([`OocStats::over_budget`]) instead of failing — the never-OOM-abort
+//! contract: the budget caps what the *cache* keeps, degrading to
+//! in-memory behavior in the worst case rather than refusing to run.
+//!
+//! Demand requests always outrank prefetches, so read-ahead can never
+//! delay a stalled engine thread.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::stats::{Counters, OocStats};
+use super::store::{CsrRow, GatherCol, PartitionStore, RowData, RowKey, ScatterRow};
+
+enum SlotState {
+    /// Requested; the IO thread has not delivered it yet.
+    Loading,
+    /// Resident.
+    Ready(Arc<RowData>),
+}
+
+struct Slot {
+    state: SlotState,
+    /// Live [`RowGuard`]s. Non-zero pins exempt the slot from eviction.
+    pins: u32,
+    /// Logical clock of the last checkout (or load completion).
+    last_use: u64,
+    /// Budget charge; 0 while loading.
+    bytes: u64,
+}
+
+struct CacheState {
+    slots: HashMap<RowKey, Slot>,
+    resident: u64,
+    peak: u64,
+    /// Logical LRU clock; bumped on every checkout and load completion.
+    tick: u64,
+    /// Demand queue — checkout callers are blocked on these.
+    demand: VecDeque<RowKey>,
+    /// Prefetch queue — served only when the demand queue is empty.
+    prefetch: VecDeque<RowKey>,
+    shutdown: bool,
+}
+
+struct Inner {
+    store: Arc<PartitionStore>,
+    budget: u64,
+    state: Mutex<CacheState>,
+    /// Wakes checkout waiters when a row becomes Ready.
+    ready: Condvar,
+    /// Wakes the IO thread when a request (or shutdown) arrives.
+    work: Condvar,
+    counters: Counters,
+}
+
+/// The cache manager. Cloning the handle is done via `Arc` at the
+/// session layer; dropping the last handle shuts the IO thread down.
+pub struct PartitionCache {
+    inner: Arc<Inner>,
+    io: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// A pinned, resident row. The pin holds the row in the cache until the
+/// guard drops — engine phases hold one guard per partition task, so a
+/// row can never be evicted mid-stream.
+pub struct RowGuard<'a> {
+    inner: &'a Inner,
+    key: RowKey,
+    data: Arc<RowData>,
+}
+
+impl RowGuard<'_> {
+    /// The CSR adjacency row this guard pins. Panics if the key was not
+    /// [`RowKey::Csr`] — key kind and accessor are matched statically at
+    /// every call site in the engine.
+    #[inline]
+    pub fn csr(&self) -> &CsrRow {
+        match &*self.data {
+            RowData::Csr(r) => r,
+            _ => unreachable!("checkout(Csr) delivered a non-CSR row"),
+        }
+    }
+
+    /// The PNG scatter row this guard pins (panics unless the key was
+    /// [`RowKey::Scatter`]).
+    #[inline]
+    pub fn scatter(&self) -> &ScatterRow {
+        match &*self.data {
+            RowData::Scatter(r) => r,
+            _ => unreachable!("checkout(Scatter) delivered a non-scatter row"),
+        }
+    }
+
+    /// The gather id column this guard pins (panics unless the key was
+    /// [`RowKey::Gather`]).
+    #[inline]
+    pub fn gather(&self) -> &GatherCol {
+        match &*self.data {
+            RowData::Gather(c) => c,
+            _ => unreachable!("checkout(Gather) delivered a non-gather row"),
+        }
+    }
+}
+
+impl Drop for RowGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        if let Some(slot) = st.slots.get_mut(&self.key) {
+            slot.pins -= 1;
+        }
+        // Releasing a pin can make an over-budget cache reclaimable
+        // again; sweep opportunistically so stretches between loads
+        // also converge back under the budget.
+        if st.resident > self.inner.budget {
+            self.inner.evict_to_fit(&mut st, None);
+        }
+    }
+}
+
+impl PartitionCache {
+    /// Start a cache over `store` with `budget` bytes of resident rows
+    /// (`None` = unbounded) and spawn its IO thread.
+    pub fn new(store: Arc<PartitionStore>, budget: Option<u64>) -> Self {
+        let inner = Arc::new(Inner {
+            store,
+            budget: budget.unwrap_or(u64::MAX),
+            state: Mutex::new(CacheState {
+                slots: HashMap::new(),
+                resident: 0,
+                peak: 0,
+                tick: 0,
+                demand: VecDeque::new(),
+                prefetch: VecDeque::new(),
+                shutdown: false,
+            }),
+            ready: Condvar::new(),
+            work: Condvar::new(),
+            counters: Counters::default(),
+        });
+        let io_inner = Arc::clone(&inner);
+        let io = std::thread::Builder::new()
+            .name("gpop-ooc-io".into())
+            .spawn(move || io_loop(&io_inner))
+            .expect("spawn ooc IO thread");
+        Self { inner, io: Mutex::new(Some(io)) }
+    }
+
+    /// The store this cache serves rows from.
+    #[inline]
+    pub fn store(&self) -> &Arc<PartitionStore> {
+        &self.inner.store
+    }
+
+    /// The configured budget in bytes (`u64::MAX` when unbounded).
+    #[inline]
+    pub fn budget(&self) -> u64 {
+        self.inner.budget
+    }
+
+    /// Pin `key`'s row resident and return a guard for it, blocking on
+    /// the IO thread if it is absent or still loading. A hit is counted
+    /// when the first look finds the row present (resident or already
+    /// requested); a fault when this call is what demands the load.
+    pub fn checkout(&self, key: RowKey) -> RowGuard<'_> {
+        let inner = &*self.inner;
+        let mut st = inner.state.lock().unwrap();
+        let mut counted = false;
+        loop {
+            st.tick += 1;
+            let tick = st.tick;
+            match st.slots.get_mut(&key) {
+                Some(slot) => {
+                    if !counted {
+                        Counters::bump(&inner.counters.hits);
+                        counted = true;
+                    }
+                    if let SlotState::Ready(data) = &slot.state {
+                        let data = Arc::clone(data);
+                        slot.pins += 1;
+                        slot.last_use = tick;
+                        return RowGuard { inner, key, data };
+                    }
+                    // Loading — wait for the IO thread's delivery.
+                    st = inner.ready.wait(st).unwrap();
+                }
+                None => {
+                    // Absent. Either this is the first look (a true
+                    // fault) or the row was evicted between delivery and
+                    // our wake-up (possible at tiny budgets) — demand it
+                    // (again) either way.
+                    if !counted {
+                        Counters::bump(&inner.counters.faults);
+                        counted = true;
+                    }
+                    st.slots.insert(key, Slot::loading());
+                    st.demand.push_back(key);
+                    inner.work.notify_all();
+                    st = inner.ready.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Hint that `key` will be needed soon. No-op if it is already
+    /// resident, loading, or queued; otherwise it joins the prefetch
+    /// queue, which the IO thread serves only when no demand is waiting.
+    pub fn prefetch(&self, key: RowKey) {
+        let inner = &*self.inner;
+        let mut st = inner.state.lock().unwrap();
+        if st.slots.contains_key(&key) || st.prefetch.contains(&key) {
+            return;
+        }
+        st.prefetch.push_back(key);
+        inner.work.notify_all();
+    }
+
+    /// Snapshot the counters and residency gauges.
+    pub fn stats(&self) -> OocStats {
+        let c = &self.inner.counters;
+        let (resident_bytes, resident_peak) = {
+            let st = self.inner.state.lock().unwrap();
+            (st.resident, st.peak)
+        };
+        OocStats {
+            hits: c.hits.load(Ordering::Relaxed),
+            faults: c.faults.load(Ordering::Relaxed),
+            evictions: c.evictions.load(Ordering::Relaxed),
+            prefetches: c.prefetches.load(Ordering::Relaxed),
+            over_budget: c.over_budget.load(Ordering::Relaxed),
+            bytes_read: c.bytes_read.load(Ordering::Relaxed),
+            resident_bytes,
+            resident_peak,
+            fixed_bytes: self.inner.store.fixed_bytes(),
+            budget: self.inner.budget,
+        }
+    }
+}
+
+impl Drop for PartitionCache {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work.notify_all();
+        if let Some(h) = self.io.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Slot {
+    fn loading() -> Self {
+        Slot { state: SlotState::Loading, pins: 0, last_use: 0, bytes: 0 }
+    }
+}
+
+impl Inner {
+    /// Deliver a materialized row: account it, refresh its LRU stamp
+    /// (so the row just loaded is the *last* eviction candidate, not the
+    /// first), then evict down toward the budget and update the peak.
+    fn insert_ready(&self, key: RowKey, data: RowData, prefetched: bool) {
+        let bytes = data.bytes();
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        let slot = st.slots.get_mut(&key).expect("delivered slot vanished");
+        slot.state = SlotState::Ready(Arc::new(data));
+        slot.bytes = bytes;
+        slot.last_use = tick;
+        st.resident += bytes;
+        Counters::bump_by(&self.counters.bytes_read, bytes);
+        if prefetched {
+            Counters::bump(&self.counters.prefetches);
+        }
+        if st.resident > self.budget {
+            self.evict_to_fit(&mut st, Some(key));
+        }
+        st.peak = st.peak.max(st.resident);
+        self.ready.notify_all();
+    }
+
+    /// Evict unpinned Ready rows (never `exclude`, the row being
+    /// delivered) until the resident set fits the budget: cold rows
+    /// first, LRU within each tier. If everything left is pinned or
+    /// loading, give up for now and count it — over budget, not dead.
+    fn evict_to_fit(&self, st: &mut CacheState, exclude: Option<RowKey>) {
+        while st.resident > self.budget {
+            let victim = st
+                .slots
+                .iter()
+                .filter(|(k, s)| {
+                    Some(**k) != exclude
+                        && s.pins == 0
+                        && matches!(s.state, SlotState::Ready(_))
+                })
+                .min_by_key(|(k, s)| (self.store.is_hot(**k), s.last_use))
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let slot = st.slots.remove(&k).expect("victim just seen");
+                    st.resident -= slot.bytes;
+                    Counters::bump(&self.counters.evictions);
+                }
+                None => {
+                    Counters::bump(&self.counters.over_budget);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// The IO thread: pop a request (demand strictly before prefetch),
+/// materialize it with the lock *released*, deliver, repeat.
+fn io_loop(inner: &Inner) {
+    loop {
+        let (key, prefetched) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(k) = st.demand.pop_front() {
+                    break (k, false);
+                }
+                if let Some(k) = st.prefetch.pop_front() {
+                    // A demand fault or an earlier prefetch may have
+                    // raced this entry into the slot map already.
+                    if st.slots.contains_key(&k) {
+                        continue;
+                    }
+                    st.slots.insert(k, Slot::loading());
+                    break (k, true);
+                }
+                st = inner.work.wait(st).unwrap();
+            }
+        };
+        let data = inner.store.materialize(key);
+        inner.insert_ready(key, data, prefetched);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::ppm::PpmConfig;
+    use crate::PartId;
+
+    fn open_store(name: &str, k: usize) -> Arc<PartitionStore> {
+        let g = gen::erdos_renyi(400, 6000, 11);
+        let config = PpmConfig { k: Some(k), ..Default::default() };
+        let (gp, lp) = super::super::store::tests::write_artifacts(&g, &config, name);
+        let store = PartitionStore::open(&gp, &lp, &config).unwrap();
+        std::fs::remove_file(&gp).unwrap();
+        std::fs::remove_file(&lp).unwrap();
+        Arc::new(store)
+    }
+
+    #[test]
+    fn unbounded_cache_faults_once_then_hits() {
+        let cache = PartitionCache::new(open_store("hits", 4), None);
+        for _ in 0..3 {
+            let g = cache.checkout(RowKey::Csr(1));
+            drop(g);
+        }
+        let s = cache.stats();
+        assert_eq!(s.faults, 1);
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.over_budget, 0);
+    }
+
+    #[test]
+    fn resident_set_respects_the_budget() {
+        let store = open_store("budget", 8);
+        // Room for roughly two of the largest rows.
+        let budget = (0..8)
+            .map(|p| store.row_bytes(RowKey::Csr(p as PartId)))
+            .max()
+            .unwrap()
+            * 2;
+        let cache = PartitionCache::new(Arc::clone(&store), Some(budget));
+        for p in 0..8 {
+            let g = cache.checkout(RowKey::Csr(p as PartId));
+            drop(g); // released ⇒ evictable
+        }
+        let s = cache.stats();
+        assert_eq!(s.faults, 8);
+        assert!(s.evictions > 0, "8 rows through a 2-row budget must evict");
+        assert!(s.resident_peak <= budget, "peak {} > budget {budget}", s.resident_peak);
+        assert_eq!(s.over_budget, 0, "nothing was pinned, so no overshoot");
+        // Round two: the evicted rows re-fault.
+        let before = s.faults;
+        for p in 0..8 {
+            drop(cache.checkout(RowKey::Csr(p as PartId)));
+        }
+        assert!(cache.stats().faults > before, "evicted rows must fault again");
+    }
+
+    #[test]
+    fn pinned_rows_survive_pressure_and_count_over_budget() {
+        let store = open_store("pins", 4);
+        let smallest = (0..4)
+            .map(|p| store.row_bytes(RowKey::Csr(p as PartId)))
+            .min()
+            .unwrap();
+        // Budget below a single row: anything pinned forces overshoot.
+        let cache = PartitionCache::new(Arc::clone(&store), Some(smallest / 2));
+        let held: Vec<RowGuard<'_>> =
+            (0..4).map(|p| cache.checkout(RowKey::Csr(p as PartId))).collect();
+        let s = cache.stats();
+        assert!(s.over_budget > 0, "all rows pinned — the cache must record overshoot");
+        assert!(s.resident_bytes > cache.budget(), "pins hold the set over budget");
+        // Guards still serve valid rows while over budget: every vertex
+        // of partition 0 must resolve through guard 0 without panicking.
+        let offsets = store.graph().out().offsets();
+        for v in store.partitioner().range(0) {
+            let _ = held[0].csr().neighbors(offsets, v);
+        }
+        drop(held);
+        // With pins released the sweep in RowGuard::drop reclaims.
+        let s = cache.stats();
+        assert!(
+            s.resident_bytes <= cache.budget() || s.evictions > 0,
+            "released rows must become evictable"
+        );
+    }
+
+    #[test]
+    fn prefetch_is_deduplicated_and_counted() {
+        let cache = PartitionCache::new(open_store("prefetch", 4), None);
+        cache.prefetch(RowKey::Scatter(2));
+        cache.prefetch(RowKey::Scatter(2)); // queued or loaded: no-op
+        let g = cache.checkout(RowKey::Scatter(2));
+        drop(g);
+        let s = cache.stats();
+        assert_eq!(s.prefetches, 1);
+        assert_eq!(s.faults, 0, "the prefetched row must not fault");
+        assert_eq!(s.hits, 1);
+    }
+}

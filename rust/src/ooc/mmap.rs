@@ -1,0 +1,201 @@
+//! Read-only memory-mapped file regions for the out-of-core path.
+//!
+//! The paging store ([`super::store::PartitionStore`]) keeps the binary
+//! graph and the persisted layout mapped rather than loaded: the map
+//! costs address space, not resident memory, and the kernel is free to
+//! drop clean pages under pressure. Partition rows are *decoded* out of
+//! the map on demand (`chunks_exact` + `from_le_bytes` — both file
+//! formats place their `u32` sections at unaligned offsets, so the bytes
+//! are never reinterpreted in place).
+//!
+//! The crate has no dependencies, so the unix implementation declares
+//! the two syscalls it needs directly (the same pattern as the signal
+//! hooks in [`crate::serve`]); every other platform falls back to
+//! reading the file into an owned buffer, which keeps the subsystem
+//! functional — just without the paging benefit.
+
+use std::fs::File;
+use std::io;
+use std::ops::Deref;
+
+/// A read-only mapping of an entire file (or, off unix, an owned copy of
+/// its bytes). `Deref`s to `&[u8]`.
+pub struct Mmap {
+    inner: Inner,
+}
+
+impl Mmap {
+    /// Map `file` read-only. The length is fixed at call time; the file
+    /// must not be truncated while the map is alive (on unix a later
+    /// access to a truncated page faults, which is why
+    /// [`PartitionStore::open`](super::store::PartitionStore::open)
+    /// validates *and checksums* the full contents before any row is
+    /// served).
+    pub fn map(file: &File) -> io::Result<Self> {
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "file does not fit the address space",
+            ));
+        }
+        Ok(Self { inner: Inner::map(file, len as usize)? })
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        self.inner.bytes()
+    }
+}
+
+impl Deref for Mmap {
+    type Target = [u8];
+
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        self.bytes()
+    }
+}
+
+#[cfg(unix)]
+use unix::Inner;
+
+#[cfg(unix)]
+mod unix {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    // Declared locally (the crate is dependency-free). Signatures match
+    // POSIX on 64-bit linux: `off_t` is `i64`, `size_t` is `usize`.
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    pub struct Inner {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ and never mutated through this
+    // handle; sharing immutable bytes across threads is sound.
+    unsafe impl Send for Inner {}
+    unsafe impl Sync for Inner {}
+
+    impl Inner {
+        pub fn map(file: &File, len: usize) -> io::Result<Self> {
+            if len == 0 {
+                // mmap rejects zero-length maps; an empty file needs no
+                // syscall at all.
+                return Ok(Self { ptr: std::ptr::null_mut(), len: 0 });
+            }
+            // SAFETY: a fresh PROT_READ/MAP_PRIVATE mapping of an open
+            // fd; the kernel validates everything else and reports
+            // failure as MAP_FAILED (-1).
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Self { ptr, len })
+        }
+
+        #[inline]
+        pub fn bytes(&self) -> &[u8] {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+            // bytes, unmapped only in Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for Inner {
+        fn drop(&mut self) {
+            if self.len > 0 {
+                // SAFETY: `ptr`/`len` came from a successful mmap and
+                // are unmapped exactly once.
+                unsafe {
+                    munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+use fallback::Inner;
+
+#[cfg(not(unix))]
+mod fallback {
+    use std::fs::File;
+    use std::io::{self, Read};
+
+    pub struct Inner {
+        buf: Vec<u8>,
+    }
+
+    impl Inner {
+        pub fn map(file: &File, len: usize) -> io::Result<Self> {
+            let mut buf = Vec::with_capacity(len);
+            let mut file = file;
+            file.read_to_end(&mut buf)?;
+            if buf.len() != len {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "file changed size while being read",
+                ));
+            }
+            Ok(Self { buf })
+        }
+
+        #[inline]
+        pub fn bytes(&self) -> &[u8] {
+            &self.buf
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gpop_ooc_mmap_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn map_roundtrips_bytes() {
+        let p = tmp("bytes");
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&p, &data).unwrap();
+        let map = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        assert_eq!(&map[..], &data[..]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let p = tmp("empty");
+        std::fs::write(&p, b"").unwrap();
+        let map = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        assert!(map.is_empty());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

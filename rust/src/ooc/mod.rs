@@ -1,0 +1,33 @@
+//! Out-of-core partition paging: run graphs several times larger than
+//! RAM behind a bounded [`PartitionCache`].
+//!
+//! GPOP's partition is already the unit of locality (paper §2); this
+//! subsystem makes it the unit of IO as well. The two on-disk artifacts
+//! the repo persists — the binary CSR graph and the PR 4 layout file —
+//! are memory-mapped and validated once ([`PartitionStore`]), then
+//! served as per-partition rows (CSR adjacency, PNG scatter streams,
+//! gather id columns) through a request/ready/release cache with a
+//! dedicated IO thread ([`PartitionCache`], the GraphCached shape),
+//! an LRU policy tiered by the Eq. 1 cost model, and schedule-driven
+//! prefetch ([`prefetch`]). The engine consumes resident rows
+//! transparently; when the budget is a fraction of the graph the run
+//! degrades to more faults and evictions — never to an OOM abort.
+//!
+//! Opt in with `gpop run --mem-budget BYTES` (CLI) or
+//! [`EngineSession::open_paged`](crate::api::EngineSession::open_paged)
+//! (API). Budget semantics: the cap governs rows materialized by the
+//! cache; the mmap'd files cost address space, not resident memory, and
+//! the always-resident skeleton (CSR offsets, bin counts, partition
+//! meta — reported as [`OocStats::fixed_bytes`]) sits outside it.
+
+pub mod cache;
+pub mod mmap;
+pub mod prefetch;
+pub mod stats;
+pub mod store;
+
+pub use cache::{PartitionCache, RowGuard};
+pub use mmap::Mmap;
+pub use prefetch::{scatter_key, NEXT_ITER_PREFETCH, PREFETCH_DIST};
+pub use stats::OocStats;
+pub use store::{CsrRow, DcSegment, GatherCol, PartitionStore, RowData, RowKey, ScatterRow};

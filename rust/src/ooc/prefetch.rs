@@ -1,0 +1,44 @@
+//! Prefetch planning for the paged engine.
+//!
+//! The engine knows its IO schedule ahead of time — that is the whole
+//! point of partition-centric execution. Within a scatter phase the
+//! active-partition list fixes the row order, and at the end of an
+//! iteration the freshly published frontier names next iteration's
+//! scatter targets. These helpers translate that schedule into
+//! [`RowKey`]s; the distances are deliberately small — read-ahead only
+//! has to cover the decode latency of a row or two, and anything deeper
+//! just churns a tight budget (prefetches are the first thing evicted,
+//! being loaded-but-unpinned).
+
+use super::store::RowKey;
+use crate::PartId;
+
+/// How many upcoming scatter tasks each in-phase task hints ahead.
+pub const PREFETCH_DIST: usize = 3;
+
+/// How many of the next iteration's scatter rows are hinted after
+/// finalize publishes the frontier.
+pub const NEXT_ITER_PREFETCH: usize = 4;
+
+/// The row a scatter task for partition `p` will checkout, given the
+/// Eq. 1 mode decision already made for it: DC streams the pre-built
+/// PNG row, SC streams the CSR adjacency.
+#[inline]
+pub fn scatter_key(p: PartId, use_dc: bool) -> RowKey {
+    if use_dc {
+        RowKey::Scatter(p)
+    } else {
+        RowKey::Csr(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_key_follows_the_mode_decision() {
+        assert_eq!(scatter_key(5, true), RowKey::Scatter(5));
+        assert_eq!(scatter_key(5, false), RowKey::Csr(5));
+    }
+}

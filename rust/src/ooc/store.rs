@@ -1,0 +1,1061 @@
+//! The partition store: both on-disk artifacts (binary CSR graph +
+//! persisted layout) memory-mapped, fully validated up front, and served
+//! as per-partition rows on demand.
+//!
+//! ## Why validation happens once, at open
+//!
+//! The engine's scatter/gather hot loops contain `unsafe` unchecked
+//! indexing whose soundness rests on structural invariants of the
+//! layout (destination ids inside the target partition, MSB delimiters
+//! counted, PNG sources in range and sorted — see
+//! [`crate::ppm::persist`]). The in-memory load path establishes those
+//! invariants in [`BinLayout::load`]; this store establishes exactly the
+//! same ones in one streaming pass over the maps at
+//! [`PartitionStore::open`] — every check from `load` plus the binary
+//! CSR checks from [`read_binary`](crate::graph::io::read_binary), the
+//! checksum, and the graph digest. After that pass, materializing any
+//! row is **infallible**: the bytes were already proven well-formed, so
+//! the paging path cannot inject IO errors into the middle of an
+//! iteration.
+//!
+//! ## What stays resident
+//!
+//! Only the skeleton: CSR offsets (degrees), per-bin counts, and the
+//! per-partition meta (edge/message totals + neighbor lists) — the parts
+//! the engine consults on every iteration regardless of the frontier.
+//! Adjacency (`targets`/`weights`) and the DC streams
+//! (`dc_ids`/`dc_srcs`/`dc_cnts`/`dc_wts`) live behind the
+//! [`PartitionCache`](super::cache::PartitionCache) under the budget.
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+use std::sync::Arc;
+
+use super::mmap::Mmap;
+use crate::graph::{Csr, Graph};
+use crate::partition::Partitioner;
+use crate::ppm::bins::PartMeta;
+use crate::ppm::cost::{PartCost, D_V};
+use crate::ppm::{
+    config_fingerprint, BinLayout, Hash64, PpmConfig, StaticBin, LAYOUT_FORMAT_VERSION,
+    LAYOUT_MAGIC, MSG_START,
+};
+use crate::{PartId, VertexId};
+
+const GRAPH_MAGIC: &[u8; 8] = b"GPOPCSR1";
+const GRAPH_HEADER_BYTES: u64 = 8 + 8 + 8 + 1;
+
+// The GPOPLAYT v1 geometry, mirrored from `ppm::persist` (where the
+// constants are private). Version 1 is frozen; `open` rejects any other
+// version, and `tests::skeleton_matches_persist_load` pins this parser
+// against `BinLayout::load` on the same file.
+const LAYOUT_HEADER_BYTES: u64 = 8 + 4 + 8 + 8 + 8 + 8 + 8 + 1 + 5 * 8;
+const BIN_ROW_BYTES: u64 = 6 * 4;
+const META_ROW_BYTES: u64 = 8 + 8 + 4;
+const CHECKSUM_BYTES: u64 = 8;
+
+/// Fixed accounting overhead charged per resident row (allocation
+/// headers, the slot bookkeeping) on top of its payload bytes.
+const ROW_OVERHEAD_BYTES: u64 = 64;
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Which pageable row of the partitioned representation a cache entry
+/// holds. One scatter task touches `Csr(p)` *or* `Scatter(p)` (mode-
+/// dependent); one gather task touches `Gather(j)` — the unit of IO is
+/// the unit of phase ownership, so paging adds no locking to the data
+/// path.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum RowKey {
+    /// CSR adjacency (targets + weights) of partition `p`'s vertices —
+    /// what SC-mode scatter streams.
+    Csr(PartId),
+    /// PNG scatter streams (`dc_srcs`/`dc_cnts`/`dc_wts`) of partition
+    /// row `p` — what DC-mode scatter streams. Deliberately excludes
+    /// `dc_ids`: DC scatter never reads them (§3.3 — ids are consumed on
+    /// the gather side).
+    Scatter(PartId),
+    /// Pre-written DC destination ids (`dc_ids`) of bin column `j` —
+    /// what gather reads for bins scattered in DC mode.
+    Gather(PartId),
+}
+
+impl RowKey {
+    /// The partition this row belongs to (row for scatter keys, column
+    /// for gather keys).
+    #[inline]
+    pub fn part(&self) -> PartId {
+        match *self {
+            RowKey::Csr(p) | RowKey::Scatter(p) | RowKey::Gather(p) => p,
+        }
+    }
+}
+
+/// Resident CSR adjacency of one partition. Indexed through the
+/// *global* offsets array (always resident in the skeleton graph) minus
+/// this row's first-edge base.
+pub struct CsrRow {
+    edge_base: u64,
+    targets: Vec<VertexId>,
+    weights: Option<Vec<f32>>,
+}
+
+impl CsrRow {
+    /// Out-neighbors of `v`, which must belong to this row's partition.
+    #[inline]
+    pub fn neighbors(&self, offsets: &[u64], v: VertexId) -> &[VertexId] {
+        let lo = (offsets[v as usize] - self.edge_base) as usize;
+        let hi = (offsets[v as usize + 1] - self.edge_base) as usize;
+        &self.targets[lo..hi]
+    }
+
+    /// Edge weights parallel to [`neighbors`](Self::neighbors).
+    #[inline]
+    pub fn edge_weights(&self, offsets: &[u64], v: VertexId) -> Option<&[f32]> {
+        self.weights.as_ref().map(|w| {
+            let lo = (offsets[v as usize] - self.edge_base) as usize;
+            let hi = (offsets[v as usize + 1] - self.edge_base) as usize;
+            &w[lo..hi]
+        })
+    }
+}
+
+/// One bin's resident PNG scatter streams (the weighted lanes are empty
+/// on unweighted graphs, mirroring [`StaticBin`]).
+pub struct DcSegment {
+    pub srcs: Vec<VertexId>,
+    pub cnts: Vec<u32>,
+    pub wts: Vec<f32>,
+}
+
+/// Resident scatter streams of one partition row, one segment per entry
+/// of that partition's `neighbor_parts` (same order).
+pub struct ScatterRow {
+    segments: Vec<DcSegment>,
+}
+
+impl ScatterRow {
+    /// Segment for the `ni`-th neighbor partition.
+    #[inline]
+    pub fn segment(&self, ni: usize) -> &DcSegment {
+        &self.segments[ni]
+    }
+}
+
+/// Resident pre-written DC id streams of one bin column, keyed by
+/// source partition (ascending).
+pub struct GatherCol {
+    rows: Vec<(PartId, Vec<u32>)>,
+}
+
+impl GatherCol {
+    /// The `dc_ids` stream of bin `(i, j)` for this column `j`; empty if
+    /// partition `i` has no edges into `j`.
+    #[inline]
+    pub fn ids_for(&self, i: PartId) -> &[u32] {
+        match self.rows.binary_search_by_key(&i, |r| r.0) {
+            Ok(pos) => &self.rows[pos].1,
+            Err(_) => &[],
+        }
+    }
+}
+
+/// A materialized, validated row — what the cache holds resident.
+pub enum RowData {
+    Csr(CsrRow),
+    Scatter(ScatterRow),
+    Gather(GatherCol),
+}
+
+impl RowData {
+    /// Bytes this row charges against the budget.
+    pub fn bytes(&self) -> u64 {
+        let payload = match self {
+            RowData::Csr(r) => {
+                (r.targets.len() + r.weights.as_ref().map_or(0, Vec::len)) as u64 * 4
+            }
+            RowData::Scatter(r) => r
+                .segments
+                .iter()
+                .map(|s| (s.srcs.len() + s.cnts.len() + s.wts.len()) as u64 * 4)
+                .sum(),
+            RowData::Gather(c) => c.rows.iter().map(|(_, ids)| ids.len() as u64 * 4).sum(),
+        };
+        payload + ROW_OVERHEAD_BYTES
+    }
+}
+
+/// Per-bin stream lengths (in u32 words), parsed from the layout's bin
+/// table. The whole table stays resident: `4·k²` words of counts buy
+/// O(1) location of any stream in the map.
+#[derive(Clone, Copy, Default)]
+struct BinCounts {
+    ids: u32,
+    srcs: u32,
+    cnts: u32,
+    wts: u32,
+}
+
+impl BinCounts {
+    #[inline]
+    fn words(&self) -> u64 {
+        self.ids as u64 + self.srcs as u64 + self.cnts as u64 + self.wts as u64
+    }
+}
+
+/// Both artifacts mapped + the resident skeleton. See the module docs
+/// for the validation and residency contracts.
+pub struct PartitionStore {
+    graph_map: Mmap,
+    layout_map: Mmap,
+    parts: Partitioner,
+    /// Offsets-only skeleton graph (`Csr::skeleton`): degrees and edge
+    /// bases resolve in memory; adjacency pages in through the cache.
+    graph: Arc<Graph>,
+    /// Counts-only skeleton layout: real [`PartMeta`] (the engine's
+    /// iteration schedule), empty stream vectors.
+    layout: Arc<BinLayout>,
+    weighted: bool,
+    k: usize,
+    /// Byte offset of the graph file's targets section.
+    targets_off: usize,
+    /// Byte offset of the graph file's weights section (weighted only).
+    weights_off: usize,
+    /// Byte offset of the layout file's first payload word.
+    payload_base: usize,
+    /// Stream lengths per bin, row-major.
+    bins: Vec<BinCounts>,
+    /// Payload word offset of each bin's streams, row-major.
+    bin_word_off: Vec<u64>,
+    /// Partitions the Eq. 1 cost model marks DC-bound when fully active
+    /// — the rows an LRU should part with last (see
+    /// [`PartitionCache`](super::cache::PartitionCache)).
+    hot: Vec<bool>,
+    /// Estimated resident bytes per key kind, per partition.
+    csr_bytes: Vec<u64>,
+    scatter_bytes: Vec<u64>,
+    gather_bytes: Vec<u64>,
+    fixed_bytes: u64,
+}
+
+impl PartitionStore {
+    /// Map + validate both files. Every header count is reconciled with
+    /// the real file sizes (checked arithmetic) before any count-derived
+    /// allocation, the layout checksum and the graph digest are
+    /// verified, and the payload is structurally validated to the same
+    /// invariants as [`BinLayout::load`] — all in streaming passes over
+    /// the maps, so peak heap is the skeleton, not the files.
+    pub fn open(graph_path: &Path, layout_path: &Path, config: &PpmConfig) -> io::Result<Self> {
+        let graph_map = Mmap::map(&File::open(graph_path)?)?;
+        let layout_map = Mmap::map(&File::open(layout_path)?)?;
+        Self::build(graph_map, layout_map, config)
+    }
+
+    fn build(graph_map: Mmap, layout_map: Mmap, config: &PpmConfig) -> io::Result<Self> {
+        // ---- graph file: header + sizes (mirrors `read_binary`) ----
+        let g = graph_map.bytes();
+        let glen = g.len() as u64;
+        if glen < GRAPH_HEADER_BYTES {
+            return Err(bad(format!("graph file: {glen} bytes is smaller than the header")));
+        }
+        if &g[..8] != GRAPH_MAGIC {
+            return Err(bad("graph file: bad magic".into()));
+        }
+        let n64 = le_u64(&g[8..16]);
+        let m64 = le_u64(&g[16..24]);
+        let flag = g[24];
+        if flag > 1 {
+            return Err(bad(format!("graph file: weight flag must be 0 or 1 (got {flag})")));
+        }
+        let weighted = flag == 1;
+        if n64 > u32::MAX as u64 {
+            return Err(bad(format!("graph file: vertex count {n64} exceeds the u32 id space")));
+        }
+        let per_edge = if weighted { 8u64 } else { 4 };
+        let expected = n64
+            .checked_add(1)
+            .and_then(|x| x.checked_mul(8))
+            .and_then(|x| x.checked_add(GRAPH_HEADER_BYTES))
+            .and_then(|x| m64.checked_mul(per_edge).and_then(|y| x.checked_add(y)))
+            .ok_or_else(|| bad(format!("graph file: header counts overflow (n={n64}, m={m64})")))?;
+        if expected != glen {
+            return Err(bad(format!(
+                "graph file: {glen} bytes but header (n={n64}, m={m64}, weighted={weighted}) \
+                 implies {expected} — truncated or corrupt"
+            )));
+        }
+        let n = n64 as usize;
+
+        // ---- offsets: the one O(n) resident allocation ----
+        let offsets_bytes = &g[GRAPH_HEADER_BYTES as usize..GRAPH_HEADER_BYTES as usize + (n + 1) * 8];
+        let offsets: Vec<u64> = offsets_bytes.chunks_exact(8).map(le_u64).collect();
+        if offsets[0] != 0 {
+            return Err(bad(format!("graph file: offsets[0] must be 0 (got {})", offsets[0])));
+        }
+        if offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err(bad("graph file: offsets are not monotone non-decreasing".into()));
+        }
+        if offsets[n] != m64 {
+            return Err(bad(format!(
+                "graph file: offsets[n] = {} but header says m = {m64}",
+                offsets[n]
+            )));
+        }
+        let targets_off = GRAPH_HEADER_BYTES as usize + (n + 1) * 8;
+        let weights_off = targets_off + m64 as usize * 4;
+        let targets_bytes = &g[targets_off..weights_off];
+        if let Some(t) = u32s(targets_bytes).find(|&t| t as u64 >= n64) {
+            return Err(bad(format!("graph file: edge target {t} out of range (n = {n})")));
+        }
+        let weights_bytes = &g[weights_off..];
+
+        // ---- graph digest, streamed straight off the map. Byte-
+        // equivalent to `ppm::graph_digest` on the decoded graph: that
+        // digest absorbs each offset/target/weight as its LE bytes,
+        // which is exactly what the file sections hold. ----
+        let digest = {
+            let mut h = Hash64::new();
+            h.write_u64(n64);
+            h.write_u64(m64);
+            h.write_u64(u64::from(weighted));
+            h.update(offsets_bytes);
+            h.update(targets_bytes);
+            h.update(weights_bytes);
+            h.finish()
+        };
+
+        // ---- layout file: header (mirrors `BinLayout::load`) ----
+        let l = layout_map.bytes();
+        let llen = l.len() as u64;
+        if llen < LAYOUT_HEADER_BYTES + CHECKSUM_BYTES {
+            return Err(bad(format!(
+                "layout file: {llen} bytes is smaller than the {} byte header + checksum",
+                LAYOUT_HEADER_BYTES + CHECKSUM_BYTES
+            )));
+        }
+        let mut c = Cur { buf: l, pos: 0 };
+        if c.take(8)? != LAYOUT_MAGIC {
+            return Err(bad("layout file: bad magic (not a GPOP layout file)".into()));
+        }
+        let version = c.u32()?;
+        if version != LAYOUT_FORMAT_VERSION {
+            return Err(bad(format!(
+                "layout file: format version {version} not supported \
+                 (this build reads {LAYOUT_FORMAT_VERSION})"
+            )));
+        }
+        let fp = c.u64()?;
+        let want_fp = config_fingerprint(config);
+        if fp != want_fp {
+            return Err(bad(format!(
+                "layout file: built with a different engine configuration (config \
+                 fingerprint {fp:#018x}, expected {want_fp:#018x}) — rebuild it"
+            )));
+        }
+        let file_digest = c.u64()?;
+        if file_digest != digest {
+            return Err(bad(
+                "layout file: built for a different graph (digest mismatch) — rebuild it".into(),
+            ));
+        }
+        let ln = c.u64()?;
+        let k64 = c.u64()?;
+        let q64 = c.u64()?;
+        let lflag = c.u8()?;
+        if lflag > 1 {
+            return Err(bad(format!("layout file: weight flag must be 0 or 1 (got {lflag})")));
+        }
+        if ln != n64 {
+            return Err(bad(format!(
+                "layout file: built for an {ln}-vertex graph but the graph file has {n}"
+            )));
+        }
+        if (lflag == 1) != weighted {
+            return Err(bad(format!(
+                "layout file: weightedness ({}) does not match the graph ({weighted})",
+                lflag == 1
+            )));
+        }
+        let parts = config.partitioner(n);
+        if (ln, k64, q64) != (parts.n() as u64, parts.k() as u64, parts.q() as u64) {
+            return Err(bad(format!(
+                "layout file: partitioning mismatch: file has (n={ln}, k={k64}, q={q64}) but \
+                 the configuration induces (n={}, k={}, q={})",
+                parts.n(),
+                parts.k(),
+                parts.q()
+            )));
+        }
+        let t_ids = c.u64()?;
+        let t_srcs = c.u64()?;
+        let t_cnts = c.u64()?;
+        let t_wts = c.u64()?;
+        let t_np = c.u64()?;
+
+        // ---- size validation with checked arithmetic ----
+        let payload_bytes = t_ids
+            .checked_add(t_srcs)
+            .and_then(|x| x.checked_add(t_cnts))
+            .and_then(|x| x.checked_add(t_wts))
+            .and_then(|x| x.checked_add(t_np))
+            .and_then(|x| x.checked_mul(4));
+        let expected = k64
+            .checked_mul(k64)
+            .and_then(|kk| kk.checked_mul(BIN_ROW_BYTES))
+            .and_then(|x| x.checked_add(LAYOUT_HEADER_BYTES))
+            .and_then(|x| payload_bytes.and_then(|b| x.checked_add(b)))
+            .and_then(|x| k64.checked_mul(META_ROW_BYTES).and_then(|m| x.checked_add(m)))
+            .and_then(|x| x.checked_add(CHECKSUM_BYTES))
+            .ok_or_else(|| bad(format!("layout file: header counts overflow (k={k64})")))?;
+        if expected != llen {
+            return Err(bad(format!(
+                "layout file: {llen} bytes but the header implies {expected} — \
+                 truncated or corrupt"
+            )));
+        }
+
+        // ---- checksum over everything before the trailing 8 bytes ----
+        let body = &l[..l.len() - CHECKSUM_BYTES as usize];
+        let stored = le_u64(&l[l.len() - CHECKSUM_BYTES as usize..]);
+        let mut h = Hash64::new();
+        h.update(body);
+        if h.finish() != stored {
+            return Err(bad("layout file: checksum mismatch — the file is corrupt".into()));
+        }
+
+        // ---- bin table ----
+        let k = k64 as usize;
+        let kk = k * k;
+        let mut bins: Vec<BinCounts> = Vec::with_capacity(kk);
+        let mut bin_edges: Vec<u32> = Vec::with_capacity(kk);
+        let mut bin_msgs: Vec<u32> = Vec::with_capacity(kk);
+        let mut bin_word_off: Vec<u64> = Vec::with_capacity(kk);
+        let (mut s_ids, mut s_srcs, mut s_cnts, mut s_wts) = (0u64, 0u64, 0u64, 0u64);
+        let mut row_edges = vec![0u64; k];
+        let mut row_msgs = vec![0u64; k];
+        let mut row_nonzero = vec![0u32; k];
+        let mut scatter_bytes = vec![0u64; k];
+        let mut gather_bytes = vec![0u64; k];
+        let mut word_off = 0u64;
+        for idx in 0..kk {
+            let counts = BinCounts {
+                ids: c.u32()?,
+                srcs: c.u32()?,
+                cnts: c.u32()?,
+                wts: c.u32()?,
+            };
+            let n_edges = c.u32()?;
+            let n_msgs = c.u32()?;
+            if counts.ids != n_edges {
+                return Err(bad(format!(
+                    "layout file: bin {idx}: dc_ids length {} != n_edges {n_edges}",
+                    counts.ids
+                )));
+            }
+            if weighted {
+                if counts.cnts != counts.srcs || counts.wts != counts.ids || n_msgs != n_edges {
+                    return Err(bad(format!(
+                        "layout file: bin {idx}: weighted stream lengths inconsistent \
+                         (ids={}, srcs={}, cnts={}, wts={}, msgs={n_msgs})",
+                        counts.ids, counts.srcs, counts.cnts, counts.wts
+                    )));
+                }
+            } else if counts.cnts != 0 || counts.wts != 0 || n_msgs != counts.srcs {
+                return Err(bad(format!(
+                    "layout file: bin {idx}: unweighted stream lengths inconsistent \
+                     (ids={}, srcs={}, cnts={}, wts={}, msgs={n_msgs})",
+                    counts.ids, counts.srcs, counts.cnts, counts.wts
+                )));
+            }
+            if n_edges == 0 && counts.srcs != 0 {
+                return Err(bad(format!("layout file: bin {idx}: sources without edges")));
+            }
+            s_ids += counts.ids as u64;
+            s_srcs += counts.srcs as u64;
+            s_cnts += counts.cnts as u64;
+            s_wts += counts.wts as u64;
+            let (i, j) = (idx / k, idx % k);
+            row_edges[i] += n_edges as u64;
+            row_msgs[i] += n_msgs as u64;
+            if n_edges > 0 {
+                row_nonzero[i] += 1;
+            }
+            scatter_bytes[i] +=
+                (counts.srcs as u64 + counts.cnts as u64 + counts.wts as u64) * 4;
+            gather_bytes[j] += counts.ids as u64 * 4;
+            bin_word_off.push(word_off);
+            word_off += counts.words();
+            bins.push(counts);
+            bin_edges.push(n_edges);
+            bin_msgs.push(n_msgs);
+        }
+        if (s_ids, s_srcs, s_cnts, s_wts) != (t_ids, t_srcs, t_cnts, t_wts) {
+            return Err(bad(
+                "layout file: per-bin stream lengths do not sum to the header totals".into(),
+            ));
+        }
+        let payload_base = c.pos;
+
+        // ---- payload validation, streaming (no per-bin allocation) ----
+        for idx in 0..kk {
+            let (i, j) = ((idx / k) as PartId, (idx % k) as PartId);
+            let counts = bins[idx];
+            let dst = parts.range(j);
+            let src = parts.range(i);
+            let ids = c.take(counts.ids as usize * 4)?;
+            let srcs = c.take(counts.srcs as usize * 4)?;
+            let cnts = c.take(counts.cnts as usize * 4)?;
+            let _wts = c.take(counts.wts as usize * 4)?; // any f32 bits are valid
+            if weighted {
+                if let Some(x) = u32s(ids).find(|x| !dst.contains(x)) {
+                    return Err(bad(format!(
+                        "layout file: bin ({i},{j}): destination {x} outside partition \
+                         {j}'s range"
+                    )));
+                }
+                let mut covered = 0u64;
+                for cnt in u32s(cnts) {
+                    if cnt == 0 {
+                        return Err(bad(format!(
+                            "layout file: bin ({i},{j}): zero-length source run"
+                        )));
+                    }
+                    covered += cnt as u64;
+                }
+                if covered != bin_edges[idx] as u64 {
+                    return Err(bad(format!(
+                        "layout file: bin ({i},{j}): run counts cover {covered} edges, \
+                         header says {}",
+                        bin_edges[idx]
+                    )));
+                }
+            } else {
+                let mut starts = 0usize;
+                let mut first = true;
+                for x in u32s(ids) {
+                    if x & MSG_START != 0 {
+                        starts += 1;
+                    } else if first {
+                        return Err(bad(format!(
+                            "layout file: bin ({i},{j}): id stream does not open with a \
+                             message start"
+                        )));
+                    }
+                    first = false;
+                    if !dst.contains(&(x & !MSG_START)) {
+                        return Err(bad(format!(
+                            "layout file: bin ({i},{j}): destination {} outside partition \
+                             {j}'s range",
+                            x & !MSG_START
+                        )));
+                    }
+                }
+                if starts != bin_msgs[idx] as usize {
+                    return Err(bad(format!(
+                        "layout file: bin ({i},{j}): {starts} message starts but header \
+                         says {}",
+                        bin_msgs[idx]
+                    )));
+                }
+            }
+            let mut prev: Option<u32> = None;
+            for x in u32s(srcs) {
+                if !src.contains(&x) {
+                    return Err(bad(format!(
+                        "layout file: bin ({i},{j}): source {x} outside partition {i}'s range"
+                    )));
+                }
+                if prev.is_some_and(|p| p > x) {
+                    return Err(bad(format!(
+                        "layout file: bin ({i},{j}): PNG sources are not in vertex order"
+                    )));
+                }
+                prev = Some(x);
+            }
+        }
+
+        // ---- meta table + neighbor lists ----
+        let mut meta: Vec<PartMeta> = Vec::with_capacity(k);
+        let mut np_lens: Vec<usize> = Vec::with_capacity(k);
+        let mut s_np = 0u64;
+        for p in 0..k {
+            let edges = c.u64()?;
+            let msgs = c.u64()?;
+            let np_len = c.u32()? as usize;
+            if edges != row_edges[p] || msgs != row_msgs[p] {
+                return Err(bad(format!(
+                    "layout file: partition {p}: meta totals (edges={edges}, msgs={msgs}) \
+                     do not match its bin row (edges={}, msgs={})",
+                    row_edges[p], row_msgs[p]
+                )));
+            }
+            if np_len as u32 != row_nonzero[p] {
+                return Err(bad(format!(
+                    "layout file: partition {p}: {np_len} neighbor partitions listed but \
+                     {} bins have edges",
+                    row_nonzero[p]
+                )));
+            }
+            s_np += np_len as u64;
+            np_lens.push(np_len);
+            meta.push(PartMeta { edges, msgs, neighbor_parts: Vec::new() });
+        }
+        if s_np != t_np {
+            return Err(bad(
+                "layout file: neighbor-part lengths do not sum to the header total".into(),
+            ));
+        }
+        let mut seen = vec![false; k];
+        for p in 0..k {
+            let np_bytes = c.take(np_lens[p] * 4)?;
+            let np: Vec<PartId> = u32s(np_bytes).collect();
+            seen.fill(false);
+            for &j in &np {
+                if j as usize >= k {
+                    return Err(bad(format!(
+                        "layout file: partition {p}: neighbor partition {j} >= k"
+                    )));
+                }
+                if std::mem::replace(&mut seen[j as usize], true) {
+                    return Err(bad(format!(
+                        "layout file: partition {p}: duplicate neighbor partition {j}"
+                    )));
+                }
+                if bin_edges[p * k + j as usize] == 0 {
+                    return Err(bad(format!(
+                        "layout file: partition {p}: neighbor partition {j} has no edges \
+                         in its bin"
+                    )));
+                }
+            }
+            meta[p].neighbor_parts = np;
+        }
+        if c.pos != body.len() {
+            return Err(bad("layout file: trailing bytes after the meta section".into()));
+        }
+
+        // ---- skeleton + policy state ----
+        let hot: Vec<bool> = meta
+            .iter()
+            .map(|m| {
+                let cost = PartCost { edges: m.edges, msgs: m.msgs, k };
+                cost.choose_dc(m.edges, config.bw_ratio, D_V)
+            })
+            .collect();
+        let csr_bytes: Vec<u64> = (0..k)
+            .map(|p| {
+                let r = parts.range(p as PartId);
+                let edges = offsets[r.end as usize] - offsets[r.start as usize];
+                edges * per_edge
+            })
+            .collect();
+        let fixed_bytes = (offsets.len() * 8
+            + kk * (std::mem::size_of::<BinCounts>() + 8)
+            + k * (META_ROW_BYTES as usize + 1)
+            + t_np as usize * 4) as u64;
+        let skeleton_bins: Vec<StaticBin> = bin_edges
+            .iter()
+            .zip(&bin_msgs)
+            .map(|(&n_edges, &n_msgs)| StaticBin { n_edges, n_msgs, ..Default::default() })
+            .collect();
+        let graph = Arc::new(Graph::from_csr(Csr::skeleton(n, offsets, weighted)));
+        let layout = Arc::new(BinLayout::from_raw(k, weighted, skeleton_bins, meta));
+        Ok(Self {
+            graph_map,
+            layout_map,
+            parts,
+            graph,
+            layout,
+            weighted,
+            k,
+            targets_off,
+            weights_off,
+            payload_base,
+            bins,
+            bin_word_off,
+            hot,
+            csr_bytes,
+            scatter_bytes,
+            gather_bytes,
+            fixed_bytes,
+        })
+    }
+
+    /// The offsets-only skeleton graph (degrees resolve; adjacency does
+    /// not — it pages through the cache).
+    #[inline]
+    pub fn graph(&self) -> &Arc<Graph> {
+        &self.graph
+    }
+
+    /// The counts-only skeleton layout (real meta, empty streams).
+    #[inline]
+    pub fn layout(&self) -> &Arc<BinLayout> {
+        &self.layout
+    }
+
+    #[inline]
+    pub fn partitioner(&self) -> &Partitioner {
+        &self.parts
+    }
+
+    #[inline]
+    pub fn weighted(&self) -> bool {
+        self.weighted
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Whether the Eq. 1 cost model marks this row's partition hot
+    /// (DC-bound when fully active): its rows re-stream every dense
+    /// iteration, so the eviction policy parts with them last.
+    #[inline]
+    pub fn is_hot(&self, key: RowKey) -> bool {
+        self.hot[key.part() as usize]
+    }
+
+    /// Estimated resident bytes of one row, without materializing it.
+    pub fn row_bytes(&self, key: RowKey) -> u64 {
+        let est = match key {
+            RowKey::Csr(p) => self.csr_bytes[p as usize],
+            RowKey::Scatter(p) => self.scatter_bytes[p as usize],
+            RowKey::Gather(j) => self.gather_bytes[j as usize],
+        };
+        est + ROW_OVERHEAD_BYTES
+    }
+
+    /// Total bytes of every pageable row — what an unbounded cache would
+    /// hold resident, and the denominator for budget fractions in tests
+    /// and benches.
+    pub fn total_row_bytes(&self) -> u64 {
+        let sums: u64 = self
+            .csr_bytes
+            .iter()
+            .chain(&self.scatter_bytes)
+            .chain(&self.gather_bytes)
+            .sum();
+        sums + 3 * self.k as u64 * ROW_OVERHEAD_BYTES
+    }
+
+    /// Always-resident skeleton bytes (reported, not budgeted).
+    #[inline]
+    pub fn fixed_bytes(&self) -> u64 {
+        self.fixed_bytes
+    }
+
+    /// Decode one row out of the maps. Infallible: every byte consumed
+    /// here was validated by [`open`](Self::open).
+    pub fn materialize(&self, key: RowKey) -> RowData {
+        match key {
+            RowKey::Csr(p) => RowData::Csr(self.csr_row(p)),
+            RowKey::Scatter(p) => RowData::Scatter(self.scatter_row(p)),
+            RowKey::Gather(j) => RowData::Gather(self.gather_col(j)),
+        }
+    }
+
+    fn csr_row(&self, p: PartId) -> CsrRow {
+        let r = self.parts.range(p);
+        let offsets = self.graph.out().offsets();
+        let lo = offsets[r.start as usize] as usize;
+        let hi = offsets[r.end as usize] as usize;
+        let g = self.graph_map.bytes();
+        let targets = u32s(&g[self.targets_off + lo * 4..self.targets_off + hi * 4]).collect();
+        let weights = self.weighted.then(|| {
+            f32s(&g[self.weights_off + lo * 4..self.weights_off + hi * 4]).collect()
+        });
+        CsrRow { edge_base: lo as u64, targets, weights }
+    }
+
+    /// Word range of one stream inside bin `idx`'s payload: `skip`
+    /// words past the bin's base, `len` words long.
+    #[inline]
+    fn stream(&self, idx: usize, skip: u64, len: u32) -> &[u8] {
+        let base = self.payload_base + (self.bin_word_off[idx] + skip) as usize * 4;
+        &self.layout_map.bytes()[base..base + len as usize * 4]
+    }
+
+    fn scatter_row(&self, p: PartId) -> ScatterRow {
+        let segments = self
+            .layout
+            .meta(p)
+            .neighbor_parts
+            .iter()
+            .map(|&j| {
+                let idx = p as usize * self.k + j as usize;
+                let b = self.bins[idx];
+                DcSegment {
+                    srcs: u32s(self.stream(idx, b.ids as u64, b.srcs)).collect(),
+                    cnts: u32s(self.stream(idx, b.ids as u64 + b.srcs as u64, b.cnts)).collect(),
+                    wts: f32s(
+                        self.stream(idx, b.ids as u64 + b.srcs as u64 + b.cnts as u64, b.wts),
+                    )
+                    .collect(),
+                }
+            })
+            .collect();
+        ScatterRow { segments }
+    }
+
+    fn gather_col(&self, j: PartId) -> GatherCol {
+        let rows = (0..self.k)
+            .filter_map(|i| {
+                let idx = i * self.k + j as usize;
+                let b = self.bins[idx];
+                (b.ids > 0).then(|| (i as PartId, u32s(self.stream(idx, 0, b.ids)).collect()))
+            })
+            .collect();
+        GatherCol { rows }
+    }
+}
+
+#[inline]
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().expect("8 bytes"))
+}
+
+/// Decode a little-endian u32 stream from (possibly unaligned) bytes.
+#[inline]
+fn u32s(bytes: &[u8]) -> impl Iterator<Item = u32> + '_ {
+    bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+}
+
+#[inline]
+fn f32s(bytes: &[u8]) -> impl Iterator<Item = f32> + '_ {
+    u32s(bytes).map(f32::from_bits)
+}
+
+/// Bounds-checked cursor over the mapped layout bytes (the same
+/// degrade-to-`InvalidData` contract as the persistence loader).
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| bad("layout file: truncated".into()))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(le_u64(self.take(8)?))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::graph::{gen, io::write_binary};
+    use crate::ppm::BinLayout;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gpop_ooc_store_{}_{name}", std::process::id()));
+        p
+    }
+
+    /// Write graph + layout files for `g` under `config`; returns their
+    /// paths (caller removes).
+    pub(crate) fn write_artifacts(
+        g: &Graph,
+        config: &PpmConfig,
+        name: &str,
+    ) -> (std::path::PathBuf, std::path::PathBuf) {
+        let gp = tmp(&format!("{name}.bin"));
+        let lp = tmp(&format!("{name}.layout"));
+        write_binary(g, &gp).unwrap();
+        let parts = config.partitioner(g.n());
+        let layout = BinLayout::build(g, &parts);
+        layout.save(&lp, g, &parts, config).unwrap();
+        (gp, lp)
+    }
+
+    fn cfg(k: usize) -> PpmConfig {
+        PpmConfig { k: Some(k), ..Default::default() }
+    }
+
+    #[test]
+    fn skeleton_matches_persist_load() {
+        for (g, name) in [
+            (gen::rmat(8, Default::default(), false), "rmat"),
+            (gen::with_uniform_weights(&gen::erdos_renyi(300, 2400, 5), 1.0, 4.0, 7), "erw"),
+        ] {
+            let config = cfg(6);
+            let (gp, lp) = write_artifacts(&g, &config, &format!("skel_{name}"));
+            let store = PartitionStore::open(&gp, &lp, &config).unwrap();
+            let parts = config.partitioner(g.n());
+            let full = BinLayout::load(&lp, &g, &parts, &config).unwrap();
+            assert_eq!(store.k(), full.k());
+            assert_eq!(store.weighted(), full.weighted());
+            let skel = store.layout();
+            for p in 0..full.k() {
+                assert_eq!(skel.meta(p as PartId), full.meta(p as PartId), "{name} meta {p}");
+                for j in 0..full.k() {
+                    let (a, b) = (skel.stat(p as PartId, j as PartId), full.stat(p as PartId, j as PartId));
+                    assert_eq!(a.n_edges, b.n_edges, "{name} bin ({p},{j})");
+                    assert_eq!(a.n_msgs, b.n_msgs, "{name} bin ({p},{j})");
+                    assert!(a.dc_ids.is_empty(), "skeleton must not hold streams");
+                }
+            }
+            // Skeleton graph: degrees resolve without adjacency.
+            assert_eq!(store.graph().n(), g.n());
+            assert_eq!(store.graph().m(), g.m());
+            for v in 0..g.n() as VertexId {
+                assert_eq!(store.graph().out_degree(v), g.out_degree(v));
+            }
+            std::fs::remove_file(&gp).unwrap();
+            std::fs::remove_file(&lp).unwrap();
+        }
+    }
+
+    #[test]
+    fn materialized_rows_match_in_memory_streams() {
+        for (g, name) in [
+            (gen::rmat(8, Default::default(), false), "rmat"),
+            (gen::with_uniform_weights(&gen::chain(200), 1.0, 4.0, 3), "chainw"),
+        ] {
+            let config = cfg(5);
+            let (gp, lp) = write_artifacts(&g, &config, &format!("rows_{name}"));
+            let store = PartitionStore::open(&gp, &lp, &config).unwrap();
+            let parts = config.partitioner(g.n());
+            let full = BinLayout::build(&g, &parts);
+            let k = parts.k();
+            for p in 0..k as PartId {
+                // CSR row: adjacency must be bit-identical.
+                let RowData::Csr(row) = store.materialize(RowKey::Csr(p)) else {
+                    panic!("wrong row kind")
+                };
+                let offsets = store.graph().out().offsets();
+                for v in parts.range(p) {
+                    assert_eq!(row.neighbors(offsets, v), g.out().neighbors(v), "{name} v={v}");
+                    match (row.edge_weights(offsets, v), g.out().edge_weights(v)) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => assert_eq!(a, b, "{name} weights v={v}"),
+                        _ => panic!("{name}: weight presence diverged"),
+                    }
+                }
+                // Scatter row: PNG streams per neighbor, in meta order.
+                let RowData::Scatter(row) = store.materialize(RowKey::Scatter(p)) else {
+                    panic!("wrong row kind")
+                };
+                for (ni, &j) in full.meta(p).neighbor_parts.iter().enumerate() {
+                    let stat = full.stat(p, j);
+                    let seg = row.segment(ni);
+                    assert_eq!(seg.srcs, stat.dc_srcs, "{name} ({p},{j}) srcs");
+                    assert_eq!(seg.cnts, stat.dc_cnts, "{name} ({p},{j}) cnts");
+                    assert_eq!(seg.wts.len(), stat.dc_wts.len(), "{name} ({p},{j}) wts");
+                    assert!(
+                        seg.wts.iter().zip(&stat.dc_wts).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{name} ({p},{j}) weight bits"
+                    );
+                }
+                // Gather column: dc_ids per source partition.
+                let RowData::Gather(col) = store.materialize(RowKey::Gather(p)) else {
+                    panic!("wrong row kind")
+                };
+                for i in 0..k as PartId {
+                    assert_eq!(col.ids_for(i), &full.stat(i, p).dc_ids[..], "{name} ({i},{p})");
+                }
+            }
+            std::fs::remove_file(&gp).unwrap();
+            std::fs::remove_file(&lp).unwrap();
+        }
+    }
+
+    #[test]
+    fn row_bytes_estimates_match_materialized_sizes() {
+        let g = gen::rmat(8, Default::default(), false);
+        let config = cfg(4);
+        let (gp, lp) = write_artifacts(&g, &config, "sizes");
+        let store = PartitionStore::open(&gp, &lp, &config).unwrap();
+        let mut total = 0u64;
+        for p in 0..store.k() as PartId {
+            for key in [RowKey::Csr(p), RowKey::Scatter(p), RowKey::Gather(p)] {
+                let actual = store.materialize(key).bytes();
+                assert_eq!(store.row_bytes(key), actual, "{key:?}");
+                total += actual;
+            }
+        }
+        assert_eq!(store.total_row_bytes(), total);
+        std::fs::remove_file(&gp).unwrap();
+        std::fs::remove_file(&lp).unwrap();
+    }
+
+    #[test]
+    fn corrupt_artifacts_are_rejected() {
+        let g = gen::erdos_renyi(120, 900, 17);
+        let config = cfg(4);
+        let (gp, lp) = write_artifacts(&g, &config, "corrupt");
+        let expect_invalid = |gp: &Path, lp: &Path, what: &str| {
+            let err = PartitionStore::open(gp, lp, &config).expect_err(what);
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{what}: {err}");
+        };
+        // Flip one adjacency byte: the layout's graph digest must catch it.
+        let good_graph = std::fs::read(&gp).unwrap();
+        let mut bad_bytes = good_graph.clone();
+        let pos = 25 + (g.n() + 1) * 8; // first target
+        bad_bytes[pos] ^= 1;
+        std::fs::write(&gp, &bad_bytes).unwrap();
+        expect_invalid(&gp, &lp, "graph digest");
+        std::fs::write(&gp, &good_graph).unwrap();
+        // Truncate the layout: size check.
+        let good_layout = std::fs::read(&lp).unwrap();
+        std::fs::write(&lp, &good_layout[..good_layout.len() - 4]).unwrap();
+        expect_invalid(&gp, &lp, "layout truncated");
+        // Flip a payload byte: checksum.
+        let mut bad_layout = good_layout.clone();
+        let mid = bad_layout.len() / 2;
+        bad_layout[mid] ^= 0x40;
+        std::fs::write(&lp, &bad_layout).unwrap();
+        expect_invalid(&gp, &lp, "layout checksum");
+        std::fs::write(&lp, &good_layout).unwrap();
+        // Wrong config: fingerprint.
+        let other = cfg(5);
+        let err = PartitionStore::open(&gp, &lp, &other).expect_err("fingerprint");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{err}");
+        std::fs::remove_file(&gp).unwrap();
+        std::fs::remove_file(&lp).unwrap();
+    }
+
+    #[test]
+    fn hot_partitions_follow_the_cost_model() {
+        // A hub partition (dense) should be DC-bound ⇒ hot; an isolated
+        // tail partition (no edges) is not.
+        let mut b = crate::graph::GraphBuilder::new().with_n(40);
+        for v in 0..10u32 {
+            for u in 0..40u32 {
+                if u != v {
+                    b.add(v, u);
+                }
+            }
+        }
+        let g = b.build();
+        let config = cfg(4);
+        let (gp, lp) = write_artifacts(&g, &config, "hot");
+        let store = PartitionStore::open(&gp, &lp, &config).unwrap();
+        assert!(store.is_hot(RowKey::Scatter(0)), "hub partition should be hot");
+        assert!(!store.is_hot(RowKey::Scatter(3)), "edgeless partition should be cold");
+        std::fs::remove_file(&gp).unwrap();
+        std::fs::remove_file(&lp).unwrap();
+    }
+}

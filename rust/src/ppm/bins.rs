@@ -481,6 +481,19 @@ impl BinGrid {
         Self { layout, cells: SharedCells::from_vec(cells) }
     }
 
+    /// Like [`from_layout`](Self::from_layout) but without capacity
+    /// reservation: bins start empty and grow on first use. This is the
+    /// out-of-core constructor — a paged engine's layout carries the
+    /// true per-bin counts but its working set is bounded by the memory
+    /// budget, so reserving `O(E)` words up front would defeat paging.
+    /// Bin scratch then grows only for partitions the frontier actually
+    /// touches (it is working memory, accounted outside the row budget).
+    pub fn from_layout_unreserved(layout: Arc<BinLayout>) -> Self {
+        let k = layout.k;
+        let cells: Vec<Bin> = (0..k * k).map(|_| Bin::empty()).collect();
+        Self { layout, cells: SharedCells::from_vec(cells) }
+    }
+
     /// Pre-process `graph` and allocate scratch in one step (the
     /// single-query path; sessions call [`BinLayout::build`] once and
     /// [`BinGrid::from_layout`] per checkout instead).

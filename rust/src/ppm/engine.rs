@@ -6,11 +6,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::active::ActiveState;
-use super::bins::{push_msg, write_msg, BinGrid, BinLayout, Mode, StaticBin};
+use super::bins::{push_msg, write_msg, BinGrid, BinLayout, Mode};
 use super::cost::{ModePolicy, PartCost};
 use crate::api::{Payload, Program};
 use crate::exec::ThreadPool;
-use crate::graph::Graph;
+use crate::graph::{Csr, Graph};
+use crate::ooc::{self, PartitionCache};
 use crate::partition::{Partitioner, DEFAULT_BYTES_PER_VERTEX, DEFAULT_CACHE_BYTES};
 use crate::{PartId, VertexId};
 
@@ -38,6 +39,13 @@ pub struct PpmConfig {
     /// the cap allocate transient engines, counted by
     /// [`transient_checkouts`](crate::api::EngineSession::transient_checkouts).
     pub pool_cap: usize,
+    /// Out-of-core memory budget in bytes for resident partition rows
+    /// (`None` = fully in-memory). Only consulted by the paged path
+    /// ([`EngineSession::open_paged`](crate::api::EngineSession::open_paged)
+    /// / `gpop run --mem-budget`); deliberately **not** part of
+    /// [`config_fingerprint`](super::config_fingerprint), so one
+    /// persisted layout serves every budget.
+    pub mem_budget: Option<u64>,
 }
 
 impl Default for PpmConfig {
@@ -51,6 +59,7 @@ impl Default for PpmConfig {
             k: None,
             chunk: 1,
             pool_cap: 4,
+            mem_budget: None,
         }
     }
 }
@@ -86,6 +95,11 @@ impl PpmConfig {
         }
         if self.pool_cap == 0 {
             return Err("pool-cap must be >= 1 (a session keeps at least one warm engine)".into());
+        }
+        if self.mem_budget == Some(0) {
+            return Err(
+                "mem-budget must be >= 1 byte (omit it entirely for in-memory execution)".into(),
+            );
         }
         Ok(())
     }
@@ -124,6 +138,12 @@ pub enum PreprocessSource {
     /// partitioning itself is unchanged — deltas never change `n`) and
     /// [`BuildStats::t_layout`] the row-patching time.
     Patched,
+    /// The layout (and graph) stayed on disk behind a memory-mapped
+    /// [`PartitionStore`](crate::ooc::PartitionStore): only the skeleton
+    /// was materialized, and partition rows page in on demand through a
+    /// budget-bounded [`PartitionCache`](crate::ooc::PartitionCache).
+    /// [`BuildStats::t_layout`] holds the map + validation time.
+    Paged,
 }
 
 impl PreprocessSource {
@@ -133,6 +153,7 @@ impl PreprocessSource {
             PreprocessSource::Built => "built",
             PreprocessSource::Loaded => "loaded from disk",
             PreprocessSource::Patched => "delta-patched",
+            PreprocessSource::Paged => "paged from disk (out-of-core)",
         }
     }
 }
@@ -229,6 +250,11 @@ pub struct Engine {
     config: PpmConfig,
     costs: Vec<PartCost>,
     build: BuildStats,
+    /// Out-of-core backing. When set, `graph` is an offsets-only
+    /// skeleton, the layout carries counts + meta but no streams, and
+    /// every adjacency / DC-stream access in the phase loops routes
+    /// through this cache instead.
+    paging: Option<Arc<PartitionCache>>,
     iter: usize,
 }
 
@@ -270,6 +296,21 @@ impl Engine {
         Self::from_parts(graph, parts, layout, config, pool, BuildStats::default())
     }
 
+    /// [`with_layout`](Self::with_layout) for the out-of-core path: the
+    /// engine's adjacency and DC streams come from `cache` instead of
+    /// `graph`/`layout`, which are the store's skeletons.
+    pub(crate) fn with_layout_paged(
+        graph: Arc<Graph>,
+        parts: Partitioner,
+        layout: Arc<BinLayout>,
+        config: PpmConfig,
+        cache: Arc<PartitionCache>,
+    ) -> Self {
+        config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
+        let pool = ThreadPool::new(config.threads);
+        Self::assemble(graph, parts, layout, config, pool, BuildStats::default(), Some(cache))
+    }
+
     /// Assemble an engine from fully prebuilt pieces, reusing `pool`
     /// (e.g. the pool that just ran pre-processing) instead of spawning
     /// a fresh worker team.
@@ -281,10 +322,42 @@ impl Engine {
         pool: ThreadPool,
         build: BuildStats,
     ) -> Self {
+        Self::assemble(graph, parts, layout, config, pool, build, None)
+    }
+
+    /// [`from_parts`](Self::from_parts) with an out-of-core cache.
+    pub(crate) fn from_parts_paged(
+        graph: Arc<Graph>,
+        parts: Partitioner,
+        layout: Arc<BinLayout>,
+        config: PpmConfig,
+        pool: ThreadPool,
+        build: BuildStats,
+        cache: Arc<PartitionCache>,
+    ) -> Self {
+        Self::assemble(graph, parts, layout, config, pool, build, Some(cache))
+    }
+
+    fn assemble(
+        graph: Arc<Graph>,
+        parts: Partitioner,
+        layout: Arc<BinLayout>,
+        config: PpmConfig,
+        pool: ThreadPool,
+        build: BuildStats,
+        paging: Option<Arc<PartitionCache>>,
+    ) -> Self {
         config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
         assert_eq!(parts.k(), layout.k(), "partitioner and layout disagree on k");
         assert_eq!(pool.n_threads(), config.threads, "pool size must match config.threads");
-        let grid = BinGrid::from_layout(layout);
+        // A paged engine must not pre-reserve O(E) bin capacity — the
+        // whole point is a bounded working set; its bins grow only for
+        // partitions the frontier touches.
+        let grid = if paging.is_some() {
+            BinGrid::from_layout_unreserved(layout)
+        } else {
+            BinGrid::from_layout(layout)
+        };
         let k = parts.k();
         let costs = (0..k)
             .map(|p| {
@@ -293,7 +366,7 @@ impl Engine {
             })
             .collect();
         let active = ActiveState::new(&parts);
-        Self { graph, parts, grid, active, pool, config, costs, build, iter: 0 }
+        Self { graph, parts, grid, active, pool, config, costs, build, paging, iter: 0 }
     }
 
     #[inline]
@@ -386,40 +459,76 @@ impl Engine {
 
         // ---------------- Scatter + initFrontier ----------------
         let t0 = Instant::now();
-        let sc_count = AtomicU64::new(0);
-        let dc_count = AtomicU64::new(0);
         // Eq. 1's d_v follows the program's payload width (4 bytes per
         // lane); for 1-lane programs this is the paper's constant 4.
         let d_v = (P::Msg::LANES * 4) as f64;
+        let mut sc_parts = 0usize;
+        let mut dc_parts = 0usize;
         {
-            let Engine { graph, parts, grid, active, pool, config, costs, .. } = self;
+            let Engine { graph, parts, grid, active, pool, config, costs, paging, .. } = self;
             let graph: &Graph = &**graph;
+            let paging = paging.as_deref();
             let spart: &[PartId] = active.spart();
+            // The full mode plan is decided sequentially before the
+            // parallel region: paged tasks prefetch *other* tasks' rows,
+            // so the decision inputs (per-partition `cur_edges`) must be
+            // read while no task is mutating frontiers.
+            let plan: Vec<(u64, bool)> = spart
+                .iter()
+                .map(|&p| {
+                    // SAFETY: no parallel phase is running yet, so a
+                    // shared read of the frontier cannot race.
+                    let cur_edges = unsafe { active.part(p) }.cur_edges;
+                    let use_dc = decide_dc(config, costs, p, cur_edges, d_v);
+                    if cur_edges > 0 {
+                        if use_dc {
+                            dc_parts += 1;
+                        } else {
+                            sc_parts += 1;
+                        }
+                    }
+                    (cur_edges, use_dc)
+                })
+                .collect();
+            let plan = &plan[..];
             pool.for_each_dynamic(spart.len(), config.chunk, |idx, _tid| {
                 let p = spart[idx];
                 // SAFETY: each partition appears once in spart; this task
                 // exclusively owns partition p (bins row p, frontier p).
                 // Borrows of the frontier are scoped so that the scatter
                 // helpers (which re-borrow it) never alias.
-                let cur_edges = unsafe { active.part(p) }.cur_edges;
+                let (cur_edges, use_dc) = plan[idx];
                 let meta = grid.meta(p);
                 for &j in &meta.neighbor_parts {
                     unsafe { grid.bin_mut(p, j) }.clear();
                 }
                 if cur_edges > 0 {
-                    let use_dc = match config.mode {
-                        ModePolicy::ForceSc => false,
-                        ModePolicy::ForceDc => true,
-                        ModePolicy::Hybrid => {
-                            costs[p as usize].choose_dc(cur_edges, config.bw_ratio, d_v)
+                    if let Some(cache) = paging {
+                        // Read ahead: the scatter schedule is the spart
+                        // order, so the next few active tasks' rows can
+                        // load while this one streams.
+                        for (i2, &(ce2, dc2)) in
+                            plan.iter().enumerate().skip(idx + 1).take(ooc::PREFETCH_DIST)
+                        {
+                            if ce2 > 0 {
+                                cache.prefetch(ooc::scatter_key(spart[i2], dc2));
+                            }
                         }
-                    };
+                    }
                     if use_dc {
-                        dc_count.fetch_add(1, Ordering::Relaxed);
-                        scatter_dc(prog, graph, parts, grid, active, p);
+                        if let Some(cache) = paging {
+                            let row = cache.checkout(ooc::RowKey::Scatter(p));
+                            scatter_dc(prog, graph, parts, grid, active, p, Some(row.scatter()));
+                        } else {
+                            scatter_dc(prog, graph, parts, grid, active, p, None);
+                        }
+                    } else if let Some(cache) = paging {
+                        let row = cache.checkout(ooc::RowKey::Csr(p));
+                        let adj =
+                            AdjSource::Paged { offsets: graph.out().offsets(), row: row.csr() };
+                        scatter_sc(prog, adj, parts, grid, active, p);
                     } else {
-                        sc_count.fetch_add(1, Ordering::Relaxed);
-                        scatter_sc(prog, graph, parts, grid, active, p);
+                        scatter_sc(prog, AdjSource::InMem(graph.out()), parts, grid, active, p);
                     }
                 }
                 // initFrontier step (paper §4: called once per active
@@ -438,8 +547,8 @@ impl Engine {
             });
         }
         stats.t_scatter = t0.elapsed().as_secs_f64();
-        stats.sc_parts = sc_count.load(Ordering::Relaxed) as usize;
-        stats.dc_parts = dc_count.load(Ordering::Relaxed) as usize;
+        stats.sc_parts = sc_parts;
+        stats.dc_parts = dc_parts;
 
         // ---------------- Gather ----------------
         let t1 = Instant::now();
@@ -447,8 +556,9 @@ impl Engine {
         let byte_count = AtomicU64::new(0);
         let gpart = self.active.collect_gpart();
         {
-            let Engine { parts, grid, active, pool, config, .. } = self;
+            let Engine { parts, grid, active, pool, config, paging, .. } = self;
             let weighted = grid.weighted();
+            let paging = paging.as_deref();
             pool.for_each_dynamic(gpart.len(), config.chunk, |idx, _tid| {
                 let j = gpart[idx];
                 // SAFETY: this task exclusively owns column j and
@@ -458,10 +568,31 @@ impl Engine {
                 let mut local_msgs = 0u64;
                 let mut local_bytes = 0u64;
                 let srcs = unsafe { active.col_srcs(j) };
+                // Paged engines read pre-written destination ids from the
+                // cache; the column is checked out once per task — and
+                // only when some bin actually scattered in DC mode this
+                // iteration (SC bins carry their ids inline).
+                let col = match paging {
+                    Some(cache)
+                        if srcs.iter().any(|&i| {
+                            // SAFETY: column j is owned by this task.
+                            unsafe { grid.bin(i as PartId, j) }.mode == Mode::Dc
+                        }) =>
+                    {
+                        Some(cache.checkout(ooc::RowKey::Gather(j)))
+                    }
+                    _ => None,
+                };
                 for &i in srcs {
                     let bin = unsafe { grid.bin(i as PartId, j) };
-                    let stat = grid.stat(i as PartId, j);
-                    let (msgs, bytes) = gather_bin(prog, bin, stat, weighted, pf, base);
+                    let ids: &[u32] = match bin.mode {
+                        Mode::Sc => &bin.ids,
+                        Mode::Dc => match &col {
+                            Some(guard) => guard.gather().ids_for(i as PartId),
+                            None => &grid.stat(i as PartId, j).dc_ids,
+                        },
+                    };
+                    let (msgs, bytes) = gather_bin(prog, ids, &bin.data, weighted, pf, base);
                     local_msgs += msgs;
                     local_bytes += bytes;
                 }
@@ -503,6 +634,28 @@ impl Engine {
         self.active.publish();
         stats.t_finalize = t2.elapsed().as_secs_f64();
         stats.next_frontier = self.active.total_active();
+
+        // The frontier just published is next iteration's scatter
+        // schedule — known one iteration ahead, as the paper's
+        // barrier-separated phases guarantee. Hint the first few rows so
+        // the next scatter phase starts warm instead of faulting.
+        if let Some(cache) = self.paging.as_deref() {
+            let mut hinted = 0usize;
+            for p in 0..self.parts.k() as PartId {
+                if hinted == ooc::NEXT_ITER_PREFETCH {
+                    break;
+                }
+                // SAFETY: no parallel phase is running (iterate holds
+                // `&mut self`), so shared frontier reads cannot race.
+                let cur_edges = unsafe { self.active.part(p) }.cur_edges;
+                if cur_edges == 0 {
+                    continue;
+                }
+                let use_dc = decide_dc(&self.config, &self.costs, p, cur_edges, d_v);
+                cache.prefetch(ooc::scatter_key(p, use_dc));
+                hinted += 1;
+            }
+        }
         stats
     }
 
@@ -525,6 +678,52 @@ impl Engine {
         }
         run.total_time = t0.elapsed().as_secs_f64();
         run
+    }
+}
+
+/// The Eq. 1 mode decision for one partition, as configured. Factored
+/// out so the scatter plan and the end-of-iteration prefetch agree.
+#[inline]
+fn decide_dc(
+    config: &PpmConfig,
+    costs: &[PartCost],
+    p: PartId,
+    cur_edges: u64,
+    d_v: f64,
+) -> bool {
+    match config.mode {
+        ModePolicy::ForceSc => false,
+        ModePolicy::ForceDc => true,
+        ModePolicy::Hybrid => costs[p as usize].choose_dc(cur_edges, config.bw_ratio, d_v),
+    }
+}
+
+/// Where SC-mode scatter reads adjacency from: the resident CSR, or a
+/// paged partition row (indexed through the skeleton's global offsets).
+/// The accessors are `#[inline]` matches over two straight-line cases,
+/// so the in-memory path compiles to the same loads as before paging
+/// existed.
+#[derive(Clone, Copy)]
+enum AdjSource<'a> {
+    InMem(&'a Csr),
+    Paged { offsets: &'a [u64], row: &'a ooc::CsrRow },
+}
+
+impl<'a> AdjSource<'a> {
+    #[inline]
+    fn neighbors(&self, v: VertexId) -> &'a [VertexId] {
+        match *self {
+            AdjSource::InMem(csr) => csr.neighbors(v),
+            AdjSource::Paged { offsets, row } => row.neighbors(offsets, v),
+        }
+    }
+
+    #[inline]
+    fn edge_weights(&self, v: VertexId) -> Option<&'a [f32]> {
+        match *self {
+            AdjSource::InMem(csr) => csr.edge_weights(v),
+            AdjSource::Paged { offsets, row } => row.edge_weights(offsets, v),
+        }
     }
 }
 
@@ -551,19 +750,14 @@ unsafe fn read_msg_unchecked<M: Payload>(data: &[u32], idx: usize) -> M {
 #[inline]
 fn gather_bin<P: Program>(
     prog: &P,
-    bin: &super::bins::Bin,
-    stat: &StaticBin,
+    ids: &[u32],
+    data: &[u32],
     weighted: bool,
     pf: &mut super::active::PartFrontier,
     base: VertexId,
 ) -> (u64, u64) {
     use super::bins::ID_MASK;
     let lanes = P::Msg::LANES;
-    let ids: &[u32] = match bin.mode {
-        Mode::Sc => &bin.ids,
-        Mode::Dc => &stat.dc_ids,
-    };
-    let data = &bin.data;
     if weighted {
         // Flat layout: one value (LANES words) per id.
         debug_assert_eq!(data.len(), ids.len() * lanes);
@@ -605,24 +799,23 @@ fn gather_bin<P: Program>(
 /// destinations become one message (value + MSB-delimited id list).
 fn scatter_sc<P: Program>(
     prog: &P,
-    graph: &Graph,
+    adj_src: AdjSource<'_>,
     parts: &Partitioner,
     grid: &BinGrid,
     active: &ActiveState,
     p: PartId,
 ) {
     use super::bins::MSG_START;
-    let csr = graph.out();
     let weighted = grid.weighted();
     // SAFETY: caller owns partition p in this phase.
     let pf = unsafe { active.part_mut(p) };
     for &v in &pf.cur {
-        let adj = csr.neighbors(v);
+        let adj = adj_src.neighbors(v);
         if adj.is_empty() {
             continue;
         }
         let val = prog.scatter(v);
-        let wts = csr.edge_weights(v);
+        let wts = adj_src.edge_weights(v);
         let mut e = 0usize;
         while e < adj.len() {
             let pj = parts.part_of(adj[e]);
@@ -670,6 +863,7 @@ fn scatter_dc<P: Program>(
     grid: &BinGrid,
     active: &ActiveState,
     p: PartId,
+    row: Option<&ooc::ScatterRow>,
 ) {
     let weighted = grid.weighted();
     let lanes = P::Msg::LANES;
@@ -687,7 +881,7 @@ fn scatter_dc<P: Program>(
         }
     }
     let scratch = &pf.scratch;
-    for &j in &meta.neighbor_parts {
+    for (ni, &j) in meta.neighbor_parts.iter().enumerate() {
         // SAFETY: row p owned by this task.
         let bin = unsafe { grid.bin_mut(p, j) };
         bin.mode = Mode::Dc;
@@ -695,20 +889,30 @@ fn scatter_dc<P: Program>(
             bin.registered = true;
             active.register_bin(p, j);
         }
+        // Paged engines stream the PNG row from the cache (segments are
+        // parallel to `neighbor_parts`); in-memory engines from the
+        // layout. DC scatter never touches `dc_ids` on either path.
         let stat = grid.stat(p, j);
+        let (srcs, cnts, wts): (&[u32], &[u32], &[f32]) = match row {
+            Some(r) => {
+                let seg = r.segment(ni);
+                (&seg.srcs, &seg.cnts, &seg.wts)
+            }
+            None => (&stat.dc_srcs, &stat.dc_cnts, &stat.dc_wts),
+        };
         let data = &mut bin.data;
         if weighted {
             let mut e = 0usize;
-            for (si, &u) in stat.dc_srcs.iter().enumerate() {
+            for (si, &u) in srcs.iter().enumerate() {
                 let val = super::bins::read_msg::<P::Msg>(scratch, (u - base) as usize * lanes);
-                let c = stat.dc_cnts[si] as usize;
+                let c = cnts[si] as usize;
                 for t in e..e + c {
-                    push_msg(data, prog.apply_weight(val, stat.dc_wts[t]));
+                    push_msg(data, prog.apply_weight(val, wts[t]));
                 }
                 e += c;
             }
         } else {
-            for &u in stat.dc_srcs.iter() {
+            for &u in srcs.iter() {
                 let s = (u - base) as usize * lanes;
                 data.push(scratch[s]);
                 if lanes == 2 {
@@ -1068,6 +1272,8 @@ mod tests {
         assert!(PpmConfig { k: Some(0), ..Default::default() }.validate().is_err());
         assert!(PpmConfig { cache_bytes: 0, ..Default::default() }.validate().is_err());
         assert!(PpmConfig { pool_cap: 0, ..Default::default() }.validate().is_err());
+        assert!(PpmConfig { mem_budget: Some(0), ..Default::default() }.validate().is_err());
+        assert!(PpmConfig { mem_budget: Some(1), ..Default::default() }.validate().is_ok());
     }
 
     #[test]
