@@ -118,6 +118,11 @@ impl ThreadPool {
     /// threads panic, the caller's own payload wins, otherwise the
     /// first worker payload is re-raised.
     pub fn run<F: Fn(usize) + Sync>(&mut self, f: F) {
+        // Every region is a new write epoch for the disjointness
+        // sanitizer (no-op unless built with `--features sanitize`):
+        // the barrier below is what legalizes same-index writes from
+        // consecutive phases.
+        crate::sanitize::epoch_advance();
         if self.n_threads == 1 {
             // No workers exist, so an unwind straight through is sound.
             f(0);
@@ -126,9 +131,9 @@ impl ThreadPool {
         self.epoch += 1;
         let n_workers = self.n_threads - 1;
         self.shared.remaining.store(n_workers, Ordering::Release);
-        // Erase the closure's lifetime; sound because we wait below —
-        // on the normal path AND before resuming any unwind.
         let ptr: *const (dyn Fn(usize) + Sync) = &f;
+        // SAFETY: erases the closure's lifetime; sound because we wait
+        // below — on the normal path AND before resuming any unwind.
         let job = JobPtr(unsafe { std::mem::transmute::<_, *const (dyn Fn(usize) + Sync)>(ptr) });
         {
             let mut slot = lock(&self.shared.job);
@@ -199,7 +204,9 @@ impl ThreadPool {
         unsafe impl<T: Send> Sync for Slots<T> {}
 
         let slots: Slots<T> = Slots((0..n_items).map(|_| UnsafeCell::new(None)).collect());
+        crate::sanitize::region_reset(slots.0.as_ptr() as usize, n_items, "map_parts");
         self.for_each_dynamic(n_items, 1, |i, _tid| {
+            crate::sanitize::claim(slots.0.as_ptr() as usize, "map_parts", i, i + 1);
             // SAFETY: index `i` is visited exactly once (see Slots).
             unsafe { *slots.0[i].get() = Some(f(i)) };
         });

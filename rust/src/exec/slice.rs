@@ -17,6 +17,9 @@ use std::marker::PhantomData;
 /// Two tasks may never access the same index (or overlapping ranges)
 /// concurrently; every access must be in bounds. The borrow `'a` keeps
 /// the underlying buffer alive and exclusively reserved for the wrapper.
+/// Under `--features sanitize` every write-side call records a claim
+/// with [`crate::sanitize`], which aborts on cross-thread overlap
+/// within a pool epoch.
 pub struct SharedSlice<'a, T> {
     ptr: *mut T,
     len: usize,
@@ -30,6 +33,7 @@ unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
     pub fn new(slice: &'a mut [T]) -> Self {
+        crate::sanitize::region_reset(slice.as_mut_ptr() as usize, slice.len(), "SharedSlice");
         Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
     }
 
@@ -50,6 +54,7 @@ impl<'a, T> SharedSlice<'a, T> {
     #[inline]
     pub unsafe fn write(&self, i: usize, value: T) {
         debug_assert!(i < self.len);
+        crate::sanitize::claim(self.ptr as usize, "SharedSlice", i, i + 1);
         *self.ptr.add(i) = value;
     }
 
@@ -61,6 +66,7 @@ impl<'a, T> SharedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
         debug_assert!(i < self.len);
+        crate::sanitize::claim(self.ptr as usize, "SharedSlice", i, i + 1);
         &mut *self.ptr.add(i)
     }
 
@@ -73,6 +79,7 @@ impl<'a, T> SharedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
         debug_assert!(lo <= hi && hi <= self.len);
+        crate::sanitize::claim(self.ptr as usize, "SharedSlice", lo, hi);
         std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
     }
 }
@@ -131,6 +138,7 @@ mod tests {
         assert!(!shared.is_empty());
         // SAFETY: single-threaded exclusive use.
         unsafe { *shared.get_mut(1) += 1 };
+        // SAFETY: still single-threaded exclusive use.
         assert_eq!(unsafe { *shared.get_mut(1) }, 6);
     }
 }

@@ -217,6 +217,8 @@ impl GraphBuilder {
                     let v = e.src as usize;
                     let slot = (offsets[v] + cur[v] as u64) as usize;
                     cur[v] += 1;
+                    // SAFETY: `slot` is globally unique (stable-rank
+                    // construction), so no two chunks write it.
                     unsafe {
                         t_slots.write(slot, e.dst);
                         if let Some(w) = &w_slots {

@@ -68,6 +68,12 @@
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); stubbed unless built with
 //!   `--features pjrt`.
+//! - [`sanitize`] — the shadow-ownership race detector behind
+//!   `--features sanitize`: epoch-stamped write claims over
+//!   `SharedSlice`/`SharedCells`/`PartitionCache` index spaces that
+//!   abort with a two-writer diagnostic on cross-thread overlap (the
+//!   machine-checked form of the disjoint-write contract; no-op and
+//!   zero-cost without the feature).
 //! - [`bench`] — a micro-benchmark harness (criterion is unavailable in
 //!   this offline environment).
 //! - [`serve`] — the `gpop serve` front-end: bounded admission queue,
@@ -96,6 +102,7 @@ pub mod ooc;
 pub mod partition;
 pub mod ppm;
 pub mod runtime;
+pub mod sanitize;
 pub mod serve;
 pub mod util;
 

@@ -45,6 +45,7 @@ pub fn measure_bandwidth(threads: usize, working_mb: usize) -> BandwidthReport {
         pool.for_each_static(n, |range, _tid| {
             let a = a_ptr;
             for i in range {
+                // SAFETY: static ranges are disjoint per thread.
                 unsafe { *a.0.add(i) = b_ref[i] + c_ref[i] };
             }
         });
@@ -80,6 +81,8 @@ pub fn measure_bandwidth(threads: usize, working_mb: usize) -> BandwidthReport {
 
 #[derive(Clone, Copy)]
 struct SharedPtr(*mut u64);
+// SAFETY: callers write provably disjoint static ranges per thread and
+// join before reading (the `for_each_static` region barrier).
 unsafe impl Send for SharedPtr {}
 unsafe impl Sync for SharedPtr {}
 

@@ -159,6 +159,16 @@ impl PartitionCache {
             work: Condvar::new(),
             counters: Counters::default(),
         });
+        // Register the row index space (3 row kinds × k partitions)
+        // with the disjointness sanitizer: row installs are claimed in
+        // `insert_ready`, so a second concurrent row writer — e.g. a
+        // future multi-IO-thread change that forgets the single-writer
+        // contract — trips it.
+        crate::sanitize::region_reset(
+            Arc::as_ptr(&inner) as usize,
+            3 * inner.store.k(),
+            "PartitionCache",
+        );
         let io_inner = Arc::clone(&inner);
         let io = std::thread::Builder::new()
             .name("gpop-ooc-io".into())
@@ -282,6 +292,8 @@ impl Inner {
     /// (so the row just loaded is the *last* eviction candidate, not the
     /// first), then evict down toward the budget and update the peak.
     fn insert_ready(&self, key: RowKey, data: RowData, prefetched: bool) {
+        let idx = row_claim_index(key, self.store.k());
+        crate::sanitize::claim(self as *const Inner as usize, "PartitionCache", idx, idx + 1);
         let bytes = data.bytes();
         let mut st = self.state.lock().unwrap();
         st.tick += 1;
@@ -330,6 +342,16 @@ impl Inner {
                 }
             }
         }
+    }
+}
+
+/// Claim-table index of a row for the `sanitize` shadow table: the
+/// three row kinds each get a `k`-wide band of the cache's index space.
+fn row_claim_index(key: RowKey, k: usize) -> usize {
+    match key {
+        RowKey::Csr(p) => p as usize,
+        RowKey::Scatter(p) => k + p as usize,
+        RowKey::Gather(j) => 2 * k + j as usize,
     }
 }
 

@@ -319,9 +319,11 @@ mod tests {
         let mut g = st.collect_gpart();
         g.sort_unstable();
         assert_eq!(g, vec![0, 2]);
+        // SAFETY: single-threaded test; no register_bin in flight.
         let mut srcs = unsafe { st.col_srcs(2) }.to_vec();
         srcs.sort_unstable();
         assert_eq!(srcs, vec![0, 1]);
+        // SAFETY: single-threaded test; no register_bin in flight.
         assert_eq!(unsafe { st.col_srcs(0) }, &[3]);
         assert_eq!(unsafe { st.col_srcs(1) }, &[] as &[u32]);
     }
@@ -335,6 +337,7 @@ mod tests {
         st.begin_iteration();
         assert!(st.collect_gpart().is_empty());
         assert!(st.collect_touched().is_empty());
+        // SAFETY: single-threaded test; no register_bin in flight.
         assert!(unsafe { st.col_srcs(1) }.is_empty());
     }
 

@@ -789,6 +789,7 @@ mod tests {
         let mut g2 = BinGrid::from_layout(layout.clone());
         assert_eq!(layout_builds(), before + 1, "grids must not re-run pre-processing");
         // Mutable halves are independent; static halves are shared.
+        // SAFETY: single-threaded test; g1 is exclusively held here.
         unsafe { g1.bin_mut(0, 1) }.data.push(7);
         assert_eq!(g1.bin_ref(0, 1).data, vec![7]);
         assert!(g2.bin_ref(0, 1).data.is_empty());

@@ -500,6 +500,7 @@ impl Engine {
                 let (cur_edges, use_dc) = plan[idx];
                 let meta = grid.meta(p);
                 for &j in &meta.neighbor_parts {
+                    // SAFETY: row p is owned by this task (see above).
                     unsafe { grid.bin_mut(p, j) }.clear();
                 }
                 if cur_edges > 0 {
@@ -533,6 +534,7 @@ impl Engine {
                 }
                 // initFrontier step (paper §4: called once per active
                 // vertex; may keep it active and update vertex data).
+                // SAFETY: partition p's frontier is owned by this task.
                 let pf = unsafe { active.part_mut(p) };
                 let base = parts.range(p).start;
                 for i in 0..pf.cur.len() {
@@ -567,6 +569,8 @@ impl Engine {
                 let base = parts.range(j).start;
                 let mut local_msgs = 0u64;
                 let mut local_bytes = 0u64;
+                // SAFETY: the scatter phase (all register_bin calls)
+                // completed at the region barrier before gather began.
                 let srcs = unsafe { active.col_srcs(j) };
                 // Paged engines read pre-written destination ids from the
                 // cache; the column is checked out once per task — and
@@ -584,6 +588,8 @@ impl Engine {
                     _ => None,
                 };
                 for &i in srcs {
+                    // SAFETY: column j is owned by this task; no row
+                    // writer is active in the gather phase.
                     let bin = unsafe { grid.bin(i as PartId, j) };
                     let ids: &[u32] = match bin.mode {
                         Mode::Sc => &bin.ids,

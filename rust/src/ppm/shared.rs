@@ -17,7 +17,9 @@ use std::cell::UnsafeCell;
 /// for `i != j`, and never concurrently with `get_mut(i)` or `get(i)`.
 /// The PPM engine upholds this by assigning disjoint partitions (bin
 /// rows/columns) to threads within each phase, with a barrier between
-/// phases.
+/// phases. Under `--features sanitize` every `get_mut` records a claim
+/// with [`crate::sanitize`], which aborts on cross-thread overlap
+/// within a pool epoch.
 pub struct SharedCells<T> {
     cells: Box<[UnsafeCell<T>]>,
 }
@@ -29,9 +31,10 @@ unsafe impl<T: Send> Send for SharedCells<T> {}
 
 impl<T> SharedCells<T> {
     pub fn from_vec(v: Vec<T>) -> Self {
-        Self {
-            cells: v.into_iter().map(UnsafeCell::new).collect::<Vec<_>>().into_boxed_slice(),
-        }
+        let cells: Box<[UnsafeCell<T>]> =
+            v.into_iter().map(UnsafeCell::new).collect::<Vec<_>>().into_boxed_slice();
+        crate::sanitize::region_reset(cells.as_ptr() as usize, cells.len(), "SharedCells");
+        Self { cells }
     }
 
     pub fn new_with(n: usize, mut f: impl FnMut(usize) -> T) -> Self {
@@ -56,6 +59,7 @@ impl<T> SharedCells<T> {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        crate::sanitize::claim(self.cells.as_ptr() as usize, "SharedCells", i, i + 1);
         &mut *self.cells[i].get()
     }
 
@@ -159,6 +163,7 @@ mod tests {
             }
         });
         for i in 0..64 {
+            // SAFETY: the writer threads joined at the scope's end.
             assert_eq!(unsafe { *cells.get(i) }, i as u64 + 1);
         }
     }
@@ -169,6 +174,7 @@ mod tests {
         for c in cells.iter_mut() {
             *c *= 2;
         }
+        // SAFETY: single-threaded; no mutation in flight.
         assert_eq!(unsafe { *cells.get(3) }, 6);
         assert_eq!(*cells.get_mut_safe(4), 8);
     }

@@ -1,0 +1,129 @@
+//! The shadow claim table (compiled only with `--features sanitize`).
+//!
+//! One global table maps a region base address (a buffer wrapped by
+//! `SharedSlice`/`SharedCells`, or a `PartitionCache`'s row index
+//! space) to per-index stamps `(epoch, writer, claimed range)`. A claim
+//! over `[lo, hi)` stamps every index; finding a stamp from another
+//! thread with the current epoch is a disjointness violation and
+//! panics with both writers identified. Per-index stamping makes each
+//! claim O(range length) with O(1) conflict checks — no interval-list
+//! scans — which keeps the full engine test matrix tractable under the
+//! feature.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Global write epoch. Pool regions advance it; claims in different
+/// epochs never conflict (the region barrier orders them).
+static EPOCH: AtomicU64 = AtomicU64::new(1);
+
+static NEXT_WRITER: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static WRITER: Cell<Option<u32>> = const { Cell::new(None) };
+}
+
+struct Stamp {
+    epoch: u64,
+    writer: u32,
+    lo: usize,
+    hi: usize,
+}
+
+struct Region {
+    label: &'static str,
+    len: usize,
+    stamps: HashMap<usize, Stamp>,
+}
+
+struct Table {
+    regions: HashMap<usize, Region>,
+    /// writer token -> human-readable thread description (for the
+    /// two-writer diagnostic; the conflicting thread is not running
+    /// when we report, so its name must be on file).
+    writers: HashMap<u32, String>,
+}
+
+static TABLE: OnceLock<Mutex<Table>> = OnceLock::new();
+
+/// The sanitizer must keep functioning after it panics once (the
+/// seeded-race test catches the unwind and other tests share the
+/// global), so poisoning is shrugged off like `exec::pool` does.
+fn table() -> MutexGuard<'static, Table> {
+    TABLE
+        .get_or_init(|| Mutex::new(Table { regions: HashMap::new(), writers: HashMap::new() }))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// This thread's writer token, registering its description on first use.
+fn writer_token(table: &mut Table) -> u32 {
+    WRITER.with(|w| match w.get() {
+        Some(t) => t,
+        None => {
+            let t = NEXT_WRITER.fetch_add(1, Ordering::Relaxed);
+            let cur = std::thread::current();
+            let name = cur.name().map(str::to_owned).unwrap_or_else(|| format!("{:?}", cur.id()));
+            table.writers.insert(t, format!("thread #{t} '{name}'"));
+            w.set(Some(t));
+            t
+        }
+    })
+}
+
+/// Advance the write epoch. Called by every `ThreadPool::run` region
+/// (including the single-thread inline path): the region barrier is
+/// what makes same-index writes from different phases legal.
+pub fn epoch_advance() {
+    EPOCH.fetch_add(1, Ordering::SeqCst);
+}
+
+/// (Re-)register the region starting at `base` with `len` claimable
+/// indices, dropping any stale stamps. Constructors call this so a
+/// freed buffer reallocated at the same address cannot inherit claims.
+pub fn region_reset(base: usize, len: usize, label: &'static str) {
+    let mut t = table();
+    t.regions.insert(base, Region { label, len, stamps: HashMap::new() });
+}
+
+/// Record a write claim over indices `[lo, hi)` of the region at
+/// `base`. Panics with a two-writer diagnostic if any index is already
+/// claimed by a different thread in the current epoch.
+pub fn claim(base: usize, label: &'static str, lo: usize, hi: usize) {
+    if lo >= hi {
+        return;
+    }
+    let epoch = EPOCH.load(Ordering::SeqCst);
+    let mut t = table();
+    let me = writer_token(&mut t);
+    let t = &mut *t;
+    let region = t
+        .regions
+        .entry(base)
+        .or_insert_with(|| Region { label, len: hi, stamps: HashMap::new() });
+    region.len = region.len.max(hi);
+    for i in lo..hi {
+        if let Some(prev) = region.stamps.get(&i) {
+            if prev.epoch == epoch && prev.writer != me {
+                let mine = t.writers.get(&me).cloned().unwrap_or_else(|| format!("#{me}"));
+                let theirs = t
+                    .writers
+                    .get(&prev.writer)
+                    .cloned()
+                    .unwrap_or_else(|| format!("#{}", prev.writer));
+                let (plo, phi) = (prev.lo, prev.hi);
+                let rlabel = region.label;
+                let rlen = region.len;
+                panic!(
+                    "sanitize: overlapping write claim on {rlabel}[{i}] \
+                     (region 0x{base:x}, len {rlen}, epoch {epoch}): {mine} claimed \
+                     [{lo}, {hi}) but {theirs} already claimed [{plo}, {phi}) \
+                     in the same epoch — the disjoint-write contract is broken"
+                );
+            }
+        }
+        region.stamps.insert(i, Stamp { epoch, writer: me, lo, hi });
+    }
+}

@@ -1,0 +1,59 @@
+//! Shadow-ownership sanitizer for GPOP's disjoint-write contracts.
+//!
+//! The engine's "completely lock and atomic free" hot path (paper §3)
+//! rests on *unchecked* invariants: within a phase every
+//! [`SharedSlice`](crate::exec::SharedSlice) index,
+//! [`SharedCells`](crate::ppm::shared::SharedCells) cell (bin rows and
+//! columns, per-partition frontiers, `ConcurrentList` slots) and
+//! [`PartitionCache`](crate::ooc::PartitionCache) row is written by at
+//! most one thread, with [`ThreadPool::run`](crate::exec::ThreadPool::run)
+//! barriers separating phases. Nothing in a normal build verifies that.
+//!
+//! Built with `--features sanitize`, this module gives the contract
+//! teeth: every write-side acquisition records a `(thread, epoch,
+//! range)` claim in a process-global shadow table, pool regions advance
+//! the epoch (the barrier makes cross-epoch overlap legal), and two
+//! claims on the same index from *different threads within one epoch*
+//! abort with a diagnostic naming both writers and both ranges. Without
+//! the feature every hook is an empty `#[inline(always)]` function —
+//! release builds carry no shadow-tracking code in the scatter/gather
+//! path (the CI lint job greps the release binary to pin this).
+//!
+//! Run the engine matrix under it with:
+//!
+//! ```text
+//! cargo test --features sanitize --test prop_engine --test preprocess \
+//!     --test ooc --test sanitize
+//! ```
+//!
+//! Known (accepted) imprecision: the epoch counter is process-global,
+//! so a *concurrent* pool in another test advancing it mid-region can
+//! split one region across epochs and mask an overlap — a missed
+//! detection, never a false alarm (`rust/tests/sanitize.rs` retries its
+//! seeded race for this reason). Reads are not tracked; the sanitizer
+//! checks write/write disjointness, which is the invariant all the
+//! `unsafe` here is justified by.
+
+#[cfg(feature = "sanitize")]
+mod claims;
+
+#[cfg(feature = "sanitize")]
+pub use claims::{claim, epoch_advance, region_reset};
+
+#[cfg(not(feature = "sanitize"))]
+mod off {
+    /// No-op: the `sanitize` feature is disabled.
+    #[inline(always)]
+    pub fn epoch_advance() {}
+
+    /// No-op: the `sanitize` feature is disabled.
+    #[inline(always)]
+    pub fn region_reset(_base: usize, _len: usize, _label: &'static str) {}
+
+    /// No-op: the `sanitize` feature is disabled.
+    #[inline(always)]
+    pub fn claim(_base: usize, _label: &'static str, _lo: usize, _hi: usize) {}
+}
+
+#[cfg(not(feature = "sanitize"))]
+pub use off::{claim, epoch_advance, region_reset};

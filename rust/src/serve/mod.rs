@@ -21,8 +21,9 @@
 //!   a `(damping, max_iters)` param-group) into single
 //!   [`Runner::run_batch`](crate::api::Runner::run_batch) calls, and
 //!   answer each submitter with per-query timing.
-//! - [`server`] — the Unix/TCP socket front door plus the
-//!   SIGTERM/SIGINT latch used by the CLI.
+//! - [`server`] — the Unix/TCP socket front door.
+//! - [`signals`] — the SIGTERM/SIGINT latch used by the CLI (the only
+//!   module besides `ooc::mmap` allowed to declare `extern "C"`).
 //!
 //! Lifecycle guarantees: a full queue returns a typed
 //! [`SubmitError::Overloaded`] (never a panic, never a silent drop);
@@ -37,6 +38,7 @@ pub mod protocol;
 pub mod queue;
 pub mod serve_loop;
 pub mod server;
+pub mod signals;
 
 pub use gate::{AdmissionGate, DrainGuard, GatePermit};
 pub use hist::Hist;
@@ -46,4 +48,4 @@ pub use protocol::{
 };
 pub use queue::{BoundedQueue, PushError};
 pub use serve_loop::{ServeConfig, ServeHandle, ServeLoop, ServeStats, SubmitError};
-pub use server::{send_lines, signals, Endpoint, Server, ServerSocket};
+pub use server::{send_lines, Endpoint, Server, ServerSocket};

@@ -22,6 +22,7 @@ use std::time::Duration;
 
 use super::protocol::{parse_request, Request, Response};
 use super::serve_loop::ServeHandle;
+use super::signals;
 
 /// Accept-loop poll interval (shutdown latency bound).
 const ACCEPT_POLL_MS: u64 = 25;
@@ -282,49 +283,6 @@ fn is_poll_timeout(e: &std::io::Error) -> bool {
 fn write_line(w: &mut impl Write, line: &str) -> std::io::Result<()> {
     writeln!(w, "{line}")?;
     w.flush()
-}
-
-/// Process-global SIGTERM/SIGINT latch. [`install`](signals::install)
-/// is called ONLY by the `gpop serve` CLI path — tests and library
-/// users drive [`Server::stop_flag`] instead, so a test runner's
-/// signal handling is never disturbed.
-#[cfg(unix)]
-pub mod signals {
-    use std::sync::atomic::{AtomicBool, Ordering};
-
-    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
-
-    extern "C" fn on_signal(_signum: i32) {
-        // An atomic store is async-signal-safe.
-        SHUTDOWN.store(true, Ordering::SeqCst);
-    }
-
-    /// Latch SIGTERM and SIGINT into a clean-shutdown request. The std
-    /// runtime already links `signal(2)`; no new dependency.
-    pub fn install() {
-        const SIGINT: i32 = 2;
-        const SIGTERM: i32 = 15;
-        extern "C" {
-            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
-        }
-        unsafe {
-            signal(SIGINT, on_signal);
-            signal(SIGTERM, on_signal);
-        }
-    }
-
-    pub fn requested() -> bool {
-        SHUTDOWN.load(Ordering::SeqCst)
-    }
-}
-
-#[cfg(not(unix))]
-pub mod signals {
-    pub fn install() {}
-
-    pub fn requested() -> bool {
-        false
-    }
 }
 
 #[cfg(test)]

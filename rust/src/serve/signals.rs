@@ -1,0 +1,53 @@
+//! Process-global SIGTERM/SIGINT latch. [`install`] is called ONLY by
+//! the `gpop serve` CLI path — tests and library users drive
+//! [`Server::stop_flag`](crate::serve::Server::stop_flag) instead, so a
+//! test runner's signal handling is never disturbed.
+//!
+//! This is deliberately the only module besides `ooc::mmap` allowed to
+//! declare `extern "C"` items (enforced by `gpop-lint`); keeping the
+//! raw libc surface in two auditable files is part of the unsafe
+//! policy (README §"Static analysis & sanitizers").
+
+#[cfg(unix)]
+mod imp {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_signum: i32) {
+        // An atomic store is async-signal-safe.
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    /// Latch SIGTERM and SIGINT into a clean-shutdown request. The std
+    /// runtime already links `signal(2)`; no new dependency.
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        // SAFETY: `signal(2)` with a handler that only performs an
+        // async-signal-safe atomic store; replacing the process
+        // disposition for SIGINT/SIGTERM is the CLI's documented intent.
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+pub use imp::{install, requested};

@@ -1,0 +1,34 @@
+//! Fixture: code every rule accepts — annotated unsafe in an
+//! allowlisted non-hot file, a Mutex outside any hot path, `unsafe`
+//! mentioned only in comments and strings, and a `/// # Safety` doc
+//! section on an unsafe fn. Never compiled — parsed by the gpop-lint
+//! unit tests only.
+
+use std::sync::Mutex;
+
+// This comment mentions unsafe and extern "C" without tripping anything.
+pub const NOTE: &str = "unsafe extern Mutex inside a string literal";
+
+pub struct Slots {
+    inner: Mutex<Vec<u64>>,
+}
+
+impl Slots {
+    pub fn push(&self, v: u64) {
+        self.inner.lock().unwrap().push(v);
+    }
+}
+
+/// Reads slot `i` without bounds checking.
+///
+/// # Safety
+/// `i` must be in bounds.
+#[inline]
+pub unsafe fn slot_unchecked(v: &[u64], i: usize) -> u64 {
+    *v.get_unchecked(i)
+}
+
+pub fn first(v: &[u64]) -> u64 {
+    // SAFETY: the caller guarantees `v` is non-empty.
+    unsafe { slot_unchecked(v, 0) }
+}

@@ -1,0 +1,28 @@
+//! Fixture: synchronization primitives inside a hot-path fn body.
+//! `scatter_hot` is in the exempt list; `gather_cold` is not, and its
+//! AtomicU64, Mutex, and unsafe uses must each be flagged. Never
+//! compiled — parsed by the gpop-lint unit tests only.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct Counters {
+    // A field type is a declaration, not hot-path work: not flagged.
+    total: AtomicU64,
+}
+
+pub fn scatter_hot(c: &Counters) -> u64 {
+    // Exempt fn: allowed to touch atomics.
+    let bias = AtomicU64::new(1);
+    c.total.fetch_add(bias.load(Ordering::Relaxed), Ordering::Relaxed)
+}
+
+pub fn gather_cold(c: &Counters) -> u64 {
+    let local = AtomicU64::new(0);
+    let m = Mutex::new(0u64);
+    let held = *m.lock().unwrap();
+    let seen = c.total.load(Ordering::Relaxed);
+    // SAFETY: annotated, but hot-path still forbids it here.
+    let first = unsafe { *[held, seen].as_ptr() };
+    first + local.load(Ordering::Relaxed)
+}

@@ -1,0 +1,8 @@
+//! Fixture: an `unsafe` block with no SAFETY comment anywhere above it.
+//! Never compiled — parsed by the gpop-lint unit tests only.
+
+pub fn read_first(v: &[u32]) -> u32 {
+    let p = v.as_ptr();
+
+    unsafe { *p }
+}

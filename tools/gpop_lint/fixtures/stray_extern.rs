@@ -1,0 +1,11 @@
+//! Fixture: an `extern "C"` declaration outside the two audited libc
+//! surfaces. Never compiled — parsed by the gpop-lint unit tests only.
+
+extern "C" {
+    fn getpid() -> i32;
+}
+
+pub fn pid() -> i32 {
+    // SAFETY: getpid(2) has no preconditions.
+    unsafe { getpid() }
+}

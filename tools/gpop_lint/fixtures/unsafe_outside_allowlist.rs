@@ -1,0 +1,8 @@
+//! Fixture: a correctly annotated `unsafe` block in a file that is not
+//! in `[unsafe_allowlist]`. Never compiled — parsed by the gpop-lint
+//! unit tests only.
+
+pub fn read_first(v: &[u32]) -> u32 {
+    // SAFETY: the slice is non-empty by the caller's contract.
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,702 @@
+//! gpop-lint — the unsafe-hygiene gate for GPOP's lock-free claim.
+//!
+//! The engine's performance story rests on `unsafe` disjoint-write
+//! contracts; this dependency-free scanner (hand-rolled in the style of
+//! `benches/common/bench_compare.rs`) walks `rust/src/**` and enforces
+//! the policy configured in `lint.toml`:
+//!
+//! - **missing-safety** — every `unsafe` occurrence (block, fn, impl)
+//!   must be preceded by a `// SAFETY:` comment (or a `/// # Safety`
+//!   doc section) in the contiguous comment/attribute block directly
+//!   above it. Consecutive `unsafe` lines (e.g. paired
+//!   `unsafe impl Send/Sync`) may share one comment.
+//! - **unsafe-allowlist** — `unsafe` may appear only in the module set
+//!   listed under `[unsafe_allowlist]`.
+//! - **hot-path** — inside the per-iteration hot-path files
+//!   (`[hot_path].files`) no fn body may use `Mutex`/`RwLock`/
+//!   `Atomic*`/`unsafe`, except the scatter/gather fns enumerated in
+//!   `[hot_path].exempt_fns` — the machine-checked form of the paper's
+//!   "completely lock and atomic free computation" claim.
+//! - **extern-c** — `extern` declarations only in `[extern_c].files`
+//!   (the two audited libc surfaces: `ooc/mmap.rs`, `serve/signals.rs`).
+//!
+//! The scanner tokenizes before matching, so `unsafe` inside comments
+//! or string literals never trips a rule, and char literals like `'{'`
+//! cannot desynchronize the fn-body brace tracking.
+//!
+//! Exit code 0 when clean, 1 with one `path:line: [rule] message` per
+//! violation otherwise. Run locally with:
+//!
+//! ```text
+//! cargo run --release --bin gpop-lint
+//! ```
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+// ---------------------------------------------------------------------
+// Configuration (a minimal TOML subset: sections + string arrays)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default, Clone)]
+struct Config {
+    /// Files allowed to contain `unsafe` at all.
+    unsafe_files: Vec<String>,
+    /// Per-iteration hot-path files (no sync primitives in fn bodies).
+    hot_files: Vec<String>,
+    /// Hot-path fns exempted by name (the scatter/gather core).
+    hot_exempt_fns: Vec<String>,
+    /// Files allowed to declare `extern` items.
+    extern_files: Vec<String>,
+}
+
+fn quoted_strings(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = s;
+    while let Some(start) = rest.find('"') {
+        let tail = &rest[start + 1..];
+        match tail.find('"') {
+            Some(end) => {
+                out.push(tail[..end].to_string());
+                rest = &tail[end + 1..];
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+fn parse_config(text: &str) -> Result<Config, String> {
+    let mut cfg = Config::default();
+    let mut section = String::new();
+    let mut open_key: Option<String> = None;
+    let mut vals: Vec<String> = Vec::new();
+    for (n, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(key) = open_key.clone() {
+            vals.extend(quoted_strings(line));
+            if line.contains(']') {
+                assign(&mut cfg, &section, &key, std::mem::take(&mut vals))
+                    .map_err(|e| format!("line {}: {e}", n + 1))?;
+                open_key = None;
+            }
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected `key = [...]`", n + 1))?;
+        let (key, value) = (key.trim().to_string(), value.trim());
+        if !value.starts_with('[') {
+            return Err(format!("line {}: only string-array values are supported", n + 1));
+        }
+        vals = quoted_strings(value);
+        if value.ends_with(']') {
+            assign(&mut cfg, &section, &key, std::mem::take(&mut vals))
+                .map_err(|e| format!("line {}: {e}", n + 1))?;
+        } else {
+            open_key = Some(key);
+        }
+    }
+    if open_key.is_some() {
+        return Err("unterminated array".to_string());
+    }
+    Ok(cfg)
+}
+
+fn assign(cfg: &mut Config, section: &str, key: &str, vals: Vec<String>) -> Result<(), String> {
+    match (section, key) {
+        ("unsafe_allowlist", "files") => cfg.unsafe_files = vals,
+        ("hot_path", "files") => cfg.hot_files = vals,
+        ("hot_path", "exempt_fns") => cfg.hot_exempt_fns = vals,
+        ("extern_c", "files") => cfg.extern_files = vals,
+        _ => return Err(format!("unknown config entry [{section}].{key}")),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Tokenization: split each line into code and comment halves
+// ---------------------------------------------------------------------
+
+/// One source line with string/char-literal contents blanked out of the
+/// code half and comment text (line or block) collected separately.
+#[derive(Default)]
+struct Line {
+    code: String,
+    comment: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn split_lines(src: &str) -> Vec<Line> {
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+    }
+    let b: Vec<char> = src.chars().collect();
+    let mut lines = vec![Line::default()];
+    let mut st = St::Code;
+    let mut prev_ident = false;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            lines.push(Line::default());
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        let cur = lines.last_mut().expect("line buffer");
+        match st {
+            St::Code => {
+                if c == '/' && b.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && b.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    st = St::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                // Raw (and byte) string openers: r"…", r#"…"#, br"…".
+                if (c == 'r' || c == 'b') && !prev_ident {
+                    let mut j = i + 1;
+                    if c == 'b' && b.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    if c == 'r' || j > i + 1 {
+                        let mut hashes = 0u32;
+                        while b.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if b.get(j) == Some(&'"') {
+                            st = St::RawStr(hashes);
+                            cur.code.push(' ');
+                            prev_ident = false;
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '\'' {
+                    // Char literal vs lifetime: a lifetime's quote is
+                    // never closed by a quote 0–1 chars later (modulo
+                    // escapes, which only occur in char literals).
+                    if b.get(i + 1) == Some(&'\\') {
+                        i += 2; // opening quote + backslash
+                        while i < b.len() && b[i] != '\'' && b[i] != '\n' {
+                            i += if b[i] == '\\' { 2 } else { 1 };
+                        }
+                        cur.code.push(' ');
+                        prev_ident = false;
+                        i += 1; // closing quote
+                        continue;
+                    }
+                    if b.get(i + 2) == Some(&'\'') && b.get(i + 1) != Some(&'\'') {
+                        cur.code.push(' ');
+                        prev_ident = false;
+                        i += 3;
+                        continue;
+                    }
+                    // Lifetime: blank the quote, keep the ident.
+                    cur.code.push(' ');
+                    prev_ident = false;
+                    i += 1;
+                    continue;
+                }
+                cur.code.push(c);
+                prev_ident = is_ident(c);
+                i += 1;
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                if c == '*' && b.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                    i += 2;
+                } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(d + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // Never swallow a newline (a `\`-continuation):
+                    // line numbering must stay intact.
+                    i += if b.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else {
+                    if c == '"' {
+                        st = St::Code;
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|k| b.get(i + k as usize) == Some(&'#')) {
+                    st = St::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines
+}
+
+// ---------------------------------------------------------------------
+// Interest tokens with enclosing-fn attribution
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Tok {
+    /// 0-based line index.
+    line: usize,
+    word: String,
+    /// Name of the innermost named fn whose body contains this token
+    /// (None at module/impl scope — declarations, statics, fields).
+    in_fn: Option<String>,
+}
+
+fn interesting(word: &str) -> bool {
+    word == "unsafe"
+        || word == "extern"
+        || word.starts_with("Mutex")
+        || word.starts_with("RwLock")
+        || word.starts_with("Atomic")
+}
+
+fn interest_tokens(lines: &[Line]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut depth: i64 = 0;
+    let mut brackets: i64 = 0;
+    // (fn name, brace depth at which its body opened).
+    let mut frames: Vec<(String, i64)> = Vec::new();
+    // Some(None): saw `fn`, awaiting its name. Some(Some(name)):
+    // awaiting the body `{` (or a `;` for a bodiless declaration).
+    let mut pending: Option<Option<String>> = None;
+    for (ln, line) in lines.iter().enumerate() {
+        let chars: Vec<char> = line.code.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            if c.is_ascii_alphabetic() || c == '_' {
+                let start = i;
+                while i < chars.len() && is_ident(chars[i]) {
+                    i += 1;
+                }
+                let word: String = chars[start..i].iter().collect();
+                if word == "fn" {
+                    pending = Some(None);
+                } else if pending == Some(None) {
+                    pending = Some(Some(word.clone()));
+                }
+                if interesting(&word) {
+                    let in_fn = frames.last().map(|(n, _)| n.clone());
+                    toks.push(Tok { line: ln, word, in_fn });
+                }
+                continue;
+            }
+            match c {
+                '{' => {
+                    if let Some(Some(name)) = pending.take() {
+                        frames.push((name, depth));
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    while frames.last().is_some_and(|f| f.1 >= depth) {
+                        frames.pop();
+                    }
+                }
+                '[' => brackets += 1,
+                ']' => brackets -= 1,
+                ';' => {
+                    if brackets == 0 {
+                        pending = None;
+                    }
+                }
+                ' ' | '\t' => {}
+                _ => {
+                    // `fn` not followed by an identifier is a fn-pointer
+                    // type (`fn(i32)`), never an item with a body.
+                    if pending == Some(None) {
+                        pending = None;
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+    toks
+}
+
+// ---------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Violation {
+    /// 1-based line number.
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn is_safety(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+/// Walk the contiguous comment/attribute block (and any `unsafe` group
+/// lines) directly above `ln` looking for a SAFETY marker.
+fn has_safety_comment(lines: &[Line], ln: usize, unsafe_lines: &BTreeSet<usize>) -> bool {
+    if is_safety(&lines[ln].comment) {
+        return true;
+    }
+    let mut l = ln;
+    while l > 0 {
+        l -= 1;
+        if is_safety(&lines[l].comment) {
+            return true;
+        }
+        let code = lines[l].code.trim();
+        let comment_only = code.is_empty() && !lines[l].comment.trim().is_empty();
+        let attribute = code.starts_with("#[") || code.starts_with("#!");
+        if comment_only || attribute || unsafe_lines.contains(&l) {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+fn check_file(rel: &str, src: &str, cfg: &Config) -> Vec<Violation> {
+    let lines = split_lines(src);
+    let toks = interest_tokens(&lines);
+    let unsafe_lines: BTreeSet<usize> =
+        toks.iter().filter(|t| t.word == "unsafe").map(|t| t.line).collect();
+    let mut out = Vec::new();
+
+    for &ln in &unsafe_lines {
+        if !has_safety_comment(&lines, ln, &unsafe_lines) {
+            out.push(Violation {
+                line: ln + 1,
+                rule: "missing-safety",
+                msg: "`unsafe` without a `// SAFETY:` (or `/// # Safety`) comment directly above"
+                    .to_string(),
+            });
+        }
+    }
+
+    if !unsafe_lines.is_empty() && !cfg.unsafe_files.iter().any(|f| f == rel) {
+        out.push(Violation {
+            line: unsafe_lines.iter().next().copied().unwrap_or(0) + 1,
+            rule: "unsafe-allowlist",
+            msg: "`unsafe` in a file outside lint.toml's [unsafe_allowlist]".to_string(),
+        });
+    }
+
+    if cfg.hot_files.iter().any(|f| f == rel) {
+        for t in &toks {
+            if t.word == "extern" {
+                continue;
+            }
+            if let Some(name) = &t.in_fn {
+                if !cfg.hot_exempt_fns.iter().any(|f| f == name) {
+                    out.push(Violation {
+                        line: t.line + 1,
+                        rule: "hot-path",
+                        msg: format!(
+                            "`{}` inside hot-path fn `{name}` (not in [hot_path].exempt_fns)",
+                            t.word
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    if !cfg.extern_files.iter().any(|f| f == rel) {
+        for t in toks.iter().filter(|t| t.word == "extern") {
+            out.push(Violation {
+                line: t.line + 1,
+                rule: "extern-c",
+                msg: "`extern` declaration in a file outside lint.toml's [extern_c]".to_string(),
+            });
+        }
+    }
+
+    out.sort_by_key(|v| (v.line, v.rule));
+    out
+}
+
+// ---------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries = std::fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn run(root: &Path, config_path: &Path) -> Result<usize, String> {
+    let text = std::fs::read_to_string(config_path)
+        .map_err(|e| format!("cannot read {}: {e}", config_path.display()))?;
+    let cfg = parse_config(&text).map_err(|e| format!("{}: {e}", config_path.display()))?;
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    rust_files(&src_root, &mut files)
+        .map_err(|e| format!("cannot walk {}: {e}", src_root.display()))?;
+    let mut n_violations = 0usize;
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        for v in check_file(&rel, &src, &cfg) {
+            println!("{rel}:{}: [{}] {}", v.line, v.rule, v.msg);
+            n_violations += 1;
+        }
+    }
+    println!(
+        "gpop-lint: {} files scanned, {}",
+        files.len(),
+        if n_violations == 0 {
+            "clean".to_string()
+        } else {
+            format!("{n_violations} violation(s)")
+        }
+    );
+    Ok(n_violations)
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut config: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => {
+                    eprintln!("--root needs a value");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--config" => match args.next() {
+                Some(v) => config = Some(PathBuf::from(v)),
+                None => {
+                    eprintln!("--config needs a value");
+                    return ExitCode::FAILURE;
+                }
+            },
+            other => {
+                eprintln!("unknown argument: {other}");
+                eprintln!("usage: gpop-lint [--root DIR] [--config lint.toml]");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let config = config.unwrap_or_else(|| root.join("lint.toml"));
+    match run(&root, &config) {
+        Ok(0) => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("gpop-lint: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tests: one fixture per rule plus a clean pass, and tokenizer edges
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MISSING_SAFETY: &str = include_str!("fixtures/missing_safety.rs");
+    const OUTSIDE_ALLOWLIST: &str = include_str!("fixtures/unsafe_outside_allowlist.rs");
+    const HOT_PATH_ATOMIC: &str = include_str!("fixtures/hot_path_atomic.rs");
+    const STRAY_EXTERN: &str = include_str!("fixtures/stray_extern.rs");
+    const CLEAN: &str = include_str!("fixtures/clean.rs");
+
+    /// A config under which only the rule a fixture seeds can fire.
+    fn fixture_config() -> Config {
+        Config {
+            unsafe_files: vec![
+                "fixtures/missing_safety.rs".into(),
+                "fixtures/hot_path_atomic.rs".into(),
+                "fixtures/stray_extern.rs".into(),
+                "fixtures/clean.rs".into(),
+            ],
+            hot_files: vec!["fixtures/hot_path_atomic.rs".into()],
+            hot_exempt_fns: vec!["scatter_hot".into()],
+            extern_files: vec![],
+        }
+    }
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        check_file(rel, src, &fixture_config()).iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn missing_safety_fixture_fails_only_that_rule() {
+        let got = rules("fixtures/missing_safety.rs", MISSING_SAFETY);
+        assert!(got.contains(&"missing-safety"), "got {got:?}");
+        assert!(got.iter().all(|r| *r == "missing-safety"), "got {got:?}");
+    }
+
+    #[test]
+    fn unsafe_outside_allowlist_fixture_fails_only_that_rule() {
+        let got = rules("fixtures/unsafe_outside_allowlist.rs", OUTSIDE_ALLOWLIST);
+        assert_eq!(got, vec!["unsafe-allowlist"], "annotated unsafe, but file not allowlisted");
+    }
+
+    #[test]
+    fn hot_path_fixture_flags_atomic_mutex_and_unsafe_but_not_exempt_fn() {
+        let vs = check_file("fixtures/hot_path_atomic.rs", HOT_PATH_ATOMIC, &fixture_config());
+        let hot: Vec<_> = vs.iter().filter(|v| v.rule == "hot-path").collect();
+        assert_eq!(hot.len(), 3, "AtomicU64 + Mutex + unsafe in gather_cold: {vs:?}");
+        assert!(hot.iter().all(|v| v.msg.contains("gather_cold")), "{hot:?}");
+    }
+
+    #[test]
+    fn stray_extern_fixture_fails_extern_rule() {
+        let got = rules("fixtures/stray_extern.rs", STRAY_EXTERN);
+        assert!(got.contains(&"extern-c"), "got {got:?}");
+    }
+
+    #[test]
+    fn clean_fixture_passes_every_rule() {
+        let vs = check_file("fixtures/clean.rs", CLEAN, &fixture_config());
+        assert!(vs.is_empty(), "clean fixture must have no violations: {vs:?}");
+    }
+
+    #[test]
+    fn comments_and_strings_never_count_as_unsafe() {
+        let src = "// this unsafe word is a comment\nlet s = \"unsafe in a string\";\n";
+        let vs = check_file("x.rs", src, &fixture_config());
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn char_literal_braces_do_not_break_fn_tracking() {
+        let src = "fn f() {\n    let c = '{';\n    let m = MutexLike;\n}\n";
+        let toks = interest_tokens(&split_lines(src));
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].in_fn.as_deref(), Some("f"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn g<'a>(x: &'a str) -> &'a str {\n    let u = AtomicUsize::new(0);\n    x\n}\n";
+        let toks = interest_tokens(&split_lines(src));
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].word, "AtomicUsize");
+        assert_eq!(toks[0].in_fn.as_deref(), Some("g"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "fn h() {\n    let s = r#\"unsafe { Mutex }\"#;\n    let t = 1;\n}\n";
+        let toks = interest_tokens(&split_lines(src));
+        assert!(toks.is_empty(), "{toks:?}");
+    }
+
+    #[test]
+    fn fn_pointer_types_do_not_open_frames() {
+        let src = "struct S {\n    cb: fn(usize) -> usize,\n}\nfn real() {\n    let m = Mutex2;\n}\n";
+        let toks = interest_tokens(&split_lines(src));
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].in_fn.as_deref(), Some("real"));
+    }
+
+    #[test]
+    fn tokens_outside_fn_bodies_have_no_owner() {
+        let src = "use std::sync::atomic::AtomicU64;\nstruct S {\n    c: AtomicU64,\n}\n";
+        let toks = interest_tokens(&split_lines(src));
+        assert_eq!(toks.len(), 2);
+        assert!(toks.iter().all(|t| t.in_fn.is_none()), "{toks:?}");
+    }
+
+    #[test]
+    fn doc_safety_section_satisfies_missing_safety() {
+        let src = "/// Does things.\n///\n/// # Safety\n/// Caller checks i.\n#[inline]\npub unsafe fn w(i: usize) {\n    let _ = i;\n}\n";
+        let got = rules("fixtures/clean.rs", src);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn grouped_unsafe_impls_share_one_safety_comment() {
+        let src = "// SAFETY: disjoint access discipline.\nunsafe impl Sync for X {}\nunsafe impl Send for X {}\n";
+        let got = rules("fixtures/clean.rs", src);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn blank_line_breaks_the_safety_block() {
+        let src = "// SAFETY: stale comment.\n\nunsafe fn w() {}\n";
+        let got = rules("fixtures/clean.rs", src);
+        assert_eq!(got, vec!["missing-safety"]);
+    }
+
+    #[test]
+    fn config_roundtrip_and_unknown_key_rejected() {
+        let cfg = parse_config(
+            "# comment\n[unsafe_allowlist]\nfiles = [\n    \"a.rs\", # inline\n    \"b.rs\",\n]\n\n[hot_path]\nfiles = [\"h.rs\"]\nexempt_fns = [\"f\"]\n\n[extern_c]\nfiles = []\n",
+        )
+        .expect("parse");
+        assert_eq!(cfg.unsafe_files, vec!["a.rs", "b.rs"]);
+        assert_eq!(cfg.hot_files, vec!["h.rs"]);
+        assert_eq!(cfg.hot_exempt_fns, vec!["f"]);
+        assert!(cfg.extern_files.is_empty());
+        assert!(parse_config("[nope]\nfiles = [\"x\"]\n").is_err());
+    }
+}
