@@ -1,0 +1,127 @@
+//! bench_numa — NUMA placement strong scaling, emitting `BENCH_pr9.json`.
+//!
+//! Times 5-iteration PageRank across a thread sweep under each
+//! placement policy (`off` = pre-PR-9 behaviour, `auto` = node-blocked
+//! pinning, `interleave` = round-robin). Each sample records the
+//! *effective* policy and node count next to the median, so on a
+//! single-node CI box the JSON shows every leg degrading to `off` and
+//! the medians agreeing — while a multi-socket host shows the pinned
+//! legs separating. Medians land in `$GPOP_BENCH_NUMA_JSON` (default
+//! `BENCH_pr9.json`) for the CI regression gate.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::PageRank;
+use gpop::bench::{bench, Table};
+use gpop::exec::ThreadPool;
+use gpop::graph::gen;
+use gpop::ppm::{NumaPolicy, PpmConfig};
+use gpop::util::fmt;
+
+const PR_ITERS: usize = 5;
+
+struct Sample {
+    dataset: String,
+    policy: String,
+    threads: usize,
+    effective: String,
+    nodes: u32,
+    median_time_s: f64,
+}
+
+impl Sample {
+    fn json(&self) -> String {
+        // Policy and thread count are folded into the dataset name so
+        // each leg gets its own `bench_numa/<dataset>-<policy>-t<n>/…`
+        // key in the regression gate.
+        format!(
+            "{{\"dataset\":\"{}-{}-t{}\",\"effective\":\"{}\",\"nodes\":{},\
+             \"median_time_s\":{:.6}}}",
+            self.dataset,
+            self.policy,
+            self.threads,
+            self.effective,
+            self.nodes,
+            self.median_time_s
+        )
+    }
+}
+
+fn pagerank(session: &EngineSession) {
+    let out = Runner::on(session)
+        .until(Convergence::MaxIters(PR_ITERS))
+        .run(PageRank::new(&session.graph(), 0.85))
+        .output;
+    std::hint::black_box(out);
+}
+
+fn main() {
+    let scale = common::env_usize(
+        "GPOP_BENCH_SCALE_NUMA",
+        common::env_usize("GPOP_BENCH_SCALE", 12),
+    ) as u32;
+    let max_threads =
+        common::env_usize("GPOP_BENCH_NUMA_THREADS", ThreadPool::available_parallelism().min(4));
+    let g = gen::rmat(scale, Default::default(), false);
+    let dataset = format!("rmat{scale}");
+    println!(
+        "bench_numa: {dataset} ({} edges), {PR_ITERS}-iter pagerank, threads up to {max_threads}",
+        fmt::si(g.m() as f64)
+    );
+
+    let mut sweep = vec![1usize];
+    let mut t = 2;
+    while t <= max_threads {
+        sweep.push(t);
+        t *= 2;
+    }
+
+    let bcfg = common::bench_config();
+    let mut samples: Vec<Sample> = Vec::new();
+    for policy in [NumaPolicy::Off, NumaPolicy::Auto, NumaPolicy::Interleave] {
+        for &threads in &sweep {
+            let config = PpmConfig { threads, numa: policy, ..Default::default() };
+            let session = EngineSession::new(g.clone(), config);
+            let build = session.build_stats();
+            let r = bench(&format!("{dataset} numa={policy} t={threads}"), bcfg, || {
+                pagerank(&session)
+            });
+            samples.push(Sample {
+                dataset: dataset.clone(),
+                policy: policy.to_string(),
+                threads,
+                effective: build.numa.to_string(),
+                nodes: build.numa_nodes,
+                median_time_s: r.median(),
+            });
+        }
+    }
+
+    let mut table = Table::new(&["policy", "threads", "effective", "nodes", "median", "vs t=1"]);
+    for s in &samples {
+        let t1 = samples
+            .iter()
+            .find(|o| o.policy == s.policy && o.threads == 1)
+            .map(|o| o.median_time_s)
+            .unwrap_or(s.median_time_s);
+        table.row(&[
+            s.policy.clone(),
+            s.threads.to_string(),
+            s.effective.clone(),
+            s.nodes.to_string(),
+            fmt::secs(s.median_time_s),
+            format!("{:.2}x", t1 / s.median_time_s.max(1e-12)),
+        ]);
+    }
+    table.print();
+
+    let path =
+        std::env::var("GPOP_BENCH_NUMA_JSON").unwrap_or_else(|_| "BENCH_pr9.json".to_string());
+    let body = samples.iter().map(Sample::json).collect::<Vec<_>>().join(",");
+    let json =
+        format!("{{\"bench\":\"bench_numa\",\"pr\":9,\"scale\":{scale},\"samples\":[{body}]}}\n");
+    std::fs::write(&path, json).expect("write bench json");
+    println!("wrote {path}");
+}

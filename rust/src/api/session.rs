@@ -46,7 +46,6 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::exec::ThreadPool;
 use crate::graph::{merge_delta, Graph, GraphDelta};
 use crate::ooc::{OocStats, PartitionCache, PartitionStore};
 use crate::partition::Partitioner;
@@ -145,8 +144,10 @@ impl EngineSession {
             // that, not the worker count the engines will run with.
             threads: 1,
             source: PreprocessSource::Loaded,
+            // numa/numa_nodes are stamped by the engine from its pool.
+            ..Default::default()
         };
-        let pool = ThreadPool::new(config.threads);
+        let pool = config.make_pool();
         let warm = Engine::from_parts(
             graph.clone(),
             parts.clone(),
@@ -155,6 +156,9 @@ impl EngineSession {
             pool,
             build,
         );
+        // The engine stamps the effective NUMA placement into the
+        // stats; report the same from the session.
+        let build = warm.build_stats();
         let state = SessionState { graph, parts, layout, build, generation: 1, paging: None };
         Ok(Self {
             config,
@@ -192,18 +196,27 @@ impl EngineSession {
         config.validate().map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
         let t0 = Instant::now();
         let store = Arc::new(PartitionStore::open(graph_path, layout_path, &config)?);
-        let cache = Arc::new(PartitionCache::new(store.clone(), config.mem_budget));
+        // The cache shares the engines' partition→node map (same
+        // policy, same thread count ⇒ same deterministic plan), so the
+        // IO thread materializes each row on the node whose worker
+        // streams it.
+        let cache = Arc::new(PartitionCache::with_placement(
+            store.clone(),
+            config.mem_budget,
+            crate::exec::PartitionPlacement::plan(config.numa, config.threads),
+        ));
         let build = BuildStats {
             t_partition: 0.0,
             // mmap + validation of both files, on the calling thread.
             t_layout: t0.elapsed().as_secs_f64(),
             threads: 1,
             source: PreprocessSource::Paged,
+            ..Default::default()
         };
         let graph = store.graph().clone();
         let parts = store.partitioner().clone();
         let layout = store.layout().clone();
-        let pool = ThreadPool::new(config.threads);
+        let pool = config.make_pool();
         let warm = Engine::from_parts_paged(
             graph.clone(),
             parts.clone(),
@@ -213,6 +226,7 @@ impl EngineSession {
             build,
             cache.clone(),
         );
+        let build = warm.build_stats();
         let state =
             SessionState { graph, parts, layout, build, generation: 1, paging: Some(cache) };
         Ok(Self {
@@ -337,7 +351,7 @@ impl EngineSession {
         // over to the new generation untouched.
         let parts = snap.parts.clone();
         let dirty = delta.dirty_parts(&parts);
-        let mut pool = ThreadPool::new(self.config.threads);
+        let mut pool = self.config.make_pool();
         let t1 = Instant::now();
         let layout = Arc::new(snap.layout.apply_delta(&merged, &parts, &dirty, &mut pool));
         let build = BuildStats {
@@ -345,6 +359,7 @@ impl EngineSession {
             t_layout: t1.elapsed().as_secs_f64(),
             threads: self.config.threads,
             source: PreprocessSource::Patched,
+            ..Default::default()
         };
         let generation = snap.generation + 1;
         let warm = Engine::from_parts(
@@ -355,6 +370,7 @@ impl EngineSession {
             pool,
             build,
         );
+        let build = warm.build_stats();
         let drained = quiesce();
         self.install(
             SessionState { graph: merged, parts, layout, build, generation, paging: None },
@@ -526,7 +542,7 @@ fn preprocess(graph: Arc<Graph>, config: &PpmConfig, generation: u64) -> (Sessio
     let t0 = Instant::now();
     let parts = config.partitioner(graph.n());
     let t_partition = t0.elapsed().as_secs_f64();
-    let mut pool = ThreadPool::new(config.threads);
+    let mut pool = config.make_pool();
     let t1 = Instant::now();
     let layout = Arc::new(BinLayout::build_par(&graph, &parts, &mut pool));
     let build = BuildStats {
@@ -534,6 +550,7 @@ fn preprocess(graph: Arc<Graph>, config: &PpmConfig, generation: u64) -> (Sessio
         t_layout: t1.elapsed().as_secs_f64(),
         threads: config.threads,
         source: PreprocessSource::Built,
+        ..Default::default()
     };
     let warm = Engine::from_parts(
         graph.clone(),
@@ -543,6 +560,9 @@ fn preprocess(graph: Arc<Graph>, config: &PpmConfig, generation: u64) -> (Sessio
         pool,
         build,
     );
+    // The engine stamped the effective placement; the session snapshot
+    // must report the same.
+    let build = warm.build_stats();
     (SessionState { graph, parts, layout, build, generation, paging: None }, warm)
 }
 

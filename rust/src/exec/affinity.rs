@@ -1,0 +1,523 @@
+//! NUMA topology detection and partition placement.
+//!
+//! GPOP's evaluation machines are dual-socket Xeons, and the paper's
+//! sequential-DRAM-bandwidth argument (§3, Eq. 1) only holds when a
+//! partition's bins live on the memory node of the thread that streams
+//! them. This module supplies the missing locality layer:
+//!
+//! - [`NumaTopology`] parses `/sys/devices/system/node/node*/cpulist`
+//!   (Linux; no libc crate — the single raw `sched_setaffinity`
+//!   declaration lives in the private `sys` module below, allowlisted
+//!   by `gpop-lint` alongside `ooc::mmap` and `serve::signals`).
+//! - [`PartitionPlacement`] owns the worker→node and partition→node
+//!   maps. Workers are pinned at spawn ([`ThreadPool::with_placement`]
+//!   (super::ThreadPool::with_placement)), bins and scatter/gather rows
+//!   are first-touched by a worker on the owning node, and the OOC IO
+//!   thread pins itself to a row's node before materializing it.
+//!
+//! The placement map is also the stepping stone to multi-process
+//! sharding: a future distributed layer reuses the same
+//! partition→locality assignment with processes in place of nodes.
+//!
+//! ## Fallback contract
+//!
+//! Placement is best-effort and *never* changes results (pinned,
+//! unpinned, and interleaved runs are bit-identical — asserted by
+//! `tests/numa.rs`). Wherever locality is unavailable the layer
+//! degrades to a reported no-op: on single-node machines, non-Linux
+//! targets, single-threaded pools, with `--numa off`, or when the
+//! sandbox refuses `sched_setaffinity` (EPERM), [`effective`]
+//! (PartitionPlacement::effective) reports [`NumaPolicy::Off`] and no
+//! further pinning is attempted.
+
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Placement policy, surfaced as `gpop run --numa` and
+/// [`PpmConfig::numa`](crate::ppm::PpmConfig::numa).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum NumaPolicy {
+    /// Detect topology; pin workers and partitions to nodes in
+    /// contiguous blocks (worker `t` of `T` onto node `t·N/T`), so
+    /// neighbouring partitions — which exchange the most bin traffic —
+    /// share a node. Falls back to `Off` when unavailable.
+    #[default]
+    Auto,
+    /// No detection, no pinning: the pre-PR-9 behaviour.
+    Off,
+    /// Round-robin workers and partitions across nodes (`t mod N`),
+    /// spreading bandwidth over every memory controller. Useful when a
+    /// workload is bound by aggregate DRAM bandwidth rather than
+    /// locality.
+    Interleave,
+}
+
+impl FromStr for NumaPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(NumaPolicy::Auto),
+            "off" => Ok(NumaPolicy::Off),
+            "interleave" => Ok(NumaPolicy::Interleave),
+            other => Err(format!("unknown NUMA policy '{other}' (expected auto|off|interleave)")),
+        }
+    }
+}
+
+impl fmt::Display for NumaPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            NumaPolicy::Auto => "auto",
+            NumaPolicy::Off => "off",
+            NumaPolicy::Interleave => "interleave",
+        })
+    }
+}
+
+/// One NUMA node: its sysfs id and the CPUs it owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NumaNode {
+    pub id: usize,
+    pub cpus: Vec<usize>,
+}
+
+/// The machine's NUMA layout, as read from sysfs.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NumaTopology {
+    /// Nodes sorted by id; only nodes with at least one CPU are kept
+    /// (memory-only nodes cannot run workers).
+    pub nodes: Vec<NumaNode>,
+}
+
+impl NumaTopology {
+    /// Detect the running machine's topology. Returns `None` on
+    /// non-Linux targets and whenever sysfs is absent or unparsable —
+    /// detection failure is an expected, silent fallback, not an error.
+    pub fn detect() -> Option<Self> {
+        if cfg!(target_os = "linux") {
+            Self::detect_from(Path::new("/sys/devices/system/node"))
+        } else {
+            None
+        }
+    }
+
+    /// Parse a sysfs-style node directory (`node0/cpulist`,
+    /// `node1/cpulist`, …). Split out from [`detect`](Self::detect) so
+    /// tests can point it at a fabricated tree.
+    pub fn detect_from(root: &Path) -> Option<Self> {
+        let mut nodes = Vec::new();
+        for entry in std::fs::read_dir(root).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let name = name.to_str()?;
+            let id: usize = match name.strip_prefix("node") {
+                Some(digits) => digits.parse().ok()?,
+                None => continue, // has_cpu, possible, online, ... siblings
+            };
+            let cpulist = std::fs::read_to_string(entry.path().join("cpulist")).ok()?;
+            let cpus = parse_cpulist(cpulist.trim())?;
+            if !cpus.is_empty() {
+                nodes.push(NumaNode { id, cpus });
+            }
+        }
+        if nodes.is_empty() {
+            return None;
+        }
+        nodes.sort_by_key(|n| n.id);
+        Some(NumaTopology { nodes })
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Parse the kernel's cpulist format: comma-separated CPUs and
+/// inclusive ranges, e.g. `"0-3,8,10-11"`. Returns `None` on any
+/// malformed field (detection then falls back to no placement).
+pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+    let mut cpus = Vec::new();
+    if s.is_empty() {
+        return Some(cpus);
+    }
+    for field in s.split(',') {
+        let field = field.trim();
+        match field.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().ok()?;
+                let hi: usize = hi.trim().parse().ok()?;
+                if hi < lo {
+                    return None;
+                }
+                cpus.extend(lo..=hi);
+            }
+            None => cpus.push(field.parse().ok()?),
+        }
+    }
+    Some(cpus)
+}
+
+/// The worker→node and partition→node maps for one pool, plus the
+/// pinning machinery. Shared (`Arc`) between the pool, the bin
+/// allocator, and the OOC cache so every layer agrees on where a
+/// partition lives.
+///
+/// An *inactive* placement (policy `Off`, detection failed, one node,
+/// one thread) is a zero-cost no-op: every query returns `None` and
+/// [`effective`](Self::effective) reports [`NumaPolicy::Off`].
+#[derive(Debug)]
+pub struct PartitionPlacement {
+    /// What the user asked for (reported even when inactive).
+    requested: NumaPolicy,
+    /// `None` when placement is inactive.
+    topology: Option<NumaTopology>,
+    /// Worker count the worker→node map was planned for.
+    threads: usize,
+    /// Set on the first refused `sched_setaffinity`; all later pinning
+    /// is skipped and [`effective`](Self::effective) degrades to `Off`.
+    pin_failed: AtomicBool,
+}
+
+impl PartitionPlacement {
+    /// Plan placement for a `threads`-worker pool under `policy`,
+    /// detecting the topology from the running machine.
+    pub fn plan(policy: NumaPolicy, threads: usize) -> Arc<Self> {
+        let topo = match policy {
+            NumaPolicy::Off => None,
+            _ => NumaTopology::detect(),
+        };
+        Self::plan_with(policy, threads, topo)
+    }
+
+    /// [`plan`](Self::plan) with an explicit (possibly absent)
+    /// topology, for tests and for replaying a recorded layout.
+    pub fn plan_with(
+        policy: NumaPolicy,
+        threads: usize,
+        topology: Option<NumaTopology>,
+    ) -> Arc<Self> {
+        let topology = match (policy, topology) {
+            (NumaPolicy::Off, _) | (_, None) => None,
+            // One node (or a degenerate one-thread pool) gains nothing
+            // from pinning; stay a no-op rather than constraining the
+            // scheduler.
+            (_, Some(t)) if t.n_nodes() < 2 || threads < 2 => None,
+            (_, Some(t)) => Some(t),
+        };
+        Arc::new(Self { requested: policy, topology, threads, pin_failed: AtomicBool::new(false) })
+    }
+
+    /// The always-off placement ([`ThreadPool::new`]
+    /// (super::ThreadPool::new) uses it).
+    pub fn none() -> Arc<Self> {
+        Arc::new(Self {
+            requested: NumaPolicy::Off,
+            topology: None,
+            threads: 0,
+            pin_failed: AtomicBool::new(false),
+        })
+    }
+
+    /// Whether any pinning / placement will actually happen.
+    pub fn is_active(&self) -> bool {
+        self.topology.is_some() && !self.pin_failed.load(Ordering::Relaxed)
+    }
+
+    /// The policy actually in force: the requested one while active,
+    /// [`NumaPolicy::Off`] after any fallback. This is what
+    /// [`BuildStats`](crate::ppm::BuildStats) and the `gpop run`
+    /// placement line report.
+    pub fn effective(&self) -> NumaPolicy {
+        if self.is_active() {
+            self.requested
+        } else {
+            NumaPolicy::Off
+        }
+    }
+
+    /// Nodes participating in placement (0 when inactive).
+    pub fn n_nodes(&self) -> usize {
+        match &self.topology {
+            Some(t) if self.is_active() => t.n_nodes(),
+            _ => 0,
+        }
+    }
+
+    /// Which node worker `tid` (0-based, `tid < threads`) runs on.
+    /// `None` when placement is inactive.
+    pub fn node_of_worker(&self, tid: usize) -> Option<usize> {
+        if !self.is_active() || self.threads == 0 {
+            return None;
+        }
+        let n = self.topology.as_ref()?.n_nodes();
+        let tid = tid.min(self.threads - 1);
+        Some(match self.requested {
+            // Contiguous blocks: workers 0..T/N on node 0, and so on —
+            // matches the blocked partition map below so a worker's
+            // dynamic-cursor neighbourhood is mostly node-local.
+            NumaPolicy::Auto => tid * n / self.threads,
+            NumaPolicy::Interleave => tid % n,
+            NumaPolicy::Off => unreachable!("inactive when Off"),
+        })
+    }
+
+    /// Which node partition `p` of `k` lives on (bins, scatter/gather
+    /// rows, paged-in adjacency). `None` when placement is inactive.
+    pub fn node_of_partition(&self, p: usize, k: usize) -> Option<usize> {
+        if !self.is_active() || k == 0 {
+            return None;
+        }
+        let n = self.topology.as_ref()?.n_nodes();
+        let p = p.min(k - 1);
+        Some(match self.requested {
+            NumaPolicy::Auto => p * n / k,
+            NumaPolicy::Interleave => p % n,
+            NumaPolicy::Off => unreachable!("inactive when Off"),
+        })
+    }
+
+    /// Pin the *calling* thread to `node`'s CPUs. Used by spawned pool
+    /// workers at startup and by the OOC IO thread before materializing
+    /// a row. The caller thread of a pool (tid 0) is deliberately never
+    /// pinned: its affinity outlives the pool, and narrowing it would
+    /// leak placement into unrelated caller work.
+    ///
+    /// A refused syscall (sandbox, EPERM) trips the one-way
+    /// [`pin_failed`](Self::effective) latch: placement reports `Off`
+    /// from then on and no further attempts are made.
+    pub fn pin_to_node(&self, node: usize) {
+        if !self.is_active() {
+            return;
+        }
+        let Some(topo) = &self.topology else { return };
+        let Some(found) = topo.nodes.get(node) else { return };
+        if sys::set_affinity(&found.cpus).is_err() {
+            self.pin_failed.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Pin the calling worker thread (`tid`) to its planned node.
+    pub fn pin_worker(&self, tid: usize) {
+        if let Some(node) = self.node_of_worker(tid) {
+            self.pin_to_node(node);
+        }
+    }
+
+    /// One-line human description for the `gpop run` placement line.
+    pub fn describe(&self) -> String {
+        match (&self.topology, self.is_active()) {
+            (Some(t), true) => format!(
+                "numa: {} ({} nodes, {} cpus)",
+                self.requested,
+                t.n_nodes(),
+                t.nodes.iter().map(|n| n.cpus.len()).sum::<usize>()
+            ),
+            _ if self.requested == NumaPolicy::Off => "numa: off".into(),
+            _ => format!("numa: off (requested {}, placement unavailable)", self.requested),
+        }
+    }
+}
+
+/// The raw affinity syscall, confined here per the gpop-lint `extern`
+/// rule (this module, `ooc::mmap`, and `serve::signals` are the only
+/// files allowed to declare `extern "C"` items).
+#[cfg(target_os = "linux")]
+mod sys {
+    /// 16 × 64 bits = 1024 CPUs, matching the kernel's default
+    /// `CONFIG_NR_CPUS` ceiling on x86-64.
+    const MASK_WORDS: usize = 16;
+
+    extern "C" {
+        /// `sched_setaffinity(2)`. `pid == 0` targets the calling
+        /// thread; the mask is a plain bitset of CPU ids.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+
+    /// Restrict the calling thread to `cpus`. CPUs beyond the mask
+    /// width are ignored; an empty effective mask is refused locally
+    /// (the kernel would return EINVAL anyway).
+    pub fn set_affinity(cpus: &[usize]) -> std::io::Result<()> {
+        let mut mask = [0u64; MASK_WORDS];
+        let mut any = false;
+        for &cpu in cpus {
+            if cpu < MASK_WORDS * 64 {
+                mask[cpu / 64] |= 1u64 << (cpu % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "empty affinity mask",
+            ));
+        }
+        // SAFETY: the mask pointer is valid for `size_of_val(&mask)`
+        // bytes for the duration of the call, the syscall writes
+        // nothing through it (const in the kernel ABI), and failure is
+        // reported through the return value which we check.
+        let rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+        if rc == 0 {
+            Ok(())
+        } else {
+            Err(std::io::Error::last_os_error())
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    /// Non-Linux targets never pin; detection already returned `None`,
+    /// so this is only reachable through a hand-built topology in
+    /// tests — report unsupported and let the fallback latch trip.
+    pub fn set_affinity(_cpus: &[usize]) -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "no affinity syscall"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_topology(nodes: &[&[usize]]) -> NumaTopology {
+        NumaTopology {
+            nodes: nodes
+                .iter()
+                .enumerate()
+                .map(|(id, cpus)| NumaNode { id, cpus: cpus.to_vec() })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn cpulist_parses_ranges_singles_and_mixtures() {
+        assert_eq!(parse_cpulist("0-3"), Some(vec![0, 1, 2, 3]));
+        assert_eq!(parse_cpulist("7"), Some(vec![7]));
+        assert_eq!(parse_cpulist("0-1,8,10-11"), Some(vec![0, 1, 8, 10, 11]));
+        assert_eq!(parse_cpulist(""), Some(vec![]));
+        assert_eq!(parse_cpulist("3-1"), None, "descending range is malformed");
+        assert_eq!(parse_cpulist("a-b"), None);
+        assert_eq!(parse_cpulist("1,,2"), None);
+    }
+
+    #[test]
+    fn policy_round_trips_through_strings() {
+        for (s, p) in [
+            ("auto", NumaPolicy::Auto),
+            ("off", NumaPolicy::Off),
+            ("interleave", NumaPolicy::Interleave),
+        ] {
+            assert_eq!(s.parse::<NumaPolicy>().unwrap(), p);
+            assert_eq!(p.to_string(), s);
+        }
+        assert!("numa".parse::<NumaPolicy>().is_err());
+    }
+
+    #[test]
+    fn detect_from_reads_a_fabricated_sysfs_tree() {
+        let root = std::env::temp_dir().join(format!("gpop-numa-test-{}", std::process::id()));
+        for (node, list) in [("node0", "0-3\n"), ("node1", "4-7\n")] {
+            let dir = root.join(node);
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("cpulist"), list).unwrap();
+        }
+        // Non-node siblings (as in real sysfs) are skipped.
+        std::fs::write(root.join("possible"), "0-1\n").unwrap();
+        let topo = NumaTopology::detect_from(&root).unwrap();
+        std::fs::remove_dir_all(&root).unwrap();
+        assert_eq!(topo.n_nodes(), 2);
+        assert_eq!(topo.nodes[0].cpus, vec![0, 1, 2, 3]);
+        assert_eq!(topo.nodes[1].cpus, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn detect_from_missing_root_is_a_clean_none() {
+        assert_eq!(NumaTopology::detect_from(Path::new("/nonexistent/gpop-numa")), None);
+    }
+
+    #[test]
+    fn placement_is_inactive_off_single_node_or_single_thread() {
+        let two = fake_topology(&[&[0, 1], &[2, 3]]);
+        let one = fake_topology(&[&[0, 1, 2, 3]]);
+        for pl in [
+            PartitionPlacement::plan_with(NumaPolicy::Off, 4, Some(two.clone())),
+            PartitionPlacement::plan_with(NumaPolicy::Auto, 4, None),
+            PartitionPlacement::plan_with(NumaPolicy::Auto, 4, Some(one)),
+            PartitionPlacement::plan_with(NumaPolicy::Auto, 1, Some(two.clone())),
+            PartitionPlacement::none(),
+        ] {
+            assert!(!pl.is_active());
+            assert_eq!(pl.effective(), NumaPolicy::Off);
+            assert_eq!(pl.n_nodes(), 0);
+            assert_eq!(pl.node_of_worker(0), None);
+            assert_eq!(pl.node_of_partition(0, 16), None);
+            pl.pin_worker(0); // must be a silent no-op
+        }
+    }
+
+    #[test]
+    fn auto_maps_workers_and_partitions_in_contiguous_blocks() {
+        let topo = fake_topology(&[&[0, 1], &[2, 3]]);
+        let pl = PartitionPlacement::plan_with(NumaPolicy::Auto, 4, Some(topo));
+        assert!(pl.is_active());
+        assert_eq!(pl.effective(), NumaPolicy::Auto);
+        assert_eq!(pl.n_nodes(), 2);
+        let workers: Vec<_> = (0..4).map(|t| pl.node_of_worker(t).unwrap()).collect();
+        assert_eq!(workers, vec![0, 0, 1, 1]);
+        let parts: Vec<_> = (0..8).map(|p| pl.node_of_partition(p, 8).unwrap()).collect();
+        assert_eq!(parts, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        // Every node gets at least one worker and one partition.
+        for node in 0..2 {
+            assert!(workers.contains(&node));
+            assert!(parts.contains(&node));
+        }
+    }
+
+    #[test]
+    fn interleave_round_robins_across_nodes() {
+        let topo = fake_topology(&[&[0], &[1], &[2]]);
+        let pl = PartitionPlacement::plan_with(NumaPolicy::Interleave, 4, Some(topo));
+        let workers: Vec<_> = (0..4).map(|t| pl.node_of_worker(t).unwrap()).collect();
+        assert_eq!(workers, vec![0, 1, 2, 0]);
+        let parts: Vec<_> = (0..7).map(|p| pl.node_of_partition(p, 7).unwrap()).collect();
+        assert_eq!(parts, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn out_of_range_queries_clamp_instead_of_panicking() {
+        let topo = fake_topology(&[&[0, 1], &[2, 3]]);
+        let pl = PartitionPlacement::plan_with(NumaPolicy::Auto, 4, Some(topo));
+        assert_eq!(pl.node_of_worker(99), Some(1));
+        assert_eq!(pl.node_of_partition(99, 8), Some(1));
+        assert_eq!(pl.node_of_partition(0, 0), None);
+    }
+
+    #[test]
+    fn refused_pinning_trips_the_fallback_latch() {
+        // CPUs far beyond any real machine: the mask is either empty
+        // (>= 1024) or names offline CPUs, so sched_setaffinity — or
+        // our own empty-mask check — must fail, and the placement must
+        // degrade to a reported Off rather than panic.
+        let topo = fake_topology(&[&[100_000], &[100_001]]);
+        let pl = PartitionPlacement::plan_with(NumaPolicy::Auto, 2, Some(topo));
+        assert!(pl.is_active());
+        pl.pin_worker(1);
+        assert!(!pl.is_active(), "failed pin must latch placement off");
+        assert_eq!(pl.effective(), NumaPolicy::Off);
+        assert!(pl.describe().contains("off"), "{}", pl.describe());
+    }
+
+    #[test]
+    fn describe_names_policy_and_node_count() {
+        let topo = fake_topology(&[&[0, 1], &[2, 3]]);
+        let pl = PartitionPlacement::plan_with(NumaPolicy::Auto, 4, Some(topo));
+        assert_eq!(pl.describe(), "numa: auto (2 nodes, 4 cpus)");
+        let off = PartitionPlacement::plan_with(NumaPolicy::Off, 4, None);
+        assert_eq!(off.describe(), "numa: off");
+        let fell_back = PartitionPlacement::plan_with(NumaPolicy::Interleave, 4, None);
+        assert_eq!(fell_back.describe(), "numa: off (requested interleave, placement unavailable)");
+    }
+}

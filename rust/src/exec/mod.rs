@@ -9,10 +9,19 @@
 //! property §3.1 relies on ("more partitions than threads assists dynamic
 //! load balancing").
 
+//!
+//! Since PR 9 the pool is NUMA-aware: [`ThreadPool::with_placement`]
+//! pins each spawned worker to its [`PartitionPlacement`] node, and the
+//! placement's partition→node map drives first-touch bin allocation
+//! ([`crate::ppm::BinGrid::from_layout_placed`]) and OOC row
+//! materialization.
+
+pub mod affinity;
 pub mod barrier;
 pub mod pool;
 pub mod slice;
 
+pub use affinity::{NumaPolicy, NumaTopology, PartitionPlacement};
 pub use barrier::SpinBarrier;
 pub use pool::ThreadPool;
 pub use slice::SharedSlice;

@@ -25,6 +25,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
+use super::affinity::PartitionPlacement;
+
 /// Type-erased job pointer. The referenced closure outlives the region
 /// because `run` does not return until `remaining == 0`.
 #[derive(Clone, Copy)]
@@ -74,10 +76,28 @@ pub struct ThreadPool {
     handles: Vec<JoinHandle<()>>,
     n_threads: usize,
     epoch: u64,
+    /// NUMA placement the workers were pinned under (an inactive no-op
+    /// for [`new`](Self::new)); shared with the bin allocator and the
+    /// OOC cache so all three agree on the partition→node map.
+    placement: Arc<PartitionPlacement>,
+    /// This pool's sanitizer identity: write epochs are kept per pool
+    /// so a concurrent pool's region barrier cannot legalize (mask) an
+    /// overlap inside one of *our* regions. `0` in non-sanitize builds.
+    sanitize_pool: u64,
 }
 
 impl ThreadPool {
     pub fn new(n_threads: usize) -> Self {
+        Self::with_placement(n_threads, PartitionPlacement::none())
+    }
+
+    /// A pool whose spawned workers pin themselves to their
+    /// `placement` node before entering the team loop. The *caller*
+    /// thread (team member 0) is deliberately never pinned — its
+    /// affinity outlives the pool and narrowing it would leak into
+    /// unrelated caller work; only partitions the caller happens to
+    /// execute lose locality, and only while it participates.
+    pub fn with_placement(n_threads: usize, placement: Arc<PartitionPlacement>) -> Self {
         assert!(n_threads >= 1, "pool needs at least one thread");
         let shared = Arc::new(Shared {
             job: Mutex::new(None),
@@ -88,21 +108,34 @@ impl ThreadPool {
             panic: Mutex::new(None),
             shutdown: std::sync::atomic::AtomicBool::new(false),
         });
+        let sanitize_pool = crate::sanitize::pool_register();
         let handles = (1..n_threads)
             .map(|tid| {
                 let shared = shared.clone();
+                let placement = placement.clone();
                 std::thread::Builder::new()
                     .name(format!("gpop-worker-{tid}"))
-                    .spawn(move || worker_loop(tid, shared))
+                    .spawn(move || {
+                        placement.pin_worker(tid);
+                        // Workers belong to exactly one pool for life;
+                        // set the sanitizer's pool key once.
+                        crate::sanitize::set_current_pool(sanitize_pool);
+                        worker_loop(tid, shared)
+                    })
                     .expect("spawn worker")
             })
             .collect();
-        Self { shared, handles, n_threads, epoch: 0 }
+        Self { shared, handles, n_threads, epoch: 0, placement, sanitize_pool }
     }
 
     /// Number of threads in the team (including the caller).
     pub fn n_threads(&self) -> usize {
         self.n_threads
+    }
+
+    /// The placement this pool's workers were pinned under.
+    pub fn placement(&self) -> &Arc<PartitionPlacement> {
+        &self.placement
     }
 
     /// Detected hardware parallelism.
@@ -121,8 +154,19 @@ impl ThreadPool {
         // Every region is a new write epoch for the disjointness
         // sanitizer (no-op unless built with `--features sanitize`):
         // the barrier below is what legalizes same-index writes from
-        // consecutive phases.
-        crate::sanitize::epoch_advance();
+        // consecutive phases. Epochs are keyed by pool, so another
+        // pool's region boundary cannot mask an overlap in this one.
+        crate::sanitize::pool_epoch_advance(self.sanitize_pool);
+        // The caller is a team member only for the duration of the
+        // region; stamp its claims with this pool and restore the
+        // previous key afterwards — including on unwind.
+        struct PoolScope(u64);
+        impl Drop for PoolScope {
+            fn drop(&mut self) {
+                crate::sanitize::set_current_pool(self.0);
+            }
+        }
+        let _scope = PoolScope(crate::sanitize::set_current_pool(self.sanitize_pool));
         if self.n_threads == 1 {
             // No workers exist, so an unwind straight through is sound.
             f(0);

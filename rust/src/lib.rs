@@ -38,7 +38,9 @@
 //!
 //! - [`util`] — PRNG, bitsets, sorting, statistics (no external deps).
 //! - [`exec`] — OpenMP-style thread pool with dynamic scheduling and
-//!   phase barriers.
+//!   phase barriers, plus NUMA topology detection and partition
+//!   placement (`exec::affinity`: worker pinning, node-local
+//!   first-touch allocation, `--numa auto|off|interleave`).
 //! - [`graph`] — CSR/CSC storage, generators (RMAT, Erdős–Rényi), IO.
 //! - [`partition`] — index-based partitioner and the PNG
 //!   (Partition-Node bipartite Graph) layout used by DC-mode scatter.

@@ -33,6 +33,7 @@ use std::thread::JoinHandle;
 
 use super::stats::{Counters, OocStats};
 use super::store::{CsrRow, GatherCol, PartitionStore, RowData, RowKey, ScatterRow};
+use crate::exec::PartitionPlacement;
 
 enum SlotState {
     /// Requested; the IO thread has not delivered it yet.
@@ -73,6 +74,11 @@ struct Inner {
     /// Wakes the IO thread when a request (or shutdown) arrives.
     work: Condvar,
     counters: Counters,
+    /// NUMA placement shared with the engine pools: the IO thread pins
+    /// itself to a row's partition node before materializing it, so
+    /// the decoded row's pages land (first touch) on the node whose
+    /// worker will stream them. Inactive = never pin.
+    placement: Arc<PartitionPlacement>,
 }
 
 /// The cache manager. Cloning the handle is done via `Arc` at the
@@ -143,6 +149,18 @@ impl PartitionCache {
     /// Start a cache over `store` with `budget` bytes of resident rows
     /// (`None` = unbounded) and spawn its IO thread.
     pub fn new(store: Arc<PartitionStore>, budget: Option<u64>) -> Self {
+        Self::with_placement(store, budget, PartitionPlacement::none())
+    }
+
+    /// [`new`](Self::new) with a NUMA placement: rows materialize on
+    /// their partition's node (the IO thread re-pins itself per row),
+    /// so paged runs get the same first-touch locality as resident
+    /// bins. A no-op with an inactive placement.
+    pub fn with_placement(
+        store: Arc<PartitionStore>,
+        budget: Option<u64>,
+        placement: Arc<PartitionPlacement>,
+    ) -> Self {
         let inner = Arc::new(Inner {
             store,
             budget: budget.unwrap_or(u64::MAX),
@@ -158,6 +176,7 @@ impl PartitionCache {
             ready: Condvar::new(),
             work: Condvar::new(),
             counters: Counters::default(),
+            placement,
         });
         // Register the row index space (3 row kinds × k partitions)
         // with the disjointness sanitizer: row installs are claimed in
@@ -355,9 +374,23 @@ fn row_claim_index(key: RowKey, k: usize) -> usize {
     }
 }
 
+/// The partition a row belongs to, for placement purposes (a gather
+/// column `j` is streamed by partition `j`'s gather owner).
+fn row_part(key: RowKey) -> usize {
+    match key {
+        RowKey::Csr(p) | RowKey::Scatter(p) => p as usize,
+        RowKey::Gather(j) => j as usize,
+    }
+}
+
 /// The IO thread: pop a request (demand strictly before prefetch),
-/// materialize it with the lock *released*, deliver, repeat.
+/// materialize it with the lock *released*, deliver, repeat. With an
+/// active placement the thread first pins itself to the row's node, so
+/// the pages the decode allocates are first-touched node-local.
 fn io_loop(inner: &Inner) {
+    // Last node pinned to — re-pinning per row would be a syscall per
+    // materialization; consecutive rows usually share a node.
+    let mut pinned: Option<usize> = None;
     loop {
         let (key, prefetched) = {
             let mut st = inner.state.lock().unwrap();
@@ -380,6 +413,13 @@ fn io_loop(inner: &Inner) {
                 st = inner.work.wait(st).unwrap();
             }
         };
+        let node = inner.placement.node_of_partition(row_part(key), inner.store.k());
+        if let Some(node) = node {
+            if pinned != Some(node) {
+                inner.placement.pin_to_node(node);
+                pinned = Some(node);
+            }
+        }
         let data = inner.store.materialize(key);
         inner.insert_ready(key, data, prefetched);
     }

@@ -9,7 +9,7 @@ use super::active::ActiveState;
 use super::bins::{push_msg, write_msg, BinGrid, BinLayout, Mode};
 use super::cost::{ModePolicy, PartCost};
 use crate::api::{Payload, Program};
-use crate::exec::ThreadPool;
+use crate::exec::{NumaPolicy, PartitionPlacement, ThreadPool};
 use crate::graph::{Csr, Graph};
 use crate::ooc::{self, PartitionCache};
 use crate::partition::{Partitioner, DEFAULT_BYTES_PER_VERTEX, DEFAULT_CACHE_BYTES};
@@ -46,6 +46,16 @@ pub struct PpmConfig {
     /// [`config_fingerprint`](super::config_fingerprint), so one
     /// persisted layout serves every budget.
     pub mem_budget: Option<u64>,
+    /// NUMA placement policy (`gpop run --numa`): pin pool workers to
+    /// nodes and first-touch each partition's bins node-local. Like
+    /// `mem_budget`, an execution-placement knob that never changes
+    /// results (pinned/unpinned runs are bit-identical), so it is
+    /// deliberately **not** part of
+    /// [`config_fingerprint`](super::config_fingerprint) — one
+    /// persisted layout serves every placement. Degrades to a reported
+    /// no-op wherever topology detection or pinning is unavailable
+    /// (see [`PartitionPlacement`]).
+    pub numa: NumaPolicy,
 }
 
 impl Default for PpmConfig {
@@ -60,6 +70,7 @@ impl Default for PpmConfig {
             chunk: 1,
             pool_cap: 4,
             mem_budget: None,
+            numa: NumaPolicy::default(),
         }
     }
 }
@@ -113,6 +124,14 @@ impl PpmConfig {
             Some(k) => Partitioner::with_k(n, k),
             None => Partitioner::auto(n, self.threads, self.cache_bytes, self.bytes_per_vertex),
         }
+    }
+
+    /// Spawn this configuration's worker team: a pool whose spawned
+    /// workers pin themselves per the `numa` policy. Every engine and
+    /// session constructor routes through here so they all agree on
+    /// the partition→node map.
+    pub fn make_pool(&self) -> ThreadPool {
+        ThreadPool::with_placement(self.threads, PartitionPlacement::plan(self.numa, self.threads))
     }
 }
 
@@ -177,6 +196,13 @@ pub struct BuildStats {
     pub threads: usize,
     /// Which path produced the layout.
     pub source: PreprocessSource,
+    /// The NUMA policy actually in force for this engine's pool — the
+    /// *effective* policy, i.e. [`NumaPolicy::Off`] whenever placement
+    /// fell back (single node, non-Linux, refused `sched_setaffinity`),
+    /// regardless of what [`PpmConfig::numa`] requested.
+    pub numa: NumaPolicy,
+    /// NUMA nodes participating in placement (0 when `numa` is `Off`).
+    pub numa_nodes: u32,
 }
 
 impl BuildStats {
@@ -270,7 +296,7 @@ impl Engine {
         let t0 = Instant::now();
         let parts = config.partitioner(graph.n());
         let t_partition = t0.elapsed().as_secs_f64();
-        let mut pool = ThreadPool::new(config.threads);
+        let mut pool = config.make_pool();
         let t1 = Instant::now();
         let layout = Arc::new(BinLayout::build_par(&graph, &parts, &mut pool));
         let build = BuildStats {
@@ -278,6 +304,8 @@ impl Engine {
             t_layout: t1.elapsed().as_secs_f64(),
             threads: config.threads,
             source: PreprocessSource::Built,
+            // numa/numa_nodes are stamped by `assemble` from the pool.
+            ..Default::default()
         };
         Self::from_parts(graph, parts, layout, config, pool, build)
     }
@@ -292,7 +320,7 @@ impl Engine {
         config: PpmConfig,
     ) -> Self {
         config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
-        let pool = ThreadPool::new(config.threads);
+        let pool = config.make_pool();
         Self::from_parts(graph, parts, layout, config, pool, BuildStats::default())
     }
 
@@ -307,7 +335,7 @@ impl Engine {
         cache: Arc<PartitionCache>,
     ) -> Self {
         config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
-        let pool = ThreadPool::new(config.threads);
+        let pool = config.make_pool();
         Self::assemble(graph, parts, layout, config, pool, BuildStats::default(), Some(cache))
     }
 
@@ -343,20 +371,26 @@ impl Engine {
         parts: Partitioner,
         layout: Arc<BinLayout>,
         config: PpmConfig,
-        pool: ThreadPool,
-        build: BuildStats,
+        mut pool: ThreadPool,
+        mut build: BuildStats,
         paging: Option<Arc<PartitionCache>>,
     ) -> Self {
         config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
         assert_eq!(parts.k(), layout.k(), "partitioner and layout disagree on k");
         assert_eq!(pool.n_threads(), config.threads, "pool size must match config.threads");
+        // Report the placement actually in force (Off after any
+        // fallback), whatever the config requested.
+        build.numa = pool.placement().effective();
+        build.numa_nodes = pool.placement().n_nodes() as u32;
         // A paged engine must not pre-reserve O(E) bin capacity — the
         // whole point is a bounded working set; its bins grow only for
         // partitions the frontier touches.
         let grid = if paging.is_some() {
             BinGrid::from_layout_unreserved(layout)
         } else {
-            BinGrid::from_layout(layout)
+            // First-touch bin rows on their partitions' nodes (plain
+            // from_layout when placement is inactive).
+            BinGrid::from_layout_placed(layout, &mut pool)
         };
         let k = parts.k();
         let costs = (0..k)

@@ -30,4 +30,7 @@ pub use bins::{
 };
 pub use cost::ModePolicy;
 pub use engine::{BuildStats, Engine, IterStats, PpmConfig, PreprocessSource, RunStats};
+// Placement types live in `exec`; re-exported here because `PpmConfig`
+// (`numa`) and `BuildStats` (`numa`/`numa_nodes`) surface them.
+pub use crate::exec::{NumaPolicy, PartitionPlacement};
 pub use persist::{config_fingerprint, graph_digest, Hash64, LAYOUT_FORMAT_VERSION, LAYOUT_MAGIC};

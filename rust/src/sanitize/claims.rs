@@ -15,17 +15,29 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
-/// Global write epoch. Pool regions advance it; claims in different
-/// epochs never conflict (the region barrier orders them).
-static EPOCH: AtomicU64 = AtomicU64::new(1);
+/// Pool identity source. `0` is reserved for "no pool": claims made
+/// outside any parallel region carry it, at an epoch that never
+/// advances (same-thread rewrites stay legal there; cross-thread
+/// handoff outside regions has no barrier to legalize it anyway).
+static NEXT_POOL: AtomicU64 = AtomicU64::new(1);
 
 static NEXT_WRITER: AtomicU32 = AtomicU32::new(0);
 
 thread_local! {
     static WRITER: Cell<Option<u32>> = const { Cell::new(None) };
+    /// Which pool's region this thread is currently executing in.
+    /// Workers set it once at spawn; `ThreadPool::run` sets it on the
+    /// caller for the region's duration.
+    static CURRENT_POOL: Cell<u64> = const { Cell::new(0) };
 }
 
 struct Stamp {
+    /// The claiming pool — epochs are compared only within one pool,
+    /// which is what closes the PR 8 epoch-split false negative: a
+    /// *different* pool's region barrier advancing some counter can no
+    /// longer split this pool's region across epochs and mask a real
+    /// two-writer overlap.
+    pool: u64,
     epoch: u64,
     writer: u32,
     lo: usize,
@@ -44,6 +56,10 @@ struct Table {
     /// two-writer diagnostic; the conflicting thread is not running
     /// when we report, so its name must be on file).
     writers: HashMap<u32, String>,
+    /// Per-pool write epochs (absent entries read as 0). Keying by
+    /// pool means only *this* pool's barriers legalize same-index
+    /// rewrites within its regions.
+    pool_epochs: HashMap<u64, u64>,
 }
 
 static TABLE: OnceLock<Mutex<Table>> = OnceLock::new();
@@ -53,7 +69,13 @@ static TABLE: OnceLock<Mutex<Table>> = OnceLock::new();
 /// global), so poisoning is shrugged off like `exec::pool` does.
 fn table() -> MutexGuard<'static, Table> {
     TABLE
-        .get_or_init(|| Mutex::new(Table { regions: HashMap::new(), writers: HashMap::new() }))
+        .get_or_init(|| {
+            Mutex::new(Table {
+                regions: HashMap::new(),
+                writers: HashMap::new(),
+                pool_epochs: HashMap::new(),
+            })
+        })
         .lock()
         .unwrap_or_else(|e| e.into_inner())
 }
@@ -73,11 +95,29 @@ fn writer_token(table: &mut Table) -> u32 {
     })
 }
 
-/// Advance the write epoch. Called by every `ThreadPool::run` region
-/// (including the single-thread inline path): the region barrier is
-/// what makes same-index writes from different phases legal.
-pub fn epoch_advance() {
-    EPOCH.fetch_add(1, Ordering::SeqCst);
+/// Allocate a fresh pool identity. `ThreadPool` construction calls
+/// this once per pool; claims stamped with different pools never share
+/// an epoch, so they cannot mask each other's overlaps.
+pub fn pool_register() -> u64 {
+    NEXT_POOL.fetch_add(1, Ordering::SeqCst)
+}
+
+/// Set the calling thread's current pool key, returning the previous
+/// one (so `ThreadPool::run` can scope the caller's membership to the
+/// region and restore on exit). Workers set it once at spawn.
+pub fn set_current_pool(pool: u64) -> u64 {
+    CURRENT_POOL.with(|p| p.replace(pool))
+}
+
+/// Advance `pool`'s write epoch. Called by every `ThreadPool::run`
+/// region (including the single-thread inline path): the region
+/// barrier is what makes same-index writes from different phases of
+/// *that pool* legal. Other pools' epochs are untouched — their
+/// concurrent regions can no longer split ours (the PR 8 false
+/// negative).
+pub fn pool_epoch_advance(pool: u64) {
+    let mut t = table();
+    *t.pool_epochs.entry(pool).or_insert(0) += 1;
 }
 
 /// (Re-)register the region starting at `base` with `len` claimable
@@ -95,8 +135,9 @@ pub fn claim(base: usize, label: &'static str, lo: usize, hi: usize) {
     if lo >= hi {
         return;
     }
-    let epoch = EPOCH.load(Ordering::SeqCst);
+    let pool = CURRENT_POOL.with(|p| p.get());
     let mut t = table();
+    let epoch = t.pool_epochs.get(&pool).copied().unwrap_or(0);
     let me = writer_token(&mut t);
     let t = &mut *t;
     let region = t
@@ -106,7 +147,7 @@ pub fn claim(base: usize, label: &'static str, lo: usize, hi: usize) {
     region.len = region.len.max(hi);
     for i in lo..hi {
         if let Some(prev) = region.stamps.get(&i) {
-            if prev.epoch == epoch && prev.writer != me {
+            if prev.pool == pool && prev.epoch == epoch && prev.writer != me {
                 let mine = t.writers.get(&me).cloned().unwrap_or_else(|| format!("#{me}"));
                 let theirs = t
                     .writers
@@ -118,12 +159,13 @@ pub fn claim(base: usize, label: &'static str, lo: usize, hi: usize) {
                 let rlen = region.len;
                 panic!(
                     "sanitize: overlapping write claim on {rlabel}[{i}] \
-                     (region 0x{base:x}, len {rlen}, epoch {epoch}): {mine} claimed \
-                     [{lo}, {hi}) but {theirs} already claimed [{plo}, {phi}) \
-                     in the same epoch — the disjoint-write contract is broken"
+                     (region 0x{base:x}, len {rlen}, epoch {epoch} of pool {pool}): \
+                     {mine} claimed [{lo}, {hi}) but {theirs} already claimed \
+                     [{plo}, {phi}) in the same epoch — the disjoint-write \
+                     contract is broken"
                 );
             }
         }
-        region.stamps.insert(i, Stamp { epoch, writer: me, lo, hi });
+        region.stamps.insert(i, Stamp { pool, epoch, writer: me, lo, hi });
     }
 }

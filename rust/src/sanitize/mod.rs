@@ -10,14 +10,15 @@
 //! barriers separating phases. Nothing in a normal build verifies that.
 //!
 //! Built with `--features sanitize`, this module gives the contract
-//! teeth: every write-side acquisition records a `(thread, epoch,
-//! range)` claim in a process-global shadow table, pool regions advance
-//! the epoch (the barrier makes cross-epoch overlap legal), and two
-//! claims on the same index from *different threads within one epoch*
-//! abort with a diagnostic naming both writers and both ranges. Without
-//! the feature every hook is an empty `#[inline(always)]` function —
-//! release builds carry no shadow-tracking code in the scatter/gather
-//! path (the CI lint job greps the release binary to pin this).
+//! teeth: every write-side acquisition records a `(pool, thread,
+//! epoch, range)` claim in a process-global shadow table, each pool's
+//! regions advance *that pool's* epoch (the barrier makes cross-epoch
+//! overlap legal), and two claims on the same index from *different
+//! threads within one epoch of one pool* abort with a diagnostic
+//! naming both writers and both ranges. Without the feature every hook
+//! is an empty `#[inline(always)]` function — release builds carry no
+//! shadow-tracking code in the scatter/gather path (the CI lint job
+//! greps the release binary to pin this).
 //!
 //! Run the engine matrix under it with:
 //!
@@ -26,25 +27,41 @@
 //!     --test ooc --test sanitize
 //! ```
 //!
-//! Known (accepted) imprecision: the epoch counter is process-global,
-//! so a *concurrent* pool in another test advancing it mid-region can
-//! split one region across epochs and mask an overlap — a missed
-//! detection, never a false alarm (`rust/tests/sanitize.rs` retries its
-//! seeded race for this reason). Reads are not tracked; the sanitizer
-//! checks write/write disjointness, which is the invariant all the
-//! `unsafe` here is justified by.
+//! Epochs are keyed *per pool* (PR 9): each `ThreadPool` registers a
+//! pool id at construction, its workers (and, for a region's duration,
+//! its caller) stamp claims with it, and only that pool's region
+//! barriers advance its epoch. PR 8's accepted imprecision — a
+//! concurrent pool advancing a process-global counter mid-region could
+//! split one region across epochs and mask a real two-writer overlap —
+//! is gone, and `rust/tests/sanitize.rs` dropped its bounded-retry
+//! workaround. Claims made outside any region carry pool 0 at an epoch
+//! that never advances. Reads are not tracked; the sanitizer checks
+//! write/write disjointness, which is the invariant all the `unsafe`
+//! here is justified by.
 
 #[cfg(feature = "sanitize")]
 mod claims;
 
 #[cfg(feature = "sanitize")]
-pub use claims::{claim, epoch_advance, region_reset};
+pub use claims::{claim, pool_epoch_advance, pool_register, region_reset, set_current_pool};
 
 #[cfg(not(feature = "sanitize"))]
 mod off {
     /// No-op: the `sanitize` feature is disabled.
     #[inline(always)]
-    pub fn epoch_advance() {}
+    pub fn pool_register() -> u64 {
+        0
+    }
+
+    /// No-op: the `sanitize` feature is disabled.
+    #[inline(always)]
+    pub fn set_current_pool(_pool: u64) -> u64 {
+        0
+    }
+
+    /// No-op: the `sanitize` feature is disabled.
+    #[inline(always)]
+    pub fn pool_epoch_advance(_pool: u64) {}
 
     /// No-op: the `sanitize` feature is disabled.
     #[inline(always)]
@@ -56,4 +73,4 @@ mod off {
 }
 
 #[cfg(not(feature = "sanitize"))]
-pub use off::{claim, epoch_advance, region_reset};
+pub use off::{claim, pool_epoch_advance, pool_register, region_reset, set_current_pool};

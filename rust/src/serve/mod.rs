@@ -22,8 +22,9 @@
 //!   [`Runner::run_batch`](crate::api::Runner::run_batch) calls, and
 //!   answer each submitter with per-query timing.
 //! - [`server`] — the Unix/TCP socket front door.
-//! - [`signals`] — the SIGTERM/SIGINT latch used by the CLI (the only
-//!   module besides `ooc::mmap` allowed to declare `extern "C"`).
+//! - [`signals`] — the SIGTERM/SIGINT latch used by the CLI (one of
+//!   the three modules, with `ooc::mmap` and `exec::affinity`, allowed
+//!   to declare `extern "C"`).
 //!
 //! Lifecycle guarantees: a full queue returns a typed
 //! [`SubmitError::Overloaded`] (never a panic, never a silent drop);

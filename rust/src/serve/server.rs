@@ -58,10 +58,22 @@ pub enum ServerSocket {
 }
 
 impl ServerSocket {
+    /// Bind a Unix socket path. If the path exists, probe-connect
+    /// first: something answering means a *live* server owns it, and
+    /// binding refuses with [`ErrorKind::AddrInUse`] rather than
+    /// deleting the socket out from under it (the pre-PR-9 behaviour).
+    /// A connection-refused probe means a stale file left by a dead
+    /// server — that one is still cleaned up and rebound.
     #[cfg(unix)]
     pub fn bind_unix(path: impl Into<PathBuf>) -> std::io::Result<Self> {
         let path = path.into();
         if path.exists() {
+            if UnixStream::connect(&path).is_ok() {
+                return Err(std::io::Error::new(
+                    ErrorKind::AddrInUse,
+                    format!("{} is in use by a live server", path.display()),
+                ));
+            }
             std::fs::remove_file(&path)?;
         }
         let listener = UnixListener::bind(&path)?;
@@ -185,12 +197,16 @@ impl Server {
 
     /// Serve until the stop flag is set — by the `shutdown` verb, by
     /// [`stop_flag`](Self::stop_flag), or by a signal after
-    /// [`signals::install`]. Joins every connection thread before
-    /// returning, so the caller may safely shut the serve loop down
-    /// next.
+    /// [`signals::install`]. Finished connection threads are reaped on
+    /// every accept iteration, so a long-lived daemon taking short
+    /// connections holds handles only for the connections that are
+    /// actually open (pinned by `tests/serve.rs`); the remaining live
+    /// ones are joined before returning, so the caller may safely shut
+    /// the serve loop down next.
     pub fn run(self) -> std::io::Result<()> {
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
         while !self.stop.load(Ordering::SeqCst) && !signals::requested() {
+            reap_finished(&mut conns);
             match self.socket.try_accept() {
                 Ok(Some(stream)) => {
                     let handle = self.handle.clone();
@@ -211,6 +227,20 @@ impl Server {
             let _ = conn.join();
         }
         Ok(())
+    }
+}
+
+/// Join (and drop) every connection thread that has already exited —
+/// the accept loop's per-iteration sweep. `is_finished()` guarantees
+/// the join cannot block.
+fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].is_finished() {
+            let _ = conns.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
     }
 }
 
@@ -322,6 +352,80 @@ mod tests {
         // The shutdown verb stops the accept loop; run() returns clean.
         runner.join().unwrap().unwrap();
         sloop.shutdown();
+    }
+
+    #[test]
+    fn reap_finished_joins_only_exited_threads() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let mut conns: Vec<std::thread::JoinHandle<()>> =
+            (0..30).map(|_| std::thread::spawn(|| {})).collect();
+        conns.push(std::thread::spawn({
+            let gate = Arc::clone(&gate);
+            move || {
+                while !gate.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }));
+        // Let the 30 short threads exit, then sweep.
+        loop {
+            reap_finished(&mut conns);
+            if conns.len() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(conns.len(), 1, "the still-running thread must survive the sweep");
+        gate.store(true, Ordering::SeqCst);
+        for c in conns {
+            c.join().unwrap();
+        }
+    }
+
+    /// PR 9 regression: a long-lived daemon taking many short
+    /// connections must keep answering and shut down cleanly — before
+    /// the per-iteration sweep, `run` accumulated one JoinHandle per
+    /// connection for its whole lifetime.
+    #[test]
+    fn many_short_connections_are_served_and_reaped() {
+        let mut sloop = serving();
+        let socket = ServerSocket::bind_tcp("127.0.0.1:0").unwrap();
+        let addr = socket.tcp_addr().unwrap().to_string();
+        let server = Server::new(socket, sloop.handle());
+        let stop = server.stop_flag();
+        let runner = std::thread::spawn(move || server.run());
+        for round in 0..40 {
+            let responses =
+                send_lines(&Endpoint::Tcp(addr.clone()), &[format!("bfs {}", round % 7)]).unwrap();
+            assert_eq!(responses.len(), 1, "round {round}");
+            assert!(responses[0].starts_with("ok app=bfs "), "round {round}: {}", responses[0]);
+        }
+        // Every connection above has disconnected; the sweep runs each
+        // accept iteration, so shutdown joins only live connections and
+        // returns promptly.
+        stop.store(true, Ordering::SeqCst);
+        runner.join().unwrap().unwrap();
+        sloop.shutdown();
+        assert_eq!(sloop.stats().completed, 40);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn bind_unix_refuses_a_live_socket_but_reclaims_a_dead_one() {
+        let path =
+            std::env::temp_dir().join(format!("gpop-serve-live-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let live = UnixListener::bind(&path).unwrap();
+        let err = ServerSocket::bind_unix(&path).expect_err("a live socket must be refused");
+        assert_eq!(err.kind(), ErrorKind::AddrInUse, "{err}");
+        assert!(path.exists(), "refusing must not delete the live server's socket");
+        // Dropping a std listener leaves the file behind — exactly the
+        // stale-after-crash case bind_unix must reclaim.
+        drop(live);
+        assert!(path.exists(), "std drop leaves the socket file (the stale case)");
+        let rebound = ServerSocket::bind_unix(&path).expect("a dead socket file is reclaimed");
+        drop(rebound);
+        assert!(!path.exists(), "rebound socket removes its file on drop");
     }
 
     #[cfg(unix)]

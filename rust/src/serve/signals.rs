@@ -3,10 +3,11 @@
 //! [`Server::stop_flag`](crate::serve::Server::stop_flag) instead, so a
 //! test runner's signal handling is never disturbed.
 //!
-//! This is deliberately the only module besides `ooc::mmap` allowed to
-//! declare `extern "C"` items (enforced by `gpop-lint`); keeping the
-//! raw libc surface in two auditable files is part of the unsafe
-//! policy (README §"Static analysis & sanitizers").
+//! This is one of only three modules — with `ooc::mmap` and
+//! `exec::affinity` — allowed to declare `extern "C"` items (enforced
+//! by `gpop-lint`); keeping the raw libc surface in a few auditable
+//! files is part of the unsafe policy (README §"Static analysis &
+//! sanitizers").
 
 #[cfg(unix)]
 mod imp {

@@ -8,11 +8,12 @@
 //! Without the feature this file compiles to an empty test binary (see
 //! the `[[test]]` entry in Cargo.toml).
 //!
-//! The write epoch is process-global, so a pool region in a
-//! concurrently running test can advance it between a seeded race's two
-//! claims and mask the overlap — a documented false negative, never a
-//! false positive. The negative tests retry a bounded number of times;
-//! the clean tests are deterministic.
+//! Write epochs are keyed per pool (PR 9), so a pool region in a
+//! concurrently running test can no longer advance *our* epoch between
+//! a seeded race's two claims and mask the overlap. The seeded
+//! negatives therefore fire deterministically on the first attempt —
+//! the bounded-retry workaround this file used to carry is gone — and
+//! `concurrent_pool_epoch_advance_cannot_mask_an_overlap` pins the fix.
 
 #![cfg(feature = "sanitize")]
 
@@ -31,21 +32,20 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// Run `race` (which seeds a same-epoch overlapping write) until the
-/// sanitizer catches it, retrying past cross-test epoch interleavings.
-fn catch_seeded_race(attempts: usize, mut race: impl FnMut()) -> String {
-    for _ in 0..attempts {
-        if let Err(payload) = catch_unwind(AssertUnwindSafe(&mut race)) {
-            return panic_message(payload.as_ref());
-        }
+/// Run `race` (which seeds a same-epoch overlapping write) and return
+/// the sanitizer's diagnostic. One attempt: per-pool epochs make the
+/// catch deterministic.
+fn catch_seeded_race(race: impl FnOnce()) -> String {
+    match catch_unwind(AssertUnwindSafe(race)) {
+        Err(payload) => panic_message(payload.as_ref()),
+        Ok(()) => panic!("sanitizer failed to catch a seeded overlapping write"),
     }
-    panic!("sanitizer failed to catch a seeded overlapping write in {attempts} attempts");
 }
 
 #[test]
 fn seeded_overlapping_write_is_caught_with_both_threads_named() {
     let mut pool = ThreadPool::new(2);
-    let msg = catch_seeded_race(20, || {
+    let msg = catch_seeded_race(|| {
         let mut buf = vec![0u32; 4];
         let shared = SharedSlice::new(&mut buf);
         pool.run(|tid| {
@@ -64,12 +64,13 @@ fn seeded_overlapping_write_is_caught_with_both_threads_named() {
         assert!(msg.contains(name), "diagnostic must identify the caller thread too: {msg}");
     }
     assert!(msg.contains("epoch"), "diagnostic must name the epoch: {msg}");
+    assert!(msg.contains("pool"), "diagnostic must name the claiming pool: {msg}");
 }
 
 #[test]
 fn seeded_shared_cells_overlap_is_caught() {
     let mut pool = ThreadPool::new(2);
-    let msg = catch_seeded_race(20, || {
+    let msg = catch_seeded_race(|| {
         let cells = SharedCells::from_vec(vec![0u64; 2]);
         pool.run(|_tid| {
             // SAFETY: deliberately overlapping, to trip the sanitizer.
@@ -80,6 +81,53 @@ fn seeded_shared_cells_overlap_is_caught() {
         msg.contains("overlapping write claim on SharedCells[1]"),
         "diagnostic must name the region and index: {msg}"
     );
+}
+
+/// The PR 8 false negative, now a hard regression test: another pool
+/// hammering region barriers *while* our region is mid-flight must not
+/// advance our epoch and legalize a two-writer overlap. With the old
+/// process-global epoch this masked the race nondeterministically;
+/// with per-pool epochs the overlap is caught every time, even under a
+/// worst-case interleaving seeded right here.
+#[test]
+fn concurrent_pool_epoch_advance_cannot_mask_an_overlap() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let noisy = Arc::new(AtomicBool::new(true));
+    let noise = std::thread::spawn({
+        let stop = Arc::clone(&noisy);
+        move || {
+            // A separate pool advancing its own epoch as fast as it can.
+            let mut other = ThreadPool::new(1);
+            while stop.load(Ordering::Relaxed) {
+                other.run(|_| {});
+            }
+        }
+    });
+
+    let mut pool = ThreadPool::new(2);
+    for _ in 0..20 {
+        let msg = catch_seeded_race(|| {
+            let mut buf = vec![0u32; 2];
+            let shared = SharedSlice::new(&mut buf);
+            pool.run(|tid| {
+                if tid == 1 {
+                    // Give the noisy pool time to cycle many regions
+                    // between the two conflicting claims.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                // SAFETY: deliberately overlapping, to trip the sanitizer.
+                unsafe { shared.write(0, tid as u32) };
+            });
+        });
+        assert!(
+            msg.contains("overlapping write claim on SharedSlice[0]"),
+            "a concurrent pool's barriers masked the overlap: {msg}"
+        );
+    }
+    noisy.store(false, Ordering::Relaxed);
+    noise.join().unwrap();
 }
 
 #[test]
@@ -120,6 +168,32 @@ fn same_index_handoff_across_region_barrier_is_clean() {
     });
     drop(shared);
     assert_eq!(buf[0], 2);
+}
+
+/// Two pools writing the same region in back-to-back (non-overlapping)
+/// regions is a legal handoff, not a conflict: cross-pool claims never
+/// share an epoch, and the pools' own barriers order the writes.
+#[test]
+fn sequential_regions_of_different_pools_are_clean() {
+    let mut a = ThreadPool::new(2);
+    let mut b = ThreadPool::new(2);
+    let mut buf = vec![0u32; 8];
+    let shared = SharedSlice::new(&mut buf);
+    a.run(|tid| {
+        for i in (tid..8).step_by(2) {
+            // SAFETY: disjoint across pool a's team.
+            unsafe { shared.write(i, 1) };
+        }
+    });
+    b.run(|tid| {
+        for i in (tid..8).step_by(2) {
+            // SAFETY: disjoint across pool b's team; pool a's region
+            // fully finished (its run() returned) before this one.
+            unsafe { shared.write(i, 2) };
+        }
+    });
+    drop(shared);
+    assert!(buf.iter().all(|&x| x == 2));
 }
 
 #[test]
