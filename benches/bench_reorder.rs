@@ -1,0 +1,140 @@
+//! bench_reorder — vertex reordering payoff, emitting `BENCH_pr10.json`.
+//!
+//! For each dataset (skewed RMAT + uniform ER contrast) and each
+//! reordering strategy (plus an unreordered baseline leg), times
+//! 5-iteration PageRank on the relabeled graph and records two
+//! simulated L2 miss counts from the in-repo cachesim:
+//!
+//! * `pull_misses` — the Ligra-style pull trace (`vdata[u]` read per
+//!   in-edge), the directly vertex-order-sensitive access pattern a
+//!   locality permutation exists to improve;
+//! * `gpop_misses` — the partition-blocked GPOP trace, expected to be
+//!   far less order-sensitive (partition-local vertex data is mostly
+//!   cache-resident by construction — that insensitivity is itself the
+//!   framework claim).
+//!
+//! On the skewed RMAT the hub vertices are scattered across the id
+//! space (the recursive-bisection generator concentrates mass near
+//! powers of two), so degree-ordered packing should cut pull misses;
+//! the uniform ER leg is the control where no strategy has much to
+//! find. Medians land in `$GPOP_BENCH_REORDER_JSON` (default
+//! `BENCH_pr10.json`) for the CI regression gate, which tracks only
+//! the `median_time_s` of each `<dataset>-<leg>` key.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use gpop::api::{Convergence, EngineSession, Runner};
+use gpop::apps::PageRank;
+use gpop::bench::{bench, Table};
+use gpop::cachesim::model::{self, Framework};
+use gpop::exec::ThreadPool;
+use gpop::graph::{gen, Graph};
+use gpop::ppm::PpmConfig;
+use gpop::reorder::{self, Strategy};
+use gpop::util::fmt;
+
+const PR_ITERS: usize = 5;
+
+struct Sample {
+    dataset: String,
+    leg: String,
+    median_time_s: f64,
+    pull_misses: u64,
+    gpop_misses: u64,
+}
+
+impl Sample {
+    fn json(&self) -> String {
+        // The leg (baseline / degree / hub / bfs) is folded into the
+        // dataset name so each gets its own
+        // `bench_reorder/<dataset>-<leg>/…` key in the regression gate.
+        format!(
+            "{{\"dataset\":\"{}-{}\",\"median_time_s\":{:.6},\
+             \"pull_misses\":{},\"gpop_misses\":{}}}",
+            self.dataset, self.leg, self.median_time_s, self.pull_misses, self.gpop_misses
+        )
+    }
+}
+
+fn pagerank(session: &EngineSession) {
+    let out = Runner::on(session)
+        .until(Convergence::MaxIters(PR_ITERS))
+        .run(PageRank::new(&session.graph(), 0.85))
+        .output;
+    std::hint::black_box(out);
+}
+
+fn measure(name: &str, leg: &str, g: Arc<Graph>, threads: usize, bcfg: gpop::bench::BenchConfig) -> Sample {
+    let cache = common::sim_cache();
+    let history = model::pagerank_history(&g, PR_ITERS);
+    let pull_misses = model::simulate(&g, Framework::Ligra, &history, cache, 1);
+    let gpop_misses = model::simulate(&g, Framework::Gpop, &history, cache, 1);
+    let session = EngineSession::new(g, PpmConfig { threads, ..Default::default() });
+    let r = bench(&format!("{name} reorder={leg} t={threads}"), bcfg, || pagerank(&session));
+    Sample {
+        dataset: name.to_string(),
+        leg: leg.to_string(),
+        median_time_s: r.median(),
+        pull_misses,
+        gpop_misses,
+    }
+}
+
+fn main() {
+    let scale = common::env_usize(
+        "GPOP_BENCH_SCALE_REORDER",
+        common::env_usize("GPOP_BENCH_SCALE", 12),
+    ) as u32;
+    let threads =
+        common::env_usize("GPOP_BENCH_REORDER_THREADS", ThreadPool::available_parallelism().min(4));
+    let n_er = 1usize << (scale - 1);
+    let datasets = vec![
+        (format!("rmat{scale}"), Arc::new(gen::rmat(scale, Default::default(), false))),
+        (format!("er{}", scale - 1), Arc::new(gen::erdos_renyi(n_er, n_er * 16, 99))),
+    ];
+    let bcfg = common::bench_config();
+
+    let mut samples: Vec<Sample> = Vec::new();
+    for (name, g) in &datasets {
+        println!(
+            "bench_reorder: {name} ({} edges), {PR_ITERS}-iter pagerank, t={threads}",
+            fmt::si(g.m() as f64)
+        );
+        samples.push(measure(name, "baseline", g.clone(), threads, bcfg));
+        for strategy in Strategy::ALL {
+            let mut pool = ThreadPool::new(threads);
+            let (rg, _perm) = reorder::reorder_graph(g, strategy, Some(&mut pool));
+            samples.push(measure(name, strategy.name(), Arc::new(rg), threads, bcfg));
+        }
+    }
+
+    let mut table =
+        Table::new(&["dataset", "leg", "median", "vs baseline", "pull misses", "gpop misses"]);
+    for s in &samples {
+        let base = samples
+            .iter()
+            .find(|o| o.dataset == s.dataset && o.leg == "baseline")
+            .map(|o| o.median_time_s)
+            .unwrap_or(s.median_time_s);
+        table.row(&[
+            s.dataset.clone(),
+            s.leg.clone(),
+            fmt::secs(s.median_time_s),
+            format!("{:.2}x", base / s.median_time_s.max(1e-12)),
+            fmt::si(s.pull_misses as f64),
+            fmt::si(s.gpop_misses as f64),
+        ]);
+    }
+    table.print();
+
+    let path = std::env::var("GPOP_BENCH_REORDER_JSON")
+        .unwrap_or_else(|_| "BENCH_pr10.json".to_string());
+    let body = samples.iter().map(Sample::json).collect::<Vec<_>>().join(",");
+    let json =
+        format!("{{\"bench\":\"bench_reorder\",\"pr\":10,\"scale\":{scale},\"samples\":[{body}]}}\n");
+    std::fs::write(&path, json).expect("write bench json");
+    println!("wrote {path}");
+}

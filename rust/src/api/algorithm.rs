@@ -15,10 +15,13 @@
 //!    [`Convergence::L1Norm`](crate::api::Convergence::L1Norm);
 //! 3. [`finish`](Algorithm::finish) — surrender the typed output.
 
+use std::sync::Arc;
+
 use super::convergence::Convergence;
 use super::program::Program;
 use crate::graph::Graph;
 use crate::ppm::IterStats;
+use crate::reorder::Permutation;
 use crate::VertexId;
 
 /// How an algorithm seeds the active set.
@@ -36,6 +39,26 @@ pub enum FrontierInit {
 /// phases and take `&self` (interior mutability via
 /// [`VertexData`](crate::api::VertexData)); the `Algorithm` hooks run
 /// single-threaded between iterations and may take `&mut self`.
+///
+/// The reordering hooks ([`REORDER_AWARE`](Self::REORDER_AWARE) /
+/// [`translate`](Self::translate) / [`untranslate`](Self::untranslate))
+/// make a vertex permutation caller-invisible — the same query against
+/// a [reordered](crate::api::EngineSession::reordered) session answers
+/// in original vertex ids:
+///
+/// ```
+/// use gpop::api::{EngineSession, Runner};
+/// use gpop::apps::Bfs;
+/// use gpop::graph::gen;
+/// use gpop::ppm::PpmConfig;
+/// use gpop::reorder::Strategy;
+///
+/// let g = gen::grid(4, 4);
+/// let plain = EngineSession::new(g.clone(), PpmConfig::default());
+/// let packed = EngineSession::reordered(g, Strategy::Degree, PpmConfig::default());
+/// let levels = |s: &EngineSession| Runner::on(s).run(Bfs::new(s.graph().n(), 0)).output;
+/// assert_eq!(levels(&plain), levels(&packed), "original ids throughout");
+/// ```
 pub trait Algorithm: Program + Sized {
     /// The algorithm's result payload (ranks, parents, labels, ...).
     /// Run-wide statistics live in the surrounding
@@ -80,4 +103,29 @@ pub trait Algorithm: Program + Sized {
 
     /// Consume the algorithm and surrender its output.
     fn finish(self) -> Self::Output;
+
+    /// Whether this algorithm implements the vertex-reordering contract:
+    /// [`translate`](Self::translate) maps every id-valued input (roots,
+    /// seeds, sources) into the reordered space, and
+    /// [`untranslate`](Self::untranslate) maps the output back so
+    /// callers only ever see *original* vertex ids. The
+    /// [`Runner`](crate::api::Runner) refuses (panics) to run a
+    /// non-aware algorithm on a reordered session rather than silently
+    /// returning answers in the wrong id space.
+    const REORDER_AWARE: bool = false;
+
+    /// Rewrite id-valued inputs into the reordered vertex space. Called
+    /// exactly once, before [`init_frontier`](Self::init_frontier), and
+    /// only when the session carries a
+    /// [`Permutation`](crate::reorder::Permutation).
+    fn translate(&mut self, _perm: &Arc<Permutation>) {}
+
+    /// Map a finished output from reordered indexing (and, where values
+    /// are vertex ids, reordered values) back to original vertex ids.
+    /// The identity by default; every `REORDER_AWARE` algorithm must
+    /// override it unless its output genuinely carries no vertex
+    /// indexing.
+    fn untranslate(output: Self::Output, _perm: &Permutation) -> Self::Output {
+        output
+    }
 }

@@ -6,10 +6,17 @@
 //! with `or`/`and`, replacing the `max_iters: usize` parameter threaded
 //! through every bespoke `run()` in the seed:
 //!
-//! ```ignore
-//! Convergence::L1Norm(1e-7).or_max_iters(100)   // PageRank
-//! Convergence::FrontierEmpty                    // BFS / SSSP / CC
-//! Convergence::FrontierEmpty.or_max_iters(30)   // bounded Nibble
+//! ```
+//! use gpop::api::Convergence;
+//!
+//! let pagerank = Convergence::L1Norm(1e-7).or_max_iters(100);
+//! let bfs = Convergence::FrontierEmpty;            // BFS / SSSP / CC
+//! let nibble = Convergence::FrontierEmpty.or_max_iters(30);
+//!
+//! // Only policies with an L1 term make the runner compute the
+//! // (possibly O(n)) progress delta each iteration.
+//! assert!(pagerank.wants_delta());
+//! assert!(!bfs.wants_delta() && !nibble.wants_delta());
 //! ```
 
 /// The engine state a policy is evaluated against, sampled *before*

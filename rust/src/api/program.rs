@@ -69,6 +69,21 @@ impl Lane for f32 {
 ///
 /// Provided impls: `u32`/`i32`/`f32` (1 lane), `u64`/`i64`/`f64` and
 /// every `(A, B)` pair of [`Lane`] types (2 lanes).
+///
+/// ```
+/// use gpop::api::Payload;
+///
+/// // 1 lane: the paper's exact 4-byte message; the high word is never
+/// // stored or loaded.
+/// assert_eq!(f32::LANES, 1);
+/// assert_eq!(1.5f32.to_bits64() >> 32, 0);
+///
+/// // 2 lanes: e.g. (distance, parent) for SSSP-with-parents — encodes
+/// // lane 0 low / lane 1 high and round-trips exactly.
+/// let msg: (f32, u32) = (2.5, 7);
+/// assert_eq!(<(f32, u32)>::LANES, 2);
+/// assert_eq!(<(f32, u32)>::from_bits64(msg.to_bits64()), msg);
+/// ```
 pub trait Payload: Copy + Send + Sync + 'static {
     /// Lanes occupied in bin storage (1 or 2).
     const LANES: usize;

@@ -1,13 +1,19 @@
 //! The fluent [`Runner`] — one uniform way to execute any
 //! [`Algorithm`] against an [`EngineSession`]:
 //!
-//! ```ignore
-//! let session = EngineSession::new(graph, PpmConfig::with_threads(8));
+//! ```
+//! use gpop::api::{Convergence, EngineSession, Runner};
+//! use gpop::apps::PageRank;
+//! use gpop::graph::gen;
+//! use gpop::ppm::PpmConfig;
+//!
+//! let session = EngineSession::new(gen::grid(8, 8), PpmConfig::with_threads(2));
 //! let report = Runner::on(&session)
-//!     .policy(ModePolicy::Hybrid)
-//!     .until(Convergence::L1Norm(1e-7).or_max_iters(100))
+//!     .until(Convergence::L1Norm(1e-6).or_max_iters(200))
 //!     .run(PageRank::new(&session.graph(), 0.85));
-//! println!("{} iters, ranks: {:?}", report.n_iters(), report.output);
+//! assert!(report.converged, "grid PageRank settles well inside 200 iters");
+//! let total: f32 = report.output.iter().sum();
+//! assert!((total - 1.0).abs() < 1e-3, "ranks stay a probability vector");
 //! ```
 //!
 //! Every run returns a [`RunReport`]: the algorithm's typed output plus
@@ -222,11 +228,32 @@ impl<'s> Runner<'s> {
 
     /// Check out an engine, run one query, return the engine to the
     /// session pool.
-    pub fn run<A: Algorithm>(&self, alg: A) -> RunReport<A::Output> {
+    ///
+    /// On a reordered session (see [`crate::reorder`]) the algorithm is
+    /// [`translate`](Algorithm::translate)d into the reordered vertex
+    /// space before driving and its output is
+    /// [`untranslate`](Algorithm::untranslate)d back, so the report is
+    /// indistinguishable — original ids throughout — from an
+    /// unreordered run.
+    pub fn run<A: Algorithm>(&self, mut alg: A) -> RunReport<A::Output> {
         let mut engine = self.session.checkout();
         engine.set_mode_policy(self.mode());
+        let perm = engine.permutation().cloned();
+        if let Some(perm) = &perm {
+            assert!(
+                A::REORDER_AWARE,
+                "{} does not implement the reordering contract (Algorithm::REORDER_AWARE) \
+                 but the session serves a reordered graph; its results would be in the \
+                 wrong vertex-id space",
+                std::any::type_name::<A>()
+            );
+            alg.translate(perm);
+        }
         let until = self.until_for(&alg);
         let mut report = drive(&mut engine, alg, &until);
+        if let Some(perm) = &perm {
+            report = report.map(|out| A::untranslate(out, perm));
+        }
         let build = self.session.build_stats();
         report.t_preprocess = build.t_preprocess();
         report.preprocess = build.source;
@@ -248,12 +275,25 @@ impl<'s> Runner<'s> {
         let t_checkout = t0.elapsed().as_secs_f64();
         let generation = engine.generation();
         engine.set_mode_policy(self.mode());
+        let perm = engine.permutation().cloned();
         let build = self.session.build_stats();
         let reports = algs
             .into_iter()
-            .map(|alg| {
+            .map(|mut alg| {
+                if let Some(perm) = &perm {
+                    assert!(
+                        A::REORDER_AWARE,
+                        "{} does not implement the reordering contract \
+                         (Algorithm::REORDER_AWARE) but the session serves a reordered graph",
+                        std::any::type_name::<A>()
+                    );
+                    alg.translate(perm);
+                }
                 let until = self.until_for(&alg);
                 let mut report = drive(&mut engine, alg, &until);
+                if let Some(perm) = &perm {
+                    report = report.map(|out| A::untranslate(out, perm));
+                }
                 report.t_preprocess = build.t_preprocess();
                 report.preprocess = build.source;
                 report

@@ -50,6 +50,7 @@ use crate::graph::{merge_delta, Graph, GraphDelta};
 use crate::ooc::{OocStats, PartitionCache, PartitionStore};
 use crate::partition::Partitioner;
 use crate::ppm::{BinLayout, BuildStats, Engine, PpmConfig, PreprocessSource};
+use crate::reorder::{self, Permutation, Strategy};
 
 /// One immutable (graph, partitioning, layout) generation. Everything a
 /// query depends on lives behind a single `Arc`, which is what makes a
@@ -66,11 +67,39 @@ struct SessionState {
     /// store's skeletons and every checkout routes row access through
     /// the shared [`PartitionCache`].
     paging: Option<Arc<PartitionCache>>,
+    /// `Some` iff `graph` is a *reordered* relabeling of the caller's
+    /// graph ([`EngineSession::reordered`] /
+    /// [`EngineSession::with_permutation`]): every checkout carries the
+    /// mapping so the [`Runner`](crate::api::Runner) can translate
+    /// queries in and results back out — callers only ever see original
+    /// vertex ids.
+    reorder: Option<Arc<Permutation>>,
 }
 
 /// A shared, reusable graph-processing context: one graph, one
 /// partitioning, one pre-processed bin layout, many queries — and, since
 /// PR 5, hot-swappable between graph generations without draining.
+///
+/// The `O(E)` pre-processing is paid once at construction and amortized
+/// over every subsequent query ([`Runner::run`](crate::api::Runner::run)
+/// checks an engine out of the session pool;
+/// [`run_batch`](crate::api::Runner::run_batch) shares one checkout
+/// across a whole batch):
+///
+/// ```
+/// use gpop::api::{EngineSession, Runner};
+/// use gpop::apps::Bfs;
+/// use gpop::graph::gen;
+/// use gpop::ppm::PpmConfig;
+///
+/// // Partitioning + bin layout are built exactly once, here…
+/// let session = EngineSession::new(gen::grid(6, 6), PpmConfig::with_threads(2));
+/// // …then any number of queries reuse them (3 BFS roots, 1 checkout).
+/// let n = session.graph().n();
+/// let batch = Runner::on(&session).run_batch([0u32, 7, 35].map(|r| Bfs::new(n, r)));
+/// assert_eq!(batch.reports.len(), 3);
+/// assert!(batch[0].output.iter().all(|&level| level >= 0), "grid is connected");
+/// ```
 pub struct EngineSession {
     config: PpmConfig,
     /// Current snapshot; the lock is held only to clone or replace the
@@ -109,6 +138,71 @@ impl EngineSession {
             outstanding: AtomicUsize::new(0),
             transient: AtomicU64::new(0),
         }
+    }
+
+    /// Build a session over a *reordered* relabeling of `graph`: the
+    /// vertex permutation for `strategy` is computed
+    /// ([`reorder::compute`]), the CSR is relabeled on the
+    /// pre-processing worker team ([`crate::graph::permute_graph`]), and
+    /// the mapping is carried in the snapshot so every
+    /// [`Runner`](crate::api::Runner) query is translated in and its
+    /// results are mapped back — callers see *original* vertex ids, only
+    /// the cache behaviour changes. [`ingest`](Self::ingest) is refused
+    /// on reordered sessions (delta ids are original-space);
+    /// [`swap_graph`](Self::swap_graph) installs the new graph
+    /// *unreordered* and drops the permutation.
+    pub fn reordered(
+        graph: impl Into<Arc<Graph>>,
+        strategy: Strategy,
+        config: PpmConfig,
+    ) -> Self {
+        config.validate().unwrap_or_else(|e| panic!("invalid PpmConfig: {e}"));
+        let (state, warm) = preprocess_with(graph.into(), Some(strategy), &config, 1);
+        Self {
+            config,
+            state: Mutex::new(Arc::new(state)),
+            pool: Mutex::new(vec![(1, warm)]),
+            update: Mutex::new(()),
+            outstanding: AtomicUsize::new(0),
+            transient: AtomicU64::new(0),
+        }
+    }
+
+    /// Build a session over an *already-relabeled* graph plus the
+    /// [`Permutation`] that produced it — the artifact-restore path
+    /// behind `gpop run --perm` (`gpop reorder` writes the relabeled
+    /// graph and the mapping; [`reorder::load_permutation`] validates
+    /// the pair's digests before this is called). Fails with
+    /// [`InvalidInput`](std::io::ErrorKind::InvalidInput) when the
+    /// permutation does not cover the graph's vertex count.
+    pub fn with_permutation(
+        graph: impl Into<Arc<Graph>>,
+        perm: impl Into<Arc<Permutation>>,
+        config: PpmConfig,
+    ) -> std::io::Result<Self> {
+        config.validate().map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
+        let graph = graph.into();
+        let perm = perm.into();
+        if perm.n() != graph.n() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!(
+                    "permutation covers {} vertices but the graph has {}",
+                    perm.n(),
+                    graph.n()
+                ),
+            ));
+        }
+        let (mut state, warm) = preprocess(graph, &config, 1);
+        state.reorder = Some(perm);
+        Ok(Self {
+            config,
+            state: Mutex::new(Arc::new(state)),
+            pool: Mutex::new(vec![(1, warm)]),
+            update: Mutex::new(()),
+            outstanding: AtomicUsize::new(0),
+            transient: AtomicU64::new(0),
+        })
     }
 
     /// Restore a session from a layout persisted by [`save`](Self::save):
@@ -159,7 +253,8 @@ impl EngineSession {
         // The engine stamps the effective NUMA placement into the
         // stats; report the same from the session.
         let build = warm.build_stats();
-        let state = SessionState { graph, parts, layout, build, generation: 1, paging: None };
+        let state =
+            SessionState { graph, parts, layout, build, generation: 1, paging: None, reorder: None };
         Ok(Self {
             config,
             state: Mutex::new(Arc::new(state)),
@@ -227,8 +322,15 @@ impl EngineSession {
             cache.clone(),
         );
         let build = warm.build_stats();
-        let state =
-            SessionState { graph, parts, layout, build, generation: 1, paging: Some(cache) };
+        let state = SessionState {
+            graph,
+            parts,
+            layout,
+            build,
+            generation: 1,
+            paging: Some(cache),
+            reorder: None,
+        };
         Ok(Self {
             config,
             state: Mutex::new(Arc::new(state)),
@@ -340,6 +442,17 @@ impl EngineSession {
                  (use swap_graph with a resident graph first)",
             ));
         }
+        if snap.reorder.is_some() {
+            // Delta endpoints are original vertex ids; merging them into
+            // the relabeled CSR would corrupt it, and a patched graph
+            // would invalidate the degree/locality premise of the
+            // permutation anyway.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "reordered sessions cannot ingest deltas: the served graph is relabeled \
+                 (swap_graph to a fresh graph, or re-run gpop reorder on the mutated input)",
+            ));
+        }
         let t0 = Instant::now();
         let merged = Arc::new(
             merge_delta(&snap.graph, delta)
@@ -373,7 +486,15 @@ impl EngineSession {
         let build = warm.build_stats();
         let drained = quiesce();
         self.install(
-            SessionState { graph: merged, parts, layout, build, generation, paging: None },
+            SessionState {
+                graph: merged,
+                parts,
+                layout,
+                build,
+                generation,
+                paging: None,
+                reorder: None,
+            },
             warm,
         );
         drop(drained);
@@ -434,6 +555,16 @@ impl EngineSession {
     #[inline]
     pub fn build_stats(&self) -> BuildStats {
         self.snapshot().build
+    }
+
+    /// The vertex permutation the current snapshot serves through
+    /// ([`reordered`](Self::reordered) /
+    /// [`with_permutation`](Self::with_permutation)); `None` for
+    /// sessions over the caller's own numbering. Like
+    /// [`graph`](Self::graph), pair with [`generation`](Self::generation)
+    /// when racing writers matters.
+    pub fn permutation(&self) -> Option<Arc<Permutation>> {
+        self.snapshot().reorder.clone()
     }
 
     /// Partition-cache counters for a paged session
@@ -530,7 +661,12 @@ impl EngineSession {
         // A previous borrower may have overridden the mode policy
         // (Runner::policy); hand every checkout the session's own.
         engine.set_mode_policy(self.config.mode);
-        SessionEngine { session: self, generation: snap.generation, engine: Some(engine) }
+        SessionEngine {
+            session: self,
+            generation: snap.generation,
+            reorder: snap.reorder.clone(),
+            engine: Some(engine),
+        }
     }
 }
 
@@ -539,10 +675,32 @@ impl EngineSession {
 /// shared path behind [`EngineSession::new`] and
 /// [`EngineSession::swap_graph`].
 fn preprocess(graph: Arc<Graph>, config: &PpmConfig, generation: u64) -> (SessionState, Engine) {
+    preprocess_with(graph, None, config, generation)
+}
+
+/// [`preprocess`] with an optional reordering pass up front: the
+/// permutation is computed, the CSR is relabeled on the same worker team
+/// that then builds the layout, and the mapping rides in the snapshot so
+/// every checkout can translate queries. Reorder time is folded into
+/// `t_partition` (both are the "decide where vertices live" half of
+/// pre-processing).
+fn preprocess_with(
+    graph: Arc<Graph>,
+    strategy: Option<Strategy>,
+    config: &PpmConfig,
+    generation: u64,
+) -> (SessionState, Engine) {
+    let mut pool = config.make_pool();
     let t0 = Instant::now();
+    let (graph, reorder) = match strategy {
+        Some(s) => {
+            let (relabeled, perm) = reorder::reorder_graph(&graph, s, Some(&mut pool));
+            (Arc::new(relabeled), Some(Arc::new(perm)))
+        }
+        None => (graph, None),
+    };
     let parts = config.partitioner(graph.n());
     let t_partition = t0.elapsed().as_secs_f64();
-    let mut pool = config.make_pool();
     let t1 = Instant::now();
     let layout = Arc::new(BinLayout::build_par(&graph, &parts, &mut pool));
     let build = BuildStats {
@@ -563,7 +721,7 @@ fn preprocess(graph: Arc<Graph>, config: &PpmConfig, generation: u64) -> (Sessio
     // The engine stamped the effective placement; the session snapshot
     // must report the same.
     let build = warm.build_stats();
-    (SessionState { graph, parts, layout, build, generation, paging: None }, warm)
+    (SessionState { graph, parts, layout, build, generation, paging: None, reorder }, warm)
 }
 
 /// RAII guard over a checked-out [`Engine`]; derefs to the engine and
@@ -572,6 +730,10 @@ fn preprocess(graph: Arc<Graph>, config: &PpmConfig, generation: u64) -> (Sessio
 pub struct SessionEngine<'s> {
     session: &'s EngineSession,
     generation: u64,
+    /// The permutation of the snapshot this engine was checked out
+    /// against (not the session's current one — a racing swap must not
+    /// change how in-flight results are mapped back).
+    reorder: Option<Arc<Permutation>>,
     engine: Option<Engine>,
 }
 
@@ -581,6 +743,14 @@ impl SessionEngine<'_> {
     /// underneath it.
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// The vertex permutation of the snapshot this engine serves, if the
+    /// session was built over a reordered graph. The
+    /// [`Runner`](crate::api::Runner) uses this to translate queries in
+    /// and map results back to original vertex ids.
+    pub fn permutation(&self) -> Option<&Arc<Permutation>> {
+        self.reorder.as_ref()
     }
 }
 
@@ -862,6 +1032,50 @@ mod tests {
         session.swap_graph(gen::chain(40));
         assert!(session.ooc_stats().is_none());
         assert_eq!(session.generation(), 2);
+    }
+
+    #[test]
+    fn reordered_sessions_carry_the_permutation_and_refuse_ingest() {
+        let g = gen::erdos_renyi(120, 900, 21);
+        let session = EngineSession::reordered(
+            g.clone(),
+            Strategy::Degree,
+            PpmConfig { k: Some(4), ..Default::default() },
+        );
+        let perm = session.permutation().expect("reordered session exposes its permutation");
+        assert_eq!(perm.n(), g.n());
+        // The served graph is the relabeled one; the permutation maps
+        // between the two row sets.
+        let served = session.graph();
+        for v in 0..g.n() as u32 {
+            assert_eq!(
+                served.out_degree(perm.new_id(v)),
+                g.out_degree(v),
+                "row degrees must survive relabeling"
+            );
+        }
+        {
+            let e = session.checkout();
+            assert!(e.permutation().is_some(), "checkouts carry the snapshot's permutation");
+        }
+        let mut delta = GraphDelta::new();
+        delta.insert(0, 1);
+        let err = session.ingest(&delta).expect_err("delta ids are original-space");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert_eq!(session.generation(), 1, "rejected ingest must not flip");
+        // A wholesale swap serves the new graph unreordered.
+        session.swap_graph(gen::chain(30));
+        assert!(session.permutation().is_none());
+        assert!(session.checkout().permutation().is_none());
+    }
+
+    #[test]
+    fn with_permutation_rejects_mismatched_sizes() {
+        let g = gen::chain(10);
+        let perm = crate::reorder::Permutation::identity(Strategy::Hub, 9);
+        let err = EngineSession::with_permutation(g, perm, PpmConfig::default())
+            .expect_err("size mismatch");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
     }
 
     #[test]

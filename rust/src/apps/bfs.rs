@@ -1,10 +1,19 @@
 //! Breadth-First Search (paper §5, Alg. 5) — Graph500 kernel 2.
 //!
-//! Computes the BFS parent tree from a root. The GPOP program is four
-//! one-liners: scatter the own id (or `-1` while unvisited, the DC-mode
-//! inactive sentinel — §3.2 "a vertex can send its visited status or its
-//! index"), never keep the frontier (`init = false`), adopt the first
-//! parent seen, keep everything the gather activated.
+//! Computes the BFS parent tree from a root. The GPOP program stays
+//! close to the paper's four one-liners: scatter the own label (or
+//! `-1` while unvisited, the DC-mode inactive sentinel — §3.2 "a vertex
+//! can send its visited status or its index"), never keep the frontier
+//! (`init = false`), keep everything the gather activated.
+//!
+//! The gather adopts the **minimum** proposing label within a vertex's
+//! discovery round (not the first seen): every vertex discovered at hop
+//! `L` ends with the smallest-labelled hop-`L−1` in-neighbor as parent.
+//! That choice is a pure function of the graph — independent of message
+//! order, SC/DC mode, thread count, *and vertex numbering* — which is
+//! what makes reordered runs ([`crate::reorder`]) bit-identical to
+//! unreordered ones: on a reordered session the scattered label is the
+//! vertex's *original* id, so the winner is the same vertex either way.
 //!
 //! New API:
 //! ```ignore
@@ -12,21 +21,52 @@
 //! let parents: &Vec<i32> = &report.output;
 //! ```
 
+use std::sync::Arc;
+
 use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
-use crate::ppm::{Engine, RunStats};
+use crate::ppm::{Engine, IterStats, RunStats};
+use crate::reorder::Permutation;
 use crate::VertexId;
 
 /// The BFS GPOP algorithm. `parent[v] = -1` until visited; the typed
-/// output is the parent array.
+/// output is the parent array (original vertex ids on a reordered
+/// session, like everywhere else).
 pub struct Bfs {
     pub parent: VertexData<i32>,
+    /// Iteration in which each vertex was discovered (`u32::MAX` until
+    /// then, and forever for the root): gather refines the parent only
+    /// among same-round proposals, so settled vertices never reopen.
+    seen: VertexData<u32>,
+    /// Current iteration index; bumped in `post_iteration`, read-only
+    /// during the parallel phases.
+    stage: u32,
     root: VertexId,
+    /// Present iff the session is reordered: labels scattered are then
+    /// original ids, keeping the min-label tiebreak
+    /// numbering-independent.
+    perm: Option<Arc<Permutation>>,
 }
 
 impl Bfs {
     pub fn new(n: usize, root: VertexId) -> Self {
-        Self { parent: VertexData::new(n, -1), root }
+        Self {
+            parent: VertexData::new(n, -1),
+            seen: VertexData::new(n, u32::MAX),
+            stage: 0,
+            root,
+            perm: None,
+        }
+    }
+
+    /// The label `v` proposes as parent: its original id (its own id
+    /// unless the session is reordered).
+    #[inline]
+    fn label(&self, v: VertexId) -> i32 {
+        match &self.perm {
+            Some(p) => p.old_id(v) as i32,
+            None => v as i32,
+        }
     }
 }
 
@@ -39,10 +79,9 @@ impl Program for Bfs {
 
     #[inline]
     fn scatter(&self, v: VertexId) -> i32 {
-        // Visited vertices propose themselves as parent.
-        let p = self.parent.get(v);
-        if p >= 0 {
-            v as i32
+        // Visited vertices propose their label as parent.
+        if self.parent.get(v) >= 0 {
+            self.label(v)
         } else {
             Self::INACTIVE
         }
@@ -55,9 +94,21 @@ impl Program for Bfs {
 
     #[inline]
     fn gather(&self, val: i32, v: VertexId) -> bool {
-        if val >= 0 && self.parent.get(v) < 0 {
+        if val < 0 {
+            return false;
+        }
+        let cur = self.parent.get(v);
+        if cur < 0 {
+            // Discovery: every proposer this round is a hop-(L−1)
+            // vertex (an older one's out-neighbors are all settled).
             self.parent.set(v, val);
+            self.seen.set(v, self.stage);
             true
+        } else if self.seen.get(v) == self.stage && val < cur {
+            // Same-round refinement toward the minimum label; no
+            // re-activation — the discovery already activated `v`.
+            self.parent.set(v, val);
+            false
         } else {
             false
         }
@@ -73,12 +124,30 @@ impl Algorithm for Bfs {
     type Output = Vec<i32>;
 
     fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
-        self.parent.set(self.root, self.root as i32);
+        self.parent.set(self.root, self.label(self.root));
+        // seen[root] stays MAX: the root's self-parent is never refined.
         FrontierInit::Seeds(vec![self.root])
+    }
+
+    fn post_iteration(&mut self, _stats: &IterStats) {
+        self.stage += 1;
     }
 
     fn finish(self) -> Vec<i32> {
         self.parent.to_vec()
+    }
+
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, perm: &Arc<Permutation>) {
+        self.root = perm.new_id(self.root);
+        self.perm = Some(perm.clone());
+    }
+
+    /// Parent values are already original ids (see [`Bfs::label`]);
+    /// only the indexing moves back.
+    fn untranslate(output: Vec<i32>, perm: &Permutation) -> Vec<i32> {
+        perm.unpermute(&output)
     }
 }
 

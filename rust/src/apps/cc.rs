@@ -13,9 +13,12 @@
 //!     .run(LabelProp::new(session.graph().n()));
 //! ```
 
+use std::sync::Arc;
+
 use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
+use crate::reorder::Permutation;
 use crate::VertexId;
 
 pub struct LabelProp {
@@ -73,6 +76,25 @@ impl Algorithm for LabelProp {
 
     fn finish(self) -> Vec<u32> {
         self.label.to_vec()
+    }
+
+    const REORDER_AWARE: bool = true;
+
+    /// Re-seed every label with its *original* id: min-propagation then
+    /// computes the minimum original id of each component — a value
+    /// independent of the numbering — so after
+    /// [`untranslate`](Algorithm::untranslate) the labelling is
+    /// bit-identical to an unreordered run.
+    fn translate(&mut self, perm: &Arc<Permutation>) {
+        for v in 0..perm.n() as VertexId {
+            self.label.set(v, perm.old_id(v));
+        }
+    }
+
+    /// Labels are already original ids (see
+    /// [`translate`](Algorithm::translate)); only the indexing moves.
+    fn untranslate(output: Vec<u32>, perm: &Permutation) -> Vec<u32> {
+        perm.unpermute(&output)
     }
 }
 

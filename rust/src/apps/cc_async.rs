@@ -14,9 +14,12 @@
 //! convergence — at the cost of a random read per message (exactly the
 //! cache-efficiency trade the paper describes).
 
+use std::sync::Arc;
+
 use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
+use crate::reorder::Permutation;
 use crate::VertexId;
 
 pub struct AsyncLabelProp {
@@ -80,6 +83,22 @@ impl Algorithm for AsyncLabelProp {
 
     fn finish(self) -> Vec<u32> {
         self.label.to_vec()
+    }
+
+    /// Same device as the synchronous [`LabelProp`](crate::apps::cc::LabelProp):
+    /// seed every label with its *original* id, so the (unique) min-label
+    /// fixpoint is the minimum original id of each component — a value
+    /// no renaming (and no async freshness schedule) can change.
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, perm: &Arc<Permutation>) {
+        for v in 0..perm.n() as VertexId {
+            self.label.set(v, perm.old_id(v));
+        }
+    }
+
+    fn untranslate(output: Vec<u32>, perm: &Permutation) -> Vec<u32> {
+        perm.unpermute(&output)
     }
 }
 

@@ -14,8 +14,10 @@
 use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
 use crate::ppm::{Engine, IterStats};
+use crate::reorder::Permutation;
 use crate::VertexId;
 use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
 
 pub struct HeatKernel {
     /// Accumulated heat-kernel scores.
@@ -151,6 +153,22 @@ impl Algorithm for HeatKernel {
         (0..self.heat.len())
             .map(|v| self.heat.get(v as VertexId) + self.residual.get(v as VertexId))
             .collect()
+    }
+
+    /// Same contract (and `f32`-summation ulp caveat) as
+    /// [`Nibble`](crate::apps::Nibble): seeds map into the reordered id
+    /// space, the heat vector unpermutes back to original indexing;
+    /// tolerance-level equality, not guaranteed bitwise identity.
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, perm: &Arc<Permutation>) {
+        for s in &mut self.seeds {
+            *s = perm.new_id(*s);
+        }
+    }
+
+    fn untranslate(output: Vec<f32>, perm: &Permutation) -> Vec<f32> {
+        perm.unpermute(&output)
     }
 }
 

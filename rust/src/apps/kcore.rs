@@ -30,10 +30,12 @@
 //! out-degree variant).
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::api::{Algorithm, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
 use crate::ppm::IterStats;
+use crate::reorder::Permutation;
 use crate::VertexId;
 
 const ALIVE: u32 = 0;
@@ -188,6 +190,20 @@ impl Algorithm for KCore {
 
     fn finish(self) -> Vec<u32> {
         self.core.to_vec()
+    }
+
+    /// Core numbers are a graph invariant (integer peeling has a unique
+    /// outcome however the rounds are ordered), so renaming vertices
+    /// cannot change them — unpermuting recovers the unreordered output
+    /// bit-for-bit. `deg` was read from the reordered graph in
+    /// [`KCore::new`] (build against `session.graph()`), so nothing
+    /// needs mapping.
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, _perm: &Arc<Permutation>) {}
+
+    fn untranslate(output: Vec<u32>, perm: &Permutation) -> Vec<u32> {
+        perm.unpermute(&output)
     }
 }
 

@@ -12,9 +12,12 @@
 //! cost can be amortized across multiple runs") — see
 //! [`Runner::run_batch`](crate::api::Runner::run_batch).
 
+use std::sync::Arc;
+
 use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
+use crate::reorder::Permutation;
 use crate::VertexId;
 
 pub struct Nibble {
@@ -115,6 +118,26 @@ impl Algorithm for Nibble {
         let pr = self.pr.to_vec();
         let support = pr.iter().filter(|&&x| x > 0.0).count();
         NibbleOutput { pr, support }
+    }
+
+    /// Seeds are mapped into the reordered id space and the output
+    /// unpermuted back, so callers see original ids throughout.
+    ///
+    /// **Precision caveat:** unlike PageRank, the diffusion accumulates
+    /// mass in `f32`, so a reordered run may differ from an unreordered
+    /// one in the last ulp (summation order changes with the numbering).
+    /// The support set and every tolerance-level comparison agree; exact
+    /// bitwise identity is *not* guaranteed for this family.
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, perm: &Arc<Permutation>) {
+        for s in &mut self.seeds {
+            *s = perm.new_id(*s);
+        }
+    }
+
+    fn untranslate(output: NibbleOutput, perm: &Permutation) -> NibbleOutput {
+        NibbleOutput { pr: perm.unpermute(&output.pr), support: output.support }
     }
 }
 

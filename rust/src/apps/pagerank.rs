@@ -2,9 +2,16 @@
 //! DC mode shines (all vertices active every iteration, so Eq. 1 picks
 //! destination-centric scatter throughout: Fig. 6/8).
 //!
-//! Phase order per iteration (the reason Alg. 6 needs no second rank
-//! array): `scatter` reads the *current* rank, `init` zeroes it, `gather`
-//! accumulates shares, `filter` applies the damping.
+//! Phase order per iteration: `scatter` reads the *current* rank,
+//! `init` zeroes a per-vertex `f64` accumulator, `gather` sums the
+//! incoming `f32` shares into it, `filter` applies the damping in `f64`
+//! and rounds back to `f32` once. Accumulating in `f64` makes each
+//! iteration's sums *exact* whenever the shares' exponent spread stays
+//! under 2^29 (an `f64` mantissa holds any sum of a few thousand `f32`
+//! terms of comparable magnitude without rounding) — so the result is
+//! independent of message arrival order, SC/DC mode, thread count and
+//! vertex numbering, the property the [`crate::reorder`] bit-identity
+//! contract relies on.
 //!
 //! New API:
 //! ```ignore
@@ -15,9 +22,12 @@
 //! [`PageRank::post_iteration`] reports the L1 rank change, so the
 //! `L1Norm` policy converges on numerics instead of a fixed count.
 
+use std::sync::Arc;
+
 use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
 use crate::ppm::{Engine, IterStats};
+use crate::reorder::Permutation;
 use crate::VertexId;
 
 /// Damping factor used throughout the paper's evaluation.
@@ -25,6 +35,9 @@ pub const DEFAULT_DAMPING: f32 = 0.85;
 
 pub struct PageRank {
     pub rank: VertexData<f32>,
+    /// Per-iteration `f64` share accumulator (see module docs): zeroed
+    /// in `init`, summed in `gather`, folded into `rank` by `filter`.
+    acc: VertexData<f64>,
     /// Out-degrees (read-only after construction).
     deg: Vec<u32>,
     /// Previous-iteration snapshot for the L1 progress delta. Empty
@@ -36,10 +49,14 @@ pub struct PageRank {
 }
 
 impl PageRank {
+    /// Build against the graph the session actually serves — on a
+    /// reordered session that is `session.graph()` (the relabeled
+    /// graph), so the out-degrees line up with the engine's ids.
     pub fn new(g: &Graph, d: f32) -> Self {
         let n = g.n();
         Self {
             rank: VertexData::new(n, 1.0 / n as f32),
+            acc: VertexData::new(n, 0.0),
             deg: (0..n as VertexId).map(|v| g.out_degree(v) as u32).collect(),
             prev: Vec::new(),
             n,
@@ -66,19 +83,23 @@ impl Program for PageRank {
 
     #[inline]
     fn init(&self, v: VertexId) -> bool {
-        self.rank.set(v, 0.0);
+        self.acc.set(v, 0.0);
         true // all vertices stay active (Alg. 6)
     }
 
     #[inline]
     fn gather(&self, val: f32, v: VertexId) -> bool {
-        self.rank.set(v, self.rank.get(v) + val);
+        // f64 accumulation: exact (hence order-independent) for the
+        // share magnitudes any test-scale graph produces — module docs.
+        self.acc.set(v, self.acc.get(v) + val as f64);
         true
     }
 
     #[inline]
     fn filter(&self, v: VertexId) -> bool {
-        self.rank.set(v, (1.0 - self.d) / self.n as f32 + self.d * self.rank.get(v));
+        let damped =
+            (1.0 - self.d as f64) / self.n as f64 + self.d as f64 * self.acc.get(v);
+        self.rank.set(v, damped as f32); // one rounding per iteration
         true
     }
 }
@@ -116,6 +137,20 @@ impl Algorithm for PageRank {
 
     fn finish(self) -> Vec<f32> {
         self.rank.to_vec()
+    }
+
+    /// Uniform start + exact per-iteration `f64` sums (module docs) make
+    /// the ranks a pure function of the graph — renaming-independent —
+    /// so unpermuting recovers the unreordered output bit-for-bit.
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, _perm: &Arc<Permutation>) {
+        // Nothing to map: the uniform seed has no vertex identity and
+        // `deg` was already read from the reordered graph (see `new`).
+    }
+
+    fn untranslate(output: Vec<f32>, perm: &Permutation) -> Vec<f32> {
+        perm.unpermute(&output)
     }
 }
 

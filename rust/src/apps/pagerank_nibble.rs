@@ -8,9 +8,12 @@
 //!   r[v] ← (1-α)·r[v]/2.
 //! Invariant: p-mass + r-mass = 1 (up to float error).
 
+use std::sync::Arc;
+
 use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
+use crate::reorder::Permutation;
 use crate::VertexId;
 
 pub struct PageRankNibble {
@@ -108,6 +111,22 @@ impl Algorithm for PageRankNibble {
 
     fn finish(self) -> PrNibbleOutput {
         PrNibbleOutput { p: self.p.to_vec(), r: self.r.to_vec() }
+    }
+
+    /// Same contract (and `f32`-summation ulp caveat) as
+    /// [`Nibble`](crate::apps::Nibble): seeds map into the reordered id
+    /// space, both mass vectors unpermute back to original indexing;
+    /// tolerance-level equality, not guaranteed bitwise identity.
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, perm: &Arc<Permutation>) {
+        for s in &mut self.seeds {
+            *s = perm.new_id(*s);
+        }
+    }
+
+    fn untranslate(output: PrNibbleOutput, perm: &Permutation) -> PrNibbleOutput {
+        PrNibbleOutput { p: perm.unpermute(&output.p), r: perm.unpermute(&output.r) }
     }
 }
 

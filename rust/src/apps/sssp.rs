@@ -11,9 +11,12 @@
 //! let report = Runner::on(&session).run(Sssp::new(session.graph().n(), source));
 //! ```
 
+use std::sync::Arc;
+
 use crate::api::{Algorithm, Convergence, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
 use crate::ppm::{Engine, RunStats};
+use crate::reorder::Permutation;
 use crate::{VertexId, Weight};
 
 pub struct Sssp {
@@ -76,6 +79,21 @@ impl Algorithm for Sssp {
 
     fn finish(self) -> Vec<f32> {
         self.distance.to_vec()
+    }
+
+    /// Synchronous Bellman-Ford is numbering-independent: each
+    /// iteration's distances are `min` folds over per-vertex candidate
+    /// sets that renaming does not change, and `f32` min is
+    /// order-independent — so reordered distances are bit-identical
+    /// after unpermuting.
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, perm: &Arc<Permutation>) {
+        self.source = perm.new_id(self.source);
+    }
+
+    fn untranslate(output: Vec<f32>, perm: &Permutation) -> Vec<f32> {
+        perm.unpermute(&output)
     }
 }
 

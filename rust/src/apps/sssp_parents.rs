@@ -20,8 +20,11 @@
 //! edge `parent[v] -> v` with `dist[v] == dist[parent[v]] + w`, and
 //! unreached vertices hold [`NO_PARENT`] / `+inf`.
 
+use std::sync::Arc;
+
 use crate::api::{Algorithm, FrontierInit, Program, VertexData};
 use crate::graph::Graph;
+use crate::reorder::Permutation;
 use crate::{VertexId, Weight};
 
 /// Parent sentinel for unreached vertices.
@@ -31,6 +34,10 @@ pub struct SsspParents {
     pub distance: VertexData<f32>,
     pub parent: VertexData<u32>,
     source: VertexId,
+    /// Present iff the session is reordered: the parent lane then
+    /// carries *original* ids, keeping the min-label tiebreak (and so
+    /// the finished tree) numbering-independent.
+    perm: Option<Arc<Permutation>>,
 }
 
 impl SsspParents {
@@ -39,6 +46,17 @@ impl SsspParents {
             distance: VertexData::new(n, f32::INFINITY),
             parent: VertexData::new(n, NO_PARENT),
             source,
+            perm: None,
+        }
+    }
+
+    /// The label `v` proposes on the parent lane: its original id (its
+    /// own id unless the session is reordered).
+    #[inline]
+    fn label(&self, v: VertexId) -> u32 {
+        match &self.perm {
+            Some(p) => p.old_id(v),
+            None => v,
         }
     }
 }
@@ -54,7 +72,7 @@ impl Program for SsspParents {
     fn scatter(&self, v: VertexId) -> (f32, u32) {
         // Unreached vertices carry +inf, which `apply_weight` keeps at
         // +inf — INACTIVE for free, like single-lane SSSP.
-        (self.distance.get(v), v)
+        (self.distance.get(v), self.label(v))
     }
 
     #[inline]
@@ -64,10 +82,24 @@ impl Program for SsspParents {
 
     #[inline]
     fn gather(&self, (d, p): (f32, u32), v: VertexId) -> bool {
-        if d < self.distance.get(v) {
+        let cur = self.distance.get(v);
+        if d < cur {
             self.distance.set(v, d);
             self.parent.set(v, p);
             true
+        } else if d == cur && d.is_finite() && p < self.parent.get(v) {
+            // Equal-distance tiebreak toward the minimum label: every
+            // optimal in-neighbor eventually proposes its final
+            // distance, so the finished parent is the *smallest-labelled*
+            // optimal predecessor — a pure function of the graph, not of
+            // message order, mode, threads or vertex numbering (the
+            // reordering bit-identity contract). The distance lane is
+            // untouched and no re-activation happens, so convergence is
+            // exactly the old first-wins behaviour. `is_finite()` keeps
+            // `(+inf, label)` DC resends from giving unreached vertices
+            // a parent.
+            self.parent.set(v, p);
+            false
         } else {
             false
         }
@@ -185,12 +217,29 @@ impl Algorithm for SsspParents {
 
     fn init_frontier(&mut self, _graph: &Graph) -> FrontierInit {
         self.distance.set(self.source, 0.0);
-        self.parent.set(self.source, self.source);
+        self.parent.set(self.source, self.label(self.source));
         FrontierInit::Seeds(vec![self.source])
     }
 
     fn finish(self) -> SsspParentsOutput {
         SsspParentsOutput { distance: self.distance.to_vec(), parent: self.parent.to_vec() }
+    }
+
+    const REORDER_AWARE: bool = true;
+
+    fn translate(&mut self, perm: &Arc<Permutation>) {
+        self.source = perm.new_id(self.source);
+        self.perm = Some(perm.clone());
+    }
+
+    /// Parent values are already original ids (see
+    /// [`SsspParents::label`]); both arrays just move back to original
+    /// indexing.
+    fn untranslate(output: SsspParentsOutput, perm: &Permutation) -> SsspParentsOutput {
+        SsspParentsOutput {
+            distance: perm.unpermute(&output.distance),
+            parent: perm.unpermute(&output.parent),
+        }
     }
 }
 

@@ -9,6 +9,7 @@ use crate::exec::ThreadPool;
 use crate::graph::io;
 use crate::metrics;
 use crate::ppm::{BuildStats, Hash64, ModePolicy, NumaPolicy, PpmConfig};
+use crate::reorder;
 use crate::serve::{self, Endpoint, ServeConfig, ServeLoop, Server, ServerSocket};
 use crate::util::cli::{Args, CliError};
 use crate::util::fmt;
@@ -119,6 +120,18 @@ fn print_placement(build: &BuildStats) {
 pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
     let app = args.get_or("app", "pr").to_string();
     let config = engine_config(args)?;
+    // `--perm FILE` serves a graph written by `gpop reorder`: the
+    // permutation artifact rides along so every result (and digest)
+    // comes back in original vertex ids. It binds to the in-memory
+    // reordered graph, so the warm-restart and paging paths are out.
+    if args.get("perm").is_some() && (args.get("layout").is_some() || config.mem_budget.is_some())
+    {
+        return Err(CliError(
+            "--perm cannot be combined with --layout or --mem-budget \
+             (reorder the input, then run the reordered graph in memory)"
+                .into(),
+        ));
+    }
     // Out-of-core: `--mem-budget BYTES` pages the graph from disk
     // through a bounded partition cache instead of loading it.
     if config.mem_budget.is_some() {
@@ -130,10 +143,20 @@ pub fn cmd_run(args: &Args) -> Result<i32, CliError> {
     // layout (sequential IO, validated) instead of re-running the O(E)
     // scan; `--save-layout PATH` persists this session's layout for the
     // next restart.
-    let session = match args.get("layout") {
-        Some(p) => EngineSession::restore(g, config, Path::new(p))
+    let session = match (args.get("perm"), args.get("layout")) {
+        (Some(pp), _) => {
+            let perm = reorder::load_permutation(Path::new(pp), &g)
+                .map_err(|e| CliError(format!("load permutation {pp}: {e}")))?;
+            println!(
+                "reorder: {} permutation from {pp} — results report original vertex ids",
+                perm.strategy()
+            );
+            EngineSession::with_permutation(g, perm, config)
+                .map_err(|e| CliError(format!("attach permutation {pp}: {e}")))?
+        }
+        (None, Some(p)) => EngineSession::restore(g, config, Path::new(p))
             .map_err(|e| CliError(format!("load layout {p}: {e}")))?,
-        None => EngineSession::new(g, config),
+        (None, None) => EngineSession::new(g, config),
     };
     if let Some(p) = args.get("save-layout") {
         session.save(Path::new(p)).map_err(|e| CliError(format!("save layout {p}: {e}")))?;
@@ -368,6 +391,52 @@ pub fn cmd_gen(args: &Args) -> Result<i32, CliError> {
     let out = args.get("out").ok_or_else(|| CliError("--out PATH required".into()))?;
     write_graph(&g, out, args)?;
     println!("wrote {out}");
+    Ok(0)
+}
+
+/// `gpop reorder` — cost-model-driven vertex relabeling. Computes a
+/// permutation ([`reorder::Strategy`]: degree / hub / bfs), applies it
+/// to the graph in parallel, and persists the pair of artifacts a later
+/// `gpop run --perm` / `gpop serve --perm` consumes: the reordered
+/// graph (`--out`) and the checksummed permutation file (`--save-perm`)
+/// that lets every result surface answer in original vertex ids.
+pub fn cmd_reorder(args: &Args) -> Result<i32, CliError> {
+    let strategy: reorder::Strategy = args
+        .get("strategy")
+        .ok_or_else(|| CliError("--strategy degree|hub|bfs is required".into()))?
+        .parse()
+        .map_err(CliError)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| CliError("--out PATH is required (the reordered graph)".into()))?;
+    let perm_path = args.get("save-perm").ok_or_else(|| {
+        CliError(
+            "--save-perm PATH is required (gpop run/serve --perm needs it to \
+             report results in original vertex ids)"
+                .into(),
+        )
+    })?;
+    let threads =
+        args.get_parsed_or::<usize>("threads", ThreadPool::available_parallelism())?;
+    if threads == 0 {
+        return Err(CliError("--threads must be >= 1".into()));
+    }
+    let g = build_graph(args)?;
+    let t0 = std::time::Instant::now();
+    let mut pool = ThreadPool::new(threads);
+    let (rg, perm) = reorder::reorder_graph(&g, strategy, Some(&mut pool));
+    let t_reorder = t0.elapsed().as_secs_f64();
+    write_graph(&rg, out, args)?;
+    reorder::save_permutation(Path::new(perm_path), &perm, &g, &rg)
+        .map_err(|e| CliError(format!("save permutation {perm_path}: {e}")))?;
+    println!(
+        "reorder: strategy {strategy} — {} vertices, {} edges relabeled in {} \
+         on {threads} threads",
+        fmt::si(g.n() as f64),
+        fmt::si(g.m() as f64),
+        fmt::secs(t_reorder)
+    );
+    println!("wrote reordered graph to {out}; permutation saved to {perm_path}");
     Ok(0)
 }
 
@@ -634,7 +703,21 @@ pub fn cmd_serve(args: &Args) -> Result<i32, CliError> {
     };
     serve_config.validate().map_err(|e| CliError(format!("invalid serve configuration: {e}")))?;
     let socket = bind_socket(args)?;
-    let session = EngineSession::new(g, config);
+    // `--perm FILE`: serve a reordered graph while answering every
+    // query in original vertex ids (same artifact contract as cmd_run).
+    let session = match args.get("perm") {
+        Some(pp) => {
+            let perm = reorder::load_permutation(Path::new(pp), &g)
+                .map_err(|e| CliError(format!("load permutation {pp}: {e}")))?;
+            println!(
+                "reorder: {} permutation from {pp} — responses report original vertex ids",
+                perm.strategy()
+            );
+            EngineSession::with_permutation(g, perm, config)
+                .map_err(|e| CliError(format!("attach permutation {pp}: {e}")))?
+        }
+        None => EngineSession::new(g, config),
+    };
     println!(
         "preprocessing: {} (k = {}, pool cap {})",
         fmt::secs(session.build_stats().t_preprocess()),
@@ -993,6 +1076,65 @@ mod tests {
         assert!(cmd_run(&r).unwrap_err().0.contains("mem-budget"));
         std::fs::remove_file(&gpath).unwrap();
         std::fs::remove_file(&lpath).unwrap();
+    }
+
+    #[test]
+    fn reorder_roundtrip_serves_original_ids() {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir();
+        let gpath = dir.join(format!("gpop_cmd_reorder_{pid}.bin"));
+        let ppath = dir.join(format!("gpop_cmd_reorder_{pid}.perm"));
+        let gstr = gpath.to_str().unwrap().to_string();
+        let pstr = ppath.to_str().unwrap().to_string();
+        for strategy in ["degree", "hub", "bfs"] {
+            let r = args(&[
+                "--graph",
+                "rmat:8+w:1:4",
+                "--strategy",
+                strategy,
+                "--out",
+                &gstr,
+                "--save-perm",
+                &pstr,
+                "--threads",
+                "2",
+            ]);
+            assert_eq!(cmd_reorder(&r).unwrap(), 0, "strategy {strategy}");
+            let spec = format!("file:{gstr}");
+            for app in ["bfs", "pr", "cc", "sssp", "ssspp"] {
+                let a = args(&[
+                    "--app", app, "--graph", &spec, "--perm", &pstr, "--threads", "2",
+                    "--iters", "3",
+                ]);
+                assert_eq!(cmd_run(&a).unwrap(), 0, "strategy {strategy} app {app}");
+            }
+        }
+        // The permutation binds to the reordered graph: attaching it to
+        // the original input is refused as stale, not applied silently.
+        let stale = args(&["--app", "bfs", "--graph", "rmat:8+w:1:4", "--perm", &pstr]);
+        assert!(cmd_run(&stale).unwrap_err().0.contains("permutation"));
+        std::fs::remove_file(&gpath).unwrap();
+        std::fs::remove_file(&ppath).unwrap();
+    }
+
+    #[test]
+    fn reorder_usage_errors() {
+        let a = args(&["--graph", "chain:8", "--out", "/tmp/x.bin", "--save-perm", "/tmp/x.perm"]);
+        assert!(cmd_reorder(&a).unwrap_err().0.contains("strategy"));
+        let a = args(&["--graph", "chain:8", "--strategy", "wat", "--out", "/tmp/x.bin",
+            "--save-perm", "/tmp/x.perm"]);
+        assert!(cmd_reorder(&a).is_err());
+        let a = args(&["--graph", "chain:8", "--strategy", "degree", "--save-perm", "/tmp/x.perm"]);
+        assert!(cmd_reorder(&a).unwrap_err().0.contains("--out"));
+        let a = args(&["--graph", "chain:8", "--strategy", "degree", "--out", "/tmp/x.bin"]);
+        assert!(cmd_reorder(&a).unwrap_err().0.contains("save-perm"));
+        // --perm is incompatible with the warm-restart and paging paths.
+        let a = args(&["--app", "pr", "--graph", "chain:8", "--perm", "/tmp/x.perm",
+            "--layout", "/tmp/x.layout"]);
+        assert!(cmd_run(&a).unwrap_err().0.contains("--perm"));
+        let a = args(&["--app", "pr", "--graph", "chain:8", "--perm", "/tmp/x.perm",
+            "--mem-budget", "65536"]);
+        assert!(cmd_run(&a).unwrap_err().0.contains("--perm"));
     }
 
     #[test]

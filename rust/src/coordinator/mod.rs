@@ -21,14 +21,29 @@ COMMANDS:
              [--iters N] [--root V] [--seeds a,b,c] [--eps X]
              [--bw-ratio X] [--k N] [--chunk N] [--verbose]
              [--layout PATH] [--save-layout PATH] [--mem-budget BYTES]
+             [--perm PATH]
              (--layout restores a persisted partitioned layout — warm
               restart, no O(E) scan; --save-layout persists this one;
               --mem-budget runs out-of-core: the graph pages from disk
               through a partition cache capped at BYTES — needs
               --graph file:PATH and --layout PATH, apps bfs|pr|cc|
-              sssp|ssspp)
+              sssp|ssspp;
+              --perm attaches a permutation written by `gpop reorder`:
+              --graph must be the reordered graph, and all results and
+              digests come back in ORIGINAL vertex ids; not combinable
+              with --layout/--mem-budget)
   gen        Generate a graph and write it to disk
              --graph SPEC --out PATH [--format bin|el]
+  reorder    Relabel vertices for locality and persist the mapping
+             --graph SPEC --strategy degree|hub|bfs --out PATH
+             --save-perm PATH [--threads N] [--format bin|el]
+             (degree = stable sort by descending out-degree; hub packs
+              above-average-degree vertices first; bfs clusters by
+              BFS visit order from the max-degree root. The reordered
+              graph goes to --out, the versioned + checksummed
+              permutation to --save-perm; serve them together via
+              `gpop run/serve --graph file:OUT --perm PERM` to get
+              answers in original vertex ids)
   swap       Hot-swap the served graph mid-session (no teardown)
              --graph SPEC --swap-to SPEC [--app APP] [engine options]
              (runs APP, rebuilds the layout in the background, flips the
@@ -44,7 +59,7 @@ COMMANDS:
   serve      Serve queries over a long-lived session (line protocol)
              --graph SPEC (--socket PATH | --tcp ADDR)
              [--pool-cap N] [--queue-cap N] [--batch-max N] [--workers N]
-             [engine options]
+             [--perm PATH] [engine options]
              (admission-gated batching: same-algorithm queries coalesce
               into one pooled engine checkout; a full queue answers
               'err overloaded' instead of buffering; SIGTERM/SIGINT or
@@ -96,6 +111,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<i32, CliError> {
     match cmd.as_str() {
         "run" => commands::cmd_run(&args),
         "gen" => commands::cmd_gen(&args),
+        "reorder" => commands::cmd_reorder(&args),
         "swap" => commands::cmd_swap(&args),
         "ingest" => commands::cmd_ingest(&args),
         "serve" => commands::cmd_serve(&args),

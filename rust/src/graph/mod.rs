@@ -6,7 +6,7 @@ pub mod csr;
 pub mod gen;
 pub mod io;
 
-pub use builder::{merge_delta, GraphBuilder, GraphDelta};
+pub use builder::{merge_delta, permute_graph, GraphBuilder, GraphDelta};
 pub use csr::{Csr, Graph};
 
 use crate::VertexId;

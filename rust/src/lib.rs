@@ -12,19 +12,22 @@
 //! (partitioning, bin/PNG layout) runs exactly once and every query —
 //! sequential, concurrent, or batched — reuses it:
 //!
-//! ```ignore
+//! ```
 //! use gpop::api::{Convergence, EngineSession, Runner};
 //! use gpop::apps::{Bfs, PageRank};
+//! use gpop::graph::gen;
 //! use gpop::ppm::{ModePolicy, PpmConfig};
 //!
-//! let session = EngineSession::new(graph, PpmConfig::with_threads(8));
+//! let session = EngineSession::new(gen::grid(8, 8), PpmConfig::with_threads(2));
 //! let pr = Runner::on(&session)
 //!     .policy(ModePolicy::Hybrid)
-//!     .until(Convergence::L1Norm(1e-7).or_max_iters(100))
+//!     .until(Convergence::L1Norm(1e-6).or_max_iters(200))
 //!     .run(PageRank::new(&session.graph(), 0.85));
 //! let n = session.graph().n();
 //! let sweeps = Runner::on(&session)
 //!     .run_batch((0..16).map(|r| Bfs::new(n, r)));   // one engine, 16 queries
+//! assert_eq!(pr.output.len(), n);
+//! assert_eq!(sweeps.reports.len(), 16);
 //! ```
 //!
 //! Every run returns an [`api::RunReport`]: typed output + per-iteration
@@ -44,6 +47,11 @@
 //! - [`graph`] — CSR/CSC storage, generators (RMAT, Erdős–Rényi), IO.
 //! - [`partition`] — index-based partitioner and the PNG
 //!   (Partition-Node bipartite Graph) layout used by DC-mode scatter.
+//! - [`reorder`] — cost-model-driven vertex reordering (`gpop
+//!   reorder`): degree / hub-clustering / BFS-locality permutations
+//!   computed as a preprocessing pass, applied as a parallel stable CSR
+//!   permute, persisted (versioned + checksummed) and carried through
+//!   sessions so results always surface in original vertex ids.
 //! - [`ppm`] — the Partition-Centric engine: the immutable
 //!   [`ppm::BinLayout`] (shared per session) vs per-engine bin scratch,
 //!   2-level active lists, the Eq.-1 communication cost model,
@@ -103,6 +111,7 @@ pub mod metrics;
 pub mod ooc;
 pub mod partition;
 pub mod ppm;
+pub mod reorder;
 pub mod runtime;
 pub mod sanitize;
 pub mod serve;

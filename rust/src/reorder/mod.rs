@@ -1,0 +1,588 @@
+//! Cost-model-driven vertex reordering (`gpop reorder`).
+//!
+//! GPOP's partitions induce locality *between* cache-line-sized vertex
+//! ranges by construction, but the numbering *inside* a partition is
+//! whatever the input happened to use. "Making Caches Work for Graph
+//! Analytics" (PAPERS.md) shows that degree- and frequency-based
+//! clustering recover large L2 wins on skewed graphs — exactly the
+//! effect this module adds as a preprocessing pass:
+//!
+//! 1. [`compute`] derives a vertex [`Permutation`] from the graph with
+//!    one of three [`Strategy`]s (degree sort, hub clustering, BFS
+//!    locality). The computation is serial and deterministic: the same
+//!    graph always yields the same permutation.
+//! 2. [`crate::graph::permute_graph`] applies it, producing a relabeled
+//!    [`Graph`] — a stable CSR permute, parallel over
+//!    [`crate::exec::ThreadPool`] and bit-identical to the serial pass
+//!    at any thread count.
+//! 3. The permutation is carried end-to-end through
+//!    [`EngineSession`](crate::api::EngineSession) and
+//!    [`Runner`](crate::api::Runner): seeds/roots are translated into
+//!    the reordered space before a query runs and every output is
+//!    mapped back through the **inverse** permutation, so callers only
+//!    ever see *original* vertex ids. Reordering is invisible except in
+//!    cache behaviour.
+//! 4. [`save_permutation`] / [`load_permutation`] persist the mapping
+//!    alongside the PR 4 layout format: versioned, checksummed, and
+//!    bound to the digests of both the original and the reordered
+//!    graph, so a stale or corrupt artifact is refused as
+//!    [`InvalidData`](std::io::ErrorKind::InvalidData) like any other.
+//!
+//! Validate locality claims with the in-repo [`crate::cachesim`] (see
+//! `benches/bench_reorder.rs`) before attributing wall-clock wins to a
+//! strategy.
+//!
+//! ```
+//! use gpop::graph::builder::graph_from_edges;
+//! use gpop::reorder::{self, Strategy};
+//!
+//! // A star: vertex 3 is the hub.
+//! let g = graph_from_edges(5, &[(3, 0), (3, 1), (3, 2), (3, 4), (0, 3)]);
+//! let (rg, perm) = reorder::reorder_graph(&g, Strategy::Degree, None);
+//! assert_eq!(rg.m(), g.m());
+//! assert_eq!(perm.old_id(0), 3, "highest-degree vertex is renumbered first");
+//! assert_eq!(perm.new_id(3), 0);
+//! // Round trip: forward then inverse is the identity.
+//! for v in 0..5 {
+//!     assert_eq!(perm.old_id(perm.new_id(v)), v);
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::exec::ThreadPool;
+use crate::graph::{permute_graph, Graph};
+use crate::ppm::{graph_digest, Hash64};
+use crate::VertexId;
+
+/// Magic prefix of a persisted permutation file.
+pub const PERM_MAGIC: [u8; 8] = *b"GPOPPERM";
+/// Current (and maximum readable) permutation format version.
+pub const PERM_FORMAT_VERSION: u32 = 1;
+
+/// Fixed-size prefix: magic + version + strategy + n + two graph
+/// digests; the trailing checksum is another 8 bytes.
+const PERM_HEADER_BYTES: usize = 8 + 4 + 4 + 8 + 8 + 8;
+
+/// How a permutation orders vertices. All three are deterministic
+/// functions of the graph structure alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Descending out-degree, original id breaking ties: the classic
+    /// degree sort. Hot vertices share cache lines; destroys any input
+    /// locality among the cold tail.
+    Degree,
+    /// Hub clustering in the frequency-based-clustering style: vertices
+    /// with at least average out-degree are packed first *in their
+    /// original relative order*, the cold tail follows likewise — the
+    /// lightest-touch reordering, preserving whatever locality the
+    /// input already had within each class.
+    Hub,
+    /// BFS visit order over out-edges from the highest-degree vertex
+    /// (restarting from the lowest unvisited id per component), so
+    /// topological neighbourhoods become index neighbourhoods.
+    Bfs,
+}
+
+impl Strategy {
+    /// Every strategy, in tag order (the order `gpop reorder` and the
+    /// benches enumerate them).
+    pub const ALL: [Strategy; 3] = [Strategy::Degree, Strategy::Hub, Strategy::Bfs];
+
+    /// Stable lower-case name (`degree` / `hub` / `bfs`) — the CLI
+    /// spelling and the on-disk tag's string form.
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Degree => "degree",
+            Strategy::Hub => "hub",
+            Strategy::Bfs => "bfs",
+        }
+    }
+
+    fn tag(self) -> u32 {
+        match self {
+            Strategy::Degree => 0,
+            Strategy::Hub => 1,
+            Strategy::Bfs => 2,
+        }
+    }
+
+    fn from_tag(tag: u32) -> Option<Strategy> {
+        match tag {
+            0 => Some(Strategy::Degree),
+            1 => Some(Strategy::Hub),
+            2 => Some(Strategy::Bfs),
+            _ => None,
+        }
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "degree" => Ok(Strategy::Degree),
+            "hub" => Ok(Strategy::Hub),
+            "bfs" => Ok(Strategy::Bfs),
+            other => Err(format!("unknown reorder strategy '{other}' (expected degree|hub|bfs)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A vertex relabeling: `forward[old] = new` and `inverse[new] = old`,
+/// with the bijection invariant enforced at every construction site
+/// (including [`load_permutation`], which treats the file as
+/// untrusted).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Permutation {
+    strategy: Strategy,
+    forward: Vec<VertexId>,
+    inverse: Vec<VertexId>,
+}
+
+impl Permutation {
+    /// Wrap a forward (old → new) mapping, validating that it is a
+    /// bijection on `[0, n)` and deriving the inverse.
+    pub fn from_forward(strategy: Strategy, forward: Vec<VertexId>) -> Result<Self, String> {
+        let n = forward.len();
+        if n > u32::MAX as usize {
+            return Err(format!("permutation over {n} vertices exceeds u32 vertex ids"));
+        }
+        let mut inverse = vec![u32::MAX; n];
+        for (old, &new) in forward.iter().enumerate() {
+            let slot = inverse
+                .get_mut(new as usize)
+                .ok_or_else(|| format!("forward[{old}] = {new} is out of range (n = {n})"))?;
+            if *slot != u32::MAX {
+                return Err(format!(
+                    "forward is not a bijection: both {} and {old} map to {new}",
+                    *slot
+                ));
+            }
+            *slot = old as VertexId;
+        }
+        // Every slot written exactly once ⇒ surjective ⇒ bijective.
+        Ok(Self { strategy, forward, inverse })
+    }
+
+    /// The identity permutation on `n` vertices (useful as a baseline).
+    pub fn identity(strategy: Strategy, n: usize) -> Self {
+        let forward: Vec<VertexId> = (0..n as VertexId).collect();
+        Self { strategy, inverse: forward.clone(), forward }
+    }
+
+    /// Number of vertices the permutation covers.
+    pub fn n(&self) -> usize {
+        self.forward.len()
+    }
+
+    /// The strategy that produced this permutation.
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// Reordered id of original vertex `old`.
+    #[inline]
+    pub fn new_id(&self, old: VertexId) -> VertexId {
+        self.forward[old as usize]
+    }
+
+    /// Original id of reordered vertex `new`.
+    #[inline]
+    pub fn old_id(&self, new: VertexId) -> VertexId {
+        self.inverse[new as usize]
+    }
+
+    /// The old → new mapping.
+    pub fn forward(&self) -> &[VertexId] {
+        &self.forward
+    }
+
+    /// The new → old mapping.
+    pub fn inverse(&self) -> &[VertexId] {
+        &self.inverse
+    }
+
+    /// Map a per-vertex result vector from reordered indexing back to
+    /// original indexing: `out[old] = data[new_id(old)]`. This is the
+    /// index half of result untranslation; values that *are* vertex ids
+    /// (parents, labels) must additionally be produced in original ids
+    /// by the algorithm's translated form (see
+    /// [`Algorithm::translate`](crate::api::Algorithm::translate)).
+    pub fn unpermute<T: Copy>(&self, data: &[T]) -> Vec<T> {
+        assert_eq!(data.len(), self.n(), "result length must match the permutation");
+        self.forward.iter().map(|&new| data[new as usize]).collect()
+    }
+}
+
+/// Compute the vertex permutation for `strategy` on `graph`. Serial and
+/// deterministic: ties always break toward the lower original id, so
+/// the mapping is a pure function of the CSR.
+pub fn compute(graph: &Graph, strategy: Strategy) -> Permutation {
+    let n = graph.n();
+    // `order[new] = old` — the inverse mapping, built first because
+    // every strategy is naturally expressed as a visit order.
+    let order: Vec<VertexId> = match strategy {
+        Strategy::Degree => {
+            let mut v: Vec<VertexId> = (0..n as VertexId).collect();
+            // Stable sort + explicit id tiebreak: fully deterministic.
+            v.sort_by(|&a, &b| {
+                graph.out_degree(b).cmp(&graph.out_degree(a)).then(a.cmp(&b))
+            });
+            v
+        }
+        Strategy::Hub => {
+            let m = graph.m() as u128;
+            let mut hot: Vec<VertexId> = Vec::new();
+            let mut cold: Vec<VertexId> = Vec::new();
+            for v in 0..n as VertexId {
+                // deg ≥ m/n without integer division (u128: cannot
+                // overflow for any representable graph).
+                if (graph.out_degree(v) as u128) * (n as u128) >= m {
+                    hot.push(v);
+                } else {
+                    cold.push(v);
+                }
+            }
+            hot.extend_from_slice(&cold);
+            hot
+        }
+        Strategy::Bfs => {
+            let mut order: Vec<VertexId> = Vec::with_capacity(n);
+            let mut visited = vec![false; n];
+            // Root the first traversal at the highest-degree vertex
+            // (lowest id on ties); later components start from the
+            // lowest unvisited id.
+            let root = (0..n as VertexId)
+                .max_by(|&a, &b| {
+                    graph.out_degree(a).cmp(&graph.out_degree(b)).then(b.cmp(&a))
+                })
+                .unwrap_or(0);
+            let mut queue = std::collections::VecDeque::new();
+            let mut next_seed = 0 as VertexId;
+            if n > 0 {
+                visited[root as usize] = true;
+                queue.push_back(root);
+            }
+            while order.len() < n {
+                match queue.pop_front() {
+                    Some(v) => {
+                        order.push(v);
+                        for &u in graph.out().neighbors(v) {
+                            if !visited[u as usize] {
+                                visited[u as usize] = true;
+                                queue.push_back(u);
+                            }
+                        }
+                    }
+                    None => {
+                        while visited[next_seed as usize] {
+                            next_seed += 1;
+                        }
+                        visited[next_seed as usize] = true;
+                        queue.push_back(next_seed);
+                    }
+                }
+            }
+            order
+        }
+    };
+    let mut forward = vec![0 as VertexId; n];
+    for (new, &old) in order.iter().enumerate() {
+        forward[old as usize] = new as VertexId;
+    }
+    Permutation { strategy, forward, inverse: order }
+}
+
+/// Compute a permutation and apply it: returns the relabeled graph and
+/// the mapping. The CSR permute runs over `pool` when one is given
+/// (bit-identical to the serial pass — each new vertex's row is a pure
+/// function of the inputs).
+pub fn reorder_graph(
+    graph: &Graph,
+    strategy: Strategy,
+    pool: Option<&mut ThreadPool>,
+) -> (Graph, Permutation) {
+    let perm = compute(graph, strategy);
+    let relabeled = permute_graph(graph, perm.forward(), perm.inverse(), pool);
+    (relabeled, perm)
+}
+
+fn bad(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap())
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
+}
+
+/// Persist `perm` next to the PR 4 layout artifacts: magic + version +
+/// strategy + `n` + the [`graph_digest`]s of the *original* and the
+/// *reordered* graph + the forward mapping, all covered by a trailing
+/// [`Hash64`] checksum. [`load_permutation`] refuses the file unless
+/// every one of those binds — a permutation for yesterday's graph is
+/// stale data, not a usable artifact.
+pub fn save_permutation(
+    path: &Path,
+    perm: &Permutation,
+    original: &Graph,
+    reordered: &Graph,
+) -> std::io::Result<()> {
+    let n = perm.n();
+    assert_eq!(n, original.n(), "permutation must cover the original graph");
+    assert_eq!(n, reordered.n(), "permutation must cover the reordered graph");
+    let mut buf = Vec::with_capacity(PERM_HEADER_BYTES + n * 4 + 8);
+    buf.extend_from_slice(&PERM_MAGIC);
+    buf.extend_from_slice(&PERM_FORMAT_VERSION.to_le_bytes());
+    buf.extend_from_slice(&perm.strategy.tag().to_le_bytes());
+    buf.extend_from_slice(&(n as u64).to_le_bytes());
+    buf.extend_from_slice(&graph_digest(original).to_le_bytes());
+    buf.extend_from_slice(&graph_digest(reordered).to_le_bytes());
+    for &new in perm.forward() {
+        buf.extend_from_slice(&new.to_le_bytes());
+    }
+    let mut h = Hash64::new();
+    h.update(&buf);
+    let checksum = h.finish();
+    buf.extend_from_slice(&checksum.to_le_bytes());
+    std::fs::write(path, buf)
+}
+
+/// Load a permutation persisted by [`save_permutation`], treating the
+/// bytes as untrusted. `reordered` must be the relabeled graph the
+/// permutation will serve (the one `gpop reorder` wrote): its digest is
+/// re-derived and compared, so a permutation that does not belong to
+/// this exact graph — stale, truncated, bit-flipped, or simply for a
+/// different input — fails with
+/// [`InvalidData`](std::io::ErrorKind::InvalidData).
+pub fn load_permutation(path: &Path, reordered: &Graph) -> std::io::Result<Permutation> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < PERM_HEADER_BYTES + 8 {
+        return Err(bad("permutation file truncated: shorter than header + checksum"));
+    }
+    if bytes[..8] != PERM_MAGIC {
+        return Err(bad("not a GPOP permutation file (bad magic)"));
+    }
+    let version = read_u32(&bytes, 8);
+    if version == 0 || version > PERM_FORMAT_VERSION {
+        return Err(bad(format!(
+            "unsupported permutation format version {version} (max {PERM_FORMAT_VERSION})"
+        )));
+    }
+    let strategy = Strategy::from_tag(read_u32(&bytes, 12))
+        .ok_or_else(|| bad("unknown reorder strategy tag"))?;
+    let n = read_u64(&bytes, 16);
+    if n != reordered.n() as u64 {
+        return Err(bad(format!(
+            "permutation covers {n} vertices but the graph has {}",
+            reordered.n()
+        )));
+    }
+    let expected_len = (PERM_HEADER_BYTES as u64)
+        .checked_add(n.checked_mul(4).ok_or_else(|| bad("permutation size overflows"))?)
+        .and_then(|l| l.checked_add(8))
+        .ok_or_else(|| bad("permutation size overflows"))?;
+    if bytes.len() as u64 != expected_len {
+        return Err(bad(format!(
+            "permutation file is {} bytes, expected {expected_len}",
+            bytes.len()
+        )));
+    }
+    let body_len = bytes.len() - 8;
+    let mut h = Hash64::new();
+    h.update(&bytes[..body_len]);
+    if h.finish() != read_u64(&bytes, body_len) {
+        return Err(bad("permutation checksum mismatch (corrupt file)"));
+    }
+    let stored_reordered = read_u64(&bytes, 32);
+    if stored_reordered != graph_digest(reordered) {
+        return Err(bad(
+            "permutation was built for a different graph (reordered-graph digest mismatch); \
+             re-run gpop reorder",
+        ));
+    }
+    let forward: Vec<VertexId> = (0..n as usize)
+        .map(|i| read_u32(&bytes, PERM_HEADER_BYTES + i * 4))
+        .collect();
+    Permutation::from_forward(strategy, forward).map_err(bad)
+}
+
+/// The original graph's digest stored in a permutation file (for
+/// provenance checks against a separately kept original graph); fails
+/// like [`load_permutation`] on any structural corruption, but does not
+/// need the reordered graph.
+pub fn stored_original_digest(path: &Path) -> std::io::Result<u64> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < PERM_HEADER_BYTES + 8 {
+        return Err(bad("permutation file truncated: shorter than header + checksum"));
+    }
+    if bytes[..8] != PERM_MAGIC {
+        return Err(bad("not a GPOP permutation file (bad magic)"));
+    }
+    let body_len = bytes.len() - 8;
+    let mut h = Hash64::new();
+    h.update(&bytes[..body_len]);
+    if h.finish() != read_u64(&bytes, body_len) {
+        return Err(bad("permutation checksum mismatch (corrupt file)"));
+    }
+    Ok(read_u64(&bytes, 24))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::graph_from_edges;
+    use crate::graph::gen;
+
+    fn star() -> Graph {
+        // 3 is the hub; 0 also has an edge so degree ties are exercised.
+        graph_from_edges(5, &[(3, 0), (3, 1), (3, 2), (3, 4), (0, 3)])
+    }
+
+    #[test]
+    fn degree_orders_by_descending_degree_then_id() {
+        let p = compute(&star(), Strategy::Degree);
+        assert_eq!(p.inverse(), &[3, 0, 1, 2, 4]);
+        assert_eq!(p.new_id(3), 0);
+    }
+
+    #[test]
+    fn hub_keeps_relative_order_within_classes() {
+        // Degrees: [1, 0, 0, 4, 0]; mean = 1 ⇒ hot = {0, 3} in id order.
+        let p = compute(&star(), Strategy::Hub);
+        assert_eq!(p.inverse(), &[0, 3, 1, 2, 4]);
+    }
+
+    #[test]
+    fn bfs_visits_from_the_hub_then_restarts_in_id_order() {
+        let p = compute(&star(), Strategy::Bfs);
+        // Root = 3 (max degree), then its out-neighbors 0,1,2,4 in CSR
+        // order; no restarts needed.
+        assert_eq!(p.inverse(), &[3, 0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn bfs_restarts_cover_disconnected_components() {
+        let g = graph_from_edges(6, &[(4, 5)]);
+        let p = compute(&g, Strategy::Bfs);
+        assert_eq!(p.inverse(), &[4, 5, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn roundtrip_is_identity_for_every_strategy() {
+        let g = gen::erdos_renyi(300, 2400, 7);
+        for s in Strategy::ALL {
+            let p = compute(&g, s);
+            for v in 0..g.n() as VertexId {
+                assert_eq!(p.old_id(p.new_id(v)), v, "{s}: perm ∘ inv must be id");
+                assert_eq!(p.new_id(p.old_id(v)), v);
+            }
+        }
+    }
+
+    #[test]
+    fn from_forward_rejects_non_bijections() {
+        assert!(Permutation::from_forward(Strategy::Degree, vec![0, 0, 1]).is_err());
+        assert!(Permutation::from_forward(Strategy::Degree, vec![0, 3]).is_err());
+        assert!(Permutation::from_forward(Strategy::Degree, vec![1, 0, 2]).is_ok());
+    }
+
+    #[test]
+    fn reordered_graph_preserves_structure() {
+        let g = gen::erdos_renyi(200, 1600, 3);
+        for s in Strategy::ALL {
+            let (rg, p) = reorder_graph(&g, s, None);
+            assert_eq!(rg.n(), g.n());
+            assert_eq!(rg.m(), g.m());
+            for v in 0..g.n() as VertexId {
+                let mut expect: Vec<VertexId> =
+                    g.out().neighbors(v).iter().map(|&u| p.new_id(u)).collect();
+                expect.sort_unstable();
+                assert_eq!(rg.out().neighbors(p.new_id(v)), &expect[..], "{s}: row of {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpermute_restores_original_indexing() {
+        let g = star();
+        let p = compute(&g, Strategy::Degree);
+        // data in reordered indexing: data[new] = old_id(new) * 10
+        let data: Vec<u32> = p.inverse().iter().map(|&old| old * 10).collect();
+        assert_eq!(p.unpermute(&data), vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn persist_roundtrip() {
+        let g = gen::erdos_renyi(150, 900, 5);
+        let (rg, p) = reorder_graph(&g, Strategy::Bfs, None);
+        let path = std::env::temp_dir().join("gpop_perm_roundtrip.perm");
+        save_permutation(&path, &p, &g, &rg).unwrap();
+        let loaded = load_permutation(&path, &rg).unwrap();
+        assert_eq!(loaded, p);
+        assert_eq!(stored_original_digest(&path).unwrap(), graph_digest(&g));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_refuses_corruption_and_staleness() {
+        let g = gen::erdos_renyi(80, 500, 9);
+        let (rg, p) = reorder_graph(&g, Strategy::Degree, None);
+        let path = std::env::temp_dir().join("gpop_perm_corrupt.perm");
+        save_permutation(&path, &p, &g, &rg).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("truncated", good[..good.len() / 2].to_vec()),
+            ("bad magic", {
+                let mut b = good.clone();
+                b[0] ^= 0xFF;
+                b
+            }),
+            ("future version", {
+                let mut b = good.clone();
+                b[8..12].copy_from_slice(&99u32.to_le_bytes());
+                b
+            }),
+            ("bad strategy tag", {
+                let mut b = good.clone();
+                b[12..16].copy_from_slice(&7u32.to_le_bytes());
+                b
+            }),
+            ("flipped mapping byte", {
+                let mut b = good.clone();
+                b[PERM_HEADER_BYTES] ^= 0x01;
+                b
+            }),
+            ("flipped checksum", {
+                let mut b = good.clone();
+                let at = b.len() - 1;
+                b[at] ^= 0x01;
+                b
+            }),
+        ];
+        for (name, bytes) in cases {
+            std::fs::write(&path, &bytes).unwrap();
+            let err = load_permutation(&path, &rg).expect_err(name);
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{name}");
+        }
+
+        // Stale: a valid file for a *different* graph.
+        std::fs::write(&path, &good).unwrap();
+        let (other_rg, _) = reorder_graph(&gen::erdos_renyi(80, 500, 10), Strategy::Degree, None);
+        let err = load_permutation(&path, &other_rg).expect_err("stale");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::remove_file(&path).unwrap();
+    }
+}
